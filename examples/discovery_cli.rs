@@ -1,0 +1,73 @@
+//! Scientific Discovery Service session: index a MODIS-like corpus with
+//! content-derived attributes (via the PJRT stats kernel when built),
+//! tag files, and query with the CLI operators `=`, `<`, `>`, `like`
+//! across template-namespace scopes.
+//!
+//! Run: `cargo run --release --example discovery_cli`
+
+use scispace::db::Value;
+use scispace::runtime;
+use scispace::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
+use scispace::workload::{modis_corpus, ModisConfig};
+use scispace::workspace::Testbed;
+
+fn main() -> anyhow::Result<()> {
+    let mut tb = Testbed::paper_default();
+    let curator = tb.register("curator", 1);
+    let analyst = tb.register("analyst", 0);
+    let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
+
+    // Derived content attributes through the PJRT stats kernel when the
+    // artifacts are built, else the pure-Rust oracle.
+    let svc = runtime::find_artifacts().and_then(|d| runtime::ComputeService::spawn(&d).ok());
+    let mut stats_fn: Box<dyn FnMut(&str, &[f32]) -> Vec<(String, Value)>> = match &svc {
+        Some(s) => {
+            println!("(content stats: PJRT kernel)");
+            let h = s.handle();
+            Box::new(move |name: &str, data: &[f32]| {
+                let r = h.stats(data, -5.0, 40.0).expect("stats");
+                vec![
+                    (format!("{name}.min"), Value::Float(r.min as f64)),
+                    (format!("{name}.max"), Value::Float(r.max as f64)),
+                    (format!("{name}.mean"), Value::Float(r.mean)),
+                    (format!("{name}.std"), Value::Float(r.std)),
+                ]
+            })
+        }
+        None => {
+            println!("(content stats: CPU fallback — run `make artifacts`)");
+            Box::new(sds::cpu_stats_attrs)
+        }
+    };
+
+    // Index a corpus written through the workspace (Inline-Sync).
+    let corpus = modis_corpus(&ModisConfig { n_files: 60, elems_per_file: 4096, seed: 42 });
+    for (path, f) in &corpus {
+        sds::write_indexed(&mut tb, &mut sds, curator, path, f, ExtractionMode::InlineSync, Some(&mut *stats_fn))?;
+    }
+    println!("indexed {} granules, {} tuples", sds.files_indexed, sds.tuples_indexed);
+    tb.quiesce();
+
+    // Tag a few interesting granules manually.
+    sds::tag(&mut tb, &mut sds, curator, &corpus[3].0, "campaign", Value::Text("elnino-2018".into()))?;
+    sds::tag(&mut tb, &mut sds, curator, &corpus[9].0, "campaign", Value::Text("elnino-2018".into()))?;
+
+    // CLI-style query session.
+    for qtext in [
+        "Location = PacificNW",
+        "Instrument like MODIS%",
+        "DayNight = 1",
+        "sst.mean > 20.0",
+        "sst.min < 0.0",
+        "campaign = elnino-2018",
+    ] {
+        let q = Query::parse(qtext)?;
+        let (files, lat) = sds::run_query(&mut tb, &mut sds, analyst, &q)?;
+        println!("query {qtext:?}: {} hit(s) in {:.2}ms (virtual)", files.len(), lat * 1e3);
+        for f in files.iter().take(3) {
+            println!("    {f}");
+        }
+    }
+    println!("discovery_cli OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""SCISPACE build-time compile package (L1 Pallas kernels + L2 JAX model).
+
+Nothing in this package runs at serving time; ``aot.py`` lowers the L2
+functions (which call the L1 kernels) to HLO text artifacts that the Rust
+coordinator loads through PJRT.
+"""

@@ -1,0 +1,75 @@
+"""AOT lowering: L2 JAX entry points -> HLO *text* artifacts for Rust/PJRT.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps with ``to_tuple``/``to_tuple1``.
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    """Lower every model entry point; write artifacts + manifest.json."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "chunk_rows": model.CHUNK_ROWS,
+        "lanes": model.LANES,
+        "hash_batch": model.HASH_BATCH,
+        "hash_words": model.HASH_WORDS,
+        "hist_bins": 16,
+        "artifacts": {},
+    }
+    for name, fn, args in model.entry_points():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

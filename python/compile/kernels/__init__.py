@@ -1,0 +1,16 @@
+"""SCISPACE L1 Pallas kernels (build-time only; lowered to HLO by aot.py).
+
+Kernels:
+  * :mod:`.diff`  — fused H5Diff reductions (Fig. 9c hot path).
+  * :mod:`.stats` — fused dataset statistics for SDS indexing (Fig. 9b).
+  * :mod:`.scan`  — predicate scan for SDS queries (Table II).
+  * :mod:`.hash`  — batched FNV-1a pathname hashing for DTN placement.
+
+:mod:`.ref` holds the pure-jnp oracles each kernel is validated against.
+"""
+
+from .diff import dataset_diff_partials, DEFAULT_TILE_M, LANES
+from .stats import dataset_stats_partials
+from .scan import predicate_scan_partials
+from .hash import path_hash_batch, DEFAULT_WORDS, DEFAULT_TILE_N
+from . import ref

@@ -1,0 +1,87 @@
+"""Pallas kernel: fused dataset difference (the H5Diff hot path).
+
+SCISPACE's end-to-end collaboration experiment (paper Fig. 9c) runs H5Diff
+over scientific datasets discovered in the workspace. The compute core of
+H5Diff is a streaming compare of two equal-shaped arrays; this kernel fuses
+the three reductions H5Diff needs — #elements over tolerance, max |a-b|,
+and sum of squared difference — into a single pass over the data.
+
+Layout: inputs are (M, 128) f32 row-major chunks (the Rust runtime flattens
+dataset payloads into fixed-size chunks and pads the tail). A scalar
+``n_valid`` masks padding lanes so arbitrary padding is safe. The grid
+walks row tiles; each grid step emits one partial per reduction, combined
+by the L2 wrapper with a final ``jnp`` reduce (which XLA fuses).
+
+TPU mapping: (TILE_M, 128) f32 blocks are (8,128)-aligned for the VPU;
+double-buffered HBM->VMEM streaming comes from the grid BlockSpec. VMEM
+footprint per step = 2 * TILE_M * 128 * 4 B (a, b tiles) + O(1) partials.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_TILE_M = 256
+
+
+def _diff_kernel(a_ref, b_ref, tol_ref, nv_ref, nd_ref, mx_ref, ss_ref, *, tile_m):
+    pid = pl.program_id(0)
+    a = a_ref[...]
+    b = b_ref[...]
+    tol = tol_ref[0, 0]
+    n_valid = nv_ref[0, 0]
+
+    # Global element index of each lane (row-major), for padding masking.
+    row = jax.lax.broadcasted_iota(jnp.float32, (tile_m, LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (tile_m, LANES), 1)
+    gidx = (pid.astype(jnp.float32) * tile_m + row) * LANES + col
+    valid = gidx < n_valid
+
+    d = jnp.abs(a - b)
+    d = jnp.where(valid, d, 0.0)
+    over = jnp.where(valid & (d > tol), 1.0, 0.0)
+
+    nd_ref[0] = jnp.sum(over)
+    mx_ref[0] = jnp.max(d)
+    ss_ref[0] = jnp.sum(d * d)
+
+
+def dataset_diff_partials(a, b, tol, n_valid, tile_m=DEFAULT_TILE_M):
+    """Run the fused diff kernel; returns per-tile partials.
+
+    Args:
+      a, b: (M, 128) f32 with M % tile_m == 0.
+      tol:  (1, 1) f32 absolute tolerance.
+      n_valid: (1, 1) f32 count of valid (un-padded) elements.
+
+    Returns:
+      (nd, mx, ss): three (grid,) f32 partial vectors.
+    """
+    m = a.shape[0]
+    assert a.shape == b.shape and a.shape[1] == LANES and m % tile_m == 0
+    grid = m // tile_m
+    import functools
+
+    kern = functools.partial(_diff_kernel, tile_m=tile_m)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(a, b, tol, n_valid)

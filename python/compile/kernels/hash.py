@@ -1,0 +1,55 @@
+"""Pallas kernel: batched FNV-1a pathname hashing (DTN placement).
+
+SCISPACE places file metadata on DTNs by hashing the file pathname (paper
+§III-B1): "Scientific Collaboration Workspace assigns a DTN for the write
+request by hashing the file pathname". Bulk operations (MEU exports, `ls`
+fan-out planning, re-sharding) hash thousands of paths at once; this kernel
+hashes a batch of fixed-width packed paths in one call.
+
+Each path is packed into W little-endian u32 words (zero padded) by the
+Rust side; the kernel folds FNV-1a-32 across the words. The W-step fold is
+unrolled at trace time (W is static), so the TPU sees a straight-line chain
+of XOR + integer-multiply VPU ops over a (TILE_N, W) u32 tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FNV_OFFSET, FNV_PRIME
+
+DEFAULT_WORDS = 32
+DEFAULT_TILE_N = 256
+
+
+def _hash_kernel(w_ref, out_ref, *, tile_n, words):
+    w = w_ref[...]
+    h = jnp.full((tile_n,), FNV_OFFSET, jnp.uint32)
+    for k in range(words):
+        h = (h ^ w[:, k]) * FNV_PRIME
+    out_ref[...] = h
+
+
+def path_hash_batch(words_arr, tile_n=DEFAULT_TILE_N):
+    """Hash a batch of packed pathnames.
+
+    Args:
+      words_arr: (N, W) uint32, N % tile_n == 0.
+
+    Returns:
+      (N,) uint32 FNV-1a hashes.
+    """
+    n, w = words_arr.shape
+    assert n % tile_n == 0
+    grid = n // tile_n
+    kern = functools.partial(_hash_kernel, tile_n=tile_n, words=w)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_n, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(words_arr)

@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to float associativity)
+pure-``jax.numpy`` counterpart here. pytest asserts ``allclose`` between the
+two across shape/dtype/value sweeps; these references are also what the L2
+model's numerics are validated against end-to-end from Rust.
+"""
+
+import jax.numpy as jnp
+
+# Histogram bin count used by dataset_stats (paper: SDS derived attributes).
+HIST_BINS = 16
+
+# FNV-1a 32-bit constants (path -> DTN shard placement, paper §III-B1).
+# Plain ints: Pallas kernels cannot capture array constants.
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+
+def dataset_diff_ref(a, b, tol):
+    """H5Diff core: element count over tolerance, max |a-b|, sum((a-b)^2).
+
+    Args:
+      a, b: f32 arrays of identical shape.
+      tol:  scalar absolute tolerance (elements with ``|a-b| > tol`` differ).
+
+    Returns:
+      (n_diff: f32 scalar, max_abs: f32 scalar, sum_sq: f32 scalar)
+    """
+    d = jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+    n_diff = jnp.sum((d > tol).astype(jnp.float32))
+    max_abs = jnp.max(d)
+    sum_sq = jnp.sum(d * d)
+    return n_diff, max_abs, sum_sq
+
+
+def dataset_stats_ref(x, lo, hi):
+    """SDS numeric attribute extraction: min/max/sum/sumsq + HIST_BINS histogram.
+
+    The histogram covers ``[lo, hi)`` with equal-width bins; values outside
+    the range are clamped into the first/last bin (matches the kernel).
+
+    Returns:
+      (min, max, sum, sumsq, hist[HIST_BINS]) — all f32.
+    """
+    x = x.astype(jnp.float32)
+    mn = jnp.min(x)
+    mx = jnp.max(x)
+    s = jnp.sum(x)
+    ss = jnp.sum(x * x)
+    width = (hi - lo) / HIST_BINS
+    idx = jnp.clip(jnp.floor((x - lo) / width), 0, HIST_BINS - 1).astype(jnp.int32)
+    hist = jnp.zeros((HIST_BINS,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    return mn, mx, s, ss, hist
+
+
+# Predicate opcodes for predicate_scan (paper §III-B5 query operators).
+OP_EQ, OP_LT, OP_GT = 0, 1, 2
+
+
+def predicate_scan_ref(col, op, operand):
+    """SDS query predicate over a numeric attribute column.
+
+    Args:
+      col: f32 array.
+      op:  int32 scalar opcode (OP_EQ / OP_LT / OP_GT).
+      operand: f32 scalar.
+
+    Returns:
+      (count: f32 scalar, mask: f32 array shaped like ``col`` with 0/1).
+    """
+    col = col.astype(jnp.float32)
+    eq = (col == operand).astype(jnp.float32)
+    lt = (col < operand).astype(jnp.float32)
+    gt = (col > operand).astype(jnp.float32)
+    mask = jnp.where(op == OP_EQ, eq, jnp.where(op == OP_LT, lt, gt))
+    return jnp.sum(mask), mask
+
+
+def path_hash_ref(words):
+    """FNV-1a-32 over per-path u32 word rows (DTN placement hash).
+
+    Args:
+      words: uint32 array of shape (N, W) — each row is one pathname packed
+        into W little-endian u32 words (zero padded).
+
+    Returns:
+      uint32 array (N,) of FNV-1a hashes.
+    """
+    h = jnp.full((words.shape[0],), FNV_OFFSET, jnp.uint32)
+    for k in range(words.shape[1]):
+        h = (h ^ words[:, k]) * FNV_PRIME
+    return h

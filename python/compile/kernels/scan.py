@@ -1,0 +1,81 @@
+"""Pallas kernel: predicate scan (SDS query evaluation hot path).
+
+SCISPACE's query CLI supports ``=``, ``<`` and ``>`` over numeric attribute
+columns (paper §III-B5, Table II). When a discovery shard evaluates a
+predicate over a large attribute column, the scan is the hot path; this
+kernel evaluates one predicate over a column chunk, producing a 0/1 match
+mask plus per-tile match counts.
+
+The opcode is data (a scalar input), so one compiled artifact serves all
+three operators — the kernel computes all three compares and selects
+branchlessly, which on TPU is three VPU compare ops, negligible next to the
+HBM stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_TILE_M = 256
+
+
+def _scan_kernel(col_ref, op_ref, val_ref, nv_ref, mask_ref, cnt_ref, *, tile_m):
+    pid = pl.program_id(0)
+    c = col_ref[...]
+    op = op_ref[0, 0]
+    v = val_ref[0, 0]
+    n_valid = nv_ref[0, 0]
+
+    row = jax.lax.broadcasted_iota(jnp.float32, (tile_m, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.float32, (tile_m, LANES), 1)
+    gidx = (pid.astype(jnp.float32) * tile_m + row) * LANES + lane
+    valid = gidx < n_valid
+
+    eq = (c == v).astype(jnp.float32)
+    lt = (c < v).astype(jnp.float32)
+    gt = (c > v).astype(jnp.float32)
+    m = jnp.where(op == 0, eq, jnp.where(op == 1, lt, gt))
+    m = jnp.where(valid, m, 0.0)
+
+    mask_ref[...] = m
+    cnt_ref[0] = jnp.sum(m)
+
+
+def predicate_scan_partials(col, op, operand, n_valid, tile_m=DEFAULT_TILE_M):
+    """Run the predicate-scan kernel.
+
+    Args:
+      col: (M, 128) f32 attribute column chunk, M % tile_m == 0.
+      op:  (1, 1) i32 opcode — 0: ``=``, 1: ``<``, 2: ``>``.
+      operand: (1, 1) f32 comparison operand.
+      n_valid: (1, 1) f32 valid element count.
+
+    Returns:
+      (mask: (M, 128) f32 of 0/1, counts: (grid,) f32 per-tile match counts)
+    """
+    m = col.shape[0]
+    assert col.shape[1] == LANES and m % tile_m == 0
+    grid = m // tile_m
+    kern = functools.partial(_scan_kernel, tile_m=tile_m)
+    return pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=True,
+    )(col, op, operand, n_valid)

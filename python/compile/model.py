@@ -1,0 +1,86 @@
+"""SCISPACE L2: JAX compute graph over the L1 Pallas kernels.
+
+Each public function here is the *whole* computation the Rust coordinator
+invokes for one chunk of work: the Pallas kernel produces per-tile partials
+and this layer folds them into the final scalars/vectors, all inside one
+jitted graph so XLA fuses the combine into the kernel's output stream.
+
+The Rust runtime operates on fixed chunk shapes (see CHUNK_ROWS / LANES /
+HASH_BATCH below); ``aot.py`` lowers the four entry points at exactly these
+shapes. Variable-size data is chunked + zero-padded by Rust, with
+``n_valid`` carrying the true element count into the masked kernels.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    dataset_diff_partials,
+    dataset_stats_partials,
+    predicate_scan_partials,
+    path_hash_batch,
+)
+from .kernels.ref import HIST_BINS
+
+# ---- Fixed AOT shapes (the Rust runtime mirrors these constants). --------
+LANES = 128          # minor dim of every f32 chunk (TPU lane width)
+CHUNK_ROWS = 4096    # rows per chunk -> 4096*128 = 524,288 f32 = 2 MiB
+TILE_M = 4096   # rows per grid step (perf-pass trial)
+HASH_BATCH = 1024    # paths per hash call
+HASH_WORDS = 32      # u32 words per packed path (128 bytes)
+HASH_TILE_N = 256
+
+
+def dataset_diff(a, b, tol, n_valid):
+    """H5Diff over one chunk: (n_diff, max_abs_diff, sum_sq_diff).
+
+    Args:
+      a, b: (CHUNK_ROWS, LANES) f32.
+      tol, n_valid: (1, 1) f32.
+    Returns:
+      Tuple of three f32 scalars.
+    """
+    nd, mx, ss = dataset_diff_partials(a, b, tol, n_valid, tile_m=TILE_M)
+    return jnp.sum(nd), jnp.max(mx), jnp.sum(ss)
+
+
+def dataset_stats(x, lo, hi, n_valid):
+    """SDS content statistics over one chunk.
+
+    Returns:
+      (min, max, sum, sumsq, hist[HIST_BINS]) — mean/std are derived on the
+      Rust side from (sum, sumsq, n) so multi-chunk datasets combine exactly.
+    """
+    mn, mx, s, ss, h = dataset_stats_partials(x, lo, hi, n_valid, tile_m=TILE_M)
+    return jnp.min(mn), jnp.max(mx), jnp.sum(s), jnp.sum(ss), jnp.sum(h, axis=0)
+
+
+def predicate_scan(col, op, operand, n_valid):
+    """SDS query predicate over one attribute-column chunk.
+
+    Returns:
+      (count: f32 scalar, mask: (CHUNK_ROWS, LANES) f32 of 0/1)
+    """
+    mask, cnt = predicate_scan_partials(col, op, operand, n_valid, tile_m=TILE_M)
+    return jnp.sum(cnt), mask
+
+
+def path_hash(words):
+    """FNV-1a-32 over a batch of packed pathnames -> (HASH_BATCH,) u32."""
+    return path_hash_batch(words, tile_n=HASH_TILE_N)
+
+
+def entry_points():
+    """(name, fn, example_args) for every AOT artifact aot.py emits."""
+    import jax
+
+    f32 = jnp.float32
+    chunk = jax.ShapeDtypeStruct((CHUNK_ROWS, LANES), f32)
+    scalar = jax.ShapeDtypeStruct((1, 1), f32)
+    iscalar = jax.ShapeDtypeStruct((1, 1), jnp.int32)
+    hwords = jax.ShapeDtypeStruct((HASH_BATCH, HASH_WORDS), jnp.uint32)
+    return [
+        ("diff", dataset_diff, (chunk, chunk, scalar, scalar)),
+        ("stats", dataset_stats, (chunk, scalar, scalar, scalar)),
+        ("scan", predicate_scan, (chunk, iscalar, scalar, scalar)),
+        ("hash", path_hash, (hwords,)),
+    ]

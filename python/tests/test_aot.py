@@ -1,0 +1,76 @@
+"""AOT pipeline tests: HLO-text artifacts exist, parse, and carry manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_all(out)
+    return out, manifest
+
+
+class TestAot:
+    def test_all_artifacts_emitted(self, artifacts):
+        out, manifest = artifacts
+        assert set(manifest["artifacts"]) == {"diff", "stats", "scan", "hash"}
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(out, meta["file"])
+            assert os.path.exists(path)
+            assert os.path.getsize(path) == meta["bytes"]
+
+    def test_hlo_text_format(self, artifacts):
+        out, manifest = artifacts
+        for meta in manifest["artifacts"].values():
+            text = open(os.path.join(out, meta["file"])).read()
+            # HLO text modules start with "HloModule"; ENTRY computation with
+            # a ROOT instruction must be present for the Rust-side parser.
+            assert text.startswith("HloModule")
+            assert "ENTRY" in text and "ROOT" in text
+
+    def test_no_custom_calls(self, artifacts):
+        """interpret=True Pallas must lower to plain HLO — a Mosaic
+        custom-call would be unloadable by the CPU PJRT plugin."""
+        out, manifest = artifacts
+        for meta in manifest["artifacts"].values():
+            text = open(os.path.join(out, meta["file"])).read()
+            assert "custom-call" not in text, meta["file"]
+
+    def test_manifest_shapes_match_model(self, artifacts):
+        _, manifest = artifacts
+        assert manifest["chunk_rows"] == model.CHUNK_ROWS
+        assert manifest["lanes"] == model.LANES
+        assert manifest["hash_batch"] == model.HASH_BATCH
+        assert manifest["hash_words"] == model.HASH_WORDS
+        diff_args = manifest["artifacts"]["diff"]["args"]
+        assert diff_args[0]["shape"] == [model.CHUNK_ROWS, model.LANES]
+        assert diff_args[0]["dtype"] == "float32"
+
+    def test_deterministic_lowering(self, artifacts, tmp_path):
+        """Same model -> byte-identical HLO (sha256 in manifest is stable)."""
+        out, manifest = artifacts
+        again = aot.lower_all(str(tmp_path))
+        for name in manifest["artifacts"]:
+            assert (
+                manifest["artifacts"][name]["sha256"]
+                == again["artifacts"][name]["sha256"]
+            ), name
+
+    def test_make_artifacts_output_exists(self):
+        """If `make artifacts` ran, the checked-in artifacts dir is complete."""
+        if not os.path.isdir(ART) or not os.path.exists(
+            os.path.join(ART, "manifest.json")
+        ):
+            pytest.skip("artifacts/ not built yet")
+        manifest = json.load(open(os.path.join(ART, "manifest.json")))
+        for meta in manifest["artifacts"].values():
+            assert os.path.exists(os.path.join(ART, meta["file"]))

@@ -1,0 +1,259 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes / dtypes / value ranges; fixed seeds keep runs
+reproducible. These are the CORE correctness signal for the compute layer —
+the Rust integration tests assert the same numerics end-to-end through
+PJRT-compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import (
+    dataset_diff_partials,
+    dataset_stats_partials,
+    predicate_scan_partials,
+    path_hash_batch,
+)
+from compile.kernels import ref
+
+LANES = model.LANES
+
+
+def rand(key, rows, lo=-4.0, hi=4.0):
+    return jax.random.uniform(key, (rows, LANES), jnp.float32, lo, hi)
+
+
+def s11(v, dtype=jnp.float32):
+    return jnp.full((1, 1), v, dtype)
+
+
+# ---------------------------------------------------------------- diff ----
+class TestDiff:
+    @pytest.mark.parametrize("rows,tile", [(8, 8), (64, 16), (256, 64), (512, 256)])
+    def test_matches_ref_full(self, rows, tile):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(rows))
+        a, b = rand(k1, rows), rand(k2, rows)
+        nd, mx, ss = dataset_diff_partials(a, b, s11(0.5), s11(a.size), tile_m=tile)
+        rnd, rmx, rss = ref.dataset_diff_ref(a, b, 0.5)
+        np.testing.assert_allclose(jnp.sum(nd), rnd)
+        np.testing.assert_allclose(jnp.max(mx), rmx, rtol=1e-6)
+        np.testing.assert_allclose(jnp.sum(ss), rss, rtol=1e-4)
+
+    def test_identical_inputs_zero(self):
+        a = rand(jax.random.PRNGKey(1), 64)
+        nd, mx, ss = dataset_diff_partials(a, a, s11(0.0), s11(a.size), tile_m=16)
+        assert float(jnp.sum(nd)) == 0.0
+        assert float(jnp.max(mx)) == 0.0
+        assert float(jnp.sum(ss)) == 0.0
+
+    def test_single_element_difference(self):
+        a = jnp.zeros((16, LANES), jnp.float32)
+        b = a.at[3, 17].set(2.5)
+        nd, mx, ss = dataset_diff_partials(a, b, s11(1.0), s11(a.size), tile_m=8)
+        assert float(jnp.sum(nd)) == 1.0
+        np.testing.assert_allclose(float(jnp.max(mx)), 2.5)
+        np.testing.assert_allclose(float(jnp.sum(ss)), 6.25)
+
+    def test_tolerance_boundary_excluded(self):
+        # |a-b| == tol must NOT count as a difference (strict >, like h5diff).
+        a = jnp.zeros((8, LANES), jnp.float32)
+        b = jnp.full((8, LANES), 0.5, jnp.float32)
+        nd, _, _ = dataset_diff_partials(a, b, s11(0.5), s11(a.size), tile_m=8)
+        assert float(jnp.sum(nd)) == 0.0
+
+    def test_padding_masked(self):
+        # Elements past n_valid must not contribute even if wildly different.
+        a = jnp.zeros((8, LANES), jnp.float32)
+        b = jnp.full((8, LANES), 100.0, jnp.float32)
+        n_valid = 5  # only first 5 elements are real
+        nd, mx, ss = dataset_diff_partials(a, b, s11(1.0), s11(n_valid), tile_m=8)
+        assert float(jnp.sum(nd)) == n_valid
+        np.testing.assert_allclose(float(jnp.sum(ss)), n_valid * 100.0**2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rows=st.sampled_from([8, 16, 64, 128]),
+        tol=st.floats(0.0, 2.0),
+        n_valid_frac=st.floats(0.1, 1.0),
+    )
+    def test_hypothesis_sweep(self, seed, rows, tol, n_valid_frac):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a, b = rand(k1, rows), rand(k2, rows)
+        n_valid = max(1, int(rows * LANES * n_valid_frac))
+        nd, mx, ss = dataset_diff_partials(a, b, s11(tol), s11(n_valid), tile_m=8)
+        fa = np.asarray(a).reshape(-1)[:n_valid]
+        fb = np.asarray(b).reshape(-1)[:n_valid]
+        rnd, rmx, rss = ref.dataset_diff_ref(jnp.asarray(fa), jnp.asarray(fb), tol)
+        np.testing.assert_allclose(jnp.sum(nd), rnd)
+        np.testing.assert_allclose(jnp.max(mx), rmx, rtol=1e-6)
+        np.testing.assert_allclose(jnp.sum(ss), rss, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------- stats ----
+class TestStats:
+    @pytest.mark.parametrize("rows,tile", [(8, 8), (64, 16), (256, 128)])
+    def test_matches_ref_full(self, rows, tile):
+        x = rand(jax.random.PRNGKey(rows), rows)
+        mn, mx, s, ss, h = dataset_stats_partials(
+            x, s11(-4.0), s11(4.0), s11(x.size), tile_m=tile
+        )
+        r = ref.dataset_stats_ref(x, -4.0, 4.0)
+        np.testing.assert_allclose(jnp.min(mn), r[0], rtol=1e-6)
+        np.testing.assert_allclose(jnp.max(mx), r[1], rtol=1e-6)
+        np.testing.assert_allclose(jnp.sum(s), r[2], rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(jnp.sum(ss), r[3], rtol=1e-4)
+        np.testing.assert_allclose(jnp.sum(h, axis=0), r[4])
+
+    def test_histogram_sums_to_n_valid(self):
+        x = rand(jax.random.PRNGKey(7), 32)
+        for n_valid in (1, 100, 32 * LANES):
+            _, _, _, _, h = dataset_stats_partials(
+                x, s11(-4.0), s11(4.0), s11(n_valid), tile_m=8
+            )
+            assert float(jnp.sum(h)) == n_valid
+
+    def test_out_of_range_clamped_to_edge_bins(self):
+        x = jnp.concatenate(
+            [jnp.full((4, LANES), -100.0), jnp.full((4, LANES), 100.0)]
+        ).astype(jnp.float32)
+        _, _, _, _, h = dataset_stats_partials(
+            x, s11(0.0), s11(1.0), s11(x.size), tile_m=8
+        )
+        hist = np.asarray(jnp.sum(h, axis=0))
+        assert hist[0] == 4 * LANES and hist[-1] == 4 * LANES
+        assert hist[1:-1].sum() == 0
+
+    def test_constant_data(self):
+        x = jnp.full((8, LANES), 2.5, jnp.float32)
+        mn, mx, s, ss, _ = dataset_stats_partials(
+            x, s11(0.0), s11(4.0), s11(x.size), tile_m=8
+        )
+        np.testing.assert_allclose(float(jnp.min(mn)), 2.5)
+        np.testing.assert_allclose(float(jnp.max(mx)), 2.5)
+        np.testing.assert_allclose(float(jnp.sum(s)), 2.5 * x.size, rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rows=st.sampled_from([8, 32, 64]),
+        n_valid_frac=st.floats(0.05, 1.0),
+    )
+    def test_hypothesis_masking(self, seed, rows, n_valid_frac):
+        x = rand(jax.random.PRNGKey(seed), rows)
+        n_valid = max(1, int(rows * LANES * n_valid_frac))
+        mn, mx, s, ss, h = dataset_stats_partials(
+            x, s11(-4.0), s11(4.0), s11(n_valid), tile_m=8
+        )
+        fx = jnp.asarray(np.asarray(x).reshape(-1)[:n_valid])
+        r = ref.dataset_stats_ref(fx, -4.0, 4.0)
+        np.testing.assert_allclose(jnp.min(mn), r[0], rtol=1e-6)
+        np.testing.assert_allclose(jnp.max(mx), r[1], rtol=1e-6)
+        np.testing.assert_allclose(jnp.sum(s), r[2], rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(jnp.sum(h, axis=0), r[4])
+
+
+# ---------------------------------------------------------------- scan ----
+class TestScan:
+    @pytest.mark.parametrize("op", [ref.OP_EQ, ref.OP_LT, ref.OP_GT])
+    def test_ops_match_ref(self, op):
+        col = rand(jax.random.PRNGKey(op), 64)
+        mask, cnt = predicate_scan_partials(
+            col, s11(op, jnp.int32), s11(0.5), s11(col.size), tile_m=16
+        )
+        rcnt, rmask = ref.predicate_scan_ref(col, op, 0.5)
+        np.testing.assert_allclose(jnp.sum(cnt), rcnt)
+        np.testing.assert_allclose(mask, rmask)
+
+    def test_eq_on_exact_values(self):
+        col = jnp.zeros((8, LANES), jnp.float32).at[2, 5].set(7.0).at[4, 99].set(7.0)
+        mask, cnt = predicate_scan_partials(
+            col, s11(ref.OP_EQ, jnp.int32), s11(7.0), s11(col.size), tile_m=8
+        )
+        assert float(jnp.sum(cnt)) == 2.0
+        assert float(mask[2, 5]) == 1.0 and float(mask[4, 99]) == 1.0
+
+    def test_count_equals_mask_sum(self):
+        col = rand(jax.random.PRNGKey(3), 32)
+        mask, cnt = predicate_scan_partials(
+            col, s11(ref.OP_GT, jnp.int32), s11(0.0), s11(col.size), tile_m=8
+        )
+        np.testing.assert_allclose(float(jnp.sum(cnt)), float(jnp.sum(mask)))
+
+    def test_padding_never_matches(self):
+        col = jnp.full((8, LANES), 1.0, jnp.float32)
+        n_valid = 10
+        mask, cnt = predicate_scan_partials(
+            col, s11(ref.OP_GT, jnp.int32), s11(0.0), s11(n_valid), tile_m=8
+        )
+        assert float(jnp.sum(cnt)) == n_valid
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        op=st.sampled_from([ref.OP_EQ, ref.OP_LT, ref.OP_GT]),
+        operand=st.floats(-3.0, 3.0),
+    )
+    def test_hypothesis_sweep(self, seed, op, operand):
+        col = rand(jax.random.PRNGKey(seed), 32)
+        mask, cnt = predicate_scan_partials(
+            col, s11(op, jnp.int32), s11(operand), s11(col.size), tile_m=8
+        )
+        rcnt, rmask = ref.predicate_scan_ref(col, op, operand)
+        np.testing.assert_allclose(jnp.sum(cnt), rcnt)
+        np.testing.assert_allclose(mask, rmask)
+
+
+# ---------------------------------------------------------------- hash ----
+class TestHash:
+    def test_matches_ref(self):
+        key = jax.random.PRNGKey(0)
+        w = jax.random.randint(key, (512, 32), 0, 2**31 - 1, jnp.int32).astype(
+            jnp.uint32
+        )
+        np.testing.assert_array_equal(
+            np.asarray(path_hash_batch(w, tile_n=128)),
+            np.asarray(ref.path_hash_ref(w)),
+        )
+
+    def test_known_vector(self):
+        # FNV-1a folded over u32 words; independently computed in Rust too
+        # (rust/src/metadata/placement.rs test_fnv_known_vector must agree).
+        w = np.zeros((256, 32), np.uint32)
+        w[0, 0] = 0x64636261  # "abcd" little-endian
+        h = np.asarray(path_hash_batch(jnp.asarray(w), tile_n=256))
+        expect = np.uint32(2166136261)
+        expect = np.uint32((int(expect) ^ 0x64636261) * 16777619 & 0xFFFFFFFF)
+        for _ in range(31):
+            expect = np.uint32(int(expect) * 16777619 & 0xFFFFFFFF)
+        assert h[0] == expect
+
+    def test_rows_independent(self):
+        w = np.random.RandomState(0).randint(0, 2**32, (256, 32), np.uint64)
+        w = w.astype(np.uint32)
+        h1 = np.asarray(path_hash_batch(jnp.asarray(w), tile_n=128))
+        w2 = w.copy()
+        w2[7] ^= 0xDEADBEEF
+        h2 = np.asarray(path_hash_batch(jnp.asarray(w2), tile_n=128))
+        assert h1[7] != h2[7]
+        mask = np.ones(256, bool)
+        mask[7] = False
+        np.testing.assert_array_equal(h1[mask], h2[mask])
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([128, 256, 512]))
+    def test_hypothesis_sweep(self, seed, n):
+        w = (
+            np.random.RandomState(seed)
+            .randint(0, 2**32, (n, 32), np.uint64)
+            .astype(np.uint32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(path_hash_batch(jnp.asarray(w), tile_n=128)),
+            np.asarray(ref.path_hash_ref(jnp.asarray(w))),
+        )

@@ -1,0 +1,24 @@
+//! Fig. 7 (a)(b): IOR write/read throughput vs transfer block size,
+//! single collaborator — baseline (UnionFS) vs SCISPACE vs SCISPACE-LW.
+//!
+//! Paper shape to reproduce: SCISPACE-LW wins everywhere; the gap is
+//! largest at 4 KB (paper: up to 70 %) and nearly closes at 512 KB
+//! (paper: ~2 %); baseline ≈ SCISPACE, both overhead-bound at small
+//! blocks. Run: `cargo bench --bench fig7_blocksize`.
+
+use scispace::bench::{fig7, print_throughput, IorOp, ThroughputRow};
+
+fn avg_gain(rows: &[ThroughputRow]) -> f64 {
+    rows.iter().map(|r| r.lw_gain_pct()).sum::<f64>() / rows.len() as f64
+}
+
+fn main() {
+    let blocks = [4 << 10, 16 << 10, 64 << 10, 128 << 10, 256 << 10, 512 << 10];
+    let data = 24 << 20;
+    let w = fig7(IorOp::Write, &blocks, data);
+    print_throughput("Fig 7a: IOR write vs block size (1 collaborator)", "block", &w);
+    println!("average LW gain (paper: 16% avg, 2-70% window): {:+.1}%", avg_gain(&w));
+    let r = fig7(IorOp::Read, &blocks, data);
+    print_throughput("Fig 7b: IOR read vs block size (1 collaborator)", "block", &r);
+    println!("average LW gain (paper: 41% avg, consistent): {:+.1}%", avg_gain(&r));
+}

@@ -1,0 +1,22 @@
+//! Fig. 8 (a)(b): IOR write/read throughput vs collaborator count at
+//! 512 KB blocks — baseline vs SCISPACE vs SCISPACE-LW.
+//!
+//! Paper shape: all three scale with collaborators; LW +16 % (write) and
+//! +28 % (read) at 24 collaborators; baseline/SCISPACE reads dip in the
+//! 8-16 range from NFS cache pressure. Run:
+//! `cargo bench --bench fig8_collaborators`.
+
+use scispace::bench::{fig8, print_throughput, IorOp};
+
+fn main() {
+    let collabs = [1, 2, 4, 8, 12, 16, 20, 24];
+    let per_collab = 16 << 20;
+    let w = fig8(IorOp::Write, &collabs, per_collab);
+    print_throughput("Fig 8a: IOR write vs collaborators (512KB blocks)", "collabs", &w);
+    let last = w.last().unwrap();
+    println!("LW gain at 24 collaborators (paper: +16%): {:+.1}%", last.lw_gain_pct());
+    let r = fig8(IorOp::Read, &collabs, per_collab);
+    print_throughput("Fig 8b: IOR read vs collaborators (512KB blocks)", "collabs", &r);
+    let last = r.last().unwrap();
+    println!("LW gain at 24 collaborators (paper: +28%): {:+.1}%", last.lw_gain_pct());
+}

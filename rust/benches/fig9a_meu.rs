@@ -1,0 +1,28 @@
+//! Fig. 9a: Metadata Export Utility — time to create N zero-size files
+//! through the baseline workspace vs native LW vs LW + MEU export.
+//!
+//! Paper shape: baseline cost explodes with file count ("huge overhead
+//! which comes from increased contact points"); LW and LW+MEU stay
+//! linear with a small MEU delta. Run: `cargo bench --bench fig9a_meu`.
+//! Paper sweeps 5K-1M files; default here is 5K-200K for wall-clock
+//! sanity (pass --full via `SCISPACE_FULL=1` for the 1M point).
+
+use scispace::bench::{fig9a, print_meu};
+
+fn main() {
+    let full = std::env::var("SCISPACE_FULL").is_ok();
+    let counts: &[u64] = if full {
+        &[5_000, 50_000, 200_000, 1_000_000]
+    } else {
+        &[5_000, 20_000, 50_000, 200_000]
+    };
+    let rows = fig9a(counts);
+    print_meu(&rows);
+    let r = rows.last().unwrap();
+    println!(
+        "at {} files: baseline/LW = {:.1}x, MEU overhead over LW = {:+.1}%",
+        r.files,
+        r.baseline_s / r.lw_s,
+        (r.lw_meu_s - r.lw_s) / r.lw_s * 100.0
+    );
+}

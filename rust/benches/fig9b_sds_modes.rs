@@ -1,0 +1,23 @@
+//! Fig. 9b: SDS metadata-extraction modes (Inline-Sync vs Inline-Async
+//! vs LW-Offline), 4 collaborators, 5 vs 20 indexed attributes.
+//!
+//! Paper shape: vs Inline-Sync, Inline-Async saves 12 % (5 attrs) to
+//! 56 % (20 attrs); LW-Offline saves 36 % to 62 %. Run:
+//! `cargo bench --bench fig9b_sds_modes`.
+
+use scispace::bench::{fig9b, print_sds_modes};
+
+fn main() {
+    let rows = fig9b(&[5, 20], 120);
+    print_sds_modes(&rows);
+    for r in &rows {
+        let ga = (r.inline_sync_s - r.inline_async_s) / r.inline_sync_s * 100.0;
+        let go = (r.inline_sync_s - r.lw_offline_s) / r.inline_sync_s * 100.0;
+        println!(
+            "attrs={:>2}: async saves {ga:.0}% (paper: {}%), offline saves {go:.0}% (paper: {}%)",
+            r.attrs,
+            if r.attrs == 5 { 12 } else { 56 },
+            if r.attrs == 5 { 36 } else { 62 },
+        );
+    }
+}

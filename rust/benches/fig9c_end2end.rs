@@ -1,0 +1,31 @@
+//! Fig. 9c: end-to-end scientific collaboration with H5Diff — baseline
+//! (filename search + migrate datasets to the local DC + run) vs
+//! SCISPACE (attribute query + run in place).
+//!
+//! Paper shape: SCISPACE's end-to-end time is lower for every file
+//! count, and the gap widens with files (baseline search + migration
+//! grow; query time is ~constant). Uses the PJRT diff kernel when
+//! `artifacts/` is built. Run: `cargo bench --bench fig9c_end2end`.
+
+use scispace::bench::{fig9c, print_end2end};
+use scispace::runtime;
+
+fn main() {
+    let svc = runtime::find_artifacts().and_then(|d| runtime::ComputeService::spawn(&d).ok());
+    let rows = match &svc {
+        Some(s) => {
+            println!("(diff compute: PJRT kernel)");
+            let h = s.handle();
+            let mut f = move |a: &[f32], b: &[f32], tol: f32| {
+                let r = h.diff(a, b, tol).expect("pjrt diff");
+                (r.n_diff, r.max_abs, r.sum_sq)
+            };
+            fig9c(&[8, 16, 32, 64], Some(&mut f))
+        }
+        None => {
+            println!("(diff compute: CPU fallback — run `make artifacts`)");
+            fig9c(&[8, 16, 32, 64], None)
+        }
+    };
+    print_end2end(&rows);
+}

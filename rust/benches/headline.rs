@@ -1,0 +1,37 @@
+//! Headline claim: "average 36% performance boost when the proposed
+//! native-data access is employed in collaborations".
+//!
+//! Aggregates the LW-vs-workspace improvement across the Fig. 7/8
+//! write+read sweeps and the Fig. 9b LW-Offline extraction saving, then
+//! reports the overall average. Run: `cargo bench --bench headline`.
+
+use scispace::bench::*;
+
+fn main() {
+    let blocks = [4 << 10, 64 << 10, 512 << 10];
+    let mut gains: Vec<(String, f64)> = Vec::new();
+    for (op, label) in [(IorOp::Write, "fig7-write"), (IorOp::Read, "fig7-read")] {
+        for r in fig7(op, &blocks, 16 << 20) {
+            gains.push((format!("{label}@{}", r.x), r.lw_gain_pct()));
+        }
+    }
+    for (op, label) in [(IorOp::Write, "fig8-write"), (IorOp::Read, "fig8-read")] {
+        for r in fig8(op, &[4, 24], 8 << 20) {
+            gains.push((format!("{label}@{}c", r.x), r.lw_gain_pct()));
+        }
+    }
+    for r in fig9b(&[5, 20], 40) {
+        gains.push((
+            format!("fig9b-offline@{}attrs", r.attrs),
+            // improvement relative to the non-native (Inline-Sync) flow,
+            // matching how the paper expresses per-experiment boosts
+            (r.inline_sync_s - r.lw_offline_s) / r.inline_sync_s * 100.0,
+        ));
+    }
+    println!("== Headline: native-access improvement per experiment ==");
+    for (name, g) in &gains {
+        println!("{name:>24} {g:+8.1}%");
+    }
+    let avg = gains.iter().map(|(_, g)| g).sum::<f64>() / gains.len() as f64;
+    println!("\naverage native-access boost: {avg:+.1}%  (paper headline: +36%)");
+}

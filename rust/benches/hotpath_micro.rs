@@ -1,0 +1,123 @@
+//! L3 hot-path microbenchmarks (wall clock, not virtual time) — the
+//! §Perf baseline/after numbers in EXPERIMENTS.md come from here.
+//!
+//! Covers: pathname hash routing, metadata shard ops, ls fan-out merge,
+//! MEU scan+pack, discovery-shard queries, codec round-trips, SHDF
+//! header parse, and (when artifacts exist) PJRT kernel dispatch.
+//! Run: `cargo bench --bench hotpath_micro`.
+
+use scispace::db::Value;
+use scispace::metadata::{placement, FileMeta, MetaReq, MetaShard};
+use scispace::msg::Wire;
+use scispace::sds::{DiscoveryShard, Query};
+use scispace::util::timer::{bench_fn, summary};
+
+fn meta(path: &str) -> FileMeta {
+    FileMeta {
+        path: path.into(),
+        dc: 0,
+        size: 4096,
+        owner: "bench".into(),
+        mtime: 1.0,
+        sync: true,
+        namespace: "global".into(),
+    }
+}
+
+fn main() {
+    let paths: Vec<String> = (0..10_000)
+        .map(|i| format!("/proj/modis/2018/{:02}/granule_{i:06}.shdf", i % 12))
+        .collect();
+
+    // -- placement hash routing (per-request path)
+    let mut k = 0usize;
+    let s = bench_fn(1000, 100_000, || {
+        k = (k + 1) % paths.len();
+        placement::shard_for(&paths[k], 4)
+    });
+    println!("{}", summary("route: shard_for (128B path)", &s));
+
+    // -- metadata shard upsert+get
+    let mut shard = MetaShard::new();
+    for p in paths.iter().take(5000) {
+        shard.apply(&MetaReq::Upsert(meta(p)));
+    }
+    let mut k = 0usize;
+    let s = bench_fn(100, 20_000, || {
+        k = (k + 1) % 5000;
+        shard.apply(&MetaReq::Get(paths[k].clone()))
+    });
+    println!("{}", summary("metadata: point get (5k shard)", &s));
+
+    let s = bench_fn(10, 200, || {
+        shard.apply(&MetaReq::List { prefix: "/proj/modis/2018/03".into(), namespace: None })
+    });
+    println!("{}", summary("metadata: prefix list (5k shard)", &s));
+
+    // -- discovery shard query
+    let mut ds = DiscoveryShard::new();
+    for (i, p) in paths.iter().enumerate().take(5000) {
+        ds.insert("Location", p, Value::Text(format!("loc{}", i % 8))).unwrap();
+        ds.insert("DayNight", p, Value::Int((i % 2) as i64)).unwrap();
+    }
+    let q = Query::parse("Location = loc3").unwrap();
+    let s = bench_fn(10, 2_000, || ds.eval(&q).unwrap().len());
+    println!("{}", summary("sds: indexed eq query (10k tuples)", &s));
+
+    let ql = Query::parse("Location like loc%").unwrap();
+    let s = bench_fn(5, 200, || ds.eval(&ql).unwrap().len());
+    println!("{}", summary("sds: like query (10k tuples)", &s));
+
+    // -- codec round trip
+    let batch = MetaReq::BatchUpsert(paths.iter().take(1000).map(|p| meta(p)).collect());
+    let s = bench_fn(5, 500, || batch.to_bytes().len());
+    println!("{}", summary("codec: encode 1000-entry batch", &s));
+    let bytes = batch.to_bytes();
+    let s = bench_fn(5, 500, || MetaReq::from_bytes(&bytes).unwrap());
+    println!("{}", summary("codec: decode 1000-entry batch", &s));
+
+    // -- SHDF header parse (SDS extraction hot path)
+    let corpus = scispace::workload::modis_corpus(&scispace::workload::ModisConfig {
+        n_files: 1,
+        elems_per_file: 65_536,
+        seed: 1,
+    });
+    let fbytes = corpus[0].1.to_bytes();
+    let s = bench_fn(10, 5_000, || scispace::shdf::read_header(&fbytes).unwrap().len());
+    println!("{}", summary("shdf: header-only parse (256KB file)", &s));
+    let s = bench_fn(5, 200, || {
+        <scispace::shdf::ShdfFile as Wire>::from_bytes(&fbytes).unwrap().n_elements()
+    });
+    println!("{}", summary("shdf: full parse (256KB file)", &s));
+
+    // -- MEU scan over a synced tree with one dirty file
+    {
+        use scispace::workspace::{AccessMode, Testbed};
+        let mut tb = Testbed::paper_default();
+        tb.register("c0", 0);
+        for i in 0..20_000 {
+            tb.write(0, &format!("/big/d{}/f{i}", i / 100), 0, 0, None, AccessMode::ScispaceLw)
+                .unwrap();
+        }
+        scispace::meu::export(&mut tb, 0, "/", None).unwrap();
+        tb.write(0, "/fresh/new.dat", 0, 0, None, AccessMode::ScispaceLw).unwrap();
+        let s = bench_fn(5, 500, || tb.dcs[0].fs.scan_unsynced("/").0.len());
+        println!("{}", summary("meu: pruned scan (20k synced tree)", &s));
+    }
+
+    // -- PJRT kernel dispatch (when artifacts are built)
+    if let Some(dir) = scispace::runtime::find_artifacts() {
+        let svc = scispace::runtime::ComputeService::spawn(&dir).expect("spawn");
+        let h = svc.handle();
+        let a: Vec<f32> = (0..524_288).map(|i| i as f32 * 0.001).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + 0.0005).collect();
+        let s = bench_fn(3, 30, || h.diff(&a, &b, 0.01).unwrap().n_diff);
+        println!("{}", summary("pjrt: diff kernel (2MiB chunk)", &s));
+        let s = bench_fn(3, 30, || h.stats(&a, 0.0, 600.0).unwrap().n);
+        println!("{}", summary("pjrt: stats kernel (2MiB chunk)", &s));
+        let s = bench_fn(3, 30, || h.hash_paths(&paths[..1024].to_vec()).unwrap().len());
+        println!("{}", summary("pjrt: hash kernel (1024 paths)", &s));
+    } else {
+        println!("(skipping PJRT kernel benches: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,23 @@
+//! Table II: SDS search-query latency vs hit ratio (0/25/50/75/100 %)
+//! for the four MODIS attributes (Location, Instrument, Date: text;
+//! DayNight: int), 4 collaborators.
+//!
+//! Paper shape: latency grows roughly linearly with hit ratio (message
+//! packing/unpacking of results dominates); low ratios are fast.
+//! Run: `cargo bench --bench table2_query`.
+
+use scispace::bench::{print_table2, table2};
+
+fn main() {
+    let rows = table2(20_000, 100);
+    print_table2(&rows);
+    for r in &rows {
+        let l25 = r.latencies[1].1;
+        let l100 = r.latencies[4].1;
+        println!(
+            "{}: 100% / 25% latency ratio = {:.2} (paper: ~2.5x)",
+            r.attr,
+            l100 / l25
+        );
+    }
+}

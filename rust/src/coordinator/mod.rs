@@ -1,0 +1,373 @@
+//! L3 coordinator: the live (real-TCP) deployment mode and placement
+//! policies.
+//!
+//! The simulated testbed ([`crate::workspace::Testbed`]) reproduces the
+//! paper's *measurements*; this module is the production-shaped runtime:
+//! each DTN runs a [`DtnServer`] hosting its metadata + discovery shards
+//! behind the length-prefixed RPC protocol, and collaborator machines use
+//! a [`Cluster`] client that hash-routes single-path operations and
+//! fans `ls`/queries out to every DTN **in parallel** (one thread per
+//! shard, as the paper describes).
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::db::Value;
+use crate::metadata::{placement, FileMeta, MetaReq, MetaResp, MetaShard};
+use crate::msg::{Dec, Enc, RpcClient, RpcServer, Wire};
+use crate::sds::{DiscoveryShard, Query};
+
+/// Placement policy for data/DTN assignment (§IV-C: SCISPACE uses
+/// round-robin request placement; metadata placement is always path-hash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Hash the file pathname (metadata placement).
+    HashPath,
+    /// Round-robin across DTNs (request placement).
+    RoundRobin,
+}
+
+/// Service multiplex tags on the wire.
+mod tag {
+    pub const META: u8 = 0;
+    pub const SDS_QUERY: u8 = 1;
+    pub const SDS_INSERT: u8 = 2;
+    pub const PING: u8 = 3;
+}
+
+/// One DTN's live server: metadata shard + discovery shard over TCP.
+pub struct DtnServer {
+    server: RpcServer,
+    /// Shared shard state (also reachable in-process for tests/tools).
+    pub meta: Arc<Mutex<MetaShard>>,
+    /// Discovery shard.
+    pub sds: Arc<Mutex<DiscoveryShard>>,
+}
+
+impl DtnServer {
+    /// Start serving on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(port: u16) -> Result<DtnServer> {
+        let meta = Arc::new(Mutex::new(MetaShard::new()));
+        let sds = Arc::new(Mutex::new(DiscoveryShard::new()));
+        let (m2, s2) = (meta.clone(), sds.clone());
+        let server = RpcServer::serve(port, move |req| handle(&m2, &s2, req))?;
+        Ok(DtnServer { server, meta, sds })
+    }
+
+    /// Bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.server.addr()
+    }
+
+    /// Stop serving.
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn handle(meta: &Mutex<MetaShard>, sds: &Mutex<DiscoveryShard>, req: &[u8]) -> Vec<u8> {
+    let mut d = Dec::new(req);
+    let out: Result<Vec<u8>> = (|| {
+        match d.u8()? {
+            tag::META => {
+                let r = MetaReq::decode(&mut d)?;
+                Ok(meta.lock().unwrap().apply(&r).to_bytes())
+            }
+            tag::SDS_QUERY => {
+                let attr = d.str()?;
+                let opn = d.u8()?;
+                let value = Value::decode(&mut d)?;
+                let op = match opn {
+                    0 => crate::sds::Op::Eq,
+                    1 => crate::sds::Op::Lt,
+                    2 => crate::sds::Op::Gt,
+                    _ => crate::sds::Op::Like,
+                };
+                let q = Query { attr, op, value };
+                let hits = sds.lock().unwrap().eval(&q)?;
+                let mut e = Enc::new();
+                e.u32(hits.len() as u32);
+                for (f, v) in hits {
+                    e.str(&f);
+                    v.encode(&mut e);
+                }
+                Ok(e.finish())
+            }
+            tag::SDS_INSERT => {
+                let attr = d.str()?;
+                let file = d.str()?;
+                let value = Value::decode(&mut d)?;
+                sds.lock().unwrap().insert(&attr, &file, value)?;
+                Ok(vec![0])
+            }
+            tag::PING => Ok(b"pong".to_vec()),
+            t => bail!("unknown service tag {t}"),
+        }
+    })();
+    out.unwrap_or_else(|e| {
+        let mut enc = Enc::new();
+        enc.u8(255).str(&e.to_string());
+        enc.finish()
+    })
+}
+
+/// Client to a set of live DTN servers.
+pub struct Cluster {
+    addrs: Vec<SocketAddr>,
+    conns: Vec<Mutex<RpcClient>>,
+}
+
+impl Cluster {
+    /// Connect to every DTN.
+    pub fn connect(addrs: &[SocketAddr]) -> Result<Cluster> {
+        let conns = addrs
+            .iter()
+            .map(|a| RpcClient::connect(*a).map(Mutex::new))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Cluster { addrs: addrs.to_vec(), conns })
+    }
+
+    /// Number of shards/DTNs.
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// True when no DTNs are connected.
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    fn call(&self, shard: usize, body: &[u8]) -> Result<Vec<u8>> {
+        let mut c = self.conns[shard].lock().unwrap();
+        c.call(body)
+    }
+
+    fn meta_call(&self, shard: usize, req: &MetaReq) -> Result<MetaResp> {
+        let mut e = Enc::new();
+        e.u8(tag::META);
+        req.encode(&mut e);
+        let resp = self.call(shard, &e.finish())?;
+        MetaResp::from_bytes(&resp)
+    }
+
+    /// Upsert one file's metadata (hash-routed).
+    pub fn upsert(&self, meta: FileMeta) -> Result<()> {
+        let shard = placement::shard_for(&meta.path, self.len());
+        match self.meta_call(shard, &MetaReq::Upsert(meta))? {
+            MetaResp::Ok(_) => Ok(()),
+            r => Err(anyhow!("upsert failed: {r:?}")),
+        }
+    }
+
+    /// Point lookup (hash-routed).
+    pub fn get(&self, path: &str) -> Result<Option<FileMeta>> {
+        let shard = placement::shard_for(path, self.len());
+        match self.meta_call(shard, &MetaReq::Get(path.into()))? {
+            MetaResp::Meta(m) => Ok(m),
+            r => Err(anyhow!("get failed: {r:?}")),
+        }
+    }
+
+    /// Batched MEU commit: one RPC per destination shard.
+    pub fn batch_upsert(&self, metas: Vec<FileMeta>) -> Result<u64> {
+        let mut batches: Vec<Vec<FileMeta>> = vec![Vec::new(); self.len()];
+        for m in metas {
+            let s = placement::shard_for(&m.path, self.len());
+            batches[s].push(m);
+        }
+        let mut n = 0;
+        for (shard, b) in batches.into_iter().enumerate() {
+            if b.is_empty() {
+                continue;
+            }
+            match self.meta_call(shard, &MetaReq::BatchUpsert(b))? {
+                MetaResp::Ok(k) => n += k,
+                r => bail!("batch failed: {r:?}"),
+            }
+        }
+        Ok(n)
+    }
+
+    /// Parallel fan-out `ls` across every DTN (one thread per shard).
+    pub fn ls(&self, prefix: &str) -> Result<Vec<FileMeta>> {
+        let results: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .addrs
+                .iter()
+                .map(|addr| {
+                    let prefix = prefix.to_string();
+                    let addr = *addr;
+                    scope.spawn(move || -> Result<Vec<FileMeta>> {
+                        // dedicated connection per fan-out thread
+                        let mut c = RpcClient::connect(addr)?;
+                        let mut e = Enc::new();
+                        e.u8(tag::META);
+                        MetaReq::List { prefix, namespace: None }.encode(&mut e);
+                        let resp = c.call(&e.finish())?;
+                        match MetaResp::from_bytes(&resp)? {
+                            MetaResp::List(ms) => Ok(ms),
+                            r => Err(anyhow!("ls failed: {r:?}")),
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("ls thread")).collect()
+        });
+        let mut out = Vec::new();
+        for r in results {
+            out.extend(r?);
+        }
+        out.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(out)
+    }
+
+    /// Insert one discovery tuple (co-located with the path's shard).
+    pub fn sds_insert(&self, attr: &str, file: &str, value: &Value) -> Result<()> {
+        let shard = placement::shard_for(file, self.len());
+        let mut e = Enc::new();
+        e.u8(tag::SDS_INSERT).str(attr).str(file);
+        value.encode(&mut e);
+        let resp = self.call(shard, &e.finish())?;
+        if resp == [0] {
+            Ok(())
+        } else {
+            Err(anyhow!("sds insert failed"))
+        }
+    }
+
+    /// Parallel fan-out query across every discovery shard.
+    pub fn query(&self, q: &Query) -> Result<Vec<(String, Value)>> {
+        let opn = match q.op {
+            crate::sds::Op::Eq => 0u8,
+            crate::sds::Op::Lt => 1,
+            crate::sds::Op::Gt => 2,
+            crate::sds::Op::Like => 3,
+        };
+        let results: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .addrs
+                .iter()
+                .map(|addr| {
+                    let addr = *addr;
+                    let q = q.clone();
+                    scope.spawn(move || -> Result<Vec<(String, Value)>> {
+                        let mut c = RpcClient::connect(addr)?;
+                        let mut e = Enc::new();
+                        e.u8(tag::SDS_QUERY).str(&q.attr).u8(opn);
+                        q.value.encode(&mut e);
+                        let resp = c.call(&e.finish())?;
+                        let mut d = Dec::new(&resp);
+                        let n = d.u32()?;
+                        let mut out = Vec::with_capacity(n as usize);
+                        for _ in 0..n {
+                            let f = d.str()?;
+                            let v = Value::decode(&mut d)?;
+                            out.push((f, v));
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("query thread")).collect()
+        });
+        let mut out = Vec::new();
+        for r in results {
+            out.extend(r?);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Liveness probe of every DTN.
+    pub fn ping(&self) -> Result<()> {
+        for s in 0..self.len() {
+            let resp = self.call(s, &[tag::PING])?;
+            if resp != b"pong" {
+                bail!("dtn {s} bad ping response");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(n: usize) -> (Vec<DtnServer>, Cluster) {
+        let servers: Vec<DtnServer> = (0..n).map(|_| DtnServer::start(0).unwrap()).collect();
+        let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr()).collect();
+        let c = Cluster::connect(&addrs).unwrap();
+        (servers, c)
+    }
+
+    fn meta(path: &str) -> FileMeta {
+        FileMeta {
+            path: path.into(),
+            dc: 0,
+            size: 1,
+            owner: "t".into(),
+            mtime: 0.0,
+            sync: true,
+            namespace: "global".into(),
+        }
+    }
+
+    #[test]
+    fn live_upsert_get_round_trip() {
+        let (_s, c) = cluster(3);
+        c.ping().unwrap();
+        c.upsert(meta("/live/a")).unwrap();
+        let m = c.get("/live/a").unwrap().unwrap();
+        assert_eq!(m.path, "/live/a");
+        assert!(c.get("/live/missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn live_ls_fans_out() {
+        let (_s, c) = cluster(4);
+        for i in 0..40 {
+            c.upsert(meta(&format!("/fan/f{i}"))).unwrap();
+        }
+        let ls = c.ls("/fan").unwrap();
+        assert_eq!(ls.len(), 40);
+        // shards actually split the namespace
+        let counts: Vec<usize> = _s.iter().map(|s| s.meta.lock().unwrap().len()).collect();
+        assert!(counts.iter().filter(|&&n| n > 0).count() >= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn live_batch_upsert() {
+        let (_s, c) = cluster(2);
+        let metas: Vec<FileMeta> = (0..25).map(|i| meta(&format!("/b/f{i}"))).collect();
+        assert_eq!(c.batch_upsert(metas).unwrap(), 25);
+        assert_eq!(c.ls("/b").unwrap().len(), 25);
+    }
+
+    #[test]
+    fn live_sds_query() {
+        let (_s, c) = cluster(2);
+        c.upsert(meta("/sds/x.shdf")).unwrap();
+        c.sds_insert("Location", "/sds/x.shdf", &Value::Text("Pacific".into())).unwrap();
+        c.sds_insert("DayNight", "/sds/x.shdf", &Value::Int(1)).unwrap();
+        let q = Query::parse("Location = Pacific").unwrap();
+        let hits = c.query(&q).unwrap();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, "/sds/x.shdf");
+        let none = c.query(&Query::parse("Location = Mars").unwrap()).unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn placement_matches_simulated_plane() {
+        // live Cluster and simulated MetaPlane must agree on shard owner
+        let (_s, c) = cluster(4);
+        for p in ["/a/b", "/c/d/e", "/f"] {
+            c.upsert(meta(p)).unwrap();
+            let shard = placement::shard_for(p, 4);
+            assert_eq!(_s[shard].meta.lock().unwrap().len() > 0, true, "{p} not on shard {shard}");
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Embedded relational store — the paper's SQLite substitute.
+//!
+//! Each DTN hosts two shards (paper Fig. 4): a *metadata service shard*
+//! (file mapping + collaboration schema) and a *discovery service shard*
+//! (attribute, file, value). The paper explicitly chooses a relational
+//! model over key-value stores because indexing needs many-to-many
+//! associations (one file ↔ many attributes); this engine provides typed
+//! columns, secondary B-tree indexes, and the query operators the SDS CLI
+//! exposes (`=`, `<`, `>`, `like`).
+
+use std::collections::BTreeMap;
+use std::cmp::Ordering;
+
+use anyhow::{bail, Result};
+
+use crate::msg::{Dec, Enc, Wire};
+
+/// A typed cell value. Attribute types mirror the paper §III-B5:
+/// "integer numbers, floating point numbers, and texts".
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// 64-bit integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// UTF-8 text.
+    Text(String),
+}
+
+impl Value {
+    /// Type tag (for schema checks and ordering across types).
+    pub fn tag(&self) -> u8 {
+        match self {
+            Value::Int(_) => 0,
+            Value::Float(_) => 1,
+            Value::Text(_) => 2,
+        }
+    }
+
+    /// Total order: by type tag, then natural order (floats via total_cmp).
+    pub fn total_cmp(&self, other: &Value) -> Ordering {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => a.cmp(b),
+            (Value::Float(a), Value::Float(b)) => a.total_cmp(b),
+            (Value::Text(a), Value::Text(b)) => a.cmp(b),
+            // numeric cross-compare so Int(3) and Float(3.5) order sanely
+            (Value::Int(a), Value::Float(b)) => (*a as f64).total_cmp(b),
+            (Value::Float(a), Value::Int(b)) => a.total_cmp(&(*b as f64)),
+            _ => self.tag().cmp(&other.tag()),
+        }
+    }
+}
+
+impl Wire for Value {
+    fn encode(&self, e: &mut Enc) {
+        e.u8(self.tag());
+        match self {
+            Value::Int(v) => {
+                e.i64(*v);
+            }
+            Value::Float(v) => {
+                e.f64(*v);
+            }
+            Value::Text(v) => {
+                e.str(v);
+            }
+        }
+    }
+    fn decode(d: &mut Dec) -> Result<Self> {
+        Ok(match d.u8()? {
+            0 => Value::Int(d.i64()?),
+            1 => Value::Float(d.f64()?),
+            2 => Value::Text(d.str()?),
+            t => bail!("bad value tag {t}"),
+        })
+    }
+}
+
+/// Ordered key wrapper so [`Value`] can live in a BTreeMap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Key(pub Value);
+
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// SQL-ish `LIKE` with `%` (any run) and `_` (any one char).
+///
+/// Fast paths (no allocation) cover the planner-generated shapes:
+/// `prefix%` (workspace `ls`), `%suffix`, exact (no wildcards) — the
+/// general recursive matcher only runs for mixed patterns.
+pub fn like_match(pattern: &str, text: &str) -> bool {
+    if !pattern.contains('_') {
+        match pattern.find('%') {
+            None => return pattern == text,
+            Some(i) if i == pattern.len() - 1 => {
+                // "prefix%"
+                return text.as_bytes().starts_with(&pattern.as_bytes()[..i]);
+            }
+            Some(0) if pattern[1..].find('%').is_none() => {
+                // "%suffix"
+                return text.as_bytes().ends_with(&pattern.as_bytes()[1..]);
+            }
+            _ => {}
+        }
+    }
+    fn rec(p: &[char], t: &[char]) -> bool {
+        match p.first() {
+            None => t.is_empty(),
+            Some('%') => (0..=t.len()).any(|k| rec(&p[1..], &t[k..])),
+            Some('_') => !t.is_empty() && rec(&p[1..], &t[1..]),
+            Some(c) => t.first() == Some(c) && rec(&p[1..], &t[1..]),
+        }
+    }
+    let p: Vec<char> = pattern.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    rec(&p, &t)
+}
+
+/// A predicate over one column.
+#[derive(Debug, Clone)]
+pub enum Pred {
+    /// `col = value`
+    Eq(String, Value),
+    /// `col < value`
+    Lt(String, Value),
+    /// `col > value`
+    Gt(String, Value),
+    /// `col like pattern` (text columns)
+    Like(String, String),
+}
+
+impl Pred {
+    /// Column this predicate constrains.
+    pub fn col(&self) -> &str {
+        match self {
+            Pred::Eq(c, _) | Pred::Lt(c, _) | Pred::Gt(c, _) | Pred::Like(c, _) => c,
+        }
+    }
+
+    /// Evaluate against a cell.
+    pub fn eval(&self, v: &Value) -> bool {
+        match self {
+            Pred::Eq(_, x) => v.total_cmp(x) == Ordering::Equal,
+            Pred::Lt(_, x) => v.total_cmp(x) == Ordering::Less,
+            Pred::Gt(_, x) => v.total_cmp(x) == Ordering::Greater,
+            Pred::Like(_, p) => match v {
+                Value::Text(t) => like_match(p, t),
+                _ => false,
+            },
+        }
+    }
+}
+
+/// A table: named typed columns, append rows, optional secondary indexes.
+#[derive(Debug, Default)]
+pub struct Table {
+    /// Column names in declaration order.
+    pub columns: Vec<String>,
+    rows: Vec<Option<Vec<Value>>>,
+    live: usize,
+    indexes: BTreeMap<usize, BTreeMap<Key, Vec<usize>>>,
+}
+
+impl Table {
+    /// Create a table with the given column names.
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        }
+    }
+
+    fn col_idx(&self, name: &str) -> Result<usize> {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .ok_or_else(|| anyhow::anyhow!("no column {name}"))
+    }
+
+    /// Number of live rows.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// True when no live rows exist.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Build (or rebuild) a secondary index on `col`.
+    pub fn create_index(&mut self, col: &str) -> Result<()> {
+        let ci = self.col_idx(col)?;
+        let mut idx: BTreeMap<Key, Vec<usize>> = BTreeMap::new();
+        for (rid, row) in self.rows.iter().enumerate() {
+            if let Some(r) = row {
+                idx.entry(Key(r[ci].clone())).or_default().push(rid);
+            }
+        }
+        self.indexes.insert(ci, idx);
+        Ok(())
+    }
+
+    /// Insert a row; returns its row id.
+    pub fn insert(&mut self, row: Vec<Value>) -> Result<usize> {
+        if row.len() != self.columns.len() {
+            bail!("arity mismatch: {} vs {}", row.len(), self.columns.len());
+        }
+        let rid = self.rows.len();
+        for (&ci, idx) in self.indexes.iter_mut() {
+            idx.entry(Key(row[ci].clone())).or_default().push(rid);
+        }
+        self.rows.push(Some(row));
+        self.live += 1;
+        Ok(rid)
+    }
+
+    /// Fetch a row by id (None if deleted/unknown).
+    pub fn get(&self, rid: usize) -> Option<&[Value]> {
+        self.rows.get(rid).and_then(|r| r.as_deref())
+    }
+
+    /// Read one cell.
+    pub fn cell(&self, rid: usize, col: &str) -> Option<&Value> {
+        let ci = self.col_idx(col).ok()?;
+        self.get(rid).map(|r| &r[ci])
+    }
+
+    /// Update one cell in place (index-maintained).
+    pub fn update(&mut self, rid: usize, col: &str, v: Value) -> Result<()> {
+        let ci = self.col_idx(col)?;
+        let old = match self.rows.get_mut(rid).and_then(|r| r.as_mut()) {
+            Some(r) => std::mem::replace(&mut r[ci], v.clone()),
+            None => bail!("no row {rid}"),
+        };
+        if let Some(idx) = self.indexes.get_mut(&ci) {
+            if let Some(v_ids) = idx.get_mut(&Key(old)) {
+                v_ids.retain(|&x| x != rid);
+            }
+            idx.entry(Key(v)).or_default().push(rid);
+        }
+        Ok(())
+    }
+
+    /// Delete a row (tombstone).
+    pub fn delete(&mut self, rid: usize) -> Result<()> {
+        let row = match self.rows.get_mut(rid) {
+            Some(r @ Some(_)) => r.take().unwrap(),
+            _ => bail!("no row {rid}"),
+        };
+        self.live -= 1;
+        for (&ci, idx) in self.indexes.iter_mut() {
+            if let Some(ids) = idx.get_mut(&Key(row[ci].clone())) {
+                ids.retain(|&x| x != rid);
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate a conjunction of predicates; returns matching row ids.
+    ///
+    /// Planner: if some predicate's column has an index, drive the scan
+    /// from the most selective indexed predicate (Eq > range), then filter
+    /// the rest; otherwise full scan.
+    pub fn select(&self, preds: &[Pred]) -> Result<Vec<usize>> {
+        // choose an indexed predicate
+        let mut driver: Option<(usize, &Pred, bool)> = None; // (colidx, pred, is_eq)
+        for p in preds {
+            let ci = self.col_idx(p.col())?;
+            if self.indexes.contains_key(&ci) {
+                let is_eq = matches!(p, Pred::Eq(..));
+                match driver {
+                    Some((_, _, true)) => {}
+                    _ if is_eq => driver = Some((ci, p, true)),
+                    None if matches!(p, Pred::Lt(..) | Pred::Gt(..)) => {
+                        driver = Some((ci, p, false))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let candidates: Vec<usize> = match driver {
+            Some((ci, Pred::Eq(_, v), _)) => self.indexes[&ci]
+                .get(&Key(v.clone()))
+                .cloned()
+                .unwrap_or_default(),
+            Some((ci, Pred::Lt(_, v), _)) => self.indexes[&ci]
+                .range(..Key(v.clone()))
+                .flat_map(|(_, ids)| ids.iter().copied())
+                .collect(),
+            Some((ci, Pred::Gt(_, v), _)) => {
+                use std::ops::Bound;
+                self.indexes[&ci]
+                    .range((Bound::Excluded(Key(v.clone())), Bound::Unbounded))
+                    .flat_map(|(_, ids)| ids.iter().copied())
+                    .collect()
+            }
+            _ => (0..self.rows.len()).collect(),
+        };
+        // resolve column indexes once, not per row (hot path: SDS queries)
+        let resolved: Vec<(usize, &Pred)> = preds
+            .iter()
+            .map(|p| Ok((self.col_idx(p.col())?, p)))
+            .collect::<Result<_>>()?;
+        let mut out = Vec::new();
+        'rows: for rid in candidates {
+            let row = match self.rows[rid].as_ref() {
+                Some(r) => r,
+                None => continue,
+            };
+            for (ci, p) in &resolved {
+                if !p.eval(&row[*ci]) {
+                    continue 'rows;
+                }
+            }
+            out.push(rid);
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Full scan count (for planner-equivalence tests and stats).
+    pub fn scan_count(&self, preds: &[Pred]) -> Result<usize> {
+        let mut n = 0;
+        'rows: for row in self.rows.iter().flatten() {
+            for p in preds {
+                let ci = self.col_idx(p.col())?;
+                if !p.eval(&row[ci]) {
+                    continue 'rows;
+                }
+            }
+            n += 1;
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn people() -> Table {
+        let mut t = Table::new(&["name", "age", "score"]);
+        for (n, a, s) in [
+            ("alice", 30, 1.5),
+            ("bob", 25, 2.5),
+            ("carol", 35, 0.5),
+            ("dave", 25, 3.5),
+        ] {
+            t.insert(vec![
+                Value::Text(n.into()),
+                Value::Int(a),
+                Value::Float(s),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn insert_select_eq() {
+        let t = people();
+        let r = t.select(&[Pred::Eq("age".into(), Value::Int(25))]).unwrap();
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn range_predicates() {
+        let t = people();
+        assert_eq!(t.select(&[Pred::Lt("age".into(), Value::Int(30))]).unwrap().len(), 2);
+        assert_eq!(t.select(&[Pred::Gt("score".into(), Value::Float(1.0))]).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn like_operator() {
+        let t = people();
+        let r = t.select(&[Pred::Like("name".into(), "%a%".into())]).unwrap();
+        // alice, carol, dave contain 'a'
+        assert_eq!(r.len(), 3);
+        assert!(like_match("al_ce", "alice"));
+        assert!(!like_match("al_ce", "alce"));
+        assert!(like_match("%", ""));
+    }
+
+    #[test]
+    fn conjunction() {
+        let t = people();
+        let r = t
+            .select(&[
+                Pred::Eq("age".into(), Value::Int(25)),
+                Pred::Gt("score".into(), Value::Float(3.0)),
+            ])
+            .unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(t.cell(r[0], "name"), Some(&Value::Text("dave".into())));
+    }
+
+    #[test]
+    fn index_equals_scan() {
+        let mut t = people();
+        let preds = [Pred::Eq("age".into(), Value::Int(25))];
+        let before = t.select(&preds).unwrap();
+        t.create_index("age").unwrap();
+        let after = t.select(&preds).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(t.scan_count(&preds).unwrap(), after.len());
+    }
+
+    #[test]
+    fn index_maintained_on_insert_update_delete() {
+        let mut t = people();
+        t.create_index("age").unwrap();
+        let rid = t
+            .insert(vec![Value::Text("erin".into()), Value::Int(25), Value::Float(9.0)])
+            .unwrap();
+        assert_eq!(t.select(&[Pred::Eq("age".into(), Value::Int(25))]).unwrap().len(), 3);
+        t.update(rid, "age", Value::Int(40)).unwrap();
+        assert_eq!(t.select(&[Pred::Eq("age".into(), Value::Int(25))]).unwrap().len(), 2);
+        assert_eq!(t.select(&[Pred::Eq("age".into(), Value::Int(40))]).unwrap().len(), 1);
+        t.delete(rid).unwrap();
+        assert_eq!(t.select(&[Pred::Eq("age".into(), Value::Int(40))]).unwrap().len(), 0);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn arity_checked() {
+        let mut t = Table::new(&["a"]);
+        assert!(t.insert(vec![]).is_err());
+    }
+
+    #[test]
+    fn value_wire_round_trip() {
+        for v in [Value::Int(-5), Value::Float(2.5), Value::Text("x".into())] {
+            assert_eq!(Value::from_bytes(&v.to_bytes()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn prop_index_scan_equivalence() {
+        use crate::util::{prop, rng::Rng};
+        prop::check(64, |rng: &mut Rng| {
+            let mut t = Table::new(&["k", "v"]);
+            let n = rng.range(1, 200);
+            for _ in 0..n {
+                t.insert(vec![
+                    Value::Int(rng.below(20) as i64),
+                    Value::Float(rng.f64()),
+                ])
+                .unwrap();
+            }
+            let preds = [Pred::Eq("k".into(), Value::Int(rng.below(20) as i64))];
+            let unindexed = t.select(&preds).unwrap();
+            t.create_index("k").unwrap();
+            let indexed = t.select(&preds).unwrap();
+            crate::prop_assert!(unindexed == indexed, "index/scan mismatch: {unindexed:?} vs {indexed:?}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! # SCISPACE — Scientific Collaboration Workspace
+//!
+//! A reproduction of *"SCISPACE: A Scientific Collaboration Workspace for
+//! File Systems in Geo-Distributed HPC Data Centers"* (Khan et al., 2018).
+//!
+//! SCISPACE presents a single, POSIX-like collaboration workspace over the
+//! parallel file systems of multiple geo-distributed HPC data centers,
+//! accessed through their Data Transfer Nodes (DTNs). It supports
+//! *native data access* (local writes published later via the Metadata
+//! Export Utility), distributed metadata shards on DTNs, template
+//! namespaces for multi-collaboration scientists, and a Scientific
+//! Discovery Service with attribute-based search.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * Layer 3 (this crate): the coordinator — workspace, metadata, MEU,
+//!   SDS, template namespaces — plus every substrate the paper's testbed
+//!   had (Lustre/NFS/FUSE cost models, messaging, embedded DB, SHDF
+//!   scientific file format, network model).
+//! * Layer 2/1 (build-time Python, `python/compile/`): JAX + Pallas
+//!   compute kernels (dataset diff, stats extraction, predicate scan,
+//!   path hashing), AOT-lowered to HLO text in `artifacts/` and executed
+//!   from [`runtime`] via PJRT. Python never runs on the request path.
+
+pub mod util;
+pub mod simclock;
+pub mod simnet;
+pub mod vfs;
+pub mod simfs;
+pub mod fusemodel;
+pub mod msg;
+pub mod db;
+pub mod shdf;
+pub mod metadata;
+pub mod workspace;
+pub mod meu;
+pub mod namespace;
+pub mod sds;
+pub mod coordinator;
+pub mod runtime;
+pub mod workload;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,197 @@
+//! `scispace` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `dtn --port P`          — run one live DTN server (metadata +
+//!   discovery shards over the RPC protocol).
+//! * `demo`                  — two-DC simulated collaboration walkthrough.
+//! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|all>`
+//!   — regenerate a paper table/figure on the simulated testbed.
+//! * `shdump <file>` / `shdiff <a> <b> [--tol t]` — SHDF tools over real
+//!   files on disk (the H5Dump/H5Diff equivalents).
+
+use anyhow::{bail, Result};
+
+use scispace::bench;
+use scispace::coordinator::{Cluster, DtnServer};
+use scispace::msg::Wire;
+use scispace::sds::Query;
+use scispace::shdf;
+use scispace::util::cli::Args;
+use scispace::util::units::parse_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("scispace: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("dtn") => cmd_dtn(args),
+        Some("demo") => cmd_demo(),
+        Some("query") => cmd_query(args),
+        Some("bench") => cmd_bench(args),
+        Some("shdump") => cmd_shdump(args),
+        Some("shdiff") => cmd_shdiff(args),
+        _ => {
+            eprintln!(
+                "usage: scispace <dtn|demo|query|bench|shdump|shdiff> [options]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_dtn(args: &Args) -> Result<()> {
+    let port: u16 = args.opt_parse("port", 7440);
+    let server = DtnServer::start(port)?;
+    println!("dtn serving on {}", server.addr());
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_demo() -> Result<()> {
+    use scispace::workspace::{AccessMode, Testbed};
+    println!("-- SCISPACE demo: 2 data centers, 4 DTNs --");
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    tb.write(alice, "/collab/sim/out.dat", 0, 20, Some(b"simulation-artifacts"), AccessMode::Scispace)?;
+    println!("alice wrote /collab/sim/out.dat via the workspace");
+    tb.write(bob, "/home/bob/raw.dat", 0, 9, Some(b"raw-local"), AccessMode::ScispaceLw)?;
+    println!("bob wrote /home/bob/raw.dat natively (LW)");
+    println!(
+        "workspace ls /: {:?}",
+        tb.ls(alice, "/").iter().map(|m| m.path.clone()).collect::<Vec<_>>()
+    );
+    let rep = scispace::meu::export(&mut tb, bob, "/", None)?;
+    println!("bob ran MEU: exported {} files in {} RPCs", rep.exported, rep.rpcs);
+    println!(
+        "workspace ls /: {:?}",
+        tb.ls(alice, "/").iter().map(|m| m.path.clone()).collect::<Vec<_>>()
+    );
+    let data = tb.read(alice, "/home/bob/raw.dat", 0, 9, AccessMode::Scispace)?;
+    println!("alice read bob's file across the WAN: {:?}", String::from_utf8_lossy(&data));
+    Ok(())
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let addrs_s = args.opt("addrs", "127.0.0.1:7440");
+    let addrs: Vec<std::net::SocketAddr> =
+        addrs_s.split(',').map(|a| a.parse()).collect::<std::result::Result<_, _>>()?;
+    let qtext = args.positional.get(1..).map(|p| p.join(" ")).unwrap_or_default();
+    if qtext.is_empty() {
+        bail!("usage: scispace query --addrs host:port,... \"attr op value\"");
+    }
+    let q = Query::parse(&qtext)?;
+    let cluster = Cluster::connect(&addrs)?;
+    let hits = cluster.query(&q)?;
+    for (f, v) in &hits {
+        println!("{f}\t{v:?}");
+    }
+    println!("{} hit(s)", hits.len());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).cloned().unwrap_or_else(|| "all".into());
+    let per_collab = parse_bytes(&args.opt("data", "48M")).unwrap_or(48 << 20);
+    let blocks = [4 << 10, 16 << 10, 64 << 10, 256 << 10, 512 << 10];
+    let collabs = [1, 2, 4, 8, 16, 24];
+    match which.as_str() {
+        "fig7w" => bench::print_throughput(
+            "Fig 7a: IOR write vs block size",
+            "block",
+            &bench::fig7(bench::IorOp::Write, &blocks, per_collab),
+        ),
+        "fig7r" => bench::print_throughput(
+            "Fig 7b: IOR read vs block size",
+            "block",
+            &bench::fig7(bench::IorOp::Read, &blocks, per_collab),
+        ),
+        "fig8w" => bench::print_throughput(
+            "Fig 8a: IOR write vs collaborators",
+            "collabs",
+            &bench::fig8(bench::IorOp::Write, &collabs, per_collab / 2),
+        ),
+        "fig8r" => bench::print_throughput(
+            "Fig 8b: IOR read vs collaborators",
+            "collabs",
+            &bench::fig8(bench::IorOp::Read, &collabs, per_collab / 2),
+        ),
+        "fig9a" => bench::print_meu(&bench::fig9a(&[5_000, 20_000, 100_000])),
+        "fig9b" => bench::print_sds_modes(&bench::fig9b(&[5, 20], 50)),
+        "fig9c" => bench::print_end2end(&bench::fig9c(&[8, 32, 64], None)),
+        "table2" => bench::print_table2(&bench::table2(4_000, 50)),
+        "all" => {
+            for w in ["fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2"] {
+                let mut sub = args.clone();
+                sub.positional = vec!["bench".into(), w.into()];
+                cmd_bench(&sub)?;
+            }
+        }
+        other => bail!("unknown bench {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_shdump(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: scispace shdump <file>"))?;
+    let bytes = std::fs::read(path)?;
+    let f = shdf::ShdfFile::from_bytes(&bytes)?;
+    print!("{}", shdf::shdump(&f, args.opt_parse("max-elems", 16)));
+    Ok(())
+}
+
+fn cmd_shdiff(args: &Args) -> Result<()> {
+    let a = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: scispace shdiff <a> <b>"))?;
+    let b = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("usage: scispace shdiff <a> <b>"))?;
+    let tol: f32 = args.opt_parse("tol", 0.0);
+    let fa = shdf::ShdfFile::from_bytes(&std::fs::read(a)?)?;
+    let fb = shdf::ShdfFile::from_bytes(&std::fs::read(b)?)?;
+    // PJRT-accelerated core when artifacts are available, CPU otherwise
+    let report = match scispace::runtime::find_artifacts()
+        .and_then(|d| scispace::runtime::ComputeService::spawn(&d).ok())
+    {
+        Some(svc) => {
+            let h = svc.handle();
+            shdf::shdiff_with(&fa, &fb, tol, move |x, y, t| {
+                let r = h.diff(x, y, t).expect("pjrt diff");
+                (r.n_diff, r.max_abs, r.sum_sq)
+            })
+        }
+        None => shdf::shdiff(&fa, &fb, tol),
+    };
+    for (name, n, mx, ss) in &report.datasets {
+        println!("dataset {name}: {n} differences, max |a-b| = {mx}, sum sq = {ss}");
+    }
+    for name in &report.only_in_one {
+        println!("dataset {name}: present in only one file");
+    }
+    for name in &report.attr_diffs {
+        println!("attribute {name}: differs");
+    }
+    if report.identical() {
+        println!("files are identical (tol = {tol})");
+    }
+    Ok(())
+}

@@ -1,0 +1,558 @@
+//! Distributed metadata service (paper §III-B2, Fig. 4).
+//!
+//! Every DTN of every participating data center runs a metadata service
+//! holding a *metadata shard* (the File Mapping + Collaboration schema) in
+//! the embedded relational store. File metadata is placed by **hashing the
+//! file pathname** (FNV-1a, bit-identical to the L1 Pallas hash kernel) so
+//! any node can route a lookup without broadcast; directory listings fan
+//! out to all shards in parallel and merge.
+//!
+//! The service is transport-agnostic: [`MetaShard`] is the storage engine,
+//! [`MetaReq`]/[`MetaResp`] are the wire messages (carried over
+//! `msg::RpcServer` in the live daemon, or charged to `simnet` in the
+//! simulated testbed).
+
+pub mod placement;
+pub mod replication;
+
+use anyhow::{bail, Result};
+
+use crate::db::{Pred, Table, Value};
+use crate::msg::{Dec, Enc, Wire};
+
+/// One file's workspace metadata (the File Mapping schema of Fig. 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileMeta {
+    /// Workspace-absolute pathname (the placement + lookup key).
+    pub path: String,
+    /// Data center hosting the data.
+    pub dc: u32,
+    /// Size in bytes.
+    pub size: u64,
+    /// Owner (collaborator id).
+    pub owner: String,
+    /// Modification time (virtual or unix seconds).
+    pub mtime: f64,
+    /// Published into the collaboration workspace? (the `sync` xattr;
+    /// `ls` lists only sync=true entries.)
+    pub sync: bool,
+    /// Template namespace this file belongs to (paper §III-B4).
+    pub namespace: String,
+}
+
+impl Wire for FileMeta {
+    fn encode(&self, e: &mut Enc) {
+        e.str(&self.path);
+        e.u32(self.dc);
+        e.u64(self.size);
+        e.str(&self.owner);
+        e.f64(self.mtime);
+        e.boolean(self.sync);
+        e.str(&self.namespace);
+    }
+    fn decode(d: &mut Dec) -> Result<Self> {
+        Ok(FileMeta {
+            path: d.str()?,
+            dc: d.u32()?,
+            size: d.u64()?,
+            owner: d.str()?,
+            mtime: d.f64()?,
+            sync: d.boolean()?,
+            namespace: d.str()?,
+        })
+    }
+}
+
+/// Metadata service request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaReq {
+    /// Insert or replace one file's metadata.
+    Upsert(FileMeta),
+    /// Batched upsert — the single-RPC MEU commit path.
+    BatchUpsert(Vec<FileMeta>),
+    /// Point lookup.
+    Get(String),
+    /// List sync=true entries under a prefix (one shard's part of `ls`).
+    List { prefix: String, namespace: Option<String> },
+    /// Flip the `sync` flag.
+    SetSync(String, bool),
+    /// Remove an entry (the extension the paper defers to the metadata
+    /// service — see DESIGN.md §8).
+    Delete(String),
+    /// Shard statistics (entries).
+    Stat,
+}
+
+impl Wire for MetaReq {
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            MetaReq::Upsert(m) => {
+                e.u8(0);
+                m.encode(e);
+            }
+            MetaReq::BatchUpsert(ms) => {
+                e.u8(1);
+                e.u32(ms.len() as u32);
+                for m in ms {
+                    m.encode(e);
+                }
+            }
+            MetaReq::Get(p) => {
+                e.u8(2);
+                e.str(p);
+            }
+            MetaReq::List { prefix, namespace } => {
+                e.u8(3);
+                e.str(prefix);
+                match namespace {
+                    None => {
+                        e.boolean(false);
+                    }
+                    Some(ns) => {
+                        e.boolean(true);
+                        e.str(ns);
+                    }
+                }
+            }
+            MetaReq::SetSync(p, s) => {
+                e.u8(4);
+                e.str(p);
+                e.boolean(*s);
+            }
+            MetaReq::Delete(p) => {
+                e.u8(5);
+                e.str(p);
+            }
+            MetaReq::Stat => {
+                e.u8(6);
+            }
+        }
+    }
+    fn decode(d: &mut Dec) -> Result<Self> {
+        Ok(match d.u8()? {
+            0 => MetaReq::Upsert(FileMeta::decode(d)?),
+            1 => {
+                let n = d.u32()?;
+                let mut v = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    v.push(FileMeta::decode(d)?);
+                }
+                MetaReq::BatchUpsert(v)
+            }
+            2 => MetaReq::Get(d.str()?),
+            3 => {
+                let prefix = d.str()?;
+                let namespace = if d.boolean()? { Some(d.str()?) } else { None };
+                MetaReq::List { prefix, namespace }
+            }
+            4 => MetaReq::SetSync(d.str()?, d.boolean()?),
+            5 => MetaReq::Delete(d.str()?),
+            6 => MetaReq::Stat,
+            t => bail!("bad MetaReq tag {t}"),
+        })
+    }
+}
+
+/// Metadata service response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaResp {
+    /// Generic success with affected-entry count.
+    Ok(u64),
+    /// Point lookup result.
+    Meta(Option<FileMeta>),
+    /// Listing result.
+    List(Vec<FileMeta>),
+    /// Error message.
+    Err(String),
+}
+
+impl Wire for MetaResp {
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            MetaResp::Ok(n) => {
+                e.u8(0);
+                e.u64(*n);
+            }
+            MetaResp::Meta(None) => {
+                e.u8(1);
+                e.boolean(false);
+            }
+            MetaResp::Meta(Some(m)) => {
+                e.u8(1);
+                e.boolean(true);
+                m.encode(e);
+            }
+            MetaResp::List(ms) => {
+                e.u8(2);
+                e.u32(ms.len() as u32);
+                for m in ms {
+                    m.encode(e);
+                }
+            }
+            MetaResp::Err(s) => {
+                e.u8(3);
+                e.str(s);
+            }
+        }
+    }
+    fn decode(d: &mut Dec) -> Result<Self> {
+        Ok(match d.u8()? {
+            0 => MetaResp::Ok(d.u64()?),
+            1 => {
+                if d.boolean()? {
+                    MetaResp::Meta(Some(FileMeta::decode(d)?))
+                } else {
+                    MetaResp::Meta(None)
+                }
+            }
+            2 => {
+                let n = d.u32()?;
+                let mut v = Vec::with_capacity(n as usize);
+                for _ in 0..n {
+                    v.push(FileMeta::decode(d)?);
+                }
+                MetaResp::List(v)
+            }
+            3 => MetaResp::Err(d.str()?),
+            t => bail!("bad MetaResp tag {t}"),
+        })
+    }
+}
+
+/// One DTN's metadata shard: File Mapping table with a path index.
+#[derive(Debug)]
+pub struct MetaShard {
+    table: Table,
+}
+
+impl Default for MetaShard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetaShard {
+    /// Empty shard with the File Mapping schema and a path index.
+    pub fn new() -> Self {
+        let mut table = Table::new(&[
+            "path", "dc", "size", "owner", "mtime", "sync", "namespace",
+        ]);
+        table.create_index("path").expect("schema");
+        MetaShard { table }
+    }
+
+    /// Entries in this shard.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    fn row_of(m: &FileMeta) -> Vec<Value> {
+        vec![
+            Value::Text(m.path.clone()),
+            Value::Int(m.dc as i64),
+            Value::Int(m.size as i64),
+            Value::Text(m.owner.clone()),
+            Value::Float(m.mtime),
+            Value::Int(m.sync as i64),
+            Value::Text(m.namespace.clone()),
+        ]
+    }
+
+    fn meta_of(row: &[Value]) -> FileMeta {
+        let txt = |v: &Value| match v {
+            Value::Text(s) => s.clone(),
+            _ => String::new(),
+        };
+        let int = |v: &Value| match v {
+            Value::Int(i) => *i,
+            _ => 0,
+        };
+        FileMeta {
+            path: txt(&row[0]),
+            dc: int(&row[1]) as u32,
+            size: int(&row[2]) as u64,
+            owner: txt(&row[3]),
+            mtime: match row[4] {
+                Value::Float(f) => f,
+                _ => 0.0,
+            },
+            sync: int(&row[5]) != 0,
+            namespace: txt(&row[6]),
+        }
+    }
+
+    fn find(&self, path: &str) -> Option<usize> {
+        self.table
+            .select(&[Pred::Eq("path".into(), Value::Text(path.into()))])
+            .ok()?
+            .first()
+            .copied()
+    }
+
+    /// Apply one request; the uniform entry point used by both the live
+    /// RPC server and the simulated testbed.
+    pub fn apply(&mut self, req: &MetaReq) -> MetaResp {
+        match self.try_apply(req) {
+            Ok(r) => r,
+            Err(e) => MetaResp::Err(e.to_string()),
+        }
+    }
+
+    fn try_apply(&mut self, req: &MetaReq) -> Result<MetaResp> {
+        Ok(match req {
+            MetaReq::Upsert(m) => {
+                match self.find(&m.path) {
+                    Some(rid) => {
+                        self.table.delete(rid)?;
+                        self.table.insert(Self::row_of(m))?;
+                    }
+                    None => {
+                        self.table.insert(Self::row_of(m))?;
+                    }
+                }
+                MetaResp::Ok(1)
+            }
+            MetaReq::BatchUpsert(ms) => {
+                for m in ms {
+                    if let Some(rid) = self.find(&m.path) {
+                        self.table.delete(rid)?;
+                    }
+                    self.table.insert(Self::row_of(m))?;
+                }
+                MetaResp::Ok(ms.len() as u64)
+            }
+            MetaReq::Get(p) => MetaResp::Meta(
+                self.find(p).and_then(|rid| self.table.get(rid)).map(Self::meta_of),
+            ),
+            MetaReq::List { prefix, namespace } => {
+                let rids = self
+                    .table
+                    .select(&[Pred::Like("path".into(), format!("{prefix}%"))])?;
+                let mut out = Vec::new();
+                for rid in rids {
+                    let m = Self::meta_of(self.table.get(rid).unwrap());
+                    if !m.sync {
+                        continue; // ls lists only published entries (§III-B1)
+                    }
+                    if let Some(ns) = namespace {
+                        if &m.namespace != ns {
+                            continue;
+                        }
+                    }
+                    out.push(m);
+                }
+                out.sort_by(|a, b| a.path.cmp(&b.path));
+                MetaResp::List(out)
+            }
+            MetaReq::SetSync(p, s) => match self.find(p) {
+                Some(rid) => {
+                    self.table.update(rid, "sync", Value::Int(*s as i64))?;
+                    MetaResp::Ok(1)
+                }
+                None => MetaResp::Ok(0),
+            },
+            MetaReq::Delete(p) => match self.find(p) {
+                Some(rid) => {
+                    self.table.delete(rid)?;
+                    MetaResp::Ok(1)
+                }
+                None => MetaResp::Ok(0),
+            },
+            MetaReq::Stat => MetaResp::Ok(self.table.len() as u64),
+        })
+    }
+}
+
+/// The collaboration-wide metadata plane: one shard per DTN with
+/// hash-based placement and fan-out listing.
+#[derive(Debug, Default)]
+pub struct MetaPlane {
+    /// One shard per DTN (order = DTN id).
+    pub shards: Vec<MetaShard>,
+}
+
+impl MetaPlane {
+    /// Create a plane with `n_dtns` shards.
+    pub fn new(n_dtns: usize) -> Self {
+        MetaPlane { shards: (0..n_dtns).map(|_| MetaShard::new()).collect() }
+    }
+
+    /// Which shard owns a path.
+    pub fn shard_for(&self, path: &str) -> usize {
+        placement::shard_for(path, self.shards.len())
+    }
+
+    /// Route a single-path request to its shard.
+    pub fn route(&mut self, req: &MetaReq) -> MetaResp {
+        let path = match req {
+            MetaReq::Upsert(m) => m.path.clone(),
+            MetaReq::Get(p) | MetaReq::SetSync(p, _) | MetaReq::Delete(p) => p.clone(),
+            _ => {
+                return MetaResp::Err("route: not a single-path request".into());
+            }
+        };
+        let s = self.shard_for(&path);
+        self.shards[s].apply(req)
+    }
+
+    /// Fan-out `ls`: query every shard, merge and sort (paper: "fetching
+    /// file metadata information from all the DTNs in a parallel fashion").
+    pub fn list(&mut self, prefix: &str, namespace: Option<&str>) -> Vec<FileMeta> {
+        let mut out = Vec::new();
+        for s in &mut self.shards {
+            if let MetaResp::List(ms) = s.apply(&MetaReq::List {
+                prefix: prefix.to_string(),
+                namespace: namespace.map(String::from),
+            }) {
+                out.extend(ms);
+            }
+        }
+        out.sort_by(|a, b| a.path.cmp(&b.path));
+        out
+    }
+
+    /// Total entries across shards.
+    pub fn total_entries(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(path: &str, sync: bool) -> FileMeta {
+        FileMeta {
+            path: path.into(),
+            dc: 0,
+            size: 100,
+            owner: "alice".into(),
+            mtime: 1.0,
+            sync,
+            namespace: "global".into(),
+        }
+    }
+
+    #[test]
+    fn wire_round_trips() {
+        let m = meta("/proj/a.shdf", true);
+        assert_eq!(FileMeta::from_bytes(&m.to_bytes()).unwrap(), m);
+        let req = MetaReq::BatchUpsert(vec![m.clone(), meta("/b", false)]);
+        assert_eq!(MetaReq::from_bytes(&req.to_bytes()).unwrap(), req);
+        let resp = MetaResp::List(vec![m]);
+        assert_eq!(MetaResp::from_bytes(&resp.to_bytes()).unwrap(), resp);
+    }
+
+    #[test]
+    fn upsert_get() {
+        let mut s = MetaShard::new();
+        s.apply(&MetaReq::Upsert(meta("/x", true)));
+        match s.apply(&MetaReq::Get("/x".into())) {
+            MetaResp::Meta(Some(m)) => assert_eq!(m.path, "/x"),
+            r => panic!("{r:?}"),
+        }
+        assert_eq!(s.apply(&MetaReq::Get("/nope".into())), MetaResp::Meta(None));
+    }
+
+    #[test]
+    fn upsert_replaces() {
+        let mut s = MetaShard::new();
+        s.apply(&MetaReq::Upsert(meta("/x", true)));
+        let mut m2 = meta("/x", true);
+        m2.size = 999;
+        s.apply(&MetaReq::Upsert(m2));
+        assert_eq!(s.len(), 1);
+        match s.apply(&MetaReq::Get("/x".into())) {
+            MetaResp::Meta(Some(m)) => assert_eq!(m.size, 999),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn ls_hides_unsynced() {
+        let mut s = MetaShard::new();
+        s.apply(&MetaReq::Upsert(meta("/p/pub", true)));
+        s.apply(&MetaReq::Upsert(meta("/p/priv", false)));
+        match s.apply(&MetaReq::List { prefix: "/p".into(), namespace: None }) {
+            MetaResp::List(ms) => {
+                assert_eq!(ms.len(), 1);
+                assert_eq!(ms[0].path, "/p/pub");
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn set_sync_publishes() {
+        let mut s = MetaShard::new();
+        s.apply(&MetaReq::Upsert(meta("/p/f", false)));
+        s.apply(&MetaReq::SetSync("/p/f".into(), true));
+        match s.apply(&MetaReq::List { prefix: "/p".into(), namespace: None }) {
+            MetaResp::List(ms) => assert_eq!(ms.len(), 1),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn namespace_filtered_listing() {
+        let mut s = MetaShard::new();
+        let mut a = meta("/p/a", true);
+        a.namespace = "collabX".into();
+        let mut b = meta("/p/b", true);
+        b.namespace = "collabY".into();
+        s.apply(&MetaReq::Upsert(a));
+        s.apply(&MetaReq::Upsert(b));
+        match s.apply(&MetaReq::List { prefix: "/p".into(), namespace: Some("collabX".into()) }) {
+            MetaResp::List(ms) => {
+                assert_eq!(ms.len(), 1);
+                assert_eq!(ms[0].path, "/p/a");
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn plane_routes_by_hash_and_lists_all() {
+        let mut p = MetaPlane::new(4);
+        for i in 0..100 {
+            p.route(&MetaReq::Upsert(meta(&format!("/data/f{i}"), true)));
+        }
+        assert_eq!(p.total_entries(), 100);
+        // all shards should hold something (hash spread)
+        assert!(p.shards.iter().all(|s| !s.is_empty()));
+        let ls = p.list("/data", None);
+        assert_eq!(ls.len(), 100);
+        // get routes back to the right shard
+        match p.route(&MetaReq::Get("/data/f42".into())) {
+            MetaResp::Meta(Some(m)) => assert_eq!(m.path, "/data/f42"),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn delete_supported() {
+        let mut p = MetaPlane::new(2);
+        p.route(&MetaReq::Upsert(meta("/x", true)));
+        assert_eq!(p.route(&MetaReq::Delete("/x".into())), MetaResp::Ok(1));
+        assert_eq!(p.route(&MetaReq::Get("/x".into())), MetaResp::Meta(None));
+    }
+
+    #[test]
+    fn prop_placement_stable_and_total() {
+        use crate::util::prop;
+        prop::check(64, |rng| {
+            let p = MetaPlane::new(rng.range(1, 8));
+            let path = prop::arb_path(rng, 6);
+            let a = p.shard_for(&path);
+            let b = p.shard_for(&path);
+            crate::prop_assert!(a == b, "unstable placement for {path}");
+            crate::prop_assert!(a < p.shards.len(), "shard out of range");
+            Ok(())
+        });
+    }
+}

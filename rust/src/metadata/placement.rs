@@ -1,0 +1,92 @@
+//! Hash-based metadata placement (paper §III-B1).
+//!
+//! "When an incoming write request is received, Scientific Collaboration
+//! Workspace assigns a DTN for the write request by hashing the file
+//! pathname" — eliminating the I/O-broadcast problem of querying every
+//! DTN. The hash is FNV-1a-32 over the 128-byte u32-word packing of the
+//! path, **bit-identical** to the L1 Pallas batch kernel so bulk and
+//! per-request placement always agree (asserted by Rust↔PJRT integration
+//! tests).
+
+use crate::util::fnv1a_words;
+
+/// Word window the hash covers (128 bytes of path; must equal the Pallas
+/// kernel's `HASH_WORDS`).
+pub const HASH_WORDS: usize = 32;
+
+/// Murmur3 fmix32 avalanche. FNV-1a folded over 4-byte *words* (the
+/// TPU-friendly layout) has weak low-bit dispersion, so both the bulk
+/// (Pallas kernel output) and per-request paths finalize the raw FNV hash
+/// with fmix32 before the shard modulo. Applied identically to kernel
+/// results in `runtime`, keeping both placement paths bit-identical.
+pub fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EBCA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2AE35);
+    h ^= h >> 16;
+    h
+}
+
+/// Hash a pathname to its owning shard in `[0, n_shards)`.
+pub fn shard_for(path: &str, n_shards: usize) -> usize {
+    assert!(n_shards > 0);
+    (fmix32(fnv1a_words(path, HASH_WORDS)) as usize) % n_shards
+}
+
+/// Shard for a raw FNV hash produced by the Pallas batch kernel.
+pub fn shard_for_raw(fnv_hash: u32, n_shards: usize) -> usize {
+    assert!(n_shards > 0);
+    (fmix32(fnv_hash) as usize) % n_shards
+}
+
+/// Measure the load balance of a placement over `paths`: returns
+/// (max_shard_load / mean_load). 1.0 is perfect.
+pub fn imbalance<'a>(paths: impl Iterator<Item = &'a str>, n_shards: usize) -> f64 {
+    let mut counts = vec![0usize; n_shards];
+    let mut total = 0usize;
+    for p in paths {
+        counts[shard_for(p, n_shards)] += 1;
+        total += 1;
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / n_shards as f64;
+    counts.iter().copied().max().unwrap_or(0) as f64 / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(shard_for("/a/b", 4), shard_for("/a/b", 4));
+    }
+
+    #[test]
+    fn balanced_over_realistic_paths() {
+        let paths: Vec<String> =
+            (0..10_000).map(|i| format!("/proj/modis/2018/{:02}/granule_{i}.shdf", i % 12)).collect();
+        let imb = imbalance(paths.iter().map(|s| s.as_str()), 4);
+        assert!(imb < 1.15, "imbalance {imb}");
+    }
+
+    #[test]
+    fn single_shard_degenerate() {
+        assert_eq!(shard_for("/anything", 1), 0);
+    }
+
+    #[test]
+    fn prop_balance_random_paths() {
+        prop::check(16, |rng: &mut Rng| {
+            let n = rng.range(2, 6);
+            let paths: Vec<String> = (0..2000).map(|_| prop::arb_path(rng, 5)).collect();
+            let imb = imbalance(paths.iter().map(|s| s.as_str()), n);
+            crate::prop_assert!(imb < 1.5, "imbalance {imb} across {n} shards");
+            Ok(())
+        });
+    }
+}

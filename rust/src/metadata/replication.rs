@@ -1,0 +1,216 @@
+//! Metadata replication — the extension the paper flags as future work
+//! ("we consider the collaboration workspace metadata replication as an
+//! important factor and plan to support the metadata replication in
+//! future", §III-B5).
+//!
+//! Chain-placement: every entry is written to its primary shard
+//! (pathname hash) and to `replicas` successor shards `(h+k) mod n`.
+//! Lookups try the primary first and fail over to successors when a DTN
+//! is marked down; listings skip down shards (their rows are covered by
+//! the successors' replicas, deduplicated on merge).
+
+use std::collections::BTreeMap;
+
+use super::{placement, FileMeta, MetaReq, MetaResp, MetaShard};
+
+/// A metadata plane with chained replication and failover.
+#[derive(Debug)]
+pub struct ReplicatedPlane {
+    /// One shard per DTN.
+    pub shards: Vec<MetaShard>,
+    /// Additional copies per entry (0 = no replication).
+    pub replicas: usize,
+    /// Liveness flags (true = serving).
+    pub up: Vec<bool>,
+}
+
+impl ReplicatedPlane {
+    /// Create `n_dtns` shards with `replicas` extra copies per entry.
+    pub fn new(n_dtns: usize, replicas: usize) -> Self {
+        assert!(replicas < n_dtns, "need fewer replicas than shards");
+        ReplicatedPlane {
+            shards: (0..n_dtns).map(|_| MetaShard::new()).collect(),
+            replicas,
+            up: vec![true; n_dtns],
+        }
+    }
+
+    fn owners(&self, path: &str) -> Vec<usize> {
+        let n = self.shards.len();
+        let primary = placement::shard_for(path, n);
+        (0..=self.replicas).map(|k| (primary + k) % n).collect()
+    }
+
+    /// Mark a DTN down (fail injection) or back up.
+    pub fn set_up(&mut self, shard: usize, up: bool) {
+        self.up[shard] = up;
+    }
+
+    /// Write-path: apply to every live owner (primary + replicas).
+    /// Returns the number of copies committed.
+    pub fn upsert(&mut self, meta: FileMeta) -> usize {
+        let mut committed = 0;
+        for s in self.owners(&meta.path) {
+            if self.up[s] {
+                self.shards[s].apply(&MetaReq::Upsert(meta.clone()));
+                committed += 1;
+            }
+        }
+        committed
+    }
+
+    /// Read-path: primary first, fail over along the chain.
+    pub fn get(&mut self, path: &str) -> Option<FileMeta> {
+        for s in self.owners(path) {
+            if !self.up[s] {
+                continue;
+            }
+            if let MetaResp::Meta(m) = self.shards[s].apply(&MetaReq::Get(path.into())) {
+                return m;
+            }
+        }
+        None
+    }
+
+    /// Fan-out listing over live shards, deduplicated by path (replicas
+    /// would otherwise repeat entries).
+    pub fn list(&mut self, prefix: &str) -> Vec<FileMeta> {
+        let mut by_path: BTreeMap<String, FileMeta> = BTreeMap::new();
+        for s in 0..self.shards.len() {
+            if !self.up[s] {
+                continue;
+            }
+            if let MetaResp::List(ms) = self.shards[s].apply(&MetaReq::List {
+                prefix: prefix.to_string(),
+                namespace: None,
+            }) {
+                for m in ms {
+                    by_path.entry(m.path.clone()).or_insert(m);
+                }
+            }
+        }
+        by_path.into_values().collect()
+    }
+
+    /// Re-replicate after a shard returns: copy every entry whose owner
+    /// chain includes `shard` back onto it. Returns entries healed.
+    pub fn heal(&mut self, shard: usize) -> usize {
+        assert!(self.up[shard], "bring the shard up before healing");
+        let mut healed = 0;
+        // collect from all live shards, then re-own
+        let everything = self.list("/");
+        for m in everything {
+            if self.owners(&m.path).contains(&shard) {
+                // only insert if missing
+                if let MetaResp::Meta(None) = self.shards[shard].apply(&MetaReq::Get(m.path.clone())) {
+                    self.shards[shard].apply(&MetaReq::Upsert(m));
+                    healed += 1;
+                }
+            }
+        }
+        healed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(path: &str) -> FileMeta {
+        FileMeta {
+            path: path.into(),
+            dc: 0,
+            size: 1,
+            owner: "r".into(),
+            mtime: 0.0,
+            sync: true,
+            namespace: "global".into(),
+        }
+    }
+
+    fn filled(replicas: usize) -> ReplicatedPlane {
+        let mut p = ReplicatedPlane::new(4, replicas);
+        for i in 0..50 {
+            assert_eq!(p.upsert(meta(&format!("/r/f{i}"))), replicas + 1);
+        }
+        p
+    }
+
+    #[test]
+    fn every_entry_has_n_plus_one_copies() {
+        let p = filled(1);
+        let total: usize = p.shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 50 * 2);
+    }
+
+    #[test]
+    fn survives_single_shard_failure() {
+        let mut p = filled(1);
+        p.set_up(0, false);
+        for i in 0..50 {
+            assert!(p.get(&format!("/r/f{i}")).is_some(), "f{i} lost after failure");
+        }
+        assert_eq!(p.list("/r").len(), 50);
+    }
+
+    #[test]
+    fn without_replication_failure_loses_entries() {
+        let mut p = filled(0);
+        p.set_up(0, false);
+        let visible = (0..50).filter(|i| p.get(&format!("/r/f{i}")).is_some()).count();
+        assert!(visible < 50, "shard 0 held entries that must now be missing");
+    }
+
+    #[test]
+    fn two_replicas_survive_two_failures() {
+        let mut p = filled(2);
+        p.set_up(1, false);
+        p.set_up(2, false);
+        for i in 0..50 {
+            assert!(p.get(&format!("/r/f{i}")).is_some());
+        }
+    }
+
+    #[test]
+    fn listing_deduplicates_replicas() {
+        let mut p = filled(2);
+        assert_eq!(p.list("/r").len(), 50);
+    }
+
+    #[test]
+    fn heal_restores_failed_shard() {
+        let mut p = filled(1);
+        let before = p.shards[0].len();
+        p.set_up(0, false);
+        // writes during the outage only reach live owners
+        for i in 50..80 {
+            p.upsert(meta(&format!("/r/f{i}")));
+        }
+        p.set_up(0, true);
+        let healed = p.heal(0);
+        assert!(healed > 0);
+        assert!(p.shards[0].len() >= before, "shard must regain its entries");
+        // and the full view is intact
+        assert_eq!(p.list("/r").len(), 80);
+    }
+
+    #[test]
+    fn prop_failover_never_loses_replicated_entries() {
+        use crate::util::prop;
+        prop::check(32, |rng| {
+            let mut p = ReplicatedPlane::new(rng.range(3, 6), 1);
+            let mut paths = Vec::new();
+            for _ in 0..rng.range(5, 40) {
+                let path = prop::arb_path(rng, 4);
+                p.upsert(meta(&path));
+                paths.push(path);
+            }
+            let down = rng.range(0, p.shards.len());
+            p.set_up(down, false);
+            for path in &paths {
+                crate::prop_assert!(p.get(path).is_some(), "{path} lost when shard {down} failed");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,250 @@
+//! Metadata Export Utility (paper §III-B3, Fig. 5).
+//!
+//! Local writes land in the data-center namespace with `sync=false`; the
+//! MEU publishes them to the collaboration workspace "in a similar fashion
+//! to git local and remote repository management": it recursively scans
+//! from a root with **parent-flag pruning** (a directory whose `sync`
+//! xattr is true is skipped entirely), packs all unsynchronized metadata
+//! into a **single batched message** per destination shard, commits it to
+//! the metadata service, and finally marks the exported entries synced.
+//!
+//! Fine-grained sharing: the `filter` argument publishes only paths under
+//! a prefix (the "share only a subset of a dataset" case).
+
+use anyhow::Result;
+
+use crate::metadata::{FileMeta, MetaReq, MetaResp};
+use crate::msg::Wire;
+use crate::workspace::{AccessMode, Testbed};
+
+/// Outcome of one MEU run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExportReport {
+    /// Files whose metadata was committed.
+    pub exported: usize,
+    /// Namespace entries visited during the pruned scan.
+    pub scanned: u64,
+    /// RPC messages sent (one batch per destination shard).
+    pub rpcs: usize,
+    /// Total message bytes sent.
+    pub msg_bytes: u64,
+    /// Virtual time the export finished.
+    pub finished_at: f64,
+}
+
+/// Run the MEU for collaborator `c` over `root` in its home data center.
+///
+/// `filter`: optional path prefix — only matching files are exported
+/// (selective sharing). Non-matching files stay unsynced for a later run.
+pub fn export(tb: &mut Testbed, c: usize, root: &str, filter: Option<&str>) -> Result<ExportReport> {
+    let dc = tb.collabs[c].dc;
+    let owner = tb.collabs[c].id.clone();
+    let t0 = tb.collabs[c].now;
+
+    // Phase 1: pruned recursive scan of the local namespace.
+    let (all_unsynced, scanned) = tb.dcs[dc].fs.scan_unsynced(root);
+    // scan cost: one llite getattr per visited entry
+    let mut t = t0 + tb.cfg.lustre_client_op * scanned as f64;
+
+    let selected: Vec<String> = all_unsynced
+        .into_iter()
+        .filter(|p| filter.map(|f| p.starts_with(f)).unwrap_or(true))
+        .collect();
+
+    // Phase 2: build FileMeta records, grouped by destination shard so the
+    // commit is one RPC per shard ("we batch all the requests and send
+    // single RPC call to metadata service").
+    let n_shards = tb.meta.shards.len();
+    let mut batches: Vec<Vec<FileMeta>> = vec![Vec::new(); n_shards];
+    for path in &selected {
+        let e = tb.dcs[dc].fs.get(path).expect("scanned file exists");
+        let ns = tb.ns.namespace_of(path).to_string();
+        let meta = FileMeta {
+            path: path.clone(),
+            dc: dc as u32,
+            size: e.size,
+            owner: owner.clone(),
+            mtime: e.mtime,
+            sync: true,
+            namespace: ns,
+        };
+        batches[tb.meta.shard_for(path)].push(meta);
+    }
+
+    // Phase 3: single batched RPC per shard, executed + charged.
+    let mut rpcs = 0;
+    let mut msg_bytes = 0u64;
+    let mut t_end = t;
+    for (shard, batch) in batches.iter().enumerate() {
+        if batch.is_empty() {
+            continue;
+        }
+        let req = MetaReq::BatchUpsert(batch.clone());
+        let bytes = req.to_bytes().len() as u64;
+        msg_bytes += bytes;
+        // network + service cost (entries priced per item on the service)
+        let dst_dc = tb.dtns[shard].dc;
+        let ta = tb.net.route(&mut tb.env, dc, dst_dc, t, bytes);
+        let ta = tb.env.acquire_ops(tb.dtns[shard].meta_cpu, ta, 1);
+        let ta = ta + tb.cfg.meta_entry_s * batch.len() as f64;
+        match tb.meta.shards[shard].apply(&req) {
+            MetaResp::Ok(_) => {}
+            r => anyhow::bail!("batch commit failed: {r:?}"),
+        }
+        rpcs += 1;
+        t_end = t_end.max(ta);
+        t = ta; // batches sent back-to-back from the client
+    }
+
+    // Phase 4: flip local sync flags (files + now-clean directories).
+    tb.dcs[dc].fs.mark_synced(&selected);
+
+    tb.collabs[c].now = t_end;
+    Ok(ExportReport {
+        exported: selected.len(),
+        scanned,
+        rpcs,
+        msg_bytes,
+        finished_at: t_end,
+    })
+}
+
+/// Convenience: LW-write a file then export it (the paper's local-write
+/// workflow in one call — used by examples and tests).
+pub fn local_write_and_export(
+    tb: &mut Testbed,
+    c: usize,
+    path: &str,
+    data: &[u8],
+) -> Result<ExportReport> {
+    tb.write(c, path, 0, data.len() as u64, Some(data), AccessMode::ScispaceLw)?;
+    export(tb, c, "/", Some(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bed() -> Testbed {
+        let mut tb = Testbed::paper_default();
+        tb.register("alice", 0);
+        tb.register("bob", 1);
+        tb
+    }
+
+    #[test]
+    fn export_publishes_lw_files() {
+        let mut tb = bed();
+        tb.write(0, "/proj/run/a.dat", 0, 4, Some(b"aaaa"), AccessMode::ScispaceLw).unwrap();
+        tb.write(0, "/proj/run/b.dat", 0, 4, Some(b"bbbb"), AccessMode::ScispaceLw).unwrap();
+        assert!(tb.ls(1, "/proj").is_empty());
+        let rep = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(rep.exported, 2);
+        let ls = tb.ls(1, "/proj");
+        assert_eq!(ls.len(), 2);
+        assert!(ls.iter().all(|m| m.sync));
+    }
+
+    #[test]
+    fn export_is_incremental_and_idempotent() {
+        let mut tb = bed();
+        tb.write(0, "/p/x", 0, 1, Some(b"x"), AccessMode::ScispaceLw).unwrap();
+        let r1 = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(r1.exported, 1);
+        let r2 = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(r2.exported, 0, "second export must find nothing");
+        assert_eq!(r2.rpcs, 0);
+        // new file after export: only it is exported
+        tb.write(0, "/p/y", 0, 1, Some(b"y"), AccessMode::ScispaceLw).unwrap();
+        let r3 = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(r3.exported, 1);
+    }
+
+    #[test]
+    fn pruning_reduces_scan_cost() {
+        let mut tb = bed();
+        for i in 0..50 {
+            tb.write(0, &format!("/big/f{i}"), 0, 1, None, AccessMode::ScispaceLw).unwrap();
+        }
+        let r1 = export(&mut tb, 0, "/", None).unwrap();
+        tb.write(0, "/small/new", 0, 1, None, AccessMode::ScispaceLw).unwrap();
+        let r2 = export(&mut tb, 0, "/", None).unwrap();
+        assert!(
+            r2.scanned < r1.scanned / 4,
+            "pruned scan visited {} vs {}",
+            r2.scanned,
+            r1.scanned
+        );
+    }
+
+    #[test]
+    fn subset_export_filters() {
+        let mut tb = bed();
+        tb.write(0, "/data/share/a", 0, 1, None, AccessMode::ScispaceLw).unwrap();
+        tb.write(0, "/data/keep/b", 0, 1, None, AccessMode::ScispaceLw).unwrap();
+        let rep = export(&mut tb, 0, "/", Some("/data/share")).unwrap();
+        assert_eq!(rep.exported, 1);
+        assert_eq!(tb.ls(1, "/data").len(), 1);
+        // the other file is still exportable later
+        let rep2 = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(rep2.exported, 1);
+    }
+
+    #[test]
+    fn batches_use_one_rpc_per_shard() {
+        let mut tb = bed();
+        let n = 100;
+        for i in 0..n {
+            tb.write(0, &format!("/bulk/f{i}"), 0, 1, None, AccessMode::ScispaceLw).unwrap();
+        }
+        let rep = export(&mut tb, 0, "/", None).unwrap();
+        assert_eq!(rep.exported, n);
+        assert!(
+            rep.rpcs <= tb.meta.shards.len(),
+            "rpcs {} must be <= shard count {}",
+            rep.rpcs,
+            tb.meta.shards.len()
+        );
+    }
+
+    #[test]
+    fn exported_metadata_carries_size_and_owner() {
+        let mut tb = bed();
+        tb.write(0, "/d/f.dat", 0, 1000, None, AccessMode::ScispaceLw).unwrap();
+        export(&mut tb, 0, "/", None).unwrap();
+        let ls = tb.ls(1, "/d");
+        assert_eq!(ls[0].size, 1000);
+        assert_eq!(ls[0].owner, "alice");
+        assert_eq!(ls[0].dc, 0);
+    }
+
+    #[test]
+    fn remote_collaborator_can_read_after_export() {
+        let mut tb = bed();
+        tb.write(0, "/pub/data.bin", 0, 9, Some(b"materials"), AccessMode::ScispaceLw).unwrap();
+        export(&mut tb, 0, "/", None).unwrap();
+        // bob (dc1) reads through the workspace
+        let bytes = tb.read(1, "/pub/data.bin", 0, 9, AccessMode::Scispace).unwrap();
+        assert_eq!(bytes, b"materials");
+    }
+
+    #[test]
+    fn prop_export_roundtrip_consistency() {
+        use crate::util::prop;
+        prop::check(24, |rng| {
+            let mut tb = bed();
+            let mut want = std::collections::BTreeSet::new();
+            for i in 0..rng.range(1, 30) {
+                let p = format!("/r{}/f{i}", rng.below(4));
+                if tb.write(0, &p, 0, 1, None, AccessMode::ScispaceLw).is_ok() {
+                    want.insert(p);
+                }
+            }
+            export(&mut tb, 0, "/", None).map_err(|e| e.to_string())?;
+            let have: std::collections::BTreeSet<String> =
+                tb.ls(1, "/r").into_iter().map(|m| m.path).collect();
+            crate::prop_assert!(want == have, "exported set mismatch: {want:?} vs {have:?}");
+            Ok(())
+        });
+    }
+}

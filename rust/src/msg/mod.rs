@@ -1,0 +1,431 @@
+//! Generic messaging protocol — the paper's "Google Protocol Buffers +
+//! gRPC" substitute (DESIGN.md §2).
+//!
+//! Three pieces:
+//! * [`Enc`]/[`Dec`] — a compact little-endian binary codec with explicit
+//!   field order (what protobuf gave the paper).
+//! * length-prefixed framing ([`write_frame`]/[`read_frame`]).
+//! * a blocking RPC layer ([`RpcServer`]/[`RpcClient`]) over real TCP
+//!   (std::net) with thread-per-connection dispatch — what gRPC gave the
+//!   paper. Simulated experiments charge message costs through `simnet`
+//!   instead of real sockets; the live `scispace` daemon uses this layer.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// Binary encoder (append-only buffer).
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Finish and take the bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Current encoded length.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True if nothing has been encoded yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append a u8.
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    /// Append a u32 (LE).
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append a u64 (LE).
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append an i64 (LE).
+    pub fn i64(&mut self, v: i64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append an f32 (LE bits).
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append an f64 (LE bits).
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Append a bool as one byte.
+    pub fn boolean(&mut self, v: bool) -> &mut Self {
+        self.u8(v as u8)
+    }
+
+    /// Append a raw f32 slice (LE), without a length prefix — callers
+    /// encode the count themselves. Bulk fast path for dataset payloads.
+    pub fn f32_slice(&mut self, v: &[f32]) -> &mut Self {
+        self.buf.reserve(v.len() * 4);
+        for chunk in v.chunks(1024) {
+            for x in chunk {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        self
+    }
+
+    /// Append length-prefixed bytes.
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+}
+
+/// Binary decoder (cursor over a byte slice).
+#[derive(Debug)]
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from a slice.
+    pub fn new(b: &'a [u8]) -> Self {
+        Dec { b, i: 0 }
+    }
+
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("decode underrun: want {n}, have {}", self.remaining());
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a u32.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a u64.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read an i64.
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read an f32.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read an f64.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a bool.
+    pub fn boolean(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Read `n` raw f32 values (LE) — bulk counterpart of
+    /// [`Enc::f32_slice`].
+    pub fn f32_slice(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read length-prefixed bytes.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read a length-prefixed string.
+    pub fn str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.bytes()?)?)
+    }
+}
+
+/// A type with a canonical wire form.
+pub trait Wire: Sized {
+    /// Encode into `e`.
+    fn encode(&self, e: &mut Enc);
+    /// Decode from `d`.
+    fn decode(d: &mut Dec) -> Result<Self>;
+
+    /// Encode to an owned buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        self.encode(&mut e);
+        e.finish()
+    }
+
+    /// Decode from a buffer, requiring full consumption.
+    fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(b);
+        let v = Self::decode(&mut d)?;
+        if d.remaining() != 0 {
+            bail!("{} trailing bytes after decode", d.remaining());
+        }
+        Ok(v)
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (cap 256 MiB to bound rogue peers).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("frame header")?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 256 << 20 {
+        bail!("frame too large: {n}");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("frame body")?;
+    Ok(buf)
+}
+
+/// A blocking request/response server: one handler shared across
+/// thread-per-connection workers.
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind on `127.0.0.1:port` (port 0 = ephemeral) and serve `handler`
+    /// on a background accept loop.
+    pub fn serve<F>(port: u16, handler: F) -> Result<RpcServer>
+    where
+        F: Fn(&[u8]) -> Vec<u8> + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let h = handler.clone();
+                        let cstop = stop2.clone();
+                        std::thread::spawn(move || {
+                            let mut stream = stream;
+                            while !cstop.load(Ordering::Relaxed) {
+                                match read_frame(&mut stream) {
+                                    Ok(req) => {
+                                        let resp = h(&req);
+                                        if write_frame(&mut stream, &resp).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(RpcServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A blocking RPC client over one TCP connection.
+pub struct RpcClient {
+    stream: TcpStream,
+}
+
+impl RpcClient {
+    /// Connect to a server.
+    pub fn connect(addr: std::net::SocketAddr) -> Result<RpcClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(RpcClient { stream })
+    }
+
+    /// Send a request frame and wait for the response frame.
+    pub fn call(&mut self, req: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, req)?;
+        read_frame(&mut self.stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trip_primitives() {
+        let mut e = Enc::new();
+        e.u8(7).u32(42).u64(1 << 40).i64(-9).f32(1.5).f64(-2.25).boolean(true).str("héllo").bytes(&[1, 2, 3]);
+        let b = e.finish();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 42);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.i64().unwrap(), -9);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert!(d.boolean().unwrap());
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert_eq!(d.bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn decode_underrun_is_error() {
+        let mut d = Dec::new(&[1, 2]);
+        assert!(d.u32().is_err());
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"payload");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Ping {
+        seq: u64,
+        tag: String,
+    }
+    impl Wire for Ping {
+        fn encode(&self, e: &mut Enc) {
+            e.u64(self.seq).str(&self.tag);
+        }
+        fn decode(d: &mut Dec) -> Result<Self> {
+            Ok(Ping { seq: d.u64()?, tag: d.str()? })
+        }
+    }
+
+    #[test]
+    fn wire_trait_round_trip() {
+        let p = Ping { seq: 9, tag: "x".into() };
+        assert_eq!(Ping::from_bytes(&p.to_bytes()).unwrap(), p);
+    }
+
+    #[test]
+    fn wire_rejects_trailing() {
+        let mut b = Ping { seq: 1, tag: "t".into() }.to_bytes();
+        b.push(0);
+        assert!(Ping::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn tcp_rpc_echo() {
+        let server = RpcServer::serve(0, |req| {
+            let mut v = req.to_vec();
+            v.reverse();
+            v
+        })
+        .unwrap();
+        let mut c = RpcClient::connect(server.addr()).unwrap();
+        assert_eq!(c.call(b"abc").unwrap(), b"cba");
+        assert_eq!(c.call(b"scispace").unwrap(), b"ecapsics");
+    }
+
+    #[test]
+    fn tcp_rpc_multiple_clients() {
+        let server = RpcServer::serve(0, |req| req.to_vec()).unwrap();
+        let addr = server.addr();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = RpcClient::connect(addr).unwrap();
+                    for j in 0..16 {
+                        let msg = format!("client{i}-msg{j}");
+                        assert_eq!(c.call(msg.as_bytes()).unwrap(), msg.as_bytes());
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Template namespaces (paper §III-B4).
+//!
+//! A scientist participates in many collaborations at once; SCISPACE lets
+//! them define multiple namespaces, each with a scope — `Local` (visible
+//! only to the owner) or `Global` (visible to every collaborator in the
+//! workspace). "When a file is written, its pathname determines the
+//! namespace, which in turn defines the scope of the file content."
+//! Namespaces are bound to path prefixes; the registry resolves a pathname
+//! to its governing template and answers visibility questions.
+
+use anyhow::{bail, Result};
+
+/// Visibility scope of a template namespace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Only the owner sees entries.
+    Local,
+    /// All collaborators in the workspace see entries.
+    Global,
+}
+
+/// A named namespace template bound to a path prefix.
+#[derive(Debug, Clone)]
+pub struct Template {
+    /// Namespace name (e.g. "climate-collab").
+    pub name: String,
+    /// Owning collaborator.
+    pub owner: String,
+    /// Path prefix that maps files into this namespace.
+    pub prefix: String,
+    /// Visibility scope.
+    pub scope: Scope,
+}
+
+/// Registry of templates for one collaboration workspace.
+#[derive(Debug, Default)]
+pub struct NamespaceRegistry {
+    templates: Vec<Template>,
+}
+
+/// Name of the implicit default namespace (global scope).
+pub const DEFAULT_NS: &str = "global";
+
+impl NamespaceRegistry {
+    /// Empty registry (paths fall back to [`DEFAULT_NS`], global scope).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Define a namespace. Prefixes must be absolute and unique.
+    pub fn define(&mut self, name: &str, owner: &str, prefix: &str, scope: Scope) -> Result<()> {
+        if !prefix.starts_with('/') {
+            bail!("prefix must be absolute: {prefix}");
+        }
+        if self.templates.iter().any(|t| t.name == name) {
+            bail!("namespace {name} already defined");
+        }
+        if self.templates.iter().any(|t| t.prefix == prefix) {
+            bail!("prefix {prefix} already bound");
+        }
+        self.templates.push(Template {
+            name: name.to_string(),
+            owner: owner.to_string(),
+            prefix: prefix.to_string(),
+            scope,
+        });
+        Ok(())
+    }
+
+    /// All templates owned by `owner` (a scientist's collaborations).
+    pub fn owned_by(&self, owner: &str) -> Vec<&Template> {
+        self.templates.iter().filter(|t| t.owner == owner).collect()
+    }
+
+    /// Resolve a pathname to its governing template (longest matching
+    /// prefix wins; None = default global namespace).
+    pub fn resolve(&self, path: &str) -> Option<&Template> {
+        self.templates
+            .iter()
+            .filter(|t| {
+                path == t.prefix
+                    || (path.starts_with(&t.prefix)
+                        && path.as_bytes().get(t.prefix.len()) == Some(&b'/'))
+            })
+            .max_by_key(|t| t.prefix.len())
+    }
+
+    /// Namespace name for a path ([`DEFAULT_NS`] when unmapped).
+    pub fn namespace_of(&self, path: &str) -> &str {
+        self.resolve(path).map(|t| t.name.as_str()).unwrap_or(DEFAULT_NS)
+    }
+
+    /// May `viewer` see `path` (written by its namespace's rules)?
+    pub fn visible_to(&self, path: &str, viewer: &str) -> bool {
+        match self.resolve(path) {
+            None => true, // default namespace is global
+            Some(t) => match t.scope {
+                Scope::Global => true,
+                Scope::Local => t.owner == viewer,
+            },
+        }
+    }
+
+    /// Number of templates defined.
+    pub fn len(&self) -> usize {
+        self.templates.len()
+    }
+
+    /// True when no templates are defined.
+    pub fn is_empty(&self) -> bool {
+        self.templates.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> NamespaceRegistry {
+        let mut r = NamespaceRegistry::new();
+        r.define("climate", "alice", "/collab/climate", Scope::Global).unwrap();
+        r.define("alice-scratch", "alice", "/home/alice", Scope::Local).unwrap();
+        r.define("nested", "bob", "/collab/climate/private", Scope::Local).unwrap();
+        r
+    }
+
+    #[test]
+    fn resolve_longest_prefix() {
+        let r = reg();
+        assert_eq!(r.namespace_of("/collab/climate/sst.shdf"), "climate");
+        assert_eq!(r.namespace_of("/collab/climate/private/x"), "nested");
+        assert_eq!(r.namespace_of("/elsewhere/f"), DEFAULT_NS);
+    }
+
+    #[test]
+    fn prefix_must_match_component_boundary() {
+        let r = reg();
+        // "/collab/climatezz" must NOT fall into "climate"
+        assert_eq!(r.namespace_of("/collab/climatezz/f"), DEFAULT_NS);
+    }
+
+    #[test]
+    fn local_scope_hides_from_others() {
+        let r = reg();
+        assert!(r.visible_to("/home/alice/notes", "alice"));
+        assert!(!r.visible_to("/home/alice/notes", "bob"));
+        assert!(r.visible_to("/collab/climate/sst", "bob"));
+    }
+
+    #[test]
+    fn multiple_collaborations_per_owner() {
+        let mut r = reg();
+        r.define("ocean", "alice", "/collab/ocean", Scope::Global).unwrap();
+        let owned = r.owned_by("alice");
+        assert_eq!(owned.len(), 3);
+    }
+
+    #[test]
+    fn duplicate_definitions_rejected() {
+        let mut r = reg();
+        assert!(r.define("climate", "x", "/other", Scope::Global).is_err());
+        assert!(r.define("new", "x", "/collab/climate", Scope::Global).is_err());
+        assert!(r.define("rel", "x", "not-absolute", Scope::Global).is_err());
+    }
+
+    #[test]
+    fn default_namespace_is_global() {
+        let r = NamespaceRegistry::new();
+        assert!(r.visible_to("/any/path", "anyone"));
+        assert_eq!(r.namespace_of("/any/path"), DEFAULT_NS);
+    }
+}

@@ -1,0 +1,416 @@
+//! PJRT runtime: load the AOT-compiled L1/L2 artifacts and execute them
+//! from the Rust request path.
+//!
+//! `make artifacts` runs Python once to lower the JAX+Pallas entry points
+//! to HLO *text* (see `python/compile/aot.py`); this module parses the
+//! text with `xla::HloModuleProto::from_text_file`, compiles each module
+//! on the PJRT CPU client, and exposes typed, chunked wrappers:
+//!
+//! * [`KernelEngine::diff`]  — H5Diff reductions (`shdiff` hot path).
+//! * [`KernelEngine::stats`] — dataset statistics for SDS indexing.
+//! * [`KernelEngine::scan`]  — predicate scan over attribute columns.
+//! * [`KernelEngine::hash_paths`] — bulk pathname placement hashing.
+//!
+//! PJRT handles are not `Send` (raw pointers), so [`ComputeService`]
+//! spawns a dedicated owner thread and hands out a cloneable
+//! [`ComputeHandle`] speaking over channels — the pattern the L3
+//! coordinator uses from its request loop.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::pack_path_words;
+
+/// Kernel chunk geometry — must mirror `python/compile/model.py`.
+pub mod shape {
+    /// Minor dimension of every f32 chunk.
+    pub const LANES: usize = 128;
+    /// Rows per chunk (4096 x 128 = 524,288 f32 = 2 MiB).
+    pub const CHUNK_ROWS: usize = 4096;
+    /// f32 elements per chunk.
+    pub const CHUNK_ELEMS: usize = LANES * CHUNK_ROWS;
+    /// Paths per hash batch.
+    pub const HASH_BATCH: usize = 1024;
+    /// u32 words per packed path.
+    pub const HASH_WORDS: usize = 32;
+    /// Histogram bins emitted by the stats kernel.
+    pub const HIST_BINS: usize = 16;
+}
+
+/// Parsed artifacts manifest (artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Artifact name -> HLO file path.
+    pub files: std::collections::BTreeMap<String, PathBuf>,
+    /// Chunk rows recorded at lowering time.
+    pub chunk_rows: usize,
+    /// Lanes recorded at lowering time.
+    pub lanes: usize,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let chunk_rows = j.get("chunk_rows").and_then(Json::as_usize).unwrap_or(0);
+        let lanes = j.get("lanes").and_then(Json::as_usize).unwrap_or(0);
+        if chunk_rows != shape::CHUNK_ROWS || lanes != shape::LANES {
+            bail!(
+                "manifest geometry {chunk_rows}x{lanes} != compiled-in {}x{}",
+                shape::CHUNK_ROWS,
+                shape::LANES
+            );
+        }
+        let mut files = std::collections::BTreeMap::new();
+        let arts = j.get("artifacts").and_then(Json::as_obj).ok_or_else(|| anyhow!("no artifacts"))?;
+        for (name, meta) in arts {
+            let f = meta.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("no file"))?;
+            files.insert(name.clone(), dir.join(f));
+        }
+        for need in ["diff", "stats", "scan", "hash"] {
+            if !files.contains_key(need) {
+                bail!("manifest missing artifact {need}");
+            }
+        }
+        Ok(Manifest { files, chunk_rows, lanes })
+    }
+}
+
+/// Result of a (possibly multi-chunk) dataset diff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiffResult {
+    /// Elements with |a-b| > tol.
+    pub n_diff: u64,
+    /// Maximum absolute difference.
+    pub max_abs: f32,
+    /// Sum of squared differences.
+    pub sum_sq: f64,
+}
+
+/// Result of a (possibly multi-chunk) stats extraction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResult {
+    /// Minimum.
+    pub min: f32,
+    /// Maximum.
+    pub max: f32,
+    /// Mean (derived from exact sums).
+    pub mean: f64,
+    /// Standard deviation.
+    pub std: f64,
+    /// Histogram over the requested [lo, hi) range.
+    pub hist: [f64; shape::HIST_BINS],
+    /// Element count.
+    pub n: u64,
+}
+
+/// The PJRT-backed kernel engine (not `Send`; see [`ComputeService`]).
+pub struct KernelEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    diff: xla::PjRtLoadedExecutable,
+    stats: xla::PjRtLoadedExecutable,
+    scan: xla::PjRtLoadedExecutable,
+    hash: xla::PjRtLoadedExecutable,
+    /// Kernel invocations (profiling).
+    pub calls: std::cell::Cell<u64>,
+}
+
+fn chunk2d(data: &[f32], off: usize) -> xla::Literal {
+    let mut buf = vec![0f32; shape::CHUNK_ELEMS];
+    let n = (data.len() - off).min(shape::CHUNK_ELEMS);
+    buf[..n].copy_from_slice(&data[off..off + n]);
+    xla::Literal::vec1(&buf)
+        .reshape(&[shape::CHUNK_ROWS as i64, shape::LANES as i64])
+        .expect("chunk reshape")
+}
+
+fn s11_f32(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v]).reshape(&[1, 1]).expect("scalar reshape")
+}
+
+fn s11_i32(v: i32) -> xla::Literal {
+    xla::Literal::vec1(&[v]).reshape(&[1, 1]).expect("scalar reshape")
+}
+
+impl KernelEngine {
+    /// Load all four artifacts from `dir` and compile them on a fresh
+    /// PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<KernelEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = &manifest.files[name];
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(KernelEngine {
+            diff: compile("diff")?,
+            stats: compile("stats")?,
+            scan: compile("scan")?,
+            hash: compile("hash")?,
+            client,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Default artifacts directory: `$SCISPACE_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SCISPACE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+        Ok(l.to_vec::<f32>()?[0])
+    }
+
+    /// H5Diff reductions over two equal-length datasets (chunked).
+    pub fn diff(&self, a: &[f32], b: &[f32], tol: f32) -> Result<DiffResult> {
+        if a.len() != b.len() {
+            bail!("diff length mismatch {} vs {}", a.len(), b.len());
+        }
+        let mut acc = DiffResult { n_diff: 0, max_abs: 0.0, sum_sq: 0.0 };
+        let mut off = 0;
+        while off < a.len() {
+            let n_valid = (a.len() - off).min(shape::CHUNK_ELEMS);
+            let out = Self::run1(
+                &self.diff,
+                &[chunk2d(a, off), chunk2d(b, off), s11_f32(tol), s11_f32(n_valid as f32)],
+            )?;
+            self.calls.set(self.calls.get() + 1);
+            acc.n_diff += Self::scalar_f32(&out[0])? as u64;
+            acc.max_abs = acc.max_abs.max(Self::scalar_f32(&out[1])?);
+            acc.sum_sq += Self::scalar_f32(&out[2])? as f64;
+            off += n_valid;
+        }
+        Ok(acc)
+    }
+
+    /// Dataset statistics with a histogram over [lo, hi) (chunked).
+    pub fn stats(&self, x: &[f32], lo: f32, hi: f32) -> Result<StatsResult> {
+        if x.is_empty() {
+            bail!("stats over empty dataset");
+        }
+        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+        let (mut sum, mut sumsq) = (0f64, 0f64);
+        let mut hist = [0f64; shape::HIST_BINS];
+        let mut off = 0;
+        while off < x.len() {
+            let n_valid = (x.len() - off).min(shape::CHUNK_ELEMS);
+            let out = Self::run1(
+                &self.stats,
+                &[chunk2d(x, off), s11_f32(lo), s11_f32(hi), s11_f32(n_valid as f32)],
+            )?;
+            self.calls.set(self.calls.get() + 1);
+            mn = mn.min(Self::scalar_f32(&out[0])?);
+            mx = mx.max(Self::scalar_f32(&out[1])?);
+            sum += Self::scalar_f32(&out[2])? as f64;
+            sumsq += Self::scalar_f32(&out[3])? as f64;
+            let h = out[4].to_vec::<f32>()?;
+            for (i, v) in h.iter().enumerate().take(shape::HIST_BINS) {
+                hist[i] += *v as f64;
+            }
+            off += n_valid;
+        }
+        let n = x.len() as f64;
+        let mean = sum / n;
+        let var = (sumsq / n - mean * mean).max(0.0);
+        Ok(StatsResult { min: mn, max: mx, mean, std: var.sqrt(), hist, n: x.len() as u64 })
+    }
+
+    /// Predicate scan: count + match mask. `op`: 0 `=`, 1 `<`, 2 `>`.
+    pub fn scan(&self, col: &[f32], op: i32, operand: f32) -> Result<(u64, Vec<bool>)> {
+        let mut count = 0u64;
+        let mut mask = Vec::with_capacity(col.len());
+        let mut off = 0;
+        while off < col.len() {
+            let n_valid = (col.len() - off).min(shape::CHUNK_ELEMS);
+            let out = Self::run1(
+                &self.scan,
+                &[chunk2d(col, off), s11_i32(op), s11_f32(operand), s11_f32(n_valid as f32)],
+            )?;
+            self.calls.set(self.calls.get() + 1);
+            count += Self::scalar_f32(&out[0])? as u64;
+            let m = out[1].to_vec::<f32>()?;
+            mask.extend(m[..n_valid].iter().map(|&v| v > 0.5));
+            off += n_valid;
+        }
+        Ok((count, mask))
+    }
+
+    /// Bulk pathname hashing (raw FNV-1a; apply
+    /// [`crate::metadata::placement::shard_for_raw`] for shard routing).
+    pub fn hash_paths(&self, paths: &[String]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(paths.len());
+        let mut off = 0;
+        while off < paths.len() {
+            let n = (paths.len() - off).min(shape::HASH_BATCH);
+            let mut words = vec![0u32; shape::HASH_BATCH * shape::HASH_WORDS];
+            for (i, p) in paths[off..off + n].iter().enumerate() {
+                let w = pack_path_words(p, shape::HASH_WORDS);
+                words[i * shape::HASH_WORDS..(i + 1) * shape::HASH_WORDS].copy_from_slice(&w);
+            }
+            let lit = xla::Literal::vec1(&words)
+                .reshape(&[shape::HASH_BATCH as i64, shape::HASH_WORDS as i64])?;
+            let res = self.hash.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            self.calls.set(self.calls.get() + 1);
+            let h = res.to_tuple1()?.to_vec::<u32>()?;
+            out.extend_from_slice(&h[..n]);
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// Request messages for the compute-service thread.
+enum Req {
+    Diff { a: Vec<f32>, b: Vec<f32>, tol: f32, reply: mpsc::Sender<Result<DiffResult>> },
+    Stats { x: Vec<f32>, lo: f32, hi: f32, reply: mpsc::Sender<Result<StatsResult>> },
+    Scan { col: Vec<f32>, op: i32, operand: f32, reply: mpsc::Sender<Result<(u64, Vec<bool>)>> },
+    Hash { paths: Vec<String>, reply: mpsc::Sender<Result<Vec<u32>>> },
+    Shutdown,
+}
+
+/// Owner thread for a [`KernelEngine`] (PJRT is not `Send`): requests
+/// arrive over a channel, the engine is constructed inside the thread.
+pub struct ComputeService {
+    tx: mpsc::Sender<Req>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable request handle to a [`ComputeService`].
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+impl ComputeService {
+    /// Spawn the owner thread and load artifacts from `dir`. Fails fast if
+    /// the artifacts cannot be loaded/compiled.
+    pub fn spawn(dir: &Path) -> Result<ComputeService> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = dir.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            let engine = match KernelEngine::load(&dir) {
+                Ok(e) => {
+                    ready_tx.send(Ok(())).ok();
+                    e
+                }
+                Err(e) => {
+                    ready_tx.send(Err(e)).ok();
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Diff { a, b, tol, reply } => {
+                        reply.send(engine.diff(&a, &b, tol)).ok();
+                    }
+                    Req::Stats { x, lo, hi, reply } => {
+                        reply.send(engine.stats(&x, lo, hi)).ok();
+                    }
+                    Req::Scan { col, op, operand, reply } => {
+                        reply.send(engine.scan(&col, op, operand)).ok();
+                    }
+                    Req::Hash { paths, reply } => {
+                        reply.send(engine.hash_paths(&paths)).ok();
+                    }
+                    Req::Shutdown => break,
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service died during load"))??;
+        Ok(ComputeService { tx, handle: Some(handle) })
+    }
+
+    /// Get a request handle.
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        self.tx.send(Req::Shutdown).ok();
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl ComputeHandle {
+    /// Blocking diff request.
+    pub fn diff(&self, a: &[f32], b: &[f32], tol: f32) -> Result<DiffResult> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Diff { a: a.to_vec(), b: b.to_vec(), tol, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service gone"))?
+    }
+
+    /// Blocking stats request.
+    pub fn stats(&self, x: &[f32], lo: f32, hi: f32) -> Result<StatsResult> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Stats { x: x.to_vec(), lo, hi, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service gone"))?
+    }
+
+    /// Blocking scan request.
+    pub fn scan(&self, col: &[f32], op: i32, operand: f32) -> Result<(u64, Vec<bool>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Scan { col: col.to_vec(), op, operand, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service gone"))?
+    }
+
+    /// Blocking bulk hash request.
+    pub fn hash_paths(&self, paths: &[String]) -> Result<Vec<u32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Hash { paths: paths.to_vec(), reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service gone"))?
+    }
+}
+
+/// Locate the artifacts directory for tests/examples: walks up from CWD
+/// looking for `artifacts/manifest.json`.
+pub fn find_artifacts() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SCISPACE_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    None
+}

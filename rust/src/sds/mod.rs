@@ -1,0 +1,584 @@
+//! Scientific Discovery Service (paper §III-B5).
+//!
+//! SDS indexes self-contained attributes of scientific datasets (SHDF
+//! headers here; HDF5/NetCDF in the paper), user-defined tags, and
+//! content-derived statistics (via the PJRT `stats` kernel) into per-DTN
+//! *discovery shards*, then answers attribute queries with the operators
+//! `=`, `>`, `<` and `like` from a CLI-style interface.
+//!
+//! Three extraction modes (Fig. 6):
+//! * **Inline-Sync**  — extraction + indexing inside the write; strict
+//!   consistency, slowest writes.
+//! * **Inline-Async** — the write only enqueues an indexing message;
+//!   a background pass drains the queue when time/size/count thresholds
+//!   are reached.
+//! * **LW-Offline**   — for local-writes: indexing runs directly on the
+//!   DTN against the data-center namespace; no gRPC/protobuf messaging.
+
+pub mod query;
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use crate::db::{Pred, Table, Value};
+use crate::metadata::placement;
+use crate::msg::{Enc, Wire};
+use crate::shdf::ShdfFile;
+use crate::workspace::{AccessMode, Testbed};
+pub use query::{Op, Query};
+
+/// Extraction mode (paper Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtractionMode {
+    /// Extract + index synchronously inside the write.
+    InlineSync,
+    /// Enqueue an indexing message; extract later from the queue.
+    InlineAsync,
+    /// Index offline directly in the local data-center namespace.
+    LwOffline,
+}
+
+/// Cost parameters of the extraction/indexing path.
+#[derive(Debug, Clone)]
+pub struct SdsConfig {
+    /// Opening a dataset file for extraction, seconds.
+    pub open_s: f64,
+    /// Extracting + validating one attribute, seconds.
+    pub per_attr_s: f64,
+    /// Inserting one tuple into a discovery shard, seconds.
+    pub per_insert_s: f64,
+    /// Enqueue message cost (protobuf pack + gRPC call), seconds.
+    pub enqueue_s: f64,
+    /// Result tuple pack/unpack cost (Table II effect), seconds.
+    pub per_tuple_pack_s: f64,
+    /// Approximate bytes per result tuple on the wire.
+    pub tuple_bytes: u64,
+    /// Async queue thresholds: flush when this many files are pending...
+    pub q_max_files: usize,
+    /// ...or when the oldest entry is this old (virtual seconds)...
+    pub q_max_age_s: f64,
+    /// ...or when pending payload bytes exceed this.
+    pub q_max_bytes: u64,
+}
+
+impl Default for SdsConfig {
+    fn default() -> Self {
+        SdsConfig {
+            open_s: 250e-6,
+            per_attr_s: 60e-6,
+            per_insert_s: 8e-6,
+            enqueue_s: 20e-6,
+            per_tuple_pack_s: 4e-6,
+            tuple_bytes: 96,
+            q_max_files: 64,
+            q_max_age_s: 5.0,
+            q_max_bytes: 256 << 20,
+        }
+    }
+}
+
+/// One DTN's discovery shard: (attr, file, value) with an attr index.
+#[derive(Debug)]
+pub struct DiscoveryShard {
+    table: Table,
+}
+
+impl Default for DiscoveryShard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DiscoveryShard {
+    /// Empty shard with the Fig. 4 discovery schema.
+    pub fn new() -> Self {
+        let mut table = Table::new(&["attr", "file", "value"]);
+        table.create_index("attr").expect("schema");
+        DiscoveryShard { table }
+    }
+
+    /// Insert one (attr, file, value) tuple.
+    pub fn insert(&mut self, attr: &str, file: &str, value: Value) -> Result<()> {
+        self.table.insert(vec![
+            Value::Text(attr.to_string()),
+            Value::Text(file.to_string()),
+            value,
+        ])?;
+        Ok(())
+    }
+
+    /// Evaluate one query; returns matching (file, value) pairs.
+    pub fn eval(&self, q: &Query) -> Result<Vec<(String, Value)>> {
+        let mut preds = vec![Pred::Eq("attr".into(), Value::Text(q.attr.clone()))];
+        preds.push(match q.op {
+            Op::Eq => Pred::Eq("value".into(), q.value.clone()),
+            Op::Lt => Pred::Lt("value".into(), q.value.clone()),
+            Op::Gt => Pred::Gt("value".into(), q.value.clone()),
+            Op::Like => match &q.value {
+                Value::Text(p) => Pred::Like("value".into(), p.clone()),
+                _ => return Err(anyhow!("like requires a text pattern")),
+            },
+        });
+        let rids = self.table.select(&preds)?;
+        Ok(rids
+            .into_iter()
+            .filter_map(|rid| {
+                let row = self.table.get(rid)?;
+                match (&row[1], &row[2]) {
+                    (Value::Text(f), v) => Some((f.clone(), v.clone())),
+                    _ => None,
+                }
+            })
+            .collect())
+    }
+
+    /// Tuples in this shard.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+/// A pending Inline-Async indexing request.
+#[derive(Debug, Clone)]
+pub struct PendingIndex {
+    /// Workspace path of the file to index.
+    pub path: String,
+    /// Hosting data center.
+    pub dc: usize,
+    /// Payload bytes (threshold accounting).
+    pub bytes: u64,
+    /// Virtual time the message was enqueued.
+    pub enqueued_at: f64,
+}
+
+/// Derived content statistics provider: given a dataset payload, returns
+/// named derived attributes (min/max/mean/...). The PJRT-backed
+/// implementation lives in [`crate::runtime`]; a pure-Rust fallback is
+/// [`cpu_stats_attrs`]. Two lifetimes keep reborrowing in loops legal
+/// (`&mut dyn` is invariant in its trait-object lifetime).
+pub type StatsFn<'a, 'b> = &'a mut (dyn FnMut(&str, &[f32]) -> Vec<(String, Value)> + 'b);
+
+/// Pure-Rust derived attributes (oracle for the PJRT stats kernel).
+pub fn cpu_stats_attrs(ds_name: &str, data: &[f32]) -> Vec<(String, Value)> {
+    if data.is_empty() {
+        return vec![];
+    }
+    let n = data.len() as f64;
+    let (mut mn, mut mx, mut s, mut ss) = (f32::INFINITY, f32::NEG_INFINITY, 0f64, 0f64);
+    for &x in data {
+        mn = mn.min(x);
+        mx = mx.max(x);
+        s += x as f64;
+        ss += (x as f64) * (x as f64);
+    }
+    let mean = s / n;
+    let var = (ss / n - mean * mean).max(0.0);
+    vec![
+        (format!("{ds_name}.min"), Value::Float(mn as f64)),
+        (format!("{ds_name}.max"), Value::Float(mx as f64)),
+        (format!("{ds_name}.mean"), Value::Float(mean)),
+        (format!("{ds_name}.std"), Value::Float(var.sqrt())),
+    ]
+}
+
+/// The discovery service: shards + async queue + counters.
+pub struct Sds {
+    /// Cost parameters.
+    pub cfg: SdsConfig,
+    /// One discovery shard per DTN.
+    pub shards: Vec<DiscoveryShard>,
+    /// Inline-Async pending queue (drained by [`Sds::process_queue`]).
+    pub queue: VecDeque<PendingIndex>,
+    /// Bytes pending in the queue.
+    pub queued_bytes: u64,
+    /// Attribute names to index; empty = index everything.
+    pub selection: Vec<String>,
+    /// Files indexed so far.
+    pub files_indexed: u64,
+    /// Tuples inserted so far.
+    pub tuples_indexed: u64,
+}
+
+impl Sds {
+    /// New service over `n_dtns` shards.
+    pub fn new(n_dtns: usize, cfg: SdsConfig) -> Self {
+        Sds {
+            cfg,
+            shards: (0..n_dtns).map(|_| DiscoveryShard::new()).collect(),
+            queue: VecDeque::new(),
+            queued_bytes: 0,
+            selection: Vec::new(),
+            files_indexed: 0,
+            tuples_indexed: 0,
+        }
+    }
+
+    /// Restrict indexing to the named attributes (paper: "collaborators
+    /// can specify attributes to index").
+    pub fn select_attrs<S: Into<String>>(&mut self, attrs: impl IntoIterator<Item = S>) {
+        self.selection = attrs.into_iter().map(Into::into).collect();
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        self.selection.is_empty() || self.selection.iter().any(|s| s == name)
+    }
+
+    /// Extract attributes from a parsed SHDF file, honoring the selection
+    /// and optionally deriving content statistics.
+    pub fn extract_attrs(
+        &self,
+        f: &ShdfFile,
+        mut stats: Option<StatsFn<'_, '_>>,
+    ) -> Vec<(String, Value)> {
+        let mut out = Vec::new();
+        for (n, v) in &f.attrs {
+            if self.selected(n) {
+                out.push((n.clone(), v.clone()));
+            }
+        }
+        if let Some(sf) = stats.as_deref_mut() {
+            for d in &f.datasets {
+                for (n, v) in sf(&d.name, &d.data) {
+                    if self.selected(&n) {
+                        out.push((n, v));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Index `attrs` for `path` into its shard; returns the CPU cost.
+    fn index_tuples(&mut self, path: &str, attrs: &[(String, Value)]) -> f64 {
+        let shard = placement::shard_for(path, self.shards.len());
+        for (a, v) in attrs {
+            self.shards[shard].insert(a, path, v.clone()).expect("insert");
+        }
+        self.files_indexed += 1;
+        self.tuples_indexed += attrs.len() as u64;
+        self.cfg.open_s
+            + self.cfg.per_attr_s * attrs.len() as f64
+            + self.cfg.per_insert_s * attrs.len() as f64
+    }
+
+    /// Should the async queue flush now?
+    pub fn queue_due(&self, now: f64) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.cfg.q_max_files
+            || self.queued_bytes >= self.cfg.q_max_bytes
+            || self
+                .queue
+                .front()
+                .map(|p| now - p.enqueued_at >= self.cfg.q_max_age_s)
+                .unwrap_or(false)
+    }
+}
+
+/// Write an SHDF file through the workspace with the chosen extraction
+/// mode. Returns the collaborator-visible completion time.
+pub fn write_indexed(
+    tb: &mut Testbed,
+    sds: &mut Sds,
+    c: usize,
+    path: &str,
+    file: &ShdfFile,
+    mode: ExtractionMode,
+    stats: Option<StatsFn<'_, '_>>,
+) -> Result<f64> {
+    let bytes = file.to_bytes();
+    let access = match mode {
+        ExtractionMode::LwOffline => AccessMode::ScispaceLw,
+        _ => AccessMode::Scispace,
+    };
+    tb.write(c, path, 0, bytes.len() as u64, Some(&bytes), access)?;
+    match mode {
+        ExtractionMode::InlineSync => {
+            // extraction + indexing on the write's critical path, running
+            // on the assigned DTN's service CPU (a *shared* resource — it
+            // serializes with other collaborators' requests, which is why
+            // Inline-Sync hurts under concurrency, Fig. 9b)
+            let attrs = sds.extract_attrs(file, stats);
+            let cost = sds.index_tuples(path, &attrs);
+            let dtn = tb.collabs[c].dtn;
+            let cpu = tb.dtns[dtn].meta_cpu;
+            let t = tb.collabs[c].now;
+            tb.collabs[c].now = tb.env.acquire_for(cpu, t, cost);
+        }
+        ExtractionMode::InlineAsync => {
+            // enqueue-only on the critical path
+            tb.collabs[c].now += sds.cfg.enqueue_s;
+            let dc = tb.locate(path).map(|(d, _)| d).unwrap_or(tb.collabs[c].dc);
+            sds.queued_bytes += bytes.len() as u64;
+            sds.queue.push_back(PendingIndex {
+                path: path.to_string(),
+                dc,
+                bytes: bytes.len() as u64,
+                enqueued_at: tb.collabs[c].now,
+            });
+        }
+        ExtractionMode::LwOffline => {
+            // nothing on the write path; `offline_index` runs on the DTN
+        }
+    }
+    Ok(tb.collabs[c].now)
+}
+
+/// Drain the Inline-Async queue (background indexing service on the DTNs).
+/// Returns (files indexed, virtual time spent by the service).
+pub fn process_queue(tb: &mut Testbed, sds: &mut Sds, stats: Option<StatsFn<'_, '_>>) -> Result<(usize, f64)> {
+    let mut spent = 0.0;
+    let mut n = 0;
+    let mut stats = stats;
+    while let Some(p) = sds.queue.pop_front() {
+        sds.queued_bytes = sds.queued_bytes.saturating_sub(p.bytes);
+        let (_, obj) = tb.locate(&p.path).ok_or_else(|| anyhow!("lost file {}", p.path))?;
+        let raw = tb.dcs[p.dc].store.read_all(obj)?;
+        let parsed = ShdfFile::from_bytes(&raw)?;
+        let attrs = sds.extract_attrs(&parsed, stats.as_deref_mut());
+        spent += sds.index_tuples(&p.path, &attrs);
+        n += 1;
+    }
+    Ok((n, spent))
+}
+
+/// LW-Offline indexing: walk `root` in collaborator `c`'s home DC and
+/// index every SHDF file found, directly on the data-center namespace
+/// (no enqueue messages, no FUSE). Returns (files, service time).
+pub fn offline_index(
+    tb: &mut Testbed,
+    sds: &mut Sds,
+    c: usize,
+    root: &str,
+    stats: Option<StatsFn<'_, '_>>,
+) -> Result<(usize, f64)> {
+    let dc = tb.collabs[c].dc;
+    let files = tb.dcs[dc].fs.files();
+    let mut spent = 0.0;
+    let mut n = 0;
+    let mut stats = stats;
+    for path in files.iter().filter(|p| p.starts_with(root)) {
+        let obj = match tb.dcs[dc].fs.get(path).and_then(|e| e.obj) {
+            Some(o) => o,
+            None => continue,
+        };
+        let raw = match tb.dcs[dc].store.read_all(obj) {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        let parsed = match ShdfFile::from_bytes(&raw) {
+            Ok(p) => p,
+            Err(_) => continue, // not an SHDF file: skip (no indexing needed)
+        };
+        let attrs = sds.extract_attrs(&parsed, stats.as_deref_mut());
+        spent += sds.index_tuples(path, &attrs);
+        n += 1;
+    }
+    Ok((n, spent))
+}
+
+/// Manual tagging (paper: "collaborator-defined tagging").
+pub fn tag(tb: &mut Testbed, sds: &mut Sds, c: usize, path: &str, attr: &str, value: Value) -> Result<()> {
+    if tb.locate(path).is_none() {
+        return Err(anyhow!("no such file {path}"));
+    }
+    let shard = placement::shard_for(path, sds.shards.len());
+    sds.shards[shard].insert(attr, path, value)?;
+    sds.tuples_indexed += 1;
+    tb.collabs[c].now += sds.cfg.per_insert_s;
+    Ok(())
+}
+
+/// Evaluate a query from collaborator `c` against all discovery shards
+/// (parallel fan-out); returns matching file paths and the query latency.
+pub fn run_query(tb: &mut Testbed, sds: &mut Sds, c: usize, q: &Query) -> Result<(Vec<String>, f64)> {
+    let t0 = tb.collabs[c].now;
+    let src_dc = tb.collabs[c].dc;
+    let mut files = Vec::new();
+    let mut t_end = t0;
+    for (shard, ds) in sds.shards.iter().enumerate() {
+        let hits = ds.eval(q)?;
+        // request to the shard's DTN
+        let dst_dc = tb.dtns[shard].dc;
+        let mut e = Enc::new();
+        e.str(&q.attr);
+        let t = tb.net.route(&mut tb.env, src_dc, dst_dc, t0, e.len() as u64 + 64);
+        let t = tb.env.acquire_ops(tb.dtns[shard].meta_cpu, t, 1);
+        // SQL translate + scan + result packing (Table II: grows with hits)
+        let t = t + sds.cfg.per_tuple_pack_s * hits.len() as f64;
+        // response bytes back
+        let resp_bytes = sds.cfg.tuple_bytes * hits.len() as u64 + 64;
+        let t = tb.net.route(&mut tb.env, dst_dc, src_dc, t, resp_bytes);
+        t_end = t_end.max(t);
+        files.extend(hits.into_iter().map(|(f, _)| f));
+    }
+    files.sort();
+    files.dedup();
+    tb.collabs[c].now = t_end;
+    Ok((files, t_end - t0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn modis_file(loc: &str, day: i64, sst_base: f32) -> ShdfFile {
+        let mut f = ShdfFile::new();
+        f.attr("Location", Value::Text(loc.into()))
+            .attr("Instrument", Value::Text("MODIS-Aqua".into()))
+            .attr("Date", Value::Text("2018-03-01".into()))
+            .attr("DayNight", Value::Int(day))
+            .dataset("sst", (0..256).map(|i| sst_base + i as f32 * 0.01).collect());
+        f
+    }
+
+    fn setup() -> (Testbed, Sds) {
+        let mut tb = Testbed::paper_default();
+        tb.register("alice", 0);
+        tb.register("bob", 1);
+        let sds = Sds::new(tb.dtns.len(), SdsConfig::default());
+        (tb, sds)
+    }
+
+    #[test]
+    fn inline_sync_indexes_immediately() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("Pacific", 1, 10.0);
+        write_indexed(&mut tb, &mut sds, 0, "/d/a.shdf", &f, ExtractionMode::InlineSync, None).unwrap();
+        let q = Query::parse("Location = Pacific").unwrap();
+        let (files, _) = run_query(&mut tb, &mut sds, 1, &q).unwrap();
+        assert_eq!(files, vec!["/d/a.shdf".to_string()]);
+    }
+
+    #[test]
+    fn inline_async_defers_until_queue_processed() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("Atlantic", 0, 5.0);
+        write_indexed(&mut tb, &mut sds, 0, "/d/b.shdf", &f, ExtractionMode::InlineAsync, None).unwrap();
+        let q = Query::parse("Location = Atlantic").unwrap();
+        let (files, _) = run_query(&mut tb, &mut sds, 1, &q).unwrap();
+        assert!(files.is_empty(), "async index must not be visible yet");
+        let (n, _) = process_queue(&mut tb, &mut sds, None).unwrap();
+        assert_eq!(n, 1);
+        let (files, _) = run_query(&mut tb, &mut sds, 1, &q).unwrap();
+        assert_eq!(files.len(), 1);
+    }
+
+    #[test]
+    fn async_write_faster_than_sync_write() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("X", 1, 1.0);
+        // pick two paths that hash to the same metadata shard so the only
+        // difference between the runs is the extraction mode
+        let n = tb.meta.shards.len();
+        let shard0 = crate::metadata::placement::shard_for("/s/a0.shdf", n);
+        let other = (1..100)
+            .map(|i| format!("/s/b{i}.shdf"))
+            .find(|p| crate::metadata::placement::shard_for(p, n) == shard0)
+            .expect("some path collides");
+        let t0 = tb.collabs[0].now;
+        write_indexed(&mut tb, &mut sds, 0, "/s/a0.shdf", &f, ExtractionMode::InlineSync, None).unwrap();
+        let t_sync = tb.collabs[0].now - t0;
+        tb.quiesce();
+        let t1 = tb.collabs[0].now;
+        write_indexed(&mut tb, &mut sds, 0, &other, &f, ExtractionMode::InlineAsync, None).unwrap();
+        let t_async = tb.collabs[0].now - t1;
+        assert!(t_async < t_sync, "async {t_async} must beat sync {t_sync}");
+    }
+
+    #[test]
+    fn lw_offline_indexes_native_files() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("Arctic", 1, -1.0);
+        write_indexed(&mut tb, &mut sds, 0, "/lw/c.shdf", &f, ExtractionMode::LwOffline, None).unwrap();
+        let (n, _) = offline_index(&mut tb, &mut sds, 0, "/lw", None).unwrap();
+        assert_eq!(n, 1);
+        let q = Query::parse("Location = Arctic").unwrap();
+        let (files, _) = run_query(&mut tb, &mut sds, 0, &q).unwrap();
+        assert_eq!(files.len(), 1);
+    }
+
+    #[test]
+    fn attribute_selection_limits_tuples() {
+        let (mut tb, mut sds) = setup();
+        sds.select_attrs(["Location", "DayNight"]);
+        let f = modis_file("P", 1, 0.0);
+        write_indexed(&mut tb, &mut sds, 0, "/x/a.shdf", &f, ExtractionMode::InlineSync, None).unwrap();
+        assert_eq!(sds.tuples_indexed, 2);
+    }
+
+    #[test]
+    fn derived_stats_queryable() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("P", 1, 20.0); // sst in [20, 22.55]
+        let mut sf = cpu_stats_attrs;
+        write_indexed(&mut tb, &mut sds, 0, "/st/a.shdf", &f, ExtractionMode::InlineSync, Some(&mut sf)).unwrap();
+        let q = Query::parse("sst.max > 22.0").unwrap();
+        let (files, _) = run_query(&mut tb, &mut sds, 0, &q).unwrap();
+        assert_eq!(files.len(), 1);
+        let q2 = Query::parse("sst.max > 30.0").unwrap();
+        let (files2, _) = run_query(&mut tb, &mut sds, 0, &q2).unwrap();
+        assert!(files2.is_empty());
+    }
+
+    #[test]
+    fn query_operators_work() {
+        let (mut tb, mut sds) = setup();
+        for (i, (loc, day)) in [("Pacific", 1), ("Pacific", 0), ("Atlantic", 1)].iter().enumerate() {
+            let f = modis_file(loc, *day, i as f32);
+            write_indexed(&mut tb, &mut sds, 0, &format!("/q/f{i}.shdf"), &f, ExtractionMode::InlineSync, None).unwrap();
+        }
+        let eq = Query::parse("DayNight = 1").unwrap();
+        assert_eq!(run_query(&mut tb, &mut sds, 0, &eq).unwrap().0.len(), 2);
+        let lt = Query::parse("DayNight < 1").unwrap();
+        assert_eq!(run_query(&mut tb, &mut sds, 0, &lt).unwrap().0.len(), 1);
+        let like = Query::parse("Location like Pac%").unwrap();
+        assert_eq!(run_query(&mut tb, &mut sds, 0, &like).unwrap().0.len(), 2);
+    }
+
+    #[test]
+    fn query_latency_grows_with_hits() {
+        let (mut tb, mut sds) = setup();
+        for i in 0..200 {
+            let f = modis_file(if i < 20 { "Rare" } else { "Common" }, 1, 0.0);
+            write_indexed(&mut tb, &mut sds, 0, &format!("/h/f{i}.shdf"), &f, ExtractionMode::InlineSync, None).unwrap();
+        }
+        tb.quiesce(); // drain population backlog before measuring latency
+        let (few, t_few) = run_query(&mut tb, &mut sds, 1, &Query::parse("Location = Rare").unwrap()).unwrap();
+        let (many, t_many) = run_query(&mut tb, &mut sds, 1, &Query::parse("Location = Common").unwrap()).unwrap();
+        assert_eq!(few.len(), 20);
+        assert_eq!(many.len(), 180);
+        assert!(t_many > t_few, "latency must grow with hit count: {t_many} vs {t_few}");
+    }
+
+    #[test]
+    fn tagging_supported() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("P", 1, 0.0);
+        write_indexed(&mut tb, &mut sds, 0, "/t/a.shdf", &f, ExtractionMode::InlineSync, None).unwrap();
+        tag(&mut tb, &mut sds, 0, "/t/a.shdf", "campaign", Value::Text("deepwater".into())).unwrap();
+        let (files, _) = run_query(&mut tb, &mut sds, 0, &Query::parse("campaign = deepwater").unwrap()).unwrap();
+        assert_eq!(files.len(), 1);
+        assert!(tag(&mut tb, &mut sds, 0, "/missing", "x", Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn queue_thresholds_trigger() {
+        let (mut tb, mut sds) = setup();
+        sds.cfg.q_max_files = 3;
+        let f = modis_file("P", 1, 0.0);
+        for i in 0..3 {
+            write_indexed(&mut tb, &mut sds, 0, &format!("/qq/f{i}.shdf"), &f, ExtractionMode::InlineAsync, None).unwrap();
+        }
+        assert!(sds.queue_due(tb.collabs[0].now));
+        process_queue(&mut tb, &mut sds, None).unwrap();
+        assert!(!sds.queue_due(tb.collabs[0].now));
+    }
+}

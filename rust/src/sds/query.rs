@@ -1,0 +1,112 @@
+//! Query language of the SDS command-line utility (paper §III-B5).
+//!
+//! Grammar: `attr OP value` where OP ∈ { `=`, `<`, `>`, `like` }.
+//! Values are typed by inference: integer → `Value::Int`, float →
+//! `Value::Float`, anything else (optionally quoted) → `Value::Text`.
+//! `like` patterns use `%`/`_` wildcards, matching the paper's text
+//! operator set.
+
+use anyhow::{bail, Result};
+
+use crate::db::Value;
+
+/// Comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// `=`
+    Eq,
+    /// `<`
+    Lt,
+    /// `>`
+    Gt,
+    /// `like`
+    Like,
+}
+
+/// One parsed query predicate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// Attribute name.
+    pub attr: String,
+    /// Operator.
+    pub op: Op,
+    /// Typed operand.
+    pub value: Value,
+}
+
+/// Infer a typed [`Value`] from CLI text.
+pub fn parse_value(s: &str) -> Value {
+    let t = s.trim();
+    let unquoted = t
+        .strip_prefix('"')
+        .and_then(|x| x.strip_suffix('"'))
+        .or_else(|| t.strip_prefix('\'').and_then(|x| x.strip_suffix('\'')));
+    if let Some(u) = unquoted {
+        return Value::Text(u.to_string());
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Text(t.to_string())
+}
+
+impl Query {
+    /// Parse `attr op value` (e.g. `Location = Pacific`, `sst.max > 22.5`,
+    /// `Instrument like MODIS%`).
+    pub fn parse(s: &str) -> Result<Query> {
+        let toks: Vec<&str> = s.split_whitespace().collect();
+        if toks.len() < 3 {
+            bail!("query must be `attr op value`: {s}");
+        }
+        let attr = toks[0].to_string();
+        let op = match toks[1] {
+            "=" | "==" => Op::Eq,
+            "<" => Op::Lt,
+            ">" => Op::Gt,
+            "like" | "LIKE" => Op::Like,
+            other => bail!("unknown operator {other}"),
+        };
+        let value = parse_value(&toks[2..].join(" "));
+        if op == Op::Like && !matches!(value, Value::Text(_)) {
+            bail!("like requires a text pattern");
+        }
+        Ok(Query { attr, op, value })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_values() {
+        assert_eq!(parse_value("42"), Value::Int(42));
+        assert_eq!(parse_value("-3.5"), Value::Float(-3.5));
+        assert_eq!(parse_value("Pacific"), Value::Text("Pacific".into()));
+        assert_eq!(parse_value("\"quoted 42\""), Value::Text("quoted 42".into()));
+    }
+
+    #[test]
+    fn parses_operators() {
+        assert_eq!(Query::parse("a = 1").unwrap().op, Op::Eq);
+        assert_eq!(Query::parse("a < 1").unwrap().op, Op::Lt);
+        assert_eq!(Query::parse("a > 1").unwrap().op, Op::Gt);
+        assert_eq!(Query::parse("a like x%").unwrap().op, Op::Like);
+    }
+
+    #[test]
+    fn multiword_text_operand() {
+        let q = Query::parse("Location = North Pacific Gyre").unwrap();
+        assert_eq!(q.value, Value::Text("North Pacific Gyre".into()));
+    }
+
+    #[test]
+    fn rejects_bad_queries() {
+        assert!(Query::parse("a =").is_err());
+        assert!(Query::parse("a ~= 3").is_err());
+        assert!(Query::parse("a like 42").is_err());
+    }
+}

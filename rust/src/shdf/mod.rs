@@ -1,0 +1,341 @@
+//! SHDF — a self-describing scientific container format (HDF5 substitute).
+//!
+//! The paper's SDS reads "scientific dataset headers (such as HDF5 and
+//! NetCDF self-contained attributes)" and its end-to-end experiment runs
+//! H5Diff / H5Dump over MODIS-Aqua ocean data. SHDF reproduces the parts
+//! those workflows exercise: a binary container with typed self-contained
+//! attributes and named f32 datasets, a cheap header-only parse (what SDS
+//! indexing reads), and `shdiff` / `shdump` tool equivalents.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SHDF" | version u32
+//! attr_count u32 | attrs: (name str, Value)
+//! ds_count u32   | datasets: (name str, len u64, f32 data...)
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::db::Value;
+use crate::msg::{Dec, Enc, Wire};
+
+/// File magic.
+pub const MAGIC: &[u8; 4] = b"SHDF";
+/// Format version.
+pub const VERSION: u32 = 1;
+
+/// A named f32 dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    /// Dataset name (e.g. "sst" — sea surface temperature).
+    pub name: String,
+    /// Payload values.
+    pub data: Vec<f32>,
+}
+
+/// A parsed SHDF file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShdfFile {
+    /// Self-contained attributes (what SDS extracts and indexes).
+    pub attrs: Vec<(String, Value)>,
+    /// Datasets.
+    pub datasets: Vec<Dataset>,
+}
+
+impl ShdfFile {
+    /// New empty file.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an attribute.
+    pub fn attr(&mut self, name: &str, v: Value) -> &mut Self {
+        self.attrs.push((name.to_string(), v));
+        self
+    }
+
+    /// Add a dataset.
+    pub fn dataset(&mut self, name: &str, data: Vec<f32>) -> &mut Self {
+        self.datasets.push(Dataset { name: name.to_string(), data });
+        self
+    }
+
+    /// Look up an attribute by name.
+    pub fn get_attr(&self, name: &str) -> Option<&Value> {
+        self.attrs.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Look up a dataset by name.
+    pub fn get_dataset(&self, name: &str) -> Option<&Dataset> {
+        self.datasets.iter().find(|d| d.name == name)
+    }
+
+    /// Total payload element count across datasets.
+    pub fn n_elements(&self) -> usize {
+        self.datasets.iter().map(|d| d.data.len()).sum()
+    }
+}
+
+impl Wire for ShdfFile {
+    fn encode(&self, e: &mut Enc) {
+        e.bytes(MAGIC);
+        e.u32(VERSION);
+        e.u32(self.attrs.len() as u32);
+        for (n, v) in &self.attrs {
+            e.str(n);
+            v.encode(e);
+        }
+        e.u32(self.datasets.len() as u32);
+        for d in &self.datasets {
+            e.str(&d.name);
+            e.u64(d.data.len() as u64);
+            e.f32_slice(&d.data); // bulk LE conversion (hot path)
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Result<Self> {
+        let attrs = decode_header_inner(d)?;
+        let nds = d.u32()?;
+        let mut datasets = Vec::with_capacity(nds as usize);
+        for _ in 0..nds {
+            let name = d.str()?;
+            let n = d.u64()? as usize;
+            let data = d.f32_slice(n)?; // bulk LE conversion (hot path)
+            datasets.push(Dataset { name, data });
+        }
+        Ok(ShdfFile { attrs, datasets })
+    }
+}
+
+fn decode_header_inner(d: &mut Dec) -> Result<Vec<(String, Value)>> {
+    let magic = d.bytes()?;
+    if magic != MAGIC {
+        bail!("not an SHDF file");
+    }
+    let ver = d.u32()?;
+    if ver != VERSION {
+        bail!("unsupported SHDF version {ver}");
+    }
+    let na = d.u32()?;
+    let mut attrs = Vec::with_capacity(na as usize);
+    for _ in 0..na {
+        let n = d.str()?;
+        let v = Value::decode(d)?;
+        attrs.push((n, v));
+    }
+    Ok(attrs)
+}
+
+/// Parse only the attribute header (SDS indexing path — avoids touching
+/// dataset payload bytes, which is what makes header-mode extraction cheap).
+pub fn read_header(bytes: &[u8]) -> Result<Vec<(String, Value)>> {
+    let mut d = Dec::new(bytes);
+    decode_header_inner(&mut d)
+}
+
+/// Result of an `shdiff` comparison (H5Diff equivalent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffReport {
+    /// Per-dataset: (name, elements differing beyond tol, max |a-b|, sum sq).
+    pub datasets: Vec<(String, u64, f32, f64)>,
+    /// Datasets present in exactly one file.
+    pub only_in_one: Vec<String>,
+    /// Attributes that differ.
+    pub attr_diffs: Vec<String>,
+}
+
+impl DiffReport {
+    /// True when the files are identical within tolerance.
+    pub fn identical(&self) -> bool {
+        self.only_in_one.is_empty()
+            && self.attr_diffs.is_empty()
+            && self.datasets.iter().all(|(_, n, _, _)| *n == 0)
+    }
+
+    /// Total differing elements.
+    pub fn total_diffs(&self) -> u64 {
+        self.datasets.iter().map(|(_, n, _, _)| n).sum()
+    }
+}
+
+/// Pure-Rust dataset compare core (the oracle for the PJRT diff kernel;
+/// `runtime::ComputeService` provides the accelerated path).
+pub fn diff_core(a: &[f32], b: &[f32], tol: f32) -> (u64, f32, f64) {
+    let mut n = 0u64;
+    let mut mx = 0f32;
+    let mut ss = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (x - y).abs();
+        if d > tol {
+            n += 1;
+        }
+        if d > mx {
+            mx = d;
+        }
+        ss += (d as f64) * (d as f64);
+    }
+    // length mismatch: trailing elements all count as differences
+    n += (a.len() as i64 - b.len() as i64).unsigned_abs();
+    (n, mx, ss)
+}
+
+/// H5Diff equivalent over two parsed files, with a pluggable numeric core
+/// (pass [`diff_core`] or a closure that calls the PJRT kernel).
+pub fn shdiff_with(
+    a: &ShdfFile,
+    b: &ShdfFile,
+    tol: f32,
+    mut core: impl FnMut(&[f32], &[f32], f32) -> (u64, f32, f64),
+) -> DiffReport {
+    let mut report = DiffReport { datasets: vec![], only_in_one: vec![], attr_diffs: vec![] };
+    for (n, v) in &a.attrs {
+        match b.get_attr(n) {
+            Some(w) if w == v => {}
+            _ => report.attr_diffs.push(n.clone()),
+        }
+    }
+    for (n, _) in &b.attrs {
+        if a.get_attr(n).is_none() {
+            report.attr_diffs.push(n.clone());
+        }
+    }
+    for d in &a.datasets {
+        match b.get_dataset(&d.name) {
+            Some(e) => {
+                let (n, mx, ss) = core(&d.data, &e.data, tol);
+                report.datasets.push((d.name.clone(), n, mx, ss));
+            }
+            None => report.only_in_one.push(d.name.clone()),
+        }
+    }
+    for e in &b.datasets {
+        if a.get_dataset(&e.name).is_none() {
+            report.only_in_one.push(e.name.clone());
+        }
+    }
+    report
+}
+
+/// H5Diff equivalent with the pure-Rust core.
+pub fn shdiff(a: &ShdfFile, b: &ShdfFile, tol: f32) -> DiffReport {
+    shdiff_with(a, b, tol, diff_core)
+}
+
+/// H5Dump equivalent: render a file as ASCII (attributes + dataset heads).
+pub fn shdump(f: &ShdfFile, max_elems: usize) -> String {
+    let mut out = String::new();
+    out.push_str("SHDF {\n");
+    for (n, v) in &f.attrs {
+        let vs = match v {
+            Value::Int(i) => format!("{i}"),
+            Value::Float(x) => format!("{x}"),
+            Value::Text(t) => format!("{t:?}"),
+        };
+        out.push_str(&format!("  ATTRIBUTE {n} = {vs}\n"));
+    }
+    for d in &f.datasets {
+        out.push_str(&format!("  DATASET {} [{}] {{ ", d.name, d.data.len()));
+        for (i, x) in d.data.iter().take(max_elems).enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{x}"));
+        }
+        if d.data.len() > max_elems {
+            out.push_str(", ...");
+        }
+        out.push_str(" }\n");
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ShdfFile {
+        let mut f = ShdfFile::new();
+        f.attr("Location", Value::Text("PacificNW".into()))
+            .attr("Instrument", Value::Text("MODIS-Aqua".into()))
+            .attr("DayNight", Value::Int(1))
+            .attr("MeanSST", Value::Float(14.2))
+            .dataset("sst", (0..1000).map(|i| (i as f32) * 0.01).collect())
+            .dataset("chlor_a", vec![1.0, 2.0, 3.0]);
+        f
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let f = sample();
+        let g = ShdfFile::from_bytes(&f.to_bytes()).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn header_only_parse() {
+        let f = sample();
+        let attrs = read_header(&f.to_bytes()).unwrap();
+        assert_eq!(attrs.len(), 4);
+        assert_eq!(attrs[0].0, "Location");
+        assert_eq!(attrs[3].1, Value::Float(14.2));
+    }
+
+    #[test]
+    fn rejects_non_shdf() {
+        assert!(read_header(b"\x04\x00\x00\x00NOPE").is_err());
+        assert!(ShdfFile::from_bytes(b"junk").is_err());
+    }
+
+    #[test]
+    fn diff_identical_files() {
+        let f = sample();
+        let r = shdiff(&f, &f, 0.0);
+        assert!(r.identical());
+        assert_eq!(r.total_diffs(), 0);
+    }
+
+    #[test]
+    fn diff_detects_changes() {
+        let f = sample();
+        let mut g = f.clone();
+        g.datasets[0].data[7] += 5.0;
+        g.attrs[0].1 = Value::Text("Atlantic".into());
+        let r = shdiff(&f, &g, 0.5);
+        assert!(!r.identical());
+        assert_eq!(r.total_diffs(), 1);
+        assert_eq!(r.attr_diffs, vec!["Location".to_string()]);
+        let (_, n, mx, _) = r.datasets[0].clone();
+        assert_eq!(n, 1);
+        assert!((mx - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn diff_length_mismatch_counts() {
+        let (n, _, _) = diff_core(&[1.0, 2.0, 3.0], &[1.0], 0.0);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn diff_missing_dataset_reported() {
+        let f = sample();
+        let mut g = f.clone();
+        g.datasets.pop();
+        let r = shdiff(&f, &g, 0.0);
+        assert_eq!(r.only_in_one, vec!["chlor_a".to_string()]);
+    }
+
+    #[test]
+    fn dump_contains_attrs_and_data() {
+        let s = shdump(&sample(), 4);
+        assert!(s.contains("ATTRIBUTE Location = \"PacificNW\""));
+        assert!(s.contains("DATASET sst [1000]"));
+        assert!(s.contains("..."));
+    }
+
+    #[test]
+    fn tolerance_respected() {
+        let (n, _, _) = diff_core(&[0.0, 0.0], &[0.4, 0.6], 0.5);
+        assert_eq!(n, 1);
+    }
+}

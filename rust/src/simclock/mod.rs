@@ -1,0 +1,215 @@
+//! Virtual time + shared-resource contention model.
+//!
+//! The paper's testbed (two Lustre data centers, IB EDR, NFS-mounted DTNs)
+//! is reproduced as a *time-advancing shared-server* simulation: every
+//! physical component that can be a bottleneck (an OST, an OSS page cache
+//! drain, an NFS server, a DTN NIC, the inter-DC link, a metadata service
+//! CPU) is a [`Resource`] with a per-operation latency and a bandwidth.
+//! Logical actors (collaborators) each carry their own virtual `now`;
+//! acquiring a resource serializes behind its `busy_until` horizon, which
+//! yields queueing, saturation and fair-share contention — the effects the
+//! paper's figures measure — without a full event-driven core.
+//!
+//! All simulated experiments report *virtual* seconds; wall-clock
+//! microbenches of the real Rust hot paths live in `util::timer`.
+
+/// Handle to a resource registered in a [`SimEnv`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(pub usize);
+
+/// A serially-shared component with per-op latency and bandwidth.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    /// Human-readable name (for traces and debugging).
+    pub name: String,
+    /// Fixed cost per operation, seconds (seek, RPC handling, syscall...).
+    pub per_op_s: f64,
+    /// Streaming bandwidth, bytes/second (`f64::INFINITY` = latency-only).
+    pub bytes_per_s: f64,
+    /// Horizon up to which the resource is already committed.
+    pub busy_until: f64,
+    /// Total bytes pushed through (for utilization reports).
+    pub total_bytes: u64,
+    /// Total operations served.
+    pub total_ops: u64,
+}
+
+/// The simulation environment: a registry of shared resources.
+///
+/// `SimEnv` is deliberately single-threaded (callers interleave logical
+/// actors themselves); this keeps runs deterministic for a given actor
+/// schedule, which the reproducibility of EXPERIMENTS.md depends on.
+#[derive(Debug, Default)]
+pub struct SimEnv {
+    resources: Vec<Resource>,
+}
+
+impl SimEnv {
+    /// Create an empty environment.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a resource; returns its id.
+    pub fn add_resource(&mut self, name: &str, per_op_s: f64, bytes_per_s: f64) -> ResourceId {
+        self.resources.push(Resource {
+            name: name.to_string(),
+            per_op_s,
+            bytes_per_s,
+            busy_until: 0.0,
+            total_bytes: 0,
+            total_ops: 0,
+        });
+        ResourceId(self.resources.len() - 1)
+    }
+
+    /// Immutable view of a resource.
+    pub fn resource(&self, id: ResourceId) -> &Resource {
+        &self.resources[id.0]
+    }
+
+    /// Serve `bytes` through the resource for an actor whose local clock is
+    /// `now`; returns the completion time (the actor's new `now`).
+    ///
+    /// The request queues behind any earlier committed work, pays one
+    /// `per_op_s`, then streams at `bytes_per_s`.
+    pub fn acquire(&mut self, id: ResourceId, now: f64, bytes: u64) -> f64 {
+        let r = &mut self.resources[id.0];
+        let start = now.max(r.busy_until);
+        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
+            bytes as f64 / r.bytes_per_s
+        } else {
+            0.0
+        };
+        let end = start + r.per_op_s + xfer;
+        r.busy_until = end;
+        r.total_bytes += bytes;
+        r.total_ops += 1;
+        end
+    }
+
+    /// Serve `n_ops` zero-byte operations back-to-back (metadata traffic).
+    pub fn acquire_ops(&mut self, id: ResourceId, now: f64, n_ops: u64) -> f64 {
+        let r = &mut self.resources[id.0];
+        let start = now.max(r.busy_until);
+        let end = start + r.per_op_s * n_ops as f64;
+        r.busy_until = end;
+        r.total_ops += n_ops;
+        end
+    }
+
+    /// Occupy the resource for a fixed duration (CPU-bound service work,
+    /// e.g. attribute extraction on a DTN); returns completion time.
+    pub fn acquire_for(&mut self, id: ResourceId, now: f64, seconds: f64) -> f64 {
+        let r = &mut self.resources[id.0];
+        let start = now.max(r.busy_until);
+        let end = start + seconds;
+        r.busy_until = end;
+        r.total_ops += 1;
+        end
+    }
+
+    /// Non-queuing cost estimate: what `bytes` would take on an idle copy of
+    /// the resource (used for capacity planning / roofline reports).
+    pub fn idle_cost(&self, id: ResourceId, bytes: u64) -> f64 {
+        let r = &self.resources[id.0];
+        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
+            bytes as f64 / r.bytes_per_s
+        } else {
+            0.0
+        };
+        r.per_op_s + xfer
+    }
+
+    /// Latest committed-work horizon across all resources (the earliest
+    /// time at which the whole system is quiescent).
+    pub fn horizon(&self) -> f64 {
+        self.resources.iter().map(|r| r.busy_until).fold(0.0, f64::max)
+    }
+
+    /// Reset all busy horizons and counters (between experiment iterations,
+    /// mirroring the paper's "drop cache after each iteration").
+    pub fn reset(&mut self) {
+        for r in &mut self.resources {
+            r.busy_until = 0.0;
+            r.total_bytes = 0;
+            r.total_ops = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env1() -> (SimEnv, ResourceId) {
+        let mut e = SimEnv::new();
+        let id = e.add_resource("disk", 0.001, 100e6);
+        (e, id)
+    }
+
+    #[test]
+    fn idle_acquire_costs_latency_plus_transfer() {
+        let (mut e, id) = env1();
+        let end = e.acquire(id, 0.0, 100_000_000);
+        assert!((end - 1.001).abs() < 1e-9, "end={end}");
+    }
+
+    #[test]
+    fn later_arrival_queues() {
+        let (mut e, id) = env1();
+        let a = e.acquire(id, 0.0, 50_000_000); // ~0.501
+        let b = e.acquire(id, 0.0, 50_000_000); // queues behind a
+        assert!(b > a);
+        assert!((b - (a + 0.501)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrival_after_idle_starts_at_now() {
+        let (mut e, id) = env1();
+        let _ = e.acquire(id, 0.0, 1_000_000);
+        let b = e.acquire(id, 100.0, 1_000_000);
+        assert!((b - 100.011).abs() < 1e-9, "b={b}");
+    }
+
+    #[test]
+    fn two_actors_share_bandwidth_fairly() {
+        // Interleaved small ops: each actor ends at ~2x the solo time.
+        let (mut e, id) = env1();
+        let solo_end = {
+            let mut t = 0.0;
+            for _ in 0..100 {
+                t = e.acquire(id, t, 1_000_000);
+            }
+            t
+        };
+        e.reset();
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for _ in 0..100 {
+            ta = e.acquire(id, ta, 1_000_000);
+            tb = e.acquire(id, tb, 1_000_000);
+        }
+        let shared_end = ta.max(tb);
+        let ratio = shared_end / solo_end;
+        assert!((1.8..2.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn latency_only_resource() {
+        let mut e = SimEnv::new();
+        let id = e.add_resource("rpc", 0.0002, f64::INFINITY);
+        let end = e.acquire_ops(id, 0.0, 5);
+        assert!((end - 0.001).abs() < 1e-12);
+        let end2 = e.acquire(id, end, 1 << 30); // bytes free, latency only
+        assert!((end2 - end - 0.0002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_horizons() {
+        let (mut e, id) = env1();
+        e.acquire(id, 0.0, 10_000_000);
+        e.reset();
+        assert_eq!(e.resource(id).busy_until, 0.0);
+        assert_eq!(e.resource(id).total_ops, 0);
+    }
+}

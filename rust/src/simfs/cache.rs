@@ -1,0 +1,207 @@
+//! Cache models: block-granular LRU (page caches) and a write-back dirty
+//! counter (NFS server / OSS write absorption with periodic flush).
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Block-granular LRU cache keyed by (object, block) pairs.
+#[derive(Debug)]
+pub struct LruCache {
+    cap_blocks: usize,
+    /// Block size in bytes (granularity of hit/miss accounting).
+    pub block_bytes: u64,
+    stamp: u64,
+    by_key: HashMap<(u64, u64), u64>,
+    by_stamp: BTreeMap<u64, (u64, u64)>,
+    /// Cumulative hits (for reports).
+    pub hits: u64,
+    /// Cumulative misses.
+    pub misses: u64,
+}
+
+impl LruCache {
+    /// Cache with `capacity_bytes` rounded down to whole blocks.
+    pub fn new(capacity_bytes: u64, block_bytes: u64) -> Self {
+        LruCache {
+            cap_blocks: (capacity_bytes / block_bytes.max(1)) as usize,
+            block_bytes: block_bytes.max(1),
+            stamp: 0,
+            by_key: HashMap::new(),
+            by_stamp: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn touch(&mut self, key: (u64, u64)) {
+        self.stamp += 1;
+        if let Some(old) = self.by_key.insert(key, self.stamp) {
+            self.by_stamp.remove(&old);
+        }
+        self.by_stamp.insert(self.stamp, key);
+        while self.by_key.len() > self.cap_blocks {
+            if let Some((&s, &k)) = self.by_stamp.iter().next() {
+                self.by_stamp.remove(&s);
+                self.by_key.remove(&k);
+            }
+        }
+    }
+
+    /// Probe a byte range of an object: returns (hit_bytes, miss_bytes) and
+    /// inserts the missed blocks (read-allocate).
+    pub fn access(&mut self, obj: u64, offset: u64, len: u64) -> (u64, u64) {
+        if self.cap_blocks == 0 || len == 0 {
+            self.misses += 1;
+            return (0, len);
+        }
+        let first = offset / self.block_bytes;
+        let last = (offset + len - 1) / self.block_bytes;
+        let (mut hit, mut miss) = (0u64, 0u64);
+        for b in first..=last {
+            let key = (obj, b);
+            let lo = (b * self.block_bytes).max(offset);
+            let hi = ((b + 1) * self.block_bytes).min(offset + len);
+            let span = hi - lo;
+            if self.by_key.contains_key(&key) {
+                hit += span;
+                self.hits += 1;
+            } else {
+                miss += span;
+                self.misses += 1;
+            }
+            self.touch(key);
+        }
+        (hit, miss)
+    }
+
+    /// Populate blocks without hit/miss accounting (write-through fill).
+    pub fn fill(&mut self, obj: u64, offset: u64, len: u64) {
+        if self.cap_blocks == 0 || len == 0 {
+            return;
+        }
+        let first = offset / self.block_bytes;
+        let last = (offset + len - 1) / self.block_bytes;
+        for b in first..=last {
+            self.touch((obj, b));
+        }
+    }
+
+    /// Drop everything (the paper drops caches between iterations).
+    pub fn clear(&mut self) {
+        self.by_key.clear();
+        self.by_stamp.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Resident block count.
+    pub fn resident(&self) -> usize {
+        self.by_key.len()
+    }
+}
+
+/// Write-back cache state: absorbs writes until `capacity` dirty bytes,
+/// then reports a flush that the caller charges to the backing store.
+#[derive(Debug, Clone)]
+pub struct WriteBack {
+    /// Dirty-byte high-water mark that triggers a flush.
+    pub capacity: u64,
+    /// Currently dirty bytes.
+    pub dirty: u64,
+    /// Number of flushes triggered (for reports).
+    pub flushes: u64,
+}
+
+impl WriteBack {
+    /// New write-back cache of the given capacity.
+    pub fn new(capacity: u64) -> Self {
+        WriteBack { capacity, dirty: 0, flushes: 0 }
+    }
+
+    /// Absorb `bytes`; returns `Some(flush_bytes)` when the high-water mark
+    /// is crossed — the caller must charge `flush_bytes` to the backend and
+    /// the dirty counter resets.
+    pub fn write(&mut self, bytes: u64) -> Option<u64> {
+        self.dirty += bytes;
+        if self.dirty >= self.capacity {
+            let f = self.dirty;
+            self.dirty = 0;
+            self.flushes += 1;
+            Some(f)
+        } else {
+            None
+        }
+    }
+
+    /// Force out whatever is dirty (close/fsync path).
+    pub fn flush(&mut self) -> u64 {
+        let f = self.dirty;
+        self.dirty = 0;
+        if f > 0 {
+            self.flushes += 1;
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_hits_after_fill() {
+        let mut c = LruCache::new(1 << 20, 4096);
+        let (h, m) = c.access(1, 0, 8192);
+        assert_eq!((h, m), (0, 8192));
+        let (h, m) = c.access(1, 0, 8192);
+        assert_eq!((h, m), (8192, 0));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = LruCache::new(4 * 4096, 4096); // 4 blocks
+        for b in 0..4 {
+            c.access(1, b * 4096, 4096);
+        }
+        c.access(1, 0, 4096); // touch block 0 so block 1 is oldest
+        c.access(2, 0, 4096); // evicts (1,1)
+        let (h, _) = c.access(1, 4096, 4096);
+        assert_eq!(h, 0, "block 1 should have been evicted");
+        let (h, _) = c.access(1, 0, 4096);
+        assert_eq!(h, 4096, "block 0 should be resident");
+    }
+
+    #[test]
+    fn partial_block_spans_account_bytes() {
+        let mut c = LruCache::new(1 << 20, 4096);
+        let (h, m) = c.access(9, 100, 200);
+        assert_eq!((h, m), (0, 200));
+        let (h, m) = c.access(9, 150, 100);
+        assert_eq!((h, m), (100, 0));
+    }
+
+    #[test]
+    fn zero_capacity_always_misses() {
+        let mut c = LruCache::new(0, 4096);
+        let (h, m) = c.access(1, 0, 4096);
+        assert_eq!((h, m), (0, 4096));
+        assert_eq!(c.resident(), 0);
+    }
+
+    #[test]
+    fn writeback_flush_at_capacity() {
+        let mut w = WriteBack::new(100);
+        assert_eq!(w.write(60), None);
+        assert_eq!(w.write(60), Some(120));
+        assert_eq!(w.dirty, 0);
+        assert_eq!(w.flushes, 1);
+    }
+
+    #[test]
+    fn writeback_manual_flush() {
+        let mut w = WriteBack::new(1000);
+        w.write(10);
+        assert_eq!(w.flush(), 10);
+        assert_eq!(w.flush(), 0);
+        assert_eq!(w.flushes, 1);
+    }
+}

@@ -1,0 +1,317 @@
+//! Lustre parallel-file-system model: MDS metadata ops + OSS/OST striped
+//! data path with an OSS page cache.
+//!
+//! Calibrated against the paper's testbed (Table I): per data center,
+//! 2 MDS + 2 OSS nodes with 11 RAID-0 OSTs each, deliberately provisioned
+//! *below* the IB EDR network bandwidth. The model charges: one MDS op per
+//! metadata operation; data striped round-robin across OSTs in
+//! `stripe_size` chunks; an OSS write-back cache that absorbs bursts and
+//! stalls on flush; an OSS read page cache (LRU).
+
+use crate::simclock::{ResourceId, SimEnv};
+use crate::simfs::cache::{LruCache, WriteBack};
+
+/// Lustre deployment parameters (one data center).
+#[derive(Debug, Clone)]
+pub struct LustreConfig {
+    /// Number of OSS nodes.
+    pub n_oss: usize,
+    /// OSTs per OSS.
+    pub osts_per_oss: usize,
+    /// Per-OST streaming bandwidth, bytes/s.
+    pub ost_bw: f64,
+    /// Per-OST seek/setup per op, seconds.
+    pub ost_per_op: f64,
+    /// MDS per-metadata-op service time, seconds.
+    pub mds_per_op: f64,
+    /// Stripe size in bytes.
+    pub stripe_size: u64,
+    /// OSS page-cache capacity (read), bytes.
+    pub oss_read_cache: u64,
+    /// OSS page-cache block granularity, bytes.
+    pub oss_cache_block: u64,
+    /// OSS write-back absorption capacity, bytes.
+    pub oss_write_cache: u64,
+    /// Bandwidth while serving from OSS page cache, bytes/s.
+    pub oss_cache_bw: f64,
+    /// Read-path efficiency of the striped OST array (client read-ahead
+    /// keeps this fraction of aggregate OST bandwidth busy).
+    pub read_array_factor: f64,
+    /// Per-miss setup cost on the read array (RPC + seek), seconds.
+    pub read_per_op: f64,
+}
+
+impl LustreConfig {
+    /// Paper-shaped defaults, scaled so sim runs stay fast: aggregate PFS
+    /// bandwidth ≈ 4.4 GB/s < 12.5 GB/s IB EDR (the paper's provisioning
+    /// constraint), 1 MiB stripes, millisecond-class MDS ops.
+    pub fn paper_default() -> Self {
+        LustreConfig {
+            n_oss: 2,
+            osts_per_oss: 11,
+            ost_bw: 200e6,
+            ost_per_op: 1e-3,
+            mds_per_op: 250e-6,
+            stripe_size: 1 << 20,
+            oss_read_cache: 8 << 30,
+            oss_cache_block: 1 << 20,
+            oss_write_cache: 4 << 30,
+            oss_cache_bw: 6e9,
+            read_array_factor: 0.8,
+            read_per_op: 100e-6,
+        }
+    }
+
+    /// Aggregate streaming bandwidth of all OSTs.
+    pub fn aggregate_bw(&self) -> f64 {
+        self.ost_bw * (self.n_oss * self.osts_per_oss) as f64
+    }
+}
+
+/// One OSS node: its OST resources and caches.
+#[derive(Debug)]
+pub struct OssNode {
+    /// OST backing resources.
+    pub osts: Vec<ResourceId>,
+    /// Serving rate from the page cache.
+    pub cache_res: ResourceId,
+    /// Striped read path: the OST array under client read-ahead, modeled
+    /// as one resource at `read_array_factor` x aggregate OST bandwidth.
+    pub read_array: ResourceId,
+    /// Read page cache.
+    pub read_cache: LruCache,
+    /// Write absorption.
+    pub write_cache: WriteBack,
+    /// Completion horizon of the most recent asynchronous OST drain;
+    /// writers block on the *previous* flush (double buffering), so
+    /// steady-state streams pipeline to OST drain bandwidth.
+    pub pending_flush: f64,
+}
+
+/// A simulated Lustre deployment (one per data center).
+#[derive(Debug)]
+pub struct Lustre {
+    /// Configuration used to build this instance.
+    pub cfg: LustreConfig,
+    /// Metadata servers (paper: 2 MDS; modeled as one resource each).
+    pub mds: Vec<ResourceId>,
+    /// Object storage servers.
+    pub oss: Vec<OssNode>,
+    rr_mds: usize,
+}
+
+impl Lustre {
+    /// Build resources for one data center inside `env`.
+    pub fn build(env: &mut SimEnv, dc: usize, cfg: &LustreConfig) -> Lustre {
+        let mds = (0..2)
+            .map(|i| env.add_resource(&format!("dc{dc}.mds{i}"), cfg.mds_per_op, f64::INFINITY))
+            .collect();
+        let oss = (0..cfg.n_oss)
+            .map(|o| OssNode {
+                osts: (0..cfg.osts_per_oss)
+                    .map(|t| {
+                        env.add_resource(&format!("dc{dc}.oss{o}.ost{t}"), cfg.ost_per_op, cfg.ost_bw)
+                    })
+                    .collect(),
+                cache_res: env.add_resource(&format!("dc{dc}.oss{o}.cache"), 0.0, cfg.oss_cache_bw),
+                read_array: env.add_resource(
+                    &format!("dc{dc}.oss{o}.rdarray"),
+                    cfg.read_per_op,
+                    cfg.ost_bw * cfg.osts_per_oss as f64 * cfg.read_array_factor,
+                ),
+                read_cache: LruCache::new(cfg.oss_read_cache, cfg.oss_cache_block),
+                write_cache: WriteBack::new(cfg.oss_write_cache),
+                pending_flush: 0.0,
+            })
+            .collect();
+        Lustre { cfg: cfg.clone(), mds, oss, rr_mds: 0 }
+    }
+
+    /// Charge `n` metadata operations (open/stat/setattr...). Round-robins
+    /// across MDS nodes like Lustre DNE.
+    pub fn metadata_ops(&mut self, env: &mut SimEnv, now: f64, n: u64) -> f64 {
+        let id = self.mds[self.rr_mds % self.mds.len()];
+        self.rr_mds += 1;
+        env.acquire_ops(id, now, n)
+    }
+
+    fn oss_for(&self, obj: u64, stripe: u64) -> (usize, usize) {
+        let n_oss = self.oss.len() as u64;
+        let per = self.cfg.osts_per_oss as u64;
+        let idx = obj.wrapping_add(stripe);
+        ((idx % n_oss) as usize, ((idx / n_oss) % per) as usize)
+    }
+
+    /// Write `len` bytes of object `obj` at `offset`. Data is absorbed by
+    /// the OSS write cache; crossing the high-water mark stalls the writer
+    /// behind a flush to the OSTs (the multi-level-flush effect in Fig. 8).
+    pub fn write(&mut self, env: &mut SimEnv, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
+        let mut t = now;
+        let ss = self.cfg.stripe_size;
+        let mut remaining = len;
+        let mut off = offset;
+        while remaining > 0 {
+            let stripe = off / ss;
+            let span = (ss - off % ss).min(remaining);
+            let (oi, _ti) = self.oss_for(obj, stripe);
+            // absorb into OSS write cache at cache speed
+            let cache_res = self.oss[oi].cache_res;
+            t = env.acquire(cache_res, t, span);
+            self.oss[oi].read_cache.fill(obj, off, span); // written data is cached
+            if let Some(flush) = self.oss[oi].write_cache.write(span) {
+                // Double-buffered drain: wait for the *previous* flush to
+                // free cache space, then kick an async striped drain of
+                // this one across the OSS's OSTs.
+                t = t.max(self.oss[oi].pending_flush);
+                let n = self.oss[oi].osts.len() as u64;
+                let per = flush / n.max(1);
+                let mut end = t;
+                for k in 0..n as usize {
+                    let ost = self.oss[oi].osts[k];
+                    end = end.max(env.acquire(ost, t, per));
+                }
+                self.oss[oi].pending_flush = end;
+            }
+            off += span;
+            remaining -= span;
+        }
+        t
+    }
+
+    /// Read `len` bytes of object `obj` at `offset`; page-cache hits are
+    /// served at cache bandwidth, misses stream from the striped OSTs.
+    pub fn read(&mut self, env: &mut SimEnv, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
+        let mut t = now;
+        let ss = self.cfg.stripe_size;
+        let mut remaining = len;
+        let mut off = offset;
+        while remaining > 0 {
+            let stripe = off / ss;
+            let span = (ss - off % ss).min(remaining);
+            let (oi, _ti) = self.oss_for(obj, stripe);
+            let (hit, miss) = self.oss[oi].read_cache.access(obj, off, span);
+            if hit > 0 {
+                let cache_res = self.oss[oi].cache_res;
+                t = env.acquire(cache_res, t, hit);
+            }
+            if miss > 0 {
+                // striped read-ahead across the OSS's OST array
+                let ra = self.oss[oi].read_array;
+                t = env.acquire(ra, t, miss);
+            }
+            off += span;
+            remaining -= span;
+        }
+        t
+    }
+
+    /// Drop all caches (between experiment iterations, as the paper does).
+    pub fn drop_caches(&mut self) {
+        for o in &mut self.oss {
+            o.read_cache.clear();
+            o.write_cache.dirty = 0;
+            o.pending_flush = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SimEnv, Lustre) {
+        let mut env = SimEnv::new();
+        let l = Lustre::build(&mut env, 0, &LustreConfig::paper_default());
+        (env, l)
+    }
+
+    #[test]
+    fn metadata_ops_cost_mds_time() {
+        let (mut env, mut l) = setup();
+        let t = l.metadata_ops(&mut env, 0.0, 4);
+        assert!((t - 4.0 * 250e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_writes_absorbed_fast() {
+        let (mut env, mut l) = setup();
+        let t = l.write(&mut env, 0.0, 1, 0, 1 << 20);
+        // 1 MiB at 6 GB/s cache speed ≈ 175 µs, far below OST time
+        assert!(t < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn write_stalls_on_flush() {
+        let mut env = SimEnv::new();
+        let mut cfg = LustreConfig::paper_default();
+        cfg.oss_write_cache = 8 << 20; // tiny write cache
+        let mut l = Lustre::build(&mut env, 0, &cfg);
+        let mut t = 0.0;
+        let mut saw_stall = false;
+        let mut prev = 0.0;
+        for i in 0..64 {
+            t = l.write(&mut env, t, 1, i * (1 << 20), 1 << 20);
+            if t - prev > 2e-3 {
+                saw_stall = true;
+            }
+            prev = t;
+        }
+        assert!(saw_stall, "expected at least one flush stall");
+    }
+
+    #[test]
+    fn cached_read_faster_than_cold() {
+        let (mut env, mut l) = setup();
+        let cold = l.read(&mut env, 0.0, 7, 0, 64 << 20);
+        let warm_start = cold;
+        let warm = l.read(&mut env, warm_start, 7, 0, 64 << 20) - warm_start;
+        assert!(warm < cold / 2.0, "warm={warm} cold={cold}");
+    }
+
+    #[test]
+    fn striping_engages_multiple_oss_read_arrays() {
+        let (mut env, mut l) = setup();
+        l.read(&mut env, 0.0, 3, 0, 64 << 20);
+        let used = l
+            .oss
+            .iter()
+            .filter(|o| env.resource(o.read_array).total_bytes > 0)
+            .count();
+        assert_eq!(used, 2, "both OSS read arrays must serve stripes");
+    }
+
+    #[test]
+    fn flush_striping_engages_multiple_osts() {
+        let mut env = SimEnv::new();
+        let mut cfg = LustreConfig::paper_default();
+        cfg.oss_write_cache = 4 << 20;
+        let mut l = Lustre::build(&mut env, 0, &cfg);
+        let mut t = 0.0;
+        for i in 0..16 {
+            t = l.write(&mut env, t, 1, i * (1 << 20), 1 << 20);
+        }
+        let used = l
+            .oss
+            .iter()
+            .flat_map(|o| &o.osts)
+            .filter(|&&id| env.resource(id).total_bytes > 0)
+            .count();
+        assert!(used >= 8, "flush must stripe across OSTs, used={used}");
+    }
+
+    #[test]
+    fn drop_caches_forgets_pages() {
+        let (mut env, mut l) = setup();
+        let cold = l.read(&mut env, 0.0, 7, 0, 8 << 20);
+        env.reset();
+        let warm = l.read(&mut env, 0.0, 7, 0, 8 << 20);
+        assert!(warm < cold / 2.0, "warm={warm} cold={cold}");
+        l.drop_caches();
+        env.reset();
+        let cold_again = l.read(&mut env, 0.0, 7, 0, 8 << 20);
+        assert!(
+            (cold_again - cold).abs() < cold * 0.05,
+            "cold_again={cold_again} cold={cold}"
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Simulated storage substrates: Lustre PFS, NFS mounts and caches.
+//!
+//! These reproduce the paper's testbed (Table I) as calibrated cost models
+//! over the virtual clock in [`crate::simclock`]; real bytes live in
+//! [`crate::vfs`]. See DESIGN.md §2 for the substitution rationale.
+
+pub mod cache;
+pub mod lustre;
+pub mod nfs;
+
+pub use cache::{LruCache, WriteBack};
+pub use lustre::{Lustre, LustreConfig};
+pub use nfs::{NfsConfig, NfsServer};

@@ -1,0 +1,165 @@
+//! NFS v4 mount model: the collaborator machine mounts each DTN via NFS
+//! (paper Fig. 3). The NFS server (on the DTN) contributes a per-op RPC
+//! cost, a server-side read cache, and write-back absorption whose flush
+//! behaviour causes the 8–16-collaborator read dip in Fig. 8.
+
+use crate::simclock::{ResourceId, SimEnv};
+use crate::simfs::cache::{LruCache, WriteBack};
+
+/// NFS mount parameters.
+#[derive(Debug, Clone)]
+pub struct NfsConfig {
+    /// Per-RPC service cost on the server, seconds.
+    pub per_rpc: f64,
+    /// Server cache serving bandwidth, bytes/s.
+    pub cache_bw: f64,
+    /// Server read cache capacity, bytes.
+    pub read_cache: u64,
+    /// Read cache block size, bytes.
+    pub cache_block: u64,
+    /// Server write-back capacity before a synchronous flush, bytes.
+    pub write_cache: u64,
+}
+
+impl NfsConfig {
+    /// Defaults shaped on NFSv4 over IB: ~40 µs RPC, RAM-speed cache,
+    /// single-digit-GiB server caches.
+    pub fn paper_default() -> Self {
+        NfsConfig {
+            per_rpc: 40e-6,
+            cache_bw: 8e9,
+            read_cache: 4 << 30,
+            cache_block: 1 << 20,
+            write_cache: 2 << 30,
+        }
+    }
+}
+
+/// One NFS server instance (per DTN).
+#[derive(Debug)]
+pub struct NfsServer {
+    /// RPC/CPU resource of this server.
+    pub rpc: ResourceId,
+    /// Cache-bandwidth resource.
+    pub cache_res: ResourceId,
+    /// Server-side read cache.
+    pub read_cache: LruCache,
+    /// Server-side write-back state.
+    pub write_cache: WriteBack,
+    /// Completion horizon of the last async flush into the backing Lustre
+    /// (maintained by the workspace layer for double-buffered drains).
+    pub pending_flush: f64,
+}
+
+impl NfsServer {
+    /// Build one server's resources inside `env`.
+    pub fn build(env: &mut SimEnv, name: &str, cfg: &NfsConfig) -> NfsServer {
+        NfsServer {
+            rpc: env.add_resource(&format!("{name}.rpc"), cfg.per_rpc, f64::INFINITY),
+            cache_res: env.add_resource(&format!("{name}.cache"), 0.0, cfg.cache_bw),
+            read_cache: LruCache::new(cfg.read_cache, cfg.cache_block),
+            write_cache: WriteBack::new(cfg.write_cache),
+            pending_flush: 0.0,
+        }
+    }
+
+    /// Charge an NFS write RPC of `len` bytes for object `obj`. Returns
+    /// `(t, flush_bytes)`: the caller (workspace layer) must push
+    /// `flush_bytes` through the backing Lustre when `Some` — that is the
+    /// multi-level flush the paper calls out.
+    pub fn write(
+        &mut self,
+        env: &mut SimEnv,
+        now: f64,
+        obj: u64,
+        offset: u64,
+        len: u64,
+    ) -> (f64, Option<u64>) {
+        let t = env.acquire_ops(self.rpc, now, 1);
+        let t = env.acquire(self.cache_res, t, len);
+        self.read_cache.fill(obj, offset, len);
+        let flush = self.write_cache.write(len);
+        (t, flush)
+    }
+
+    /// Charge an NFS read RPC; returns `(t_after_cache_hits, miss_bytes)` —
+    /// the caller streams `miss_bytes` from Lustre and then fills the cache.
+    pub fn read(
+        &mut self,
+        env: &mut SimEnv,
+        now: f64,
+        obj: u64,
+        offset: u64,
+        len: u64,
+    ) -> (f64, u64) {
+        let t = env.acquire_ops(self.rpc, now, 1);
+        let (hit, miss) = self.read_cache.access(obj, offset, len);
+        let t = if hit > 0 { env.acquire(self.cache_res, t, hit) } else { t };
+        (t, miss)
+    }
+
+    /// Drop server caches (between iterations).
+    pub fn drop_caches(&mut self) {
+        self.read_cache.clear();
+        self.write_cache.dirty = 0;
+        self.pending_flush = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SimEnv, NfsServer) {
+        let mut env = SimEnv::new();
+        let s = NfsServer::build(&mut env, "dtn0.nfs", &NfsConfig::paper_default());
+        (env, s)
+    }
+
+    #[test]
+    fn write_pays_rpc_and_cache() {
+        let (mut env, mut s) = setup();
+        let (t, flush) = s.write(&mut env, 0.0, 1, 0, 1 << 20);
+        assert!(t > 80e-6);
+        assert!(flush.is_none(), "small write must not flush");
+    }
+
+    #[test]
+    fn write_flush_at_capacity() {
+        let mut env = SimEnv::new();
+        let mut cfg = NfsConfig::paper_default();
+        cfg.write_cache = 4 << 20;
+        let mut s = NfsServer::build(&mut env, "x", &cfg);
+        let (_, f1) = s.write(&mut env, 0.0, 1, 0, 3 << 20);
+        assert!(f1.is_none());
+        let (_, f2) = s.write(&mut env, 0.0, 1, 3 << 20, 2 << 20);
+        assert_eq!(f2, Some(5 << 20));
+    }
+
+    #[test]
+    fn read_miss_then_hit() {
+        let (mut env, mut s) = setup();
+        let (_, miss) = s.read(&mut env, 0.0, 9, 0, 1 << 20);
+        assert_eq!(miss, 1 << 20);
+        s.read_cache.fill(9, 0, 1 << 20);
+        let (_, miss2) = s.read(&mut env, 1.0, 9, 0, 1 << 20);
+        assert_eq!(miss2, 0);
+    }
+
+    #[test]
+    fn written_data_readable_from_cache() {
+        let (mut env, mut s) = setup();
+        s.write(&mut env, 0.0, 5, 0, 1 << 20);
+        let (_, miss) = s.read(&mut env, 1.0, 5, 0, 1 << 20);
+        assert_eq!(miss, 0, "write should populate the read cache");
+    }
+
+    #[test]
+    fn drop_caches_resets() {
+        let (mut env, mut s) = setup();
+        s.write(&mut env, 0.0, 5, 0, 1 << 20);
+        s.drop_caches();
+        let (_, miss) = s.read(&mut env, 1.0, 5, 0, 1 << 20);
+        assert_eq!(miss, 1 << 20);
+    }
+}

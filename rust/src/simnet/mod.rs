@@ -1,0 +1,144 @@
+//! Network model: links between collaborator machines, DTNs and data
+//! centers.
+//!
+//! The paper's testbed connects two data centers over InfiniBand EDR
+//! (100 Gb/s) and deliberately provisions the inter-DC network *faster*
+//! than each center's Lustre bandwidth ("the network bandwidth between the
+//! data centers is higher than the PFS bandwidth of each data center", to
+//! emulate ESnet-class terabit links). [`NetConfig::paper_default`]
+//! encodes that relationship; benches scale it.
+
+use crate::simclock::{ResourceId, SimEnv};
+
+/// A directed network link (shared medium => one Resource both ways).
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    /// Underlying shared resource.
+    pub res: ResourceId,
+    /// One-way propagation latency (seconds), paid per message.
+    pub latency_s: f64,
+}
+
+/// Network configuration for a collaboration testbed.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Inter-data-center bandwidth, bytes/s.
+    pub wan_bw: f64,
+    /// Inter-data-center one-way latency, seconds.
+    pub wan_latency_s: f64,
+    /// Intra-data-center (collaborator<->DTN / DTN<->OSS) bandwidth, bytes/s.
+    pub lan_bw: f64,
+    /// Intra-DC one-way latency, seconds.
+    pub lan_latency_s: f64,
+}
+
+impl NetConfig {
+    /// Paper testbed: IB EDR 100 Gb/s (12.5 GB/s) WAN, geo latency kept
+    /// small as in the paper's same-room emulation; LAN at the same fabric
+    /// speed. The Lustre config (see `simfs`) is set *below* this so the
+    /// network is never the bottleneck, as the paper configures.
+    pub fn paper_default() -> Self {
+        NetConfig {
+            wan_bw: 12.5e9,
+            wan_latency_s: 50e-6,
+            lan_bw: 12.5e9,
+            lan_latency_s: 20e-6,
+        }
+    }
+}
+
+/// The instantiated network: one WAN link + per-DC LAN links.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// DC-to-DC link.
+    pub wan: Link,
+    /// Per data center local fabric.
+    pub lans: Vec<Link>,
+}
+
+impl Network {
+    /// Build the network resources inside `env` for `n_dcs` data centers.
+    pub fn build(env: &mut SimEnv, cfg: &NetConfig, n_dcs: usize) -> Network {
+        let wan = Link {
+            res: env.add_resource("net.wan", 0.0, cfg.wan_bw),
+            latency_s: cfg.wan_latency_s,
+        };
+        let lans = (0..n_dcs)
+            .map(|i| Link {
+                res: env.add_resource(&format!("net.lan{i}"), 0.0, cfg.lan_bw),
+                latency_s: cfg.lan_latency_s,
+            })
+            .collect();
+        Network { wan, lans }
+    }
+
+    /// Send `bytes` over `link` starting at `now`; returns arrival time.
+    pub fn send(env: &mut SimEnv, link: Link, now: f64, bytes: u64) -> f64 {
+        link.latency_s + env.acquire(link.res, now, bytes)
+    }
+
+    /// Path cost helper: collaborator in `src_dc` touching storage in
+    /// `dst_dc` crosses its LAN, then (if different DC) the WAN, then the
+    /// remote LAN. Returns the data arrival time.
+    pub fn route(
+        &self,
+        env: &mut SimEnv,
+        src_dc: usize,
+        dst_dc: usize,
+        now: f64,
+        bytes: u64,
+    ) -> f64 {
+        let t = Self::send(env, self.lans[src_dc], now, bytes);
+        if src_dc == dst_dc {
+            t
+        } else {
+            let t = Self::send(env, self.wan, t, bytes);
+            Self::send(env, self.lans[dst_dc], t, bytes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SimEnv, Network) {
+        let mut env = SimEnv::new();
+        let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+        (env, net)
+    }
+
+    #[test]
+    fn local_route_skips_wan() {
+        let (mut env, net) = setup();
+        let t = net.route(&mut env, 0, 0, 0.0, 1 << 20);
+        assert_eq!(env.resource(net.wan.res).total_bytes, 0);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn remote_route_crosses_wan_once() {
+        let (mut env, net) = setup();
+        let _ = net.route(&mut env, 0, 1, 0.0, 1 << 20);
+        assert_eq!(env.resource(net.wan.res).total_bytes, 1 << 20);
+        assert_eq!(env.resource(net.lans[0].res).total_bytes, 1 << 20);
+        assert_eq!(env.resource(net.lans[1].res).total_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn remote_slower_than_local() {
+        let (mut env, net) = setup();
+        let tl = net.route(&mut env, 0, 0, 0.0, 1 << 24);
+        env.reset();
+        let tr = net.route(&mut env, 0, 1, 0.0, 1 << 24);
+        assert!(tr > tl, "remote {tr} <= local {tl}");
+    }
+
+    #[test]
+    fn wan_faster_than_typical_pfs() {
+        // Invariant the paper sets: WAN bandwidth above PFS aggregate.
+        let cfg = NetConfig::paper_default();
+        let pfs_aggregate = 2.0 * 2.2e9; // see simfs::LustreConfig::paper_default
+        assert!(cfg.wan_bw > pfs_aggregate);
+    }
+}

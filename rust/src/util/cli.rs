@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (clap replacement) for the `scispace` binary,
+//! examples and benches. Supports `--flag`, `--key value`, `--key=value`
+//! and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand-style positionals + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own argv.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; panics with a readable message on parse error.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.options.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e:?}")),
+        }
+    }
+
+    /// Is a bare `--flag` present?
+    pub fn has_flag(&self, f: &str) -> bool {
+        self.flags.iter().any(|x| x == f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("bench fig7 --block-size 512K --iters=3 --verbose");
+        assert_eq!(a.positional, vec!["bench", "fig7"]);
+        assert_eq!(a.opt("block-size", ""), "512K");
+        assert_eq!(a.opt_parse::<u32>("iters", 0), 3);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.opt("mode", "scispace"), "scispace");
+        assert_eq!(a.opt_parse::<usize>("n", 7), 7);
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse("--x 1 --x 2");
+        assert_eq!(a.opt_parse::<i32>("x", 0), 2);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag` followed by a positional: the next token is consumed as a
+        // value (documented behaviour — use --flag=true to force flag form).
+        let a = parse("--dry-run=1 go");
+        assert_eq!(a.opt("dry-run", ""), "1");
+        assert_eq!(a.positional, vec!["go"]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline build environment provides no `rand`, `serde`, `clap` or
+//! `criterion`, so this module carries minimal, well-tested replacements:
+//! a deterministic PRNG ([`rng`]), a JSON parser ([`json`]) for the AOT
+//! manifest, human-readable units ([`units`]), a CLI argument parser
+//! ([`cli`]), and a property-testing harness ([`prop`]).
+
+pub mod rng;
+pub mod json;
+pub mod units;
+pub mod cli;
+pub mod prop;
+pub mod timer;
+
+/// FNV-1a-32 over the *u32-word packing* of a pathname — bit-identical to
+/// the L1 Pallas `hash` kernel (see `python/compile/kernels/hash.py`).
+///
+/// The path's UTF-8 bytes are packed little-endian into `words` u32 words
+/// (zero padded / truncated to `words * 4` bytes), then FNV-1a is folded
+/// over the words. Keeping the Rust router and the TPU batch kernel on the
+/// same function means bulk (kernel) and per-request (this fn) placement
+/// decisions always agree.
+pub fn fnv1a_words(path: &str, words: usize) -> u32 {
+    const OFFSET: u32 = 2166136261;
+    const PRIME: u32 = 16777619;
+    let bytes = path.as_bytes();
+    let mut h = OFFSET;
+    for k in 0..words {
+        let mut w: u32 = 0;
+        for j in 0..4 {
+            let idx = k * 4 + j;
+            let b = if idx < bytes.len() { bytes[idx] as u32 } else { 0 };
+            w |= b << (8 * j);
+        }
+        h = (h ^ w).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Pack a pathname into `words` little-endian u32 words (the layout the
+/// Pallas hash kernel consumes).
+pub fn pack_path_words(path: &str, words: usize) -> Vec<u32> {
+    let bytes = path.as_bytes();
+    (0..words)
+        .map(|k| {
+            let mut w: u32 = 0;
+            for j in 0..4 {
+                let idx = k * 4 + j;
+                if idx < bytes.len() {
+                    w |= (bytes[idx] as u32) << (8 * j);
+                }
+            }
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vector() {
+        // Mirrors python/tests/test_kernels.py::TestHash::test_known_vector.
+        let h = fnv1a_words("abcd", 32);
+        let mut expect: u32 = 2166136261;
+        expect = (expect ^ 0x64636261).wrapping_mul(16777619);
+        for _ in 0..31 {
+            expect = expect.wrapping_mul(16777619);
+        }
+        assert_eq!(h, expect);
+    }
+
+    #[test]
+    fn fnv_differs_on_paths() {
+        assert_ne!(fnv1a_words("/a/b/c", 32), fnv1a_words("/a/b/d", 32));
+    }
+
+    #[test]
+    fn pack_words_round_trip() {
+        let w = pack_path_words("abcd", 32);
+        assert_eq!(w[0], 0x64636261);
+        assert!(w[1..].iter().all(|&x| x == 0));
+        // packing + folding == direct fold
+        const PRIME: u32 = 16777619;
+        let mut h: u32 = 2166136261;
+        for word in &w {
+            h = (h ^ word).wrapping_mul(PRIME);
+        }
+        assert_eq!(h, fnv1a_words("abcd", 32));
+    }
+
+    #[test]
+    fn long_paths_truncate_consistently() {
+        let long: String = "/x".repeat(200);
+        // 128-byte window: equal prefixes hash equal
+        let a = fnv1a_words(&long, 32);
+        let b = fnv1a_words(&format!("{long}suffix-beyond-128-bytes"), 32);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,92 @@
+//! Hand-rolled property-testing harness (proptest replacement).
+//!
+//! `check(seed_count, |rng| ...)` runs a property closure against many
+//! deterministic seeds and reports the first failing seed so failures
+//! reproduce exactly (`PROP_SEED=<n>` re-runs a single case).
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: u64 = 128;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing seed.
+///
+/// The property receives a fresh `Rng` per case; return `Err(msg)` (or
+/// panic) to fail. If the env var `PROP_SEED` is set, only that seed runs —
+/// the knob you use to shrink/debug a reported failure.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed} (re-run with PROP_SEED={seed}): {msg}");
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generate a random absolute pathname with `depth` components.
+pub fn arb_path(rng: &mut Rng, max_depth: usize) -> String {
+    let depth = rng.range(1, max_depth.max(2));
+    let mut p = String::new();
+    for _ in 0..depth {
+        p.push('/');
+        let len = rng.range(1, 12);
+        p.push_str(&rng.ident(len));
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(32, |rng| {
+            let x = rng.below(100);
+            prop_assert!(x < 100, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_reports_seed() {
+        check(32, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x={x} >= 5");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arb_path_shape() {
+        check(64, |rng| {
+            let p = arb_path(rng, 6);
+            prop_assert!(p.starts_with('/'), "no leading slash: {p}");
+            prop_assert!(!p.ends_with('/'), "trailing slash: {p}");
+            prop_assert!(!p.contains("//"), "empty component: {p}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Wall-clock measurement + percentile stats (criterion replacement).
+//!
+//! The bench binaries (`rust/benches/*.rs`, `harness = false`) use
+//! [`bench_fn`] for hot-path microbenches and [`Samples`] to aggregate
+//! repeated end-to-end runs.
+
+use std::time::Instant;
+
+/// A set of duration samples (seconds) with percentile accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    /// Record one sample (seconds).
+    pub fn push(&mut self, secs: f64) {
+        self.xs.push(secs);
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// True if no samples recorded.
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Mean (seconds).
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Percentile in `[0, 100]` by nearest-rank on sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Median.
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Minimum sample.
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum sample.
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Time one closure invocation; returns (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Criterion-style microbench: warm up, then sample `iters` calls,
+/// returning per-call seconds. The closure's return value is black-boxed.
+pub fn bench_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Samples {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut s = Samples::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Pretty one-line summary for bench output.
+pub fn summary(name: &str, s: &Samples) -> String {
+    format!(
+        "{name:<40} n={:<4} mean={} p50={} p95={} min={}",
+        s.len(),
+        super::units::fmt_secs(s.mean()),
+        super::units::fmt_secs(s.median()),
+        super::units::fmt_secs(s.percentile(95.0)),
+        super::units::fmt_secs(s.min()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = Samples::default();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!(s.percentile(10.0) <= s.median());
+        assert!(s.median() <= s.percentile(95.0));
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn bench_fn_samples() {
+        let s = bench_fn(2, 10, || 1 + 1);
+        assert_eq!(s.len(), 10);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn empty_samples_safe() {
+        let s = Samples::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+}

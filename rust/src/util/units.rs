@@ -1,0 +1,91 @@
+//! Byte / time unit helpers used across the CLI, benches and reports.
+
+/// 1 KiB.
+pub const KIB: u64 = 1024;
+/// 1 MiB.
+pub const MIB: u64 = 1024 * KIB;
+/// 1 GiB.
+pub const GIB: u64 = 1024 * MIB;
+
+/// Render a byte count as a human string ("512KB", "1.5MB", ...).
+pub fn fmt_bytes(n: u64) -> String {
+    if n >= GIB {
+        format!("{:.1}GB", n as f64 / GIB as f64)
+    } else if n >= MIB {
+        format!("{:.1}MB", n as f64 / MIB as f64)
+    } else if n >= KIB {
+        format!("{}KB", n / KIB)
+    } else {
+        format!("{n}B")
+    }
+}
+
+/// Parse "4K"/"512KB"/"1M"/"2G"/plain-integer byte sizes (case-insensitive).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_uppercase();
+    let t = t.strip_suffix('B').unwrap_or(&t);
+    let (num, mul) = if let Some(x) = t.strip_suffix('K') {
+        (x, KIB)
+    } else if let Some(x) = t.strip_suffix('M') {
+        (x, MIB)
+    } else if let Some(x) = t.strip_suffix('G') {
+        (x, GIB)
+    } else {
+        (t, 1)
+    };
+    num.trim().parse::<f64>().ok().map(|f| (f * mul as f64) as u64)
+}
+
+/// Render seconds as a human string ("340ms", "2.50s", "3m12s").
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.0}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{}m{:02.0}s", (s / 60.0) as u64, s % 60.0)
+    }
+}
+
+/// MB/s from bytes and seconds (guarding zero time).
+pub fn mbps(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / MIB as f64 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_round_trip() {
+        for (s, v) in [("4K", 4 * KIB), ("512KB", 512 * KIB), ("1M", MIB), ("2g", 2 * GIB), ("77", 77)] {
+            assert_eq!(parse_bytes(s), Some(v), "{s}");
+        }
+        assert_eq!(parse_bytes("x"), None);
+    }
+
+    #[test]
+    fn fmt_is_stable() {
+        assert_eq!(fmt_bytes(512 * KIB), "512KB");
+        assert_eq!(fmt_bytes(3 * MIB / 2), "1.5MB");
+        assert_eq!(fmt_bytes(10), "10B");
+    }
+
+    #[test]
+    fn secs_format() {
+        assert_eq!(fmt_secs(0.0005), "500us");
+        assert_eq!(fmt_secs(0.34), "340ms");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+    }
+
+    #[test]
+    fn mbps_math() {
+        assert!((mbps(MIB, 1.0) - 1.0).abs() < 1e-9);
+        assert_eq!(mbps(MIB, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Backing object store: the *real bytes* behind simulated file systems.
+//!
+//! Functional correctness (SHDF datasets, MEU round-trips, SDS extraction,
+//! shdiff numerics) runs on real data; the capacity experiments (IOR's
+//! 375 GB synthetic sweeps) use `Payload::Hole` objects that track size
+//! without allocating, so the simulator can "store" terabytes. Reading a
+//! hole yields a deterministic byte pattern derived from the offset, which
+//! keeps checksum-style assertions possible even for synthetic data.
+
+use std::collections::HashMap;
+
+/// Identifier of an object within a store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub u64);
+
+/// Object payload: real bytes or a sized hole (synthetic data).
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Actual data (scientific datasets, metadata files).
+    Bytes(Vec<u8>),
+    /// Synthetic object of the given size; reads are generated.
+    Hole(u64),
+}
+
+/// An in-memory object store (one per simulated data center PFS).
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    next: u64,
+    objects: HashMap<ObjectId, Payload>,
+}
+
+impl ObjectStore {
+    /// Create an empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate an empty real object.
+    pub fn create(&mut self) -> ObjectId {
+        self.create_with(Payload::Bytes(Vec::new()))
+    }
+
+    /// Allocate an object with the given payload.
+    pub fn create_with(&mut self, p: Payload) -> ObjectId {
+        let id = ObjectId(self.next);
+        self.next += 1;
+        self.objects.insert(id, p);
+        id
+    }
+
+    /// Allocate a synthetic object of `len` bytes.
+    pub fn create_hole(&mut self, len: u64) -> ObjectId {
+        self.create_with(Payload::Hole(len))
+    }
+
+    /// Object length in bytes; `None` if the id is unknown.
+    pub fn len(&self, id: ObjectId) -> Option<u64> {
+        self.objects.get(&id).map(|p| match p {
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::Hole(n) => *n,
+        })
+    }
+
+    /// True when no objects exist.
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Number of live objects.
+    pub fn count(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Write `data` at `offset`, growing the object as needed.
+    /// Writing to a hole converts the touched region to zeros + data
+    /// (holes are only extended, never materialized wholesale).
+    pub fn write_at(&mut self, id: ObjectId, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        let p = self.objects.get_mut(&id).ok_or_else(|| anyhow::anyhow!("no object {id:?}"))?;
+        match p {
+            Payload::Bytes(b) => {
+                let end = offset as usize + data.len();
+                if b.len() < end {
+                    b.resize(end, 0);
+                }
+                b[offset as usize..end].copy_from_slice(data);
+            }
+            Payload::Hole(n) => {
+                // Synthetic objects only track their high-water mark.
+                *n = (*n).max(offset + data.len() as u64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write real bytes, materializing a hole into zero-filled storage
+    /// first (holes up to 64 MiB only — synthetic giants stay synthetic).
+    pub fn write_at_bytes(&mut self, id: ObjectId, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        if let Some(Payload::Hole(n)) = self.objects.get(&id) {
+            let n = *n;
+            if n > 64 << 20 {
+                anyhow::bail!("refusing to materialize {n}-byte hole");
+            }
+            self.objects.insert(id, Payload::Bytes(vec![0u8; n as usize]));
+        }
+        self.write_at(id, offset, data)
+    }
+
+    /// Append `data`; returns the offset it landed at.
+    pub fn append(&mut self, id: ObjectId, data: &[u8]) -> anyhow::Result<u64> {
+        let off = self.len(id).ok_or_else(|| anyhow::anyhow!("no object {id:?}"))?;
+        self.write_at(id, off, data)?;
+        Ok(off)
+    }
+
+    /// Read up to `len` bytes at `offset`. Holes yield a deterministic
+    /// offset-derived pattern.
+    pub fn read_at(&self, id: ObjectId, offset: u64, len: usize) -> anyhow::Result<Vec<u8>> {
+        let p = self.objects.get(&id).ok_or_else(|| anyhow::anyhow!("no object {id:?}"))?;
+        Ok(match p {
+            Payload::Bytes(b) => {
+                let start = (offset as usize).min(b.len());
+                let end = (start + len).min(b.len());
+                b[start..end].to_vec()
+            }
+            Payload::Hole(n) => {
+                let start = offset.min(*n);
+                let end = (offset + len as u64).min(*n);
+                (start..end).map(|i| (i.wrapping_mul(2654435761) >> 16) as u8).collect()
+            }
+        })
+    }
+
+    /// Entire object contents (real objects only in practice).
+    pub fn read_all(&self, id: ObjectId) -> anyhow::Result<Vec<u8>> {
+        let n = self.len(id).ok_or_else(|| anyhow::anyhow!("no object {id:?}"))? as usize;
+        self.read_at(id, 0, n)
+    }
+
+    /// Remove an object, returning whether it existed.
+    pub fn remove(&mut self, id: ObjectId) -> bool {
+        self.objects.remove(&id).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_round_trip() {
+        let mut s = ObjectStore::new();
+        let id = s.create();
+        s.write_at(id, 0, b"hello world").unwrap();
+        assert_eq!(s.read_all(id).unwrap(), b"hello world");
+        assert_eq!(s.len(id), Some(11));
+    }
+
+    #[test]
+    fn sparse_write_zero_fills() {
+        let mut s = ObjectStore::new();
+        let id = s.create();
+        s.write_at(id, 4, b"x").unwrap();
+        assert_eq!(s.read_all(id).unwrap(), vec![0, 0, 0, 0, b'x']);
+    }
+
+    #[test]
+    fn append_returns_offsets() {
+        let mut s = ObjectStore::new();
+        let id = s.create();
+        assert_eq!(s.append(id, b"ab").unwrap(), 0);
+        assert_eq!(s.append(id, b"cd").unwrap(), 2);
+        assert_eq!(s.read_all(id).unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn holes_track_size_without_alloc() {
+        let mut s = ObjectStore::new();
+        let id = s.create_hole(375 * 1024 * 1024 * 1024); // "375 GB"
+        assert_eq!(s.len(id), Some(375 << 30));
+        let bytes = s.read_at(id, 1000, 16).unwrap();
+        assert_eq!(bytes.len(), 16);
+        // deterministic
+        assert_eq!(bytes, s.read_at(id, 1000, 16).unwrap());
+    }
+
+    #[test]
+    fn read_past_end_truncates() {
+        let mut s = ObjectStore::new();
+        let id = s.create();
+        s.write_at(id, 0, b"abc").unwrap();
+        assert_eq!(s.read_at(id, 2, 10).unwrap(), b"c");
+        assert_eq!(s.read_at(id, 9, 10).unwrap(), b"");
+    }
+
+    #[test]
+    fn remove_works() {
+        let mut s = ObjectStore::new();
+        let id = s.create();
+        assert!(s.remove(id));
+        assert!(!s.remove(id));
+        assert!(s.read_all(id).is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! Workload generators: IOR-style synthetic I/O and a MODIS-Aqua-like
+//! scientific corpus (paper §IV-B2).
+//!
+//! The paper evaluates with (a) 375 GB of IOR synthetic data, large enough
+//! to defeat caching, and (b) a real 116 GB / 4600-file MODIS-Aqua HDF5
+//! ocean dataset with attributes such as acquisition location, instrument,
+//! date and day/night flag. Both are reproduced here — IOR as a
+//! parameterized sequential driver over synthetic (hole) objects, MODIS as
+//! a deterministic SHDF corpus whose attribute distributions drive the
+//! Table II hit-ratio experiments.
+
+use crate::db::Value;
+use crate::shdf::ShdfFile;
+use crate::util::rng::Rng;
+use crate::workspace::{AccessMode, Testbed};
+
+/// IOR-like run parameters.
+#[derive(Debug, Clone)]
+pub struct IorConfig {
+    /// Transfer (block) size per call.
+    pub block_size: u64,
+    /// Total bytes per collaborator.
+    pub bytes_per_collab: u64,
+    /// Collaborator count.
+    pub n_collabs: usize,
+    /// Access path under test.
+    pub mode: AccessMode,
+}
+
+/// IOR run result.
+#[derive(Debug, Clone)]
+pub struct IorResult {
+    /// Aggregate throughput, MB/s (total bytes / slowest collaborator).
+    pub mbps: f64,
+    /// Slowest collaborator completion (virtual seconds).
+    pub makespan: f64,
+}
+
+fn ior_path(mode: AccessMode, c: usize) -> String {
+    match mode {
+        // LW writes into the collaborator's local namespace
+        AccessMode::ScispaceLw => format!("/home/c{c}/ior.dat"),
+        _ => format!("/collab/ior/c{c}.dat"),
+    }
+}
+
+/// Sequential-write phase: every collaborator streams its file in
+/// `block_size` calls, interleaved round-robin (concurrent in virtual
+/// time). Returns aggregate throughput.
+pub fn ior_write(tb: &mut Testbed, cfg: &IorConfig) -> IorResult {
+    let n_blocks = cfg.bytes_per_collab / cfg.block_size;
+    for blk in 0..n_blocks {
+        for c in 0..cfg.n_collabs {
+            let path = ior_path(cfg.mode, c);
+            tb.write(c, &path, blk * cfg.block_size, cfg.block_size, None, cfg.mode)
+                .expect("ior write");
+        }
+    }
+    let makespan = (0..cfg.n_collabs).map(|c| tb.now(c)).fold(0.0, f64::max);
+    IorResult {
+        mbps: crate::util::units::mbps(cfg.bytes_per_collab * cfg.n_collabs as u64, makespan),
+        makespan,
+    }
+}
+
+/// Sequential-read phase over files previously written by [`ior_write`].
+pub fn ior_read(tb: &mut Testbed, cfg: &IorConfig) -> IorResult {
+    let n_blocks = cfg.bytes_per_collab / cfg.block_size;
+    for blk in 0..n_blocks {
+        for c in 0..cfg.n_collabs {
+            let path = ior_path(cfg.mode, c);
+            tb.read(c, &path, blk * cfg.block_size, cfg.block_size, cfg.mode)
+                .expect("ior read");
+        }
+    }
+    let makespan = (0..cfg.n_collabs).map(|c| tb.now(c)).fold(0.0, f64::max);
+    IorResult {
+        mbps: crate::util::units::mbps(cfg.bytes_per_collab * cfg.n_collabs as u64, makespan),
+        makespan,
+    }
+}
+
+/// Attribute vocabulary of the MODIS-like corpus (drives hit ratios).
+pub const LOCATIONS: [&str; 8] = [
+    "PacificNW", "PacificSW", "AtlanticN", "AtlanticS", "Indian", "Arctic", "Southern", "Mediterranean",
+];
+/// Instruments observed in the corpus.
+pub const INSTRUMENTS: [&str; 4] = ["MODIS-Aqua", "MODIS-Terra", "VIIRS", "SeaWiFS"];
+
+/// MODIS-like corpus parameters.
+#[derive(Debug, Clone)]
+pub struct ModisConfig {
+    /// Number of granule files.
+    pub n_files: usize,
+    /// f32 elements per dataset payload (scaled from the paper's ~25 MB).
+    pub elems_per_file: usize,
+    /// RNG seed (corpus is deterministic per seed).
+    pub seed: u64,
+}
+
+impl Default for ModisConfig {
+    fn default() -> Self {
+        ModisConfig { n_files: 200, elems_per_file: 4096, seed: 2018 }
+    }
+}
+
+/// Generate one granule: ocean-surface-like SST field + self-contained
+/// attributes (Location/Instrument/Date/DayNight — the Table II set).
+pub fn modis_granule(rng: &mut Rng, idx: usize) -> ShdfFile {
+    let loc = *rng.pick(&LOCATIONS);
+    let inst = *rng.pick(&INSTRUMENTS);
+    let month = 1 + rng.below(12);
+    let day = 1 + rng.below(28);
+    let daynight = rng.below(2) as i64;
+    // SST base by latitude-ish band, diurnal bump, sensor noise
+    let base = match loc {
+        "Arctic" | "Southern" => -1.0,
+        "AtlanticN" | "PacificNW" => 12.0,
+        "Mediterranean" => 19.0,
+        _ => 24.0,
+    };
+    let bump = if daynight == 1 { 1.5 } else { 0.0 };
+    let mut f = ShdfFile::new();
+    f.attr("Location", Value::Text(loc.into()))
+        .attr("Instrument", Value::Text(inst.into()))
+        .attr("Date", Value::Text(format!("2018-{month:02}-{day:02}")))
+        .attr("DayNight", Value::Int(daynight))
+        .attr("GranuleId", Value::Int(idx as i64));
+    let n = 64; // swath rows
+    let sst: Vec<f32> = (0..64 * n)
+        .map(|i| {
+            let swath = (i / n) as f64 / 64.0;
+            (base + bump + 3.0 * (swath * 6.28).sin() + 0.3 * rng.gauss()) as f32
+        })
+        .collect();
+    f.dataset("sst", sst);
+    let chlor: Vec<f32> = (0..256).map(|_| (0.05 + 0.5 * rng.f64().powi(2)) as f32).collect();
+    f.dataset("chlor_a", chlor);
+    f
+}
+
+/// Generate a deterministic corpus.
+pub fn modis_corpus(cfg: &ModisConfig) -> Vec<(String, ShdfFile)> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.n_files)
+        .map(|i| {
+            let mut f = modis_granule(&mut rng, i);
+            // scale payload to requested size
+            if let Some(d) = f.datasets.get_mut(0) {
+                let want = cfg.elems_per_file;
+                while d.data.len() < want {
+                    let x = d.data[d.data.len() % 4096.min(d.data.len())];
+                    d.data.push(x + 0.001);
+                }
+                d.data.truncate(want);
+            }
+            (format!("/modis/2018/granule_{i:05}.shdf"), f)
+        })
+        .collect()
+}
+
+/// Load a corpus into the testbed via the given access path for
+/// collaborator `c`; returns total bytes stored.
+pub fn load_corpus(
+    tb: &mut Testbed,
+    c: usize,
+    corpus: &[(String, ShdfFile)],
+    mode: AccessMode,
+) -> u64 {
+    let mut total = 0u64;
+    for (path, f) in corpus {
+        let bytes = crate::msg::Wire::to_bytes(f);
+        tb.write(c, path, 0, bytes.len() as u64, Some(&bytes), mode).expect("corpus write");
+        total += bytes.len() as u64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ior_write_read_produce_throughput() {
+        let mut tb = Testbed::paper_default();
+        tb.register("c0", 0);
+        let cfg = IorConfig {
+            block_size: 512 << 10,
+            bytes_per_collab: 32 << 20,
+            n_collabs: 1,
+            mode: AccessMode::Scispace,
+        };
+        let w = ior_write(&mut tb, &cfg);
+        assert!(w.mbps > 0.0 && w.makespan > 0.0);
+        tb.drop_caches_and_reset();
+        let r = ior_read(&mut tb, &cfg);
+        assert!(r.mbps > 0.0);
+    }
+
+    #[test]
+    fn more_collaborators_scale_aggregate() {
+        // Fig. 8 effect: aggregate throughput grows with collaborators.
+        let run = |n: usize| {
+            let mut tb = Testbed::paper_default();
+            for i in 0..n {
+                tb.register(&format!("c{i}"), i % 2);
+            }
+            let cfg = IorConfig {
+                block_size: 512 << 10,
+                bytes_per_collab: 16 << 20,
+                n_collabs: n,
+                mode: AccessMode::Scispace,
+            };
+            ior_write(&mut tb, &cfg).mbps
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(four > one * 1.5, "aggregate must scale: 1={one} 4={four}");
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = modis_corpus(&ModisConfig::default());
+        let b = modis_corpus(&ModisConfig::default());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[7].1, b[7].1);
+        assert_eq!(a[7].0, b[7].0);
+    }
+
+    #[test]
+    fn corpus_attrs_cover_vocabulary() {
+        let corpus = modis_corpus(&ModisConfig { n_files: 300, elems_per_file: 64, seed: 1 });
+        let locs: std::collections::BTreeSet<String> = corpus
+            .iter()
+            .filter_map(|(_, f)| match f.get_attr("Location") {
+                Some(Value::Text(s)) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert!(locs.len() >= 6, "locations seen: {locs:?}");
+        // day/night about balanced
+        let days = corpus
+            .iter()
+            .filter(|(_, f)| f.get_attr("DayNight") == Some(&Value::Int(1)))
+            .count();
+        assert!((0.3..0.7).contains(&(days as f64 / corpus.len() as f64)));
+    }
+
+    #[test]
+    fn load_corpus_readable_remotely() {
+        let mut tb = Testbed::paper_default();
+        tb.register("a", 0);
+        tb.register("b", 1);
+        let corpus = modis_corpus(&ModisConfig { n_files: 5, elems_per_file: 64, seed: 3 });
+        load_corpus(&mut tb, 0, &corpus, AccessMode::Scispace);
+        let ls = tb.ls(1, "/modis");
+        assert_eq!(ls.len(), 5);
+        // remote read returns parseable SHDF
+        let m = &ls[0];
+        let raw = tb.read(1, &m.path, 0, m.size, AccessMode::Scispace).unwrap();
+        let parsed: crate::shdf::ShdfFile = crate::msg::Wire::from_bytes(&raw).unwrap();
+        assert!(parsed.get_attr("Location").is_some());
+    }
+}

@@ -1,0 +1,708 @@
+//! The Scientific Collaboration Workspace (`scifs`) — paper §III-B.
+//!
+//! [`Testbed`] assembles the full simulated collaboration: data centers
+//! (Lustre + local namespace + object store), DTNs (NFS server + metadata
+//! service CPU), the network, the distributed metadata plane and template
+//! namespaces. Collaborators perform POSIX-like operations through one of
+//! three access paths:
+//!
+//! * [`AccessMode::Baseline`]   — the UnionFS-style comparison system:
+//!   FUSE mount unifying all DTN NFS mounts; every metadata operation
+//!   consults **every** branch (no placement hash).
+//! * [`AccessMode::Scispace`]   — the collaboration workspace: FUSE mount,
+//!   pathname-hash-routed metadata RPC to one DTN, NFS data path.
+//! * [`AccessMode::ScispaceLw`] — native data access (local writes):
+//!   direct Lustre client on the local data center; no FUSE, no NFS, no
+//!   workspace metadata on the data path. Publishing happens later via
+//!   the MEU (see [`crate::meu`]).
+//!
+//! Every operation both (a) really executes (bytes in [`crate::vfs`],
+//! metadata rows in [`crate::metadata`]) and (b) advances the acting
+//! collaborator's virtual clock through the substrate cost models.
+
+pub mod localfs;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fusemodel::{FuseConfig, FuseMount, READ_OPS, WRITE_OPS};
+use crate::metadata::{FileMeta, MetaPlane, MetaReq, MetaResp};
+use crate::msg::Wire;
+use crate::namespace::NamespaceRegistry;
+use crate::simclock::{ResourceId, SimEnv};
+use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
+use crate::simnet::{NetConfig, Network};
+use crate::vfs::ObjectStore;
+use localfs::LocalFs;
+
+/// Which path an operation takes through the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessMode {
+    /// UnionFS-style baseline (FUSE + all-branch metadata).
+    Baseline,
+    /// SCISPACE collaboration workspace (FUSE + hash-routed metadata).
+    Scispace,
+    /// SCISPACE-LW native access (local data center namespace).
+    ScispaceLw,
+}
+
+/// Testbed-wide configuration (paper Table I defaults, scaled).
+#[derive(Debug, Clone)]
+pub struct TestbedConfig {
+    /// Number of data centers.
+    pub n_dcs: usize,
+    /// DTNs per data center (paper: 2 each).
+    pub dtns_per_dc: usize,
+    /// Lustre deployment per DC.
+    pub lustre: LustreConfig,
+    /// NFS mount model per DTN.
+    pub nfs: NfsConfig,
+    /// FUSE daemon model per collaborator mount.
+    pub fuse: FuseConfig,
+    /// Network fabric.
+    pub net: NetConfig,
+    /// Metadata-service CPU cost per request, seconds.
+    pub meta_op_s: f64,
+    /// Metadata-service cost per listed/packed entry, seconds.
+    pub meta_entry_s: f64,
+    /// Native Lustre client (llite) per-op overhead, seconds.
+    pub lustre_client_op: f64,
+    /// NFS read chunking (rsize): sync per-chunk RPC on reads.
+    pub nfs_rsize: u64,
+    /// Approximate metadata message size on the wire, bytes.
+    pub meta_msg_bytes: u64,
+}
+
+impl TestbedConfig {
+    /// Paper-shaped testbed: 2 DCs x 2 DTNs, Lustre below IB EDR.
+    pub fn paper_default() -> Self {
+        let mut lustre = LustreConfig::paper_default();
+        // Calibration (DESIGN.md §4): per-file drain ≈ 0.8–1.5 GB/s so
+        // 512 KB blocks are drain-bound on every path (the Fig. 7
+        // convergence) while per-op overheads dominate at 4 KB.
+        lustre.ost_bw = 55e6;
+        TestbedConfig {
+            n_dcs: 2,
+            dtns_per_dc: 2,
+            lustre,
+            nfs: NfsConfig::paper_default(),
+            fuse: FuseConfig::paper_default(),
+            net: NetConfig::paper_default(),
+            meta_op_s: 15e-6,
+            meta_entry_s: 2e-6,
+            lustre_client_op: 120e-6,
+            nfs_rsize: 256 << 10,
+            meta_msg_bytes: 256,
+        }
+    }
+}
+
+/// One data center: PFS model + real namespace + real bytes.
+pub struct Dc {
+    /// Lustre cost model.
+    pub lustre: Lustre,
+    /// Local namespace tree (the "data center file system namespace").
+    pub fs: LocalFs,
+    /// Real payload bytes / holes.
+    pub store: ObjectStore,
+}
+
+/// One data transfer node.
+pub struct Dtn {
+    /// Hosting data center.
+    pub dc: usize,
+    /// NFS server model.
+    pub nfs: NfsServer,
+    /// Metadata + discovery service CPU.
+    pub meta_cpu: ResourceId,
+}
+
+/// A collaborator session.
+#[derive(Debug, Clone)]
+pub struct Collaborator {
+    /// Identity.
+    pub id: String,
+    /// Home data center.
+    pub dc: usize,
+    /// Assigned DTN (round-robin placement policy, §IV-C).
+    pub dtn: usize,
+    /// FUSE mount index.
+    pub fuse: usize,
+    /// Virtual clock.
+    pub now: f64,
+}
+
+/// The assembled collaboration testbed.
+pub struct Testbed {
+    /// Configuration.
+    pub cfg: TestbedConfig,
+    /// Virtual-time resource registry.
+    pub env: SimEnv,
+    /// Network fabric.
+    pub net: Network,
+    /// Data centers.
+    pub dcs: Vec<Dc>,
+    /// All DTNs (dtn id -> hosting dc via `Dtn::dc`).
+    pub dtns: Vec<Dtn>,
+    /// Distributed metadata plane (shard per DTN).
+    pub meta: MetaPlane,
+    /// Template namespaces.
+    pub ns: NamespaceRegistry,
+    /// Collaborator sessions.
+    pub collabs: Vec<Collaborator>,
+    fuse_mounts: Vec<FuseMount>,
+    rr_dtn: usize,
+}
+
+impl Testbed {
+    /// Build a testbed from configuration.
+    pub fn build(cfg: TestbedConfig) -> Testbed {
+        let mut env = SimEnv::new();
+        let net = Network::build(&mut env, &cfg.net, cfg.n_dcs);
+        let dcs = (0..cfg.n_dcs)
+            .map(|d| Dc {
+                lustre: Lustre::build(&mut env, d, &cfg.lustre),
+                fs: LocalFs::new(),
+                store: ObjectStore::new(),
+            })
+            .collect();
+        let mut dtns = Vec::new();
+        for d in 0..cfg.n_dcs {
+            for k in 0..cfg.dtns_per_dc {
+                let name = format!("dc{d}.dtn{k}");
+                dtns.push(Dtn {
+                    dc: d,
+                    nfs: NfsServer::build(&mut env, &name, &cfg.nfs),
+                    meta_cpu: env.add_resource(&format!("{name}.metasvc"), cfg.meta_op_s, f64::INFINITY),
+                });
+            }
+        }
+        let n_dtns = dtns.len();
+        Testbed {
+            cfg,
+            env,
+            net,
+            dcs,
+            dtns,
+            meta: MetaPlane::new(n_dtns),
+            ns: NamespaceRegistry::new(),
+            collabs: Vec::new(),
+            fuse_mounts: Vec::new(),
+            rr_dtn: 0,
+        }
+    }
+
+    /// Paper-default two-DC testbed.
+    pub fn paper_default() -> Testbed {
+        Self::build(TestbedConfig::paper_default())
+    }
+
+    /// Register a collaborator homed in `dc`; assigns a DTN of its home
+    /// data center round-robin (the paper's request placement policy:
+    /// "we divide the number of collaborators on each DTN") and a FUSE
+    /// mount.
+    pub fn register(&mut self, id: &str, dc: usize) -> usize {
+        let in_dc: Vec<usize> = (0..self.dtns.len()).filter(|&i| self.dtns[i].dc == dc).collect();
+        let dtn = in_dc[self.rr_dtn % in_dc.len()];
+        self.rr_dtn += 1;
+        let fcfg = self.cfg.fuse.clone();
+        let fuse = FuseMount::build(&mut self.env, &format!("scifs.{id}"), &fcfg);
+        self.fuse_mounts.push(fuse);
+        self.collabs.push(Collaborator {
+            id: id.to_string(),
+            dc,
+            dtn,
+            fuse: self.fuse_mounts.len() - 1,
+            now: 0.0,
+        });
+        self.collabs.len() - 1
+    }
+
+    /// A collaborator's current virtual time.
+    pub fn now(&self, c: usize) -> f64 {
+        self.collabs[c].now
+    }
+
+    /// Charge a metadata RPC from collaborator `c` to DTN `dtn` carrying
+    /// `msg_bytes`; executes nothing (pure cost) — callers pair it with a
+    /// real `MetaPlane` operation.
+    fn meta_rpc_cost(&mut self, c: usize, dtn: usize, t: f64, msg_bytes: u64, entries: u64) -> f64 {
+        let src_dc = self.collabs[c].dc;
+        let dst_dc = self.dtns[dtn].dc;
+        let t = self.net.route(&mut self.env, src_dc, dst_dc, t, msg_bytes);
+        let t = self.env.acquire_ops(self.dtns[dtn].meta_cpu, t, 1);
+        // per-entry packing cost on the service (Table II effect)
+        let t = t + self.cfg.meta_entry_s * entries as f64;
+        // response trip back to the collaborator
+        self.net.route(&mut self.env, dst_dc, src_dc, t, 128 + entries * 64)
+    }
+
+    /// The per-operation metadata consult: SCISPACE routes by pathname
+    /// hash to one DTN; the UnionFS baseline probes branches in order.
+    ///
+    /// `calls`: how many FUSE calls need metadata assistance — 1 for a
+    /// plain read/write, 4 for a create (`attr, access, create, open`,
+    /// §IV-D). `exhaustive`: a create must verify **every** branch in the
+    /// union (no short-circuit), which is exactly the "increased contact
+    /// points" overhead Fig. 9a measures.
+    fn meta_consult(
+        &mut self,
+        c: usize,
+        path: &str,
+        t: f64,
+        mode: AccessMode,
+        calls: u64,
+        exhaustive: bool,
+    ) -> f64 {
+        match mode {
+            AccessMode::Scispace => {
+                let shard = self.meta.shard_for(path);
+                let mut end = t;
+                for _ in 0..calls {
+                    end = self.meta_rpc_cost(c, shard, end, self.cfg.meta_msg_bytes, 1);
+                }
+                end
+            }
+            AccessMode::Baseline => {
+                // lookups stop at the first branch hit (expected: half);
+                // creates must probe every branch
+                let probes = if exhaustive {
+                    self.dtns.len()
+                } else {
+                    self.dtns.len().div_ceil(2)
+                };
+                let mut end = t;
+                for _ in 0..calls {
+                    for dtn in 0..probes {
+                        end = self.meta_rpc_cost(c, dtn, end, self.cfg.meta_msg_bytes, 1);
+                    }
+                }
+                end
+            }
+            AccessMode::ScispaceLw => t,
+        }
+    }
+
+    fn ensure_file(
+        &mut self,
+        c: usize,
+        path: &str,
+        data_dc: usize,
+        mode: AccessMode,
+        t: f64,
+    ) -> Result<(f64, crate::vfs::ObjectId)> {
+        if let Some(e) = self.dcs[data_dc].fs.get(path) {
+            return Ok((t, e.obj.ok_or_else(|| anyhow!("{path} is a directory"))?));
+        }
+        let owner = self.collabs[c].id.clone();
+        let obj = self.dcs[data_dc].store.create_hole(0);
+        self.dcs[data_dc].fs.create_file(path, Some(obj), 0, &owner, t)?;
+        // Lustre MDS create on the hosting DC
+        let mut t = self.dcs[data_dc].lustre.metadata_ops(&mut self.env, t, 1);
+        match mode {
+            AccessMode::Scispace => {
+                // register in the workspace immediately (sync=true)
+                let ns = self.ns.namespace_of(path).to_string();
+                let meta = FileMeta {
+                    path: path.into(),
+                    dc: data_dc as u32,
+                    size: 0,
+                    owner,
+                    mtime: t,
+                    sync: true,
+                    namespace: ns,
+                };
+                let shard = self.meta.shard_for(path);
+                let bytes = MetaReq::Upsert(meta.clone()).to_bytes().len() as u64;
+                t = self.meta_rpc_cost(c, shard, t, bytes, 1);
+                self.meta.shards[shard].apply(&MetaReq::Upsert(meta));
+                self.dcs[data_dc].fs.set_sync(path, true);
+            }
+            AccessMode::Baseline | AccessMode::ScispaceLw => {
+                // baseline: union presents the file via readdir, no DB;
+                // LW: stays unsynced until MEU export.
+            }
+        }
+        Ok((t, obj))
+    }
+
+    /// Where a path's data lives: workspace metadata first, then local
+    /// namespaces (covers unexported LW files).
+    pub fn locate(&mut self, path: &str) -> Option<(usize, crate::vfs::ObjectId)> {
+        if let MetaResp::Meta(Some(m)) = self.meta.route(&MetaReq::Get(path.into())) {
+            let dc = m.dc as usize;
+            if let Some(e) = self.dcs[dc].fs.get(path) {
+                return e.obj.map(|o| (dc, o));
+            }
+        }
+        for (d, dc) in self.dcs.iter().enumerate() {
+            if let Some(e) = dc.fs.get(path) {
+                if let Some(o) = e.obj {
+                    return Some((d, o));
+                }
+            }
+        }
+        None
+    }
+
+    /// POSIX-like write (create-if-missing). `data = None` simulates a
+    /// synthetic (IOR) payload; `Some` stores real bytes.
+    pub fn write(
+        &mut self,
+        c: usize,
+        path: &str,
+        offset: u64,
+        len: u64,
+        data: Option<&[u8]>,
+        mode: AccessMode,
+    ) -> Result<()> {
+        let t0 = self.collabs[c].now;
+        let home_dc = self.collabs[c].dc;
+        let dtn = self.collabs[c].dtn;
+        let data_dc = match mode {
+            AccessMode::ScispaceLw => home_dc,
+            _ => self.dtns[dtn].dc,
+        };
+
+        let is_create = self.dcs[data_dc].fs.get(path).is_none();
+        let mut t = t0;
+        if mode != AccessMode::ScispaceLw {
+            // FUSE: five serial ops + user-space copy
+            let fi = self.collabs[c].fuse;
+            t = self.fuse_mounts[fi].ops(&mut self.env, t, WRITE_OPS.len() as u64);
+            let copy = self.fuse_mounts[fi].copy;
+            t = self.env.acquire(copy, t, len);
+            // metadata assistance: creates need `attr, access, create,
+            // open` (4 assisted calls, exhaustive over union branches);
+            // plain writes need one stat
+            if is_create {
+                t = self.meta_consult(c, path, t, mode, 4, true);
+            } else {
+                t = self.meta_consult(c, path, t, mode, 1, false);
+            }
+        } else {
+            // native Lustre client op
+            t += self.cfg.lustre_client_op;
+        }
+
+        let (mut t2, obj) = self.ensure_file(c, path, data_dc, mode, t)?;
+
+        // real byte movement
+        if let Some(d) = data {
+            self.dcs[data_dc].store.write_at_bytes(obj, offset, d)?;
+        } else {
+            let cur = self.dcs[data_dc].store.len(obj).unwrap_or(0);
+            if cur < offset + len {
+                // extend the hole
+                let grow = offset + len;
+                self.dcs[data_dc].store.write_at(obj, grow.saturating_sub(1), &[0u8; 1]).ok();
+            }
+        }
+        self.dcs[data_dc].fs.touch(path, offset + len, t2)?;
+        if mode == AccessMode::Scispace {
+            self.dcs[data_dc].fs.set_sync(path, true);
+            // keep the workspace metadata's size/mtime current (the DB
+            // update rides the already-charged metadata consult)
+            let (size, mtime, owner) = {
+                let e = self.dcs[data_dc].fs.get(path).expect("just touched");
+                (e.size, e.mtime, e.owner.clone())
+            };
+            let meta = FileMeta {
+                path: path.into(),
+                dc: data_dc as u32,
+                size,
+                owner,
+                mtime,
+                sync: true,
+                namespace: self.ns.namespace_of(path).to_string(),
+            };
+            self.meta.route(&MetaReq::Upsert(meta));
+        }
+
+        // data path cost
+        match mode {
+            AccessMode::ScispaceLw => {
+                t2 = self.dcs[data_dc].lustre.write(&mut self.env, t2, obj.0, offset, len);
+            }
+            _ => {
+                // client -> (LAN/WAN) -> DTN NFS -> (flush) -> Lustre
+                t2 = self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len);
+                let (tn, flush) = self.dtns[dtn].nfs.write(&mut self.env, t2, obj.0, offset, len);
+                t2 = tn;
+                if let Some(fb) = flush {
+                    // double-buffered drain into the DTN's Lustre
+                    t2 = t2.max(self.dtns[dtn].nfs.pending_flush);
+                    let end = self.dcs[data_dc].lustre.write(&mut self.env, t2, obj.0, offset, fb);
+                    self.dtns[dtn].nfs.pending_flush = end;
+                }
+            }
+        }
+        self.collabs[c].now = t2;
+        Ok(())
+    }
+
+    /// POSIX-like read. Returns real bytes when the object holds them.
+    pub fn read(
+        &mut self,
+        c: usize,
+        path: &str,
+        offset: u64,
+        len: u64,
+        mode: AccessMode,
+    ) -> Result<Vec<u8>> {
+        let t0 = self.collabs[c].now;
+        let home_dc = self.collabs[c].dc;
+        let (data_dc, obj) = self.locate(path).ok_or_else(|| anyhow!("no such file {path}"))?;
+
+        // visibility: template namespace scope
+        let viewer = self.collabs[c].id.clone();
+        if mode != AccessMode::ScispaceLw && !self.ns.visible_to(path, &viewer) {
+            bail!("{path} not visible to {viewer}");
+        }
+
+        let mut t = t0;
+        match mode {
+            AccessMode::ScispaceLw => {
+                if data_dc != home_dc {
+                    bail!("native access is local-only: {path} lives in dc{data_dc}");
+                }
+                t += self.cfg.lustre_client_op;
+                t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, offset, len);
+            }
+            _ => {
+                let fi = self.collabs[c].fuse;
+                t = self.fuse_mounts[fi].ops(&mut self.env, t, READ_OPS.len() as u64);
+                t = self.meta_consult(c, path, t, mode, 1, false);
+                // reads are synchronous RPCs in rsize chunks to a DTN in
+                // the hosting DC
+                let dtn = self.dtn_in_dc(data_dc, c);
+                let rsize = self.cfg.nfs_rsize;
+                let mut off = offset;
+                let mut remaining = len;
+                while remaining > 0 {
+                    let span = rsize.min(remaining);
+                    let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, off, span);
+                    t = tn;
+                    if miss > 0 {
+                        t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, off, miss);
+                        self.dtns[dtn].nfs.read_cache.fill(obj.0, off, span);
+                    }
+                    // payload back to the collaborator
+                    t = self.net.route(&mut self.env, data_dc, home_dc, t, span);
+                    off += span;
+                    remaining -= span;
+                }
+                let fi = self.collabs[c].fuse;
+                let copy = self.fuse_mounts[fi].copy;
+                t = self.env.acquire(copy, t, len);
+            }
+        }
+        self.collabs[c].now = t;
+        self.dcs[data_dc].store.read_at(obj, offset, len as usize)
+    }
+
+    /// Pick a DTN inside `dc` for collaborator `c` (its assigned DTN when
+    /// it matches, else round-robin by collaborator id).
+    fn dtn_in_dc(&self, dc: usize, c: usize) -> usize {
+        let assigned = self.collabs[c].dtn;
+        if self.dtns[assigned].dc == dc {
+            return assigned;
+        }
+        let in_dc: Vec<usize> =
+            (0..self.dtns.len()).filter(|&i| self.dtns[i].dc == dc).collect();
+        in_dc[c % in_dc.len()]
+    }
+
+    /// `ls` of the collaboration workspace: fan-out to all metadata shards
+    /// **in parallel** (virtual time = slowest shard), merge, filter by
+    /// namespace visibility.
+    pub fn ls(&mut self, c: usize, prefix: &str) -> Vec<FileMeta> {
+        let t0 = self.collabs[c].now;
+        let results = self.meta.list(prefix, None);
+        let mut t_end = t0;
+        let per_shard = results.len() as u64 / self.meta.shards.len().max(1) as u64;
+        for dtn in 0..self.dtns.len() {
+            let t = self.meta_rpc_cost(c, dtn, t0, self.cfg.meta_msg_bytes, per_shard.max(1));
+            t_end = t_end.max(t);
+        }
+        self.collabs[c].now = t_end;
+        let viewer = self.collabs[c].id.clone();
+        results
+            .into_iter()
+            .filter(|m| self.ns.visible_to(&m.path, &viewer))
+            .collect()
+    }
+
+    /// Advance every collaborator's clock to the system-wide quiescent
+    /// horizon (all queued/background work finished). Used between the
+    /// population and measurement phases of experiments so leftover
+    /// backlog doesn't pollute the first measured operation.
+    pub fn quiesce(&mut self) {
+        let h = self.env.horizon();
+        for c in &mut self.collabs {
+            c.now = c.now.max(h);
+        }
+    }
+
+    /// Drop every cache in the testbed and reset resource horizons +
+    /// collaborator clocks — the paper's between-iterations cache drop.
+    pub fn drop_caches_and_reset(&mut self) {
+        for dc in &mut self.dcs {
+            dc.lustre.drop_caches();
+        }
+        for dtn in &mut self.dtns {
+            dtn.nfs.drop_caches();
+        }
+        self.env.reset();
+        for c in &mut self.collabs {
+            c.now = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bed_with(n_collab: usize) -> Testbed {
+        let mut tb = Testbed::paper_default();
+        for i in 0..n_collab {
+            tb.register(&format!("c{i}"), i % tb.cfg.n_dcs);
+        }
+        tb
+    }
+
+    #[test]
+    fn write_then_read_round_trips_bytes() {
+        let mut tb = bed_with(1);
+        tb.write(0, "/proj/a.dat", 0, 11, Some(b"hello world"), AccessMode::Scispace).unwrap();
+        let bytes = tb.read(0, "/proj/a.dat", 0, 11, AccessMode::Scispace).unwrap();
+        assert_eq!(bytes, b"hello world");
+    }
+
+    #[test]
+    fn lw_write_stays_unsynced_until_export() {
+        let mut tb = bed_with(1);
+        tb.write(0, "/home/c0/x.dat", 0, 4, Some(b"data"), AccessMode::ScispaceLw).unwrap();
+        // not visible in workspace ls (metadata not exported yet)
+        assert!(tb.ls(0, "/home").is_empty());
+        // but present in the local namespace
+        assert!(tb.dcs[0].fs.get("/home/c0/x.dat").is_some());
+        assert!(!tb.dcs[0].fs.get("/home/c0/x.dat").unwrap().sync);
+    }
+
+    #[test]
+    fn scispace_write_visible_in_ls() {
+        let mut tb = bed_with(2);
+        tb.write(0, "/collab/data.shdf", 0, 4, Some(b"shdf"), AccessMode::Scispace).unwrap();
+        let ls = tb.ls(1, "/collab");
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].path, "/collab/data.shdf");
+    }
+
+    #[test]
+    fn remote_read_crosses_wan() {
+        let mut tb = bed_with(2);
+        // c0 homed in dc0 writes via its dtn; find a file placed in dc0
+        tb.write(0, "/collab/remote.dat", 0, 1 << 20, None, AccessMode::Scispace).unwrap();
+        let (data_dc, _) = tb.locate("/collab/remote.dat").unwrap();
+        // collaborator homed in the other DC reads it
+        let other = tb.collabs.iter().position(|c| c.dc != data_dc);
+        if let Some(oc) = other {
+            let before = tb.env.resource(tb.net.wan.res).total_bytes;
+            tb.read(oc, "/collab/remote.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
+            let after = tb.env.resource(tb.net.wan.res).total_bytes;
+            assert!(after > before, "WAN must carry remote read traffic");
+        }
+    }
+
+    #[test]
+    fn lw_rejects_remote_reads() {
+        let mut tb = bed_with(2);
+        tb.write(0, "/collab/far.dat", 0, 100, None, AccessMode::Scispace).unwrap();
+        let (data_dc, _) = tb.locate("/collab/far.dat").unwrap();
+        let other = (0..2).find(|&i| tb.collabs[i].dc != data_dc).unwrap_or(1);
+        if tb.collabs[other].dc != data_dc {
+            assert!(tb.read(other, "/collab/far.dat", 0, 100, AccessMode::ScispaceLw).is_err());
+        }
+    }
+
+    #[test]
+    fn lw_writes_faster_than_workspace_small_blocks() {
+        // The Fig. 7 effect at 4 KB blocks.
+        let mut tb = bed_with(2);
+        let n = 256;
+        for i in 0..n {
+            tb.write(0, "/a/f.dat", i * 4096, 4096, None, AccessMode::Scispace).unwrap();
+            tb.write(1, "/b/f.dat", i * 4096, 4096, None, AccessMode::ScispaceLw).unwrap();
+        }
+        let t_ws = tb.collabs[0].now;
+        let t_lw = tb.collabs[1].now;
+        assert!(
+            t_lw < t_ws * 0.85,
+            "LW must be much faster at 4KB: lw={t_lw} ws={t_ws}"
+        );
+    }
+
+    #[test]
+    fn large_blocks_converge() {
+        // The Fig. 7 effect at 512 KB blocks: both paths drain-bound.
+        // Shrink the write caches so 128 MB reaches flush steady state
+        // (benches use full caches + full-scale data instead).
+        let mut cfg = TestbedConfig::paper_default();
+        cfg.lustre.oss_write_cache = 8 << 20;
+        cfg.nfs.write_cache = 8 << 20;
+        let mut tb = Testbed::build(cfg);
+        tb.register("c0", 0);
+        tb.register("c1", 1);
+        let n = 256;
+        let bs = 512 << 10;
+        for i in 0..n {
+            tb.write(0, "/a/f.dat", i * bs, bs, None, AccessMode::Scispace).unwrap();
+            tb.write(1, "/b/f.dat", i * bs, bs, None, AccessMode::ScispaceLw).unwrap();
+        }
+        let t_ws = tb.collabs[0].now;
+        let t_lw = tb.collabs[1].now;
+        let gap = (t_ws - t_lw).abs() / t_lw;
+        assert!(gap < 0.35, "512KB gap should be small: ws={t_ws} lw={t_lw} gap={gap}");
+    }
+
+    #[test]
+    fn baseline_meta_contacts_all_dtns() {
+        let mut tb = bed_with(1);
+        tb.write(0, "/u/f.dat", 0, 4096, None, AccessMode::Baseline).unwrap();
+        let touched = (0..tb.dtns.len())
+            .filter(|&i| tb.env.resource(tb.dtns[i].meta_cpu).total_ops > 0)
+            .count();
+        assert_eq!(touched, tb.dtns.len(), "baseline must stat every branch");
+    }
+
+    #[test]
+    fn scispace_meta_contacts_one_dtn() {
+        let mut tb = bed_with(1);
+        tb.write(0, "/u/g.dat", 0, 4096, None, AccessMode::Scispace).unwrap();
+        let touched = (0..tb.dtns.len())
+            .filter(|&i| tb.env.resource(tb.dtns[i].meta_cpu).total_ops > 0)
+            .count();
+        assert_eq!(touched, 1, "scispace must hash-route to exactly one DTN");
+    }
+
+    #[test]
+    fn namespace_scope_enforced_on_read_and_ls() {
+        let mut tb = bed_with(2);
+        tb.ns.define("priv", "c0", "/home/c0", crate::namespace::Scope::Local).unwrap();
+        tb.write(0, "/home/c0/secret.dat", 0, 4, Some(b"ssst"), AccessMode::Scispace).unwrap();
+        assert!(tb.read(1, "/home/c0/secret.dat", 0, 4, AccessMode::Scispace).is_err());
+        assert!(tb.ls(1, "/home").is_empty());
+        assert_eq!(tb.ls(0, "/home").len(), 1);
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let mut tb = bed_with(1);
+        tb.write(0, "/x/a.dat", 0, 1 << 20, None, AccessMode::Scispace).unwrap();
+        tb.drop_caches_and_reset();
+        assert_eq!(tb.collabs[0].now, 0.0);
+        // data survives the cache drop
+        assert!(tb.locate("/x/a.dat").is_some());
+    }
+}

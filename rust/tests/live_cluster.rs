@@ -1,0 +1,82 @@
+//! Integration: the live (real TCP) deployment — DTN servers + cluster
+//! client + MEU-style batched commit + parallel query fan-out.
+
+use scispace::coordinator::{Cluster, DtnServer};
+use scispace::db::Value;
+use scispace::metadata::FileMeta;
+use scispace::sds::Query;
+
+fn boot(n: usize) -> (Vec<DtnServer>, Cluster) {
+    let servers: Vec<DtnServer> = (0..n).map(|_| DtnServer::start(0).unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+    let cluster = Cluster::connect(&addrs).unwrap();
+    (servers, cluster)
+}
+
+fn meta(path: &str, size: u64) -> FileMeta {
+    FileMeta {
+        path: path.into(),
+        dc: 0,
+        size,
+        owner: "it".into(),
+        mtime: 0.0,
+        sync: true,
+        namespace: "global".into(),
+    }
+}
+
+#[test]
+fn full_publish_discover_cycle_over_tcp() {
+    let (_servers, cluster) = boot(4);
+    cluster.ping().unwrap();
+
+    // MEU-style batched publish of 200 files
+    let metas: Vec<FileMeta> = (0..200).map(|i| meta(&format!("/c/run{}/f{i}.shdf", i / 50), i)).collect();
+    assert_eq!(cluster.batch_upsert(metas).unwrap(), 200);
+
+    // index a couple of attributes for every 4th file
+    for i in (0..200).step_by(4) {
+        let f = format!("/c/run{}/f{i}.shdf", i / 50);
+        cluster.sds_insert("GranuleId", &f, &Value::Int(i as i64)).unwrap();
+        cluster
+            .sds_insert("Location", &f, &Value::Text(if i % 8 == 0 { "Pacific" } else { "Atlantic" }.into()))
+            .unwrap();
+    }
+
+    // parallel ls
+    let ls = cluster.ls("/c/run0").unwrap();
+    assert_eq!(ls.len(), 50);
+
+    // attribute queries with all operators
+    let hits = cluster.query(&Query::parse("Location = Pacific").unwrap()).unwrap();
+    assert_eq!(hits.len(), 25);
+    let hits = cluster.query(&Query::parse("GranuleId < 40").unwrap()).unwrap();
+    assert_eq!(hits.len(), 10);
+    let hits = cluster.query(&Query::parse("Location like Pac%").unwrap()).unwrap();
+    assert_eq!(hits.len(), 25);
+
+    // point ops
+    assert_eq!(cluster.get("/c/run0/f4.shdf").unwrap().unwrap().size, 4);
+    assert!(cluster.get("/c/run9/none").unwrap().is_none());
+}
+
+#[test]
+fn concurrent_clients_share_cluster_state() {
+    let (servers, cluster) = boot(3);
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                let c = Cluster::connect(&addrs).unwrap();
+                for i in 0..50 {
+                    c.upsert(meta(&format!("/t{t}/f{i}"), i)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(cluster.ls("/t").unwrap().len(), 200);
+}

@@ -1,0 +1,129 @@
+//! Integration: PJRT-compiled L1/L2 artifacts vs pure-Rust oracles.
+//!
+//! These are the Rust-side counterparts of python/tests/test_kernels.py:
+//! the *same artifacts* the coordinator serves from must reproduce the
+//! oracle numerics bit-for-bit (hash) / within float tolerance (f32
+//! reductions). Skipped when `artifacts/` has not been built.
+
+use scispace::metadata::placement;
+use scispace::runtime::{self, ComputeService};
+use scispace::sds;
+use scispace::shdf;
+use scispace::util::{fnv1a_words, rng::Rng};
+
+fn service() -> Option<ComputeService> {
+    let dir = runtime::find_artifacts()?;
+    Some(ComputeService::spawn(&dir).expect("artifacts present but unloadable"))
+}
+
+macro_rules! require_artifacts {
+    ($svc:ident) => {
+        let Some($svc) = service() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+    };
+}
+
+#[test]
+fn diff_kernel_matches_cpu_core() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let mut rng = Rng::new(1);
+    for n in [1usize, 100, 524_288, 600_000] {
+        let a: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+        let b: Vec<f32> = a.iter().map(|x| x + rng.f32_in(-1.0, 1.0)).collect();
+        let r = h.diff(&a, &b, 0.5).unwrap();
+        let (n_ref, mx_ref, ss_ref) = shdf::diff_core(&a, &b, 0.5);
+        assert_eq!(r.n_diff, n_ref, "n={n}");
+        assert!((r.max_abs - mx_ref).abs() < 1e-5, "n={n}");
+        assert!((r.sum_sq - ss_ref).abs() / ss_ref.max(1.0) < 1e-3, "n={n}");
+    }
+}
+
+#[test]
+fn diff_kernel_identical_inputs() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let a: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+    let r = h.diff(&a, &a, 0.0).unwrap();
+    assert_eq!(r.n_diff, 0);
+    assert_eq!(r.max_abs, 0.0);
+}
+
+#[test]
+fn stats_kernel_matches_cpu_attrs() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let mut rng = Rng::new(2);
+    for n in [5usize, 4096, 524_288 + 17] {
+        let x: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+        let r = h.stats(&x, -4.0, 4.0).unwrap();
+        let cpu = sds::cpu_stats_attrs("d", &x);
+        let get = |k: &str| match cpu.iter().find(|(a, _)| a == &format!("d.{k}")).unwrap().1 {
+            scispace::db::Value::Float(f) => f,
+            _ => unreachable!(),
+        };
+        assert!((r.min as f64 - get("min")).abs() < 1e-5, "n={n}");
+        assert!((r.max as f64 - get("max")).abs() < 1e-5, "n={n}");
+        assert!((r.mean - get("mean")).abs() < 1e-3, "n={n}");
+        assert!((r.std - get("std")).abs() < 1e-3, "n={n}");
+        assert_eq!(r.hist.iter().sum::<f64>() as u64, n as u64, "hist covers all, n={n}");
+    }
+}
+
+#[test]
+fn scan_kernel_matches_manual_predicates() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let mut rng = Rng::new(3);
+    let col: Vec<f32> = (0..70_000).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    for (op, f) in [
+        (1, Box::new(|x: f32| x < 0.5) as Box<dyn Fn(f32) -> bool>),
+        (2, Box::new(|x: f32| x > 0.5)),
+    ] {
+        let (count, mask) = h.scan(&col, op, 0.5).unwrap();
+        let want: Vec<bool> = col.iter().map(|&x| f(x)).collect();
+        assert_eq!(mask, want, "op={op}");
+        assert_eq!(count as usize, want.iter().filter(|&&b| b).count());
+    }
+}
+
+#[test]
+fn hash_kernel_bit_identical_to_router() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let mut rng = Rng::new(4);
+    let paths: Vec<String> = (0..2500)
+        .map(|i| format!("/modis/{}/g{}_{i}.shdf", rng.ident(6), rng.below(100)))
+        .collect();
+    let kernel = h.hash_paths(&paths).unwrap();
+    for (p, kh) in paths.iter().zip(&kernel) {
+        assert_eq!(*kh, fnv1a_words(p, 32), "kernel/router hash mismatch for {p}");
+        // and the derived shard placement agrees
+        assert_eq!(
+            placement::shard_for_raw(*kh, 4),
+            placement::shard_for(p, 4),
+            "shard mismatch for {p}"
+        );
+    }
+}
+
+#[test]
+fn shdiff_with_pjrt_core_equals_cpu_report() {
+    require_artifacts!(svc);
+    let h = svc.handle();
+    let corpus = scispace::workload::modis_corpus(&scispace::workload::ModisConfig {
+        n_files: 2,
+        elems_per_file: 9000,
+        seed: 5,
+    });
+    let (a, b) = (&corpus[0].1, &corpus[1].1);
+    let cpu = shdf::shdiff(a, b, 0.25);
+    let pjrt = shdf::shdiff_with(a, b, 0.25, |x, y, t| {
+        let r = h.diff(x, y, t).unwrap();
+        (r.n_diff, r.max_abs, r.sum_sq)
+    });
+    assert_eq!(cpu.total_diffs(), pjrt.total_diffs());
+    assert_eq!(cpu.only_in_one, pjrt.only_in_one);
+}

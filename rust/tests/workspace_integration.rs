@@ -1,0 +1,156 @@
+//! Integration: full collaboration scenarios across workspace + metadata
+//! + MEU + SDS + namespaces on the simulated two-DC testbed.
+
+use scispace::db::Value;
+use scispace::meu;
+use scispace::namespace::Scope;
+use scispace::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
+use scispace::workload::{load_corpus, modis_corpus, ModisConfig};
+use scispace::workspace::{AccessMode, Testbed};
+
+#[test]
+fn two_site_share_and_analyze() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("alice", 0);
+    let b = tb.register("bob", 1);
+    let corpus = modis_corpus(&ModisConfig { n_files: 20, elems_per_file: 512, seed: 9 });
+    load_corpus(&mut tb, a, &corpus, AccessMode::Scispace);
+    // bob sees all granules and can parse one
+    let ls = tb.ls(b, "/modis");
+    assert_eq!(ls.len(), 20);
+    let raw = tb.read(b, &ls[3].path, 0, ls[3].size, AccessMode::Scispace).unwrap();
+    let f: scispace::shdf::ShdfFile = scispace::msg::Wire::from_bytes(&raw).unwrap();
+    assert!(f.get_attr("Instrument").is_some());
+}
+
+#[test]
+fn lw_plus_meu_equals_workspace_visibility() {
+    // Writing natively + MEU must converge to the same workspace view as
+    // writing through scifs directly.
+    let corpus = modis_corpus(&ModisConfig { n_files: 12, elems_per_file: 256, seed: 10 });
+
+    let mut tb1 = Testbed::paper_default();
+    let c1 = tb1.register("x", 0);
+    let viewer1 = tb1.register("v", 1);
+    load_corpus(&mut tb1, c1, &corpus, AccessMode::Scispace);
+    let direct: Vec<String> = tb1.ls(viewer1, "/modis").into_iter().map(|m| m.path).collect();
+
+    let mut tb2 = Testbed::paper_default();
+    let c2 = tb2.register("x", 0);
+    let viewer2 = tb2.register("v", 1);
+    load_corpus(&mut tb2, c2, &corpus, AccessMode::ScispaceLw);
+    meu::export(&mut tb2, c2, "/", None).unwrap();
+    let exported: Vec<String> = tb2.ls(viewer2, "/modis").into_iter().map(|m| m.path).collect();
+
+    assert_eq!(direct, exported);
+}
+
+#[test]
+fn multi_collaboration_scopes_isolate() {
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    let carol = tb.register("carol", 0);
+    tb.ns.define("ab-collab", "alice", "/collab/ab", Scope::Global).unwrap();
+    tb.ns.define("alice-private", "alice", "/priv/alice", Scope::Local).unwrap();
+    tb.write(alice, "/collab/ab/shared.dat", 0, 4, Some(b"ab!!"), AccessMode::Scispace).unwrap();
+    tb.write(alice, "/priv/alice/own.dat", 0, 4, Some(b"mine"), AccessMode::Scispace).unwrap();
+    // bob: sees the global collab, not the private namespace
+    assert_eq!(tb.ls(bob, "/").len(), 1);
+    assert!(tb.read(bob, "/priv/alice/own.dat", 0, 4, AccessMode::Scispace).is_err());
+    // carol: same DC as alice but still scope-filtered
+    assert_eq!(tb.ls(carol, "/priv").len(), 0);
+    // alice sees both
+    assert_eq!(tb.ls(alice, "/").len(), 2);
+}
+
+#[test]
+fn sds_modes_converge_to_same_index() {
+    let corpus = modis_corpus(&ModisConfig { n_files: 15, elems_per_file: 256, seed: 11 });
+    let count_hits = |mode: ExtractionMode| -> usize {
+        let mut tb = Testbed::paper_default();
+        let c = tb.register("w", 0);
+        let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
+        for (p, f) in &corpus {
+            sds::write_indexed(&mut tb, &mut sds, c, p, f, mode, None).unwrap();
+        }
+        match mode {
+            ExtractionMode::InlineAsync => {
+                sds::process_queue(&mut tb, &mut sds, None).unwrap();
+            }
+            ExtractionMode::LwOffline => {
+                sds::offline_index(&mut tb, &mut sds, c, "/modis", None).unwrap();
+            }
+            ExtractionMode::InlineSync => {}
+        }
+        tb.quiesce();
+        let (files, _) = sds::run_query(&mut tb, &mut sds, c, &Query::parse("Instrument like %").unwrap()).unwrap();
+        files.len()
+    };
+    let sync = count_hits(ExtractionMode::InlineSync);
+    let asynch = count_hits(ExtractionMode::InlineAsync);
+    let offline = count_hits(ExtractionMode::LwOffline);
+    assert_eq!(sync, corpus.len());
+    assert_eq!(sync, asynch, "async mode must converge to the sync index");
+    assert_eq!(sync, offline, "offline mode must converge to the sync index");
+}
+
+#[test]
+fn unsynced_lw_files_invisible_until_export_then_queryable() {
+    let mut tb = Testbed::paper_default();
+    let w = tb.register("w", 1);
+    let r = tb.register("r", 0);
+    let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
+    let corpus = modis_corpus(&ModisConfig { n_files: 6, elems_per_file: 128, seed: 12 });
+    load_corpus(&mut tb, w, &corpus, AccessMode::ScispaceLw);
+    assert!(tb.ls(r, "/modis").is_empty());
+    meu::export(&mut tb, w, "/", None).unwrap();
+    sds::offline_index(&mut tb, &mut sds, w, "/modis", None).unwrap();
+    tb.quiesce();
+    assert_eq!(tb.ls(r, "/modis").len(), 6);
+    let (files, _) = sds::run_query(&mut tb, &mut sds, r, &Query::parse("GranuleId < 3").unwrap()).unwrap();
+    assert_eq!(files.len(), 3);
+}
+
+#[test]
+fn remote_delete_extension_works() {
+    // DESIGN.md §8: the paper defers remote removal to the metadata
+    // service; verify the extension path.
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    let b = tb.register("b", 1);
+    tb.write(a, "/d/gone.dat", 0, 4, Some(b"temp"), AccessMode::Scispace).unwrap();
+    assert_eq!(tb.ls(b, "/d").len(), 1);
+    use scispace::metadata::{MetaReq, MetaResp};
+    assert_eq!(tb.meta.route(&MetaReq::Delete("/d/gone.dat".into())), MetaResp::Ok(1));
+    assert!(tb.ls(b, "/d").is_empty());
+}
+
+#[test]
+fn interleaved_collaborators_make_progress() {
+    // 8 collaborators on both DCs interleave writes + reads + ls without
+    // interfering with each other's data.
+    let mut tb = Testbed::paper_default();
+    for i in 0..8 {
+        tb.register(&format!("c{i}"), i % 2);
+    }
+    for round in 0..5u64 {
+        for c in 0..8usize {
+            let path = format!("/work/c{c}/r{round}.dat");
+            let payload = format!("payload-{c}-{round}");
+            tb.write(c, &path, 0, payload.len() as u64, Some(payload.as_bytes()), AccessMode::Scispace)
+                .unwrap();
+        }
+    }
+    for c in 0..8usize {
+        for round in 0..5u64 {
+            let path = format!("/work/c{c}/r{round}.dat");
+            let want = format!("payload-{c}-{round}");
+            let got = tb.read(c, &path, 0, want.len() as u64, AccessMode::Scispace).unwrap();
+            assert_eq!(got, want.as_bytes());
+        }
+    }
+    assert_eq!(tb.ls(0, "/work").len(), 40);
+    // times advanced monotonically for everyone
+    assert!((0..8).all(|c| tb.now(c) > 0.0));
+}
