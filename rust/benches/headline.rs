@@ -34,4 +34,12 @@ fn main() {
     }
     let avg = gains.iter().map(|(_, g)| g).sum::<f64>() / gains.len() as f64;
     println!("\naverage native-access boost: {avg:+.1}%  (paper headline: +36%)");
+
+    // Data-plane headline: striping the WAN mover (xfer engine) vs the
+    // single-stream transfer the testbed started with.
+    let rows = fig_xfer_streams(256 << 20, &[1, 8]);
+    println!(
+        "xfer striping speedup (8 vs 1 streams, 256MB WAN transfer): {:.1}x",
+        rows[0].secs / rows[1].secs
+    );
 }

@@ -12,9 +12,14 @@ use crate::db::Value;
 use crate::meu;
 use crate::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
 use crate::shdf;
+use crate::simclock::SimEnv;
+use crate::simnet::{NetConfig, Network};
 use crate::util::units::{fmt_bytes, fmt_secs};
 use crate::workload::{self, IorConfig, ModisConfig};
 use crate::workspace::{AccessMode, Testbed, TestbedConfig};
+use crate::xfer::{
+    run_queue, FaultInjector, Priority, TransferQueue, TransferRequest, XferConfig, XferEngine,
+};
 
 /// Build the scaled bench testbed (see module docs).
 pub fn bench_testbed() -> Testbed {
@@ -403,6 +408,160 @@ pub fn fig9c(
         .collect()
 }
 
+/// One `fig_xfer_streams` row: stream-count sweep on the fixed WAN.
+#[derive(Debug, Clone)]
+pub struct XferStreamRow {
+    /// Streams striped over the transfer.
+    pub streams: usize,
+    /// Virtual transfer time, seconds.
+    pub secs: f64,
+    /// Goodput, MB/s.
+    pub mbps: f64,
+}
+
+/// Sweep stream counts for one `total`-byte DC0 -> DC1 transfer on the
+/// paper WAN. The expected shape (and the acceptance check of the xfer
+/// engine): time strictly decreases with stream count while per-chunk
+/// latency dominates, then plateaus at the link byte-serialization
+/// floor.
+pub fn fig_xfer_streams(total: u64, stream_counts: &[usize]) -> Vec<XferStreamRow> {
+    fig_xfer_streams_cfg(total, stream_counts, &XferConfig::default())
+}
+
+/// [`fig_xfer_streams`] with explicit engine tuning (chunk size etc.);
+/// only the stream count varies across rows.
+pub fn fig_xfer_streams_cfg(
+    total: u64,
+    stream_counts: &[usize],
+    base: &XferConfig,
+) -> Vec<XferStreamRow> {
+    stream_counts
+        .iter()
+        .map(|&s| {
+            let mut env = SimEnv::new();
+            let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+            let engine = XferEngine::new(XferConfig { n_streams: s, ..base.clone() });
+            let req = TransferRequest {
+                id: s as u64,
+                owner: "bench".into(),
+                src_dc: 0,
+                dst_dc: 1,
+                bytes: total,
+                priority: Priority::Bulk,
+                submitted_at: 0.0,
+            };
+            let rep = engine
+                .transfer(&mut env, &mut net, &req, &mut FaultInjector::none(), 0.0)
+                .expect("transfer");
+            XferStreamRow { streams: s, secs: rep.seconds(), mbps: rep.mbps() }
+        })
+        .collect()
+}
+
+/// One `fig_xfer_mix` row: a transfer inside a concurrent mix.
+#[derive(Debug, Clone)]
+pub struct XferMixRow {
+    /// Owning collaboration.
+    pub owner: String,
+    /// Priority class name.
+    pub priority: &'static str,
+    /// Payload bytes.
+    pub bytes: u64,
+    /// Completion time within the mix, seconds from mix start.
+    pub finished_s: f64,
+    /// Goodput over the transfer's own lifetime, MB/s.
+    pub mbps: f64,
+    /// Chunk deliveries that were retried.
+    pub retried: u32,
+    /// Peak concurrent transfers the WAN saw during the mix.
+    pub wan_peak: u32,
+}
+
+/// Concurrent-transfer mix on one WAN: two bulk collaborations, one
+/// interactive read and one scavenger sweep, drained through the
+/// priority/fair-share scheduler. Shows (a) weighted bandwidth sharing
+/// and (b) the interactive transfer finishing first despite equal size.
+pub fn fig_xfer_mix(per_transfer: u64) -> Vec<XferMixRow> {
+    let mut env = SimEnv::new();
+    let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+    let engine = XferEngine::new(XferConfig::default());
+    let mut queue = TransferQueue::new();
+    let mix = [
+        ("climate", Priority::Bulk, per_transfer),
+        ("genomics", Priority::Bulk, per_transfer),
+        ("analyst", Priority::Interactive, per_transfer),
+        ("archive", Priority::Scavenger, per_transfer / 2),
+    ];
+    for (i, (owner, prio, bytes)) in mix.iter().enumerate() {
+        queue.submit(TransferRequest {
+            id: i as u64,
+            owner: owner.to_string(),
+            src_dc: 0,
+            dst_dc: 1,
+            bytes: *bytes,
+            priority: *prio,
+            submitted_at: 0.0,
+        });
+    }
+    let reports = run_queue(
+        &engine,
+        &mut env,
+        &mut net,
+        &mut queue,
+        &mut FaultInjector::none(),
+        0.0,
+        mix.len(),
+    )
+    .expect("mix");
+    let peak = net.wan_peak();
+    reports
+        .into_iter()
+        .map(|r| XferMixRow {
+            owner: r.owner.clone(),
+            priority: r.priority.name(),
+            bytes: r.bytes,
+            finished_s: r.finished_at,
+            mbps: r.mbps(),
+            retried: r.retried_chunks,
+            wan_peak: peak,
+        })
+        .collect()
+}
+
+/// Print `fig_xfer_streams` rows.
+pub fn print_xfer_streams(total: u64, rows: &[XferStreamRow]) {
+    println!("\n== Fig xfer-streams: {} DC0->DC1, stream-count sweep ==", fmt_bytes(total));
+    println!("{:>8} {:>12} {:>12}", "streams", "time", "goodput");
+    for r in rows {
+        println!("{:>8} {:>12} {:>9.1}MB/s", r.streams, fmt_secs(r.secs), r.mbps);
+    }
+    let floor = total as f64 / NetConfig::paper_default().wan_bw;
+    println!("{:>8} {:>12} (link byte-serialization floor)", "wire", fmt_secs(floor));
+}
+
+/// Print `fig_xfer_mix` rows.
+pub fn print_xfer_mix(rows: &[XferMixRow]) {
+    println!("\n== Fig xfer-mix: concurrent collaborations on one WAN ==");
+    if let Some(r) = rows.first() {
+        println!("(peak concurrent WAN transfers: {})", r.wan_peak);
+    }
+    println!(
+        "{:>12} {:>12} {:>10} {:>12} {:>12} {:>8}",
+        "owner", "priority", "bytes", "finished", "goodput", "retried"
+    );
+    for r in rows {
+        println!(
+            "{:>12} {:>12} {:>10} {:>12} {:>9.1}MB/s {:>8}",
+            r.owner,
+            r.priority,
+            fmt_bytes(r.bytes),
+            fmt_secs(r.finished_s),
+            r.mbps,
+            r.retried
+        );
+    }
+}
+
 /// Pretty-print helpers shared by the bench binaries.
 pub fn print_throughput(title: &str, xlabel: &str, rows: &[ThroughputRow]) {
     println!("\n== {title} ==");
@@ -514,6 +673,34 @@ mod tests {
     fn fig9c_small_scale_shape() {
         let rows = fig9c(&[8], None);
         assert!(rows[0].baseline_s > rows[0].scispace_s, "search+migrate must lose");
+    }
+
+    #[test]
+    fn fig_xfer_streams_shape() {
+        // Acceptance (a): strictly decreasing, then plateau at the floor.
+        let rows = fig_xfer_streams(128 << 20, &[1, 2, 4, 8, 32]);
+        assert!(rows[0].secs > rows[1].secs, "{rows:?}");
+        assert!(rows[1].secs > rows[2].secs, "{rows:?}");
+        assert!(rows[2].secs > rows[3].secs, "{rows:?}");
+        let early = rows[0].secs - rows[3].secs;
+        let late = (rows[3].secs - rows[4].secs).max(0.0);
+        assert!(late < early * 0.1, "plateau expected: {rows:?}");
+        let floor = (128u64 << 20) as f64 / NetConfig::paper_default().wan_bw;
+        assert!(rows[4].secs >= floor);
+    }
+
+    #[test]
+    fn fig_xfer_mix_interactive_wins() {
+        let rows = fig_xfer_mix(64 << 20);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.first().unwrap().wan_peak, 4, "mix must share the WAN concurrently");
+        let finish = |owner: &str| {
+            rows.iter().find(|r| r.owner == owner).map(|r| r.finished_s).unwrap()
+        };
+        assert!(
+            finish("analyst") < finish("climate").min(finish("genomics")),
+            "interactive must beat bulk: {rows:?}"
+        );
     }
 
     #[test]

@@ -21,10 +21,23 @@
 //!   compute kernels (dataset diff, stats extraction, predicate scan,
 //!   path hashing), AOT-lowered to HLO text in `artifacts/` and executed
 //!   from [`runtime`] via PJRT. Python never runs on the request path.
+//!
+//! ## The data plane ([`xfer`])
+//!
+//! Bulk data motion between centers — the capability the paper's
+//! terabit-WAN premise rests on — is a first-class engine: transfers are
+//! chunked, striped across parallel streams sharing [`simnet`] link
+//! bandwidth, scheduled through a priority + per-collaboration
+//! fair-share queue, and chunk-checksummed with retry of only the
+//! affected spans under injected failures (corrupt chunk, dying
+//! stream). [`workspace`] routes above-threshold remote reads/writes
+//! through it, and [`metadata::replication`] uses it to re-replicate
+//! payloads after a DTN outage (`scispace xfer` demos it from the CLI).
 
 pub mod util;
 pub mod simclock;
 pub mod simnet;
+pub mod xfer;
 pub mod vfs;
 pub mod simfs;
 pub mod fusemodel;

@@ -7,6 +7,11 @@
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
 //! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|all>`
 //!   — regenerate a paper table/figure on the simulated testbed.
+//! * `xfer [--size 512M] [--streams 1,2,4,8] [--chunk 4M] [--corrupt N]
+//!   [--drop-stream S] [--mix]` — drive the WAN bulk-transfer engine:
+//!   stream-count sweep, optional fault injection (corrupt chunks /
+//!   dead stream, showing chunk-level retry), and `--mix` for the
+//!   concurrent priority/fair-share collaboration mix.
 //! * `shdump <file>` / `shdiff <a> <b> [--tol t]` — SHDF tools over real
 //!   files on disk (the H5Dump/H5Diff equivalents).
 
@@ -38,11 +43,12 @@ fn run(args: &Args) -> Result<()> {
         Some("demo") => cmd_demo(),
         Some("query") => cmd_query(args),
         Some("bench") => cmd_bench(args),
+        Some("xfer") => cmd_xfer(args),
         Some("shdump") => cmd_shdump(args),
         Some("shdiff") => cmd_shdiff(args),
         _ => {
             eprintln!(
-                "usage: scispace <dtn|demo|query|bench|shdump|shdiff> [options]\n\
+                "usage: scispace <dtn|demo|query|bench|xfer|shdump|shdiff> [options]\n\
                  see README.md for details"
             );
             Ok(())
@@ -141,6 +147,82 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }
         }
         other => bail!("unknown bench {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_xfer(args: &Args) -> Result<()> {
+    use scispace::simclock::SimEnv;
+    use scispace::simnet::{NetConfig, Network};
+    use scispace::util::units::{fmt_bytes, fmt_secs};
+    use scispace::xfer::{FaultInjector, Priority, TransferRequest, XferConfig, XferEngine};
+
+    let size = parse_bytes(&args.opt("size", "512M"))
+        .ok_or_else(|| anyhow::anyhow!("--size wants a byte count like 512M"))?;
+    let streams: Vec<usize> = args
+        .opt("streams", "1,2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("--streams wants a comma list of counts: {e}"))?;
+    if streams.is_empty() {
+        bail!("--streams needs at least one count");
+    }
+    let chunk = parse_bytes(&args.opt("chunk", "4M"))
+        .ok_or_else(|| anyhow::anyhow!("--chunk wants a byte count like 4M"))?;
+    if chunk == 0 {
+        bail!("--chunk must be positive");
+    }
+
+    if args.has_flag("mix") {
+        bench::print_xfer_mix(&bench::fig_xfer_mix(size / 4));
+        return Ok(());
+    }
+
+    let base = XferConfig { chunk_bytes: chunk, ..XferConfig::default() };
+    let rows = bench::fig_xfer_streams_cfg(size, &streams, &base);
+    bench::print_xfer_streams(size, &rows);
+
+    let n_corrupt: usize = args.opt_parse("corrupt", 0);
+    let drop_stream: i64 = args.opt_parse("drop-stream", -1);
+    if n_corrupt > 0 || drop_stream >= 0 {
+        let mut env = SimEnv::new();
+        let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+        let best = *streams.iter().max().unwrap();
+        let engine = XferEngine::new(XferConfig { n_streams: best, ..base.clone() });
+        let mut faults = FaultInjector::with_seed(args.opt_parse("seed", 7));
+        for k in 0..n_corrupt {
+            faults.force_corrupt(k as u32 * 2);
+        }
+        if drop_stream >= 0 {
+            faults.force_drop(drop_stream as usize, 2);
+        }
+        let rep = engine.transfer(
+            &mut env,
+            &mut net,
+            &TransferRequest {
+                id: 0,
+                owner: "cli".into(),
+                src_dc: 0,
+                dst_dc: 1,
+                bytes: size,
+                priority: Priority::Bulk,
+                submitted_at: 0.0,
+            },
+            &mut faults,
+            0.0,
+        )?;
+        println!(
+            "\nfault run: {} in {} over {} streams; {} retried chunk(s) = {} \
+             re-sent ({:.2}% of payload), {} stream drop(s)",
+            fmt_bytes(rep.bytes),
+            fmt_secs(rep.seconds()),
+            rep.streams,
+            rep.retried_chunks,
+            fmt_bytes(rep.retried_bytes),
+            rep.retried_bytes as f64 / rep.bytes.max(1) as f64 * 100.0,
+            rep.stream_drops
+        );
     }
     Ok(())
 }

@@ -570,6 +570,71 @@ mod tests {
     }
 
     #[test]
+    fn queue_flushes_on_file_count_threshold() {
+        let (mut tb, mut sds) = setup();
+        sds.cfg.q_max_files = 3;
+        sds.cfg.q_max_age_s = f64::INFINITY;
+        sds.cfg.q_max_bytes = u64::MAX;
+        let f = modis_file("P", 1, 0.0);
+        for i in 0..2 {
+            write_indexed(&mut tb, &mut sds, 0, &format!("/qf/f{i}.shdf"), &f, ExtractionMode::InlineAsync, None).unwrap();
+            assert!(!sds.queue_due(tb.collabs[0].now), "below the file threshold at {i}");
+        }
+        write_indexed(&mut tb, &mut sds, 0, "/qf/f2.shdf", &f, ExtractionMode::InlineAsync, None).unwrap();
+        assert!(sds.queue_due(tb.collabs[0].now), "3rd pending file must trip q_max_files");
+    }
+
+    #[test]
+    fn queue_flushes_on_age_threshold() {
+        let (mut tb, mut sds) = setup();
+        sds.cfg.q_max_files = usize::MAX;
+        sds.cfg.q_max_age_s = 2.0;
+        sds.cfg.q_max_bytes = u64::MAX;
+        let f = modis_file("P", 1, 0.0);
+        write_indexed(&mut tb, &mut sds, 0, "/qa/a.shdf", &f, ExtractionMode::InlineAsync, None).unwrap();
+        let enqueued_at = sds.queue.front().unwrap().enqueued_at;
+        assert!(!sds.queue_due(enqueued_at + 1.9), "younger than q_max_age_s");
+        assert!(sds.queue_due(enqueued_at + 2.0), "oldest entry aging out must trip the flush");
+    }
+
+    #[test]
+    fn queue_flushes_on_byte_threshold() {
+        let (mut tb, mut sds) = setup();
+        sds.cfg.q_max_files = usize::MAX;
+        sds.cfg.q_max_age_s = f64::INFINITY;
+        let f = modis_file("P", 1, 0.0);
+        let one_file_bytes = f.to_bytes().len() as u64;
+        sds.cfg.q_max_bytes = one_file_bytes * 2;
+        write_indexed(&mut tb, &mut sds, 0, "/qb/a.shdf", &f, ExtractionMode::InlineAsync, None).unwrap();
+        assert!(!sds.queue_due(tb.collabs[0].now), "one payload is below the byte cap");
+        write_indexed(&mut tb, &mut sds, 0, "/qb/b.shdf", &f, ExtractionMode::InlineAsync, None).unwrap();
+        assert!(sds.queue_due(tb.collabs[0].now), "pending bytes at the cap must trip the flush");
+        assert_eq!(sds.queued_bytes, one_file_bytes * 2);
+    }
+
+    #[test]
+    fn queue_drains_fifo_and_empties() {
+        let (mut tb, mut sds) = setup();
+        let f = modis_file("P", 1, 0.0);
+        let paths = ["/ord/first.shdf", "/ord/second.shdf", "/ord/third.shdf"];
+        for p in paths {
+            write_indexed(&mut tb, &mut sds, 0, p, &f, ExtractionMode::InlineAsync, None).unwrap();
+        }
+        // pending entries sit in enqueue order with monotone timestamps...
+        let queued: Vec<String> = sds.queue.iter().map(|p| p.path.clone()).collect();
+        assert_eq!(queued, paths);
+        let stamps: Vec<f64> = sds.queue.iter().map(|p| p.enqueued_at).collect();
+        assert!(stamps.windows(2).all(|w| w[0] <= w[1]), "timestamps monotone: {stamps:?}");
+        // ...and process_queue drains from the front (FIFO), emptying it
+        let (n, spent) = process_queue(&mut tb, &mut sds, None).unwrap();
+        assert_eq!(n, 3);
+        assert!(spent > 0.0);
+        assert!(sds.queue.is_empty());
+        assert_eq!(sds.queued_bytes, 0);
+        assert_eq!(sds.files_indexed, 3);
+    }
+
+    #[test]
     fn queue_thresholds_trigger() {
         let (mut tb, mut sds) = setup();
         sds.cfg.q_max_files = 3;

@@ -47,13 +47,19 @@ impl NetConfig {
     }
 }
 
-/// The instantiated network: one WAN link + per-DC LAN links.
+/// The instantiated network: one WAN link + per-DC LAN links, plus
+/// multi-transfer contention accounting (how many bulk transfers are
+/// concurrently riding each link, and the peak seen).
 #[derive(Debug, Clone)]
 pub struct Network {
     /// DC-to-DC link.
     pub wan: Link,
     /// Per data center local fabric.
     pub lans: Vec<Link>,
+    /// Concurrent bulk transfers per link (slot 0 = WAN, 1+i = LAN i).
+    active: Vec<u32>,
+    /// Peak concurrent bulk transfers per link.
+    peak: Vec<u32>,
 }
 
 impl Network {
@@ -63,13 +69,14 @@ impl Network {
             res: env.add_resource("net.wan", 0.0, cfg.wan_bw),
             latency_s: cfg.wan_latency_s,
         };
-        let lans = (0..n_dcs)
+        let lans: Vec<Link> = (0..n_dcs)
             .map(|i| Link {
                 res: env.add_resource(&format!("net.lan{i}"), 0.0, cfg.lan_bw),
                 latency_s: cfg.lan_latency_s,
             })
             .collect();
-        Network { wan, lans }
+        let slots = 1 + lans.len();
+        Network { wan, lans, active: vec![0; slots], peak: vec![0; slots] }
     }
 
     /// Send `bytes` over `link` starting at `now`; returns arrival time.
@@ -88,13 +95,73 @@ impl Network {
         now: f64,
         bytes: u64,
     ) -> f64 {
-        let t = Self::send(env, self.lans[src_dc], now, bytes);
-        if src_dc == dst_dc {
-            t
-        } else {
-            let t = Self::send(env, self.wan, t, bytes);
-            Self::send(env, self.lans[dst_dc], t, bytes)
+        let mut t = now;
+        for link in self.path(src_dc, dst_dc) {
+            t = Self::send(env, link, t, bytes);
         }
+        t
+    }
+
+    /// The single source of hop truth: accounting slots a `src -> dst`
+    /// payload traverses, in order (0 = WAN, 1+i = LAN i). `route`,
+    /// `path` and the contention counters all derive from this.
+    fn hop_slots(&self, src_dc: usize, dst_dc: usize) -> Vec<usize> {
+        if src_dc == dst_dc {
+            vec![1 + src_dc]
+        } else {
+            vec![1 + src_dc, 0, 1 + dst_dc]
+        }
+    }
+
+    /// The ordered link sequence a `src_dc -> dst_dc` payload traverses
+    /// (same hops as [`Network::route`]). Used by the `xfer` engine to
+    /// drive each chunk over the path explicitly.
+    pub fn path(&self, src_dc: usize, dst_dc: usize) -> Vec<Link> {
+        self.hop_slots(src_dc, dst_dc)
+            .into_iter()
+            .map(|s| if s == 0 { self.wan } else { self.lans[s - 1] })
+            .collect()
+    }
+
+    /// Register a bulk transfer on its path (contention accounting).
+    pub fn begin_transfer(&mut self, src_dc: usize, dst_dc: usize) {
+        for s in self.hop_slots(src_dc, dst_dc) {
+            self.active[s] += 1;
+            self.peak[s] = self.peak[s].max(self.active[s]);
+        }
+    }
+
+    /// Deregister a completed bulk transfer.
+    pub fn end_transfer(&mut self, src_dc: usize, dst_dc: usize) {
+        for s in self.hop_slots(src_dc, dst_dc) {
+            self.active[s] = self.active[s].saturating_sub(1);
+        }
+    }
+
+    /// Bulk transfers currently riding the WAN.
+    pub fn wan_active(&self) -> u32 {
+        self.active[0]
+    }
+
+    /// Peak concurrent bulk transfers seen on the WAN.
+    pub fn wan_peak(&self) -> u32 {
+        self.peak[0]
+    }
+
+    /// Bulk transfers currently riding LAN `dc`.
+    pub fn lan_active(&self, dc: usize) -> u32 {
+        self.active[1 + dc]
+    }
+
+    /// Peak concurrent bulk transfers seen on LAN `dc`.
+    pub fn lan_peak(&self, dc: usize) -> u32 {
+        self.peak[1 + dc]
+    }
+
+    /// Clear contention counters (between experiment iterations).
+    pub fn reset_contention(&mut self) {
+        self.active.iter_mut().for_each(|a| *a = 0);
+        self.peak.iter_mut().for_each(|p| *p = 0);
     }
 }
 
@@ -140,5 +207,109 @@ mod tests {
         let cfg = NetConfig::paper_default();
         let pfs_aggregate = 2.0 * 2.2e9; // see simfs::LustreConfig::paper_default
         assert!(cfg.wan_bw > pfs_aggregate);
+    }
+
+    #[test]
+    fn path_matches_route_hops() {
+        let (mut env, net) = setup();
+        assert_eq!(net.path(0, 0).len(), 1);
+        let p = net.path(0, 1);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[1].res, net.wan.res);
+        // driving the path by hand charges the same links as route()
+        let bytes = 1 << 20;
+        let mut t = 0.0;
+        for link in &p {
+            t = Network::send(&mut env, *link, t, bytes);
+        }
+        assert!(t > 0.0);
+        assert_eq!(env.resource(net.wan.res).total_bytes, bytes);
+        assert_eq!(env.resource(net.lans[0].res).total_bytes, bytes);
+        assert_eq!(env.resource(net.lans[1].res).total_bytes, bytes);
+    }
+
+    #[test]
+    fn contention_accounting_tracks_active_and_peak() {
+        let (_env, mut net) = setup();
+        net.begin_transfer(0, 1);
+        net.begin_transfer(0, 1);
+        net.begin_transfer(1, 1); // LAN-only
+        assert_eq!(net.wan_active(), 2);
+        assert_eq!(net.lan_active(1), 3);
+        net.end_transfer(0, 1);
+        assert_eq!(net.wan_active(), 1);
+        net.end_transfer(0, 1);
+        net.end_transfer(1, 1);
+        assert_eq!(net.wan_active(), 0);
+        assert_eq!(net.wan_peak(), 2);
+        assert_eq!(net.lan_peak(1), 3);
+        net.reset_contention();
+        assert_eq!(net.wan_peak(), 0);
+    }
+
+    #[test]
+    fn prop_bytes_conserved_across_routes_and_striped_sends() {
+        // Satellite invariant: bytes charged to each Resource equal bytes
+        // offered, across any interleaving of monolithic route() calls
+        // and chunk-striped xfer transfers (including retried chunks).
+        use crate::util::prop;
+        use crate::xfer::{FaultInjector, Priority, TransferRequest, XferConfig, XferEngine};
+        prop::check(24, |rng| {
+            let mut env = SimEnv::new();
+            let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+            // expected per-resource byte totals: [wan, lan0, lan1]
+            let ids = [net.wan.res, net.lans[0].res, net.lans[1].res];
+            let mut expect = [0u64; 3];
+            let mut offer = |expect: &mut [u64; 3], src: usize, dst: usize, b: u64| {
+                expect[1 + src] += b;
+                if src != dst {
+                    expect[0] += b;
+                    expect[1 + dst] += b;
+                }
+            };
+            for i in 0..rng.range(2, 9) {
+                let src = rng.range(0, 2);
+                let dst = rng.range(0, 2);
+                if rng.chance(0.4) {
+                    let b = rng.below(4 << 20) + 1;
+                    net.route(&mut env, src, dst, 0.0, b);
+                    offer(&mut expect, src, dst, b);
+                } else {
+                    let b = rng.below(24 << 20) + 1;
+                    let cfg = XferConfig {
+                        chunk_bytes: 1 << rng.range(18, 22),
+                        n_streams: rng.range(1, 9),
+                        ..XferConfig::default()
+                    };
+                    let engine = XferEngine::new(cfg);
+                    let mut faults = FaultInjector::none();
+                    if rng.chance(0.5) {
+                        faults.force_corrupt(0); // first chunk re-sent once
+                    }
+                    let req = TransferRequest {
+                        id: i as u64,
+                        owner: format!("o{i}"),
+                        src_dc: src,
+                        dst_dc: dst,
+                        bytes: b,
+                        priority: Priority::Bulk,
+                        submitted_at: 0.0,
+                    };
+                    let rep = engine
+                        .transfer(&mut env, &mut net, &req, &mut faults, 0.0)
+                        .map_err(|e| e.to_string())?;
+                    offer(&mut expect, src, dst, b + rep.retried_bytes);
+                }
+            }
+            for (k, id) in ids.iter().enumerate() {
+                let got = env.resource(*id).total_bytes;
+                crate::prop_assert!(
+                    got == expect[k],
+                    "resource {k}: charged {got} != offered {}",
+                    expect[k]
+                );
+            }
+            Ok(())
+        });
     }
 }

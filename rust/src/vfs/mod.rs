@@ -61,6 +61,11 @@ impl ObjectStore {
         })
     }
 
+    /// Is the object synthetic (a hole)? `None` if the id is unknown.
+    pub fn is_hole(&self, id: ObjectId) -> Option<bool> {
+        self.objects.get(&id).map(|p| matches!(p, Payload::Hole(_)))
+    }
+
     /// True when no objects exist.
     pub fn is_empty(&self) -> bool {
         self.objects.is_empty()
@@ -190,6 +195,17 @@ mod tests {
         s.write_at(id, 0, b"abc").unwrap();
         assert_eq!(s.read_at(id, 2, 10).unwrap(), b"c");
         assert_eq!(s.read_at(id, 9, 10).unwrap(), b"");
+    }
+
+    #[test]
+    fn is_hole_distinguishes_payloads() {
+        let mut s = ObjectStore::new();
+        let real = s.create();
+        s.write_at(real, 0, b"x").unwrap();
+        let hole = s.create_hole(10);
+        assert_eq!(s.is_hole(real), Some(false));
+        assert_eq!(s.is_hole(hole), Some(true));
+        assert_eq!(s.is_hole(ObjectId(999)), None);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::simclock::{ResourceId, SimEnv};
 use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
 use crate::simnet::{NetConfig, Network};
 use crate::vfs::ObjectStore;
+use crate::xfer::{FaultInjector, Priority, TransferReport, TransferRequest, XferConfig, XferEngine};
 use localfs::LocalFs;
 
 /// Which path an operation takes through the stack.
@@ -70,6 +71,11 @@ pub struct TestbedConfig {
     pub nfs_rsize: u64,
     /// Approximate metadata message size on the wire, bytes.
     pub meta_msg_bytes: u64,
+    /// Bulk transfer engine tuning (striping, chunking, retry).
+    pub xfer: XferConfig,
+    /// Data-path operations of at least this many bytes ride the
+    /// striped `xfer` engine instead of a single `route()` call.
+    pub xfer_threshold: u64,
 }
 
 impl TestbedConfig {
@@ -92,6 +98,8 @@ impl TestbedConfig {
             lustre_client_op: 120e-6,
             nfs_rsize: 256 << 10,
             meta_msg_bytes: 256,
+            xfer: XferConfig::default(),
+            xfer_threshold: 8 << 20,
         }
     }
 }
@@ -151,6 +159,7 @@ pub struct Testbed {
     pub collabs: Vec<Collaborator>,
     fuse_mounts: Vec<FuseMount>,
     rr_dtn: usize,
+    next_xfer: u64,
 }
 
 impl Testbed {
@@ -188,6 +197,7 @@ impl Testbed {
             collabs: Vec::new(),
             fuse_mounts: Vec::new(),
             rr_dtn: 0,
+            next_xfer: 0,
         }
     }
 
@@ -424,8 +434,30 @@ impl Testbed {
                 t2 = self.dcs[data_dc].lustre.write(&mut self.env, t2, obj.0, offset, len);
             }
             _ => {
-                // client -> (LAN/WAN) -> DTN NFS -> (flush) -> Lustre
-                t2 = self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len);
+                // client -> (LAN/WAN) -> DTN NFS -> (flush) -> Lustre;
+                // bulk payloads ride the striped engine instead of one
+                // monolithic route() call. Unlike reads (which only
+                // stripe when crossing the WAN), bulk writes always
+                // stripe: the collaborator->DTN ingest hop pays per-chunk
+                // checksums even inside one DC, which is what a real DTN
+                // mover does on ingest.
+                t2 = if len >= self.cfg.xfer_threshold {
+                    let req = TransferRequest {
+                        id: self.next_xfer_id(),
+                        owner: self.collabs[c].id.clone(),
+                        src_dc: home_dc,
+                        dst_dc: self.dtns[dtn].dc,
+                        bytes: len,
+                        priority: Priority::Interactive,
+                        submitted_at: t2,
+                    };
+                    let engine = XferEngine::new(self.cfg.xfer.clone());
+                    engine
+                        .transfer(&mut self.env, &mut self.net, &req, &mut FaultInjector::none(), t2)?
+                        .finished_at
+                } else {
+                    self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len)
+                };
                 let (tn, flush) = self.dtns[dtn].nfs.write(&mut self.env, t2, obj.0, offset, len);
                 t2 = tn;
                 if let Some(fb) = flush {
@@ -472,24 +504,54 @@ impl Testbed {
                 let fi = self.collabs[c].fuse;
                 t = self.fuse_mounts[fi].ops(&mut self.env, t, READ_OPS.len() as u64);
                 t = self.meta_consult(c, path, t, mode, 1, false);
-                // reads are synchronous RPCs in rsize chunks to a DTN in
-                // the hosting DC
                 let dtn = self.dtn_in_dc(data_dc, c);
-                let rsize = self.cfg.nfs_rsize;
-                let mut off = offset;
-                let mut remaining = len;
-                while remaining > 0 {
-                    let span = rsize.min(remaining);
-                    let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, off, span);
+                if data_dc != home_dc && len >= self.cfg.xfer_threshold {
+                    // bulk remote read: the DTN stages the object once,
+                    // then the striped engine carries it across the WAN
+                    // (chunk checksums + retry included)
+                    let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, offset, len);
                     t = tn;
                     if miss > 0 {
-                        t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, off, miss);
-                        self.dtns[dtn].nfs.read_cache.fill(obj.0, off, span);
+                        t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, offset, miss);
+                        self.dtns[dtn].nfs.read_cache.fill(obj.0, offset, len);
                     }
-                    // payload back to the collaborator
-                    t = self.net.route(&mut self.env, data_dc, home_dc, t, span);
-                    off += span;
-                    remaining -= span;
+                    let req = TransferRequest {
+                        id: self.next_xfer_id(),
+                        owner: viewer.clone(),
+                        src_dc: data_dc,
+                        dst_dc: home_dc,
+                        bytes: len,
+                        priority: Priority::Interactive,
+                        submitted_at: t,
+                    };
+                    let engine = XferEngine::new(self.cfg.xfer.clone());
+                    let rep = engine.transfer(
+                        &mut self.env,
+                        &mut self.net,
+                        &req,
+                        &mut FaultInjector::none(),
+                        t,
+                    )?;
+                    t = rep.finished_at;
+                } else {
+                    // reads are synchronous RPCs in rsize chunks to a DTN
+                    // in the hosting DC
+                    let rsize = self.cfg.nfs_rsize;
+                    let mut off = offset;
+                    let mut remaining = len;
+                    while remaining > 0 {
+                        let span = rsize.min(remaining);
+                        let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, off, span);
+                        t = tn;
+                        if miss > 0 {
+                            t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, off, miss);
+                            self.dtns[dtn].nfs.read_cache.fill(obj.0, off, span);
+                        }
+                        // payload back to the collaborator
+                        t = self.net.route(&mut self.env, data_dc, home_dc, t, span);
+                        off += span;
+                        remaining -= span;
+                    }
                 }
                 let fi = self.collabs[c].fuse;
                 let copy = self.fuse_mounts[fi].copy;
@@ -510,6 +572,80 @@ impl Testbed {
         let in_dc: Vec<usize> =
             (0..self.dtns.len()).filter(|&i| self.dtns[i].dc == dc).collect();
         in_dc[c % in_dc.len()]
+    }
+
+    /// Allocate a transfer id (monotone per testbed).
+    fn next_xfer_id(&mut self) -> u64 {
+        self.next_xfer += 1;
+        self.next_xfer
+    }
+
+    /// Replicate `path`'s payload into `dst_dc` through the striped
+    /// transfer engine, optionally under fault injection — the dataset
+    /// fan-out / repair data plane. Creates a data replica in the
+    /// destination namespace + object store; collaborator `c` drives the
+    /// transfer and its clock advances to replica durability (the
+    /// destination PFS write completing).
+    pub fn bulk_replicate(
+        &mut self,
+        c: usize,
+        path: &str,
+        dst_dc: usize,
+        faults: &mut FaultInjector,
+    ) -> Result<TransferReport> {
+        let (src_dc, obj) = self.locate(path).ok_or_else(|| anyhow!("no such file {path}"))?;
+        if dst_dc >= self.dcs.len() {
+            bail!("no such data center dc{dst_dc}");
+        }
+        if src_dc == dst_dc {
+            bail!("{path} already lives in dc{dst_dc}");
+        }
+        // same visibility control as read(): the data plane must not
+        // leak payloads the driving collaborator cannot see
+        let driver = self.collabs[c].id.clone();
+        if !self.ns.visible_to(path, &driver) {
+            bail!("{path} not visible to {driver}");
+        }
+        let size = self.dcs[src_dc].store.len(obj).unwrap_or(0);
+        let t0 = self.collabs[c].now;
+        // source PFS streams the payload out
+        let t = self.dcs[src_dc].lustre.read(&mut self.env, t0, obj.0, 0, size);
+        let req = TransferRequest {
+            id: self.next_xfer_id(),
+            owner: driver,
+            src_dc,
+            dst_dc,
+            bytes: size,
+            priority: Priority::Bulk,
+            submitted_at: t,
+        };
+        let engine = XferEngine::new(self.cfg.xfer.clone());
+        let rep = engine.transfer(&mut self.env, &mut self.net, &req, faults, t)?;
+        // materialize the replica: real payloads are copied byte-for-byte
+        // (whatever their size); synthetic holes stay synthetic
+        let replica = if self.dcs[src_dc].store.is_hole(obj).unwrap_or(true) {
+            self.dcs[dst_dc].store.create_hole(size)
+        } else {
+            let raw = self.dcs[src_dc].store.read_all(obj)?;
+            let id = self.dcs[dst_dc].store.create();
+            self.dcs[dst_dc].store.write_at(id, 0, &raw)?;
+            id
+        };
+        let (owner, mtime, sync) = {
+            let e = self.dcs[src_dc]
+                .fs
+                .get(path)
+                .ok_or_else(|| anyhow!("{path} missing from dc{src_dc} namespace"))?;
+            (e.owner.clone(), e.mtime, e.sync)
+        };
+        self.dcs[dst_dc].fs.create_file(path, Some(replica), size, &owner, mtime)?;
+        if sync {
+            self.dcs[dst_dc].fs.set_sync(path, true);
+        }
+        // replica durability: the destination PFS absorbs the payload
+        let t_done = self.dcs[dst_dc].lustre.write(&mut self.env, rep.finished_at, replica.0, 0, size);
+        self.collabs[c].now = self.collabs[c].now.max(t_done);
+        Ok(rep)
     }
 
     /// `ls` of the collaboration workspace: fan-out to all metadata shards
@@ -553,6 +689,7 @@ impl Testbed {
             dtn.nfs.drop_caches();
         }
         self.env.reset();
+        self.net.reset_contention();
         for c in &mut self.collabs {
             c.now = 0.0;
         }
@@ -694,6 +831,92 @@ mod tests {
         assert!(tb.read(1, "/home/c0/secret.dat", 0, 4, AccessMode::Scispace).is_err());
         assert!(tb.ls(1, "/home").is_empty());
         assert_eq!(tb.ls(0, "/home").len(), 1);
+    }
+
+    #[test]
+    fn large_remote_read_uses_striped_engine() {
+        let mut tb = bed_with(2);
+        let len = 16u64 << 20; // above the 8 MiB bulk threshold
+        tb.write(0, "/collab/big.dat", 0, len, None, AccessMode::Scispace).unwrap();
+        let (data_dc, _) = tb.locate("/collab/big.dat").unwrap();
+        let other = tb.collabs.iter().position(|c| c.dc != data_dc).unwrap();
+        let before = tb.env.resource(tb.net.wan.res).total_bytes;
+        let bytes = tb.read(other, "/collab/big.dat", 0, len, AccessMode::Scispace).unwrap();
+        assert_eq!(bytes.len() as u64, len);
+        let after = tb.env.resource(tb.net.wan.res).total_bytes;
+        let carried = after - before;
+        // the payload crosses exactly once; metadata RPCs may add a few
+        // hundred bytes on top
+        assert!(
+            carried >= len && carried < len + 4096,
+            "bulk read must cross the WAN exactly once: carried {carried} for {len}"
+        );
+        assert_eq!(tb.net.wan_peak(), 1, "the engine registered the WAN transfer");
+    }
+
+    #[test]
+    fn small_reads_keep_the_rpc_path() {
+        let mut tb = bed_with(2);
+        tb.write(0, "/collab/small.dat", 0, 1 << 20, None, AccessMode::Scispace).unwrap();
+        let (data_dc, _) = tb.locate("/collab/small.dat").unwrap();
+        let other = tb.collabs.iter().position(|c| c.dc != data_dc).unwrap();
+        tb.read(other, "/collab/small.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
+        assert_eq!(tb.net.wan_peak(), 0, "below-threshold reads bypass the engine");
+    }
+
+    #[test]
+    fn bulk_replicate_copies_bytes_and_survives_faults() {
+        let mut tb = bed_with(2);
+        tb.cfg.xfer.chunk_bytes = 64 << 10;
+        let payload: Vec<u8> = (0..300_000u32).map(|i| (i % 251) as u8).collect();
+        tb.write(0, "/collab/ds.bin", 0, payload.len() as u64, Some(&payload), AccessMode::Scispace)
+            .unwrap();
+        let (src_dc, _) = tb.locate("/collab/ds.bin").unwrap();
+        let dst_dc = 1 - src_dc;
+        let mut faults = crate::xfer::FaultInjector::none();
+        faults.force_corrupt(1);
+        let rep = tb.bulk_replicate(0, "/collab/ds.bin", dst_dc, &mut faults).unwrap();
+        assert!(rep.retried_bytes > 0, "the corrupt chunk was re-sent");
+        assert!(rep.retried_bytes < rep.bytes, "only the corrupt chunk was re-sent");
+        let e = tb.dcs[dst_dc].fs.get("/collab/ds.bin").expect("replica in namespace");
+        let replica = tb.dcs[dst_dc].store.read_all(e.obj.unwrap()).unwrap();
+        assert_eq!(replica, payload, "replica must be byte-identical");
+        assert_eq!(
+            crate::xfer::checksum(&replica),
+            crate::xfer::checksum(&payload),
+            "chunk-verified replica digests agree"
+        );
+    }
+
+    #[test]
+    fn bulk_replicate_respects_namespace_visibility() {
+        let mut tb = bed_with(2);
+        tb.ns.define("priv", "c0", "/home/c0", crate::namespace::Scope::Local).unwrap();
+        tb.write(0, "/home/c0/secret.dat", 0, 64, Some(&[7u8; 64]), AccessMode::Scispace).unwrap();
+        let (src_dc, _) = tb.locate("/home/c0/secret.dat").unwrap();
+        let dst_dc = 1 - src_dc;
+        let mut faults = crate::xfer::FaultInjector::none();
+        let outsider = tb.collabs.iter().position(|c| c.id == "c1").unwrap();
+        assert!(
+            tb.bulk_replicate(outsider, "/home/c0/secret.dat", dst_dc, &mut faults).is_err(),
+            "the data plane must enforce namespace visibility"
+        );
+        assert!(tb.bulk_replicate(0, "/home/c0/secret.dat", dst_dc, &mut faults).is_ok());
+    }
+
+    #[test]
+    fn bulk_replicate_keeps_synthetic_objects_synthetic() {
+        let mut tb = bed_with(2);
+        let len = 128u64 << 20; // far above any materialize cap
+        tb.write(0, "/collab/huge.dat", 0, len, None, AccessMode::Scispace).unwrap();
+        let (src_dc, _) = tb.locate("/collab/huge.dat").unwrap();
+        let rep = tb
+            .bulk_replicate(0, "/collab/huge.dat", 1 - src_dc, &mut crate::xfer::FaultInjector::none())
+            .unwrap();
+        assert_eq!(rep.bytes, len);
+        let e = tb.dcs[1 - src_dc].fs.get("/collab/huge.dat").unwrap();
+        assert_eq!(tb.dcs[1 - src_dc].store.is_hole(e.obj.unwrap()), Some(true));
+        assert_eq!(tb.dcs[1 - src_dc].store.len(e.obj.unwrap()), Some(len));
     }
 
     #[test]

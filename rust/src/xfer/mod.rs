@@ -1,0 +1,469 @@
+//! `xfer` — the WAN bulk data-transfer engine (the data mover SCISPACE
+//! assumes but the paper never details).
+//!
+//! The paper's premise is that ESnet-class terabit WANs make bulk data
+//! motion between geo-distributed centers cheap enough to collaborate
+//! through one namespace. This layer makes that motion a first-class,
+//! measurable component instead of a single monolithic `route()` call:
+//!
+//! * [`stream`]    — a transfer is split into chunks striped across N
+//!   concurrent streams that share link bandwidth ([`crate::simclock`]
+//!   resources), so per-chunk latency pipelines while bytes still
+//!   serialize at the link floor (GridFTP-style striping).
+//! * [`sched`]     — a priority + per-collaboration fair-share queue
+//!   dispatches chunks across concurrent transfers, modeling contention
+//!   between collaborations on the shared WAN.
+//! * [`integrity`] — chunk checksums, deterministic fault injection
+//!   (corrupt chunk, dying stream) and retry of *only* the affected
+//!   chunks.
+//!
+//! The engine is consumed by [`crate::workspace`] (remote reads/writes
+//! above a size threshold), [`crate::metadata::replication`] (data-plane
+//! repair after a DTN outage), the `scispace xfer` CLI and the
+//! `fig_xfer_streams` bench.
+
+pub mod integrity;
+pub mod sched;
+pub mod stream;
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::simclock::SimEnv;
+use crate::simnet::{Link, Network};
+
+pub use integrity::{checksum, chunk_spans, Chunk, FaultInjector};
+pub use sched::{run_queue, TransferQueue};
+pub use stream::StreamSet;
+
+/// Transfer priority class; the weight steers both queue admission and
+/// per-chunk dispatch between concurrent transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Background scavenger traffic (weight 1).
+    Scavenger,
+    /// Bulk replication / dataset sync (weight 2).
+    Bulk,
+    /// Interactive collaborator reads (weight 8).
+    Interactive,
+}
+
+impl Priority {
+    /// Fair-share weight of the class.
+    pub fn weight(self) -> f64 {
+        match self {
+            Priority::Scavenger => 1.0,
+            Priority::Bulk => 2.0,
+            Priority::Interactive => 8.0,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Scavenger => "scavenger",
+            Priority::Bulk => "bulk",
+            Priority::Interactive => "interactive",
+        }
+    }
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct XferConfig {
+    /// Chunk size, bytes (GridFTP-style block).
+    pub chunk_bytes: u64,
+    /// Streams striped per transfer.
+    pub n_streams: usize,
+    /// Per-stream connection setup, seconds (paid in parallel).
+    pub stream_setup_s: f64,
+    /// Per-chunk ack processing, seconds.
+    pub ack_op_s: f64,
+    /// Endpoint checksum throughput, bytes/s (each side digests once).
+    pub checksum_bw: f64,
+    /// Retries allowed per chunk before the transfer fails.
+    pub max_retries: u32,
+}
+
+impl Default for XferConfig {
+    fn default() -> Self {
+        XferConfig {
+            chunk_bytes: 4 << 20,
+            n_streams: 8,
+            stream_setup_s: 500e-6,
+            ack_op_s: 20e-6,
+            checksum_bw: 10e9,
+            max_retries: 4,
+        }
+    }
+}
+
+/// One requested bulk transfer.
+#[derive(Debug, Clone)]
+pub struct TransferRequest {
+    /// Caller-chosen identifier (echoed in the report).
+    pub id: u64,
+    /// Owning collaboration (the fair-share key).
+    pub owner: String,
+    /// Source data center.
+    pub src_dc: usize,
+    /// Destination data center.
+    pub dst_dc: usize,
+    /// Payload size, bytes.
+    pub bytes: u64,
+    /// Priority class.
+    pub priority: Priority,
+    /// Virtual time the request was submitted.
+    pub submitted_at: f64,
+}
+
+/// Outcome of one completed transfer.
+#[derive(Debug, Clone)]
+pub struct TransferReport {
+    /// Request id.
+    pub id: u64,
+    /// Owning collaboration.
+    pub owner: String,
+    /// Priority class.
+    pub priority: Priority,
+    /// Payload bytes delivered (every chunk verified).
+    pub bytes: u64,
+    /// Chunks in the transfer.
+    pub chunks: u32,
+    /// Streams opened.
+    pub streams: usize,
+    /// Chunk deliveries that had to be repeated.
+    pub retried_chunks: u32,
+    /// Bytes of those repeated deliveries (always < `bytes` when only
+    /// some chunks fault — the whole point of chunk-level retry).
+    pub retried_bytes: u64,
+    /// Streams that died mid-transfer.
+    pub stream_drops: u32,
+    /// Virtual start time (first stream opened).
+    pub started_at: f64,
+    /// Virtual completion time (last chunk verified).
+    pub finished_at: f64,
+}
+
+impl TransferReport {
+    /// Wall (virtual) duration.
+    pub fn seconds(&self) -> f64 {
+        (self.finished_at - self.started_at).max(0.0)
+    }
+
+    /// Goodput in MB/s (payload only; retries don't count).
+    pub fn mbps(&self) -> f64 {
+        crate::util::units::mbps(self.bytes, self.seconds())
+    }
+}
+
+/// One in-flight transfer: streams + pending chunks + retry accounting.
+/// Exposed to [`sched`] so concurrent transfers can interleave at chunk
+/// granularity on the shared links.
+#[derive(Debug)]
+pub struct Flight {
+    /// The request being served.
+    pub req: TransferRequest,
+    path: Vec<Link>,
+    streams: StreamSet,
+    pending: VecDeque<Chunk>,
+    attempts: Vec<u32>,
+    delivered_bytes: u64,
+    report: TransferReport,
+}
+
+impl Flight {
+    /// Open streams and stage every chunk at virtual time `now`.
+    pub fn new(cfg: &XferConfig, net: &Network, req: &TransferRequest, now: f64) -> Flight {
+        let chunks = chunk_spans(req.bytes, cfg.chunk_bytes);
+        let width = cfg.n_streams.max(1).min(chunks.len().max(1));
+        let streams = StreamSet::new(width, now, cfg.stream_setup_s);
+        let attempts = vec![0u32; chunks.len()];
+        Flight {
+            req: req.clone(),
+            path: net.path(req.src_dc, req.dst_dc),
+            pending: chunks.into_iter().collect(),
+            attempts,
+            delivered_bytes: 0,
+            report: TransferReport {
+                id: req.id,
+                owner: req.owner.clone(),
+                priority: req.priority,
+                bytes: req.bytes,
+                chunks: 0,
+                streams: width,
+                retried_chunks: 0,
+                retried_bytes: 0,
+                stream_drops: 0,
+                started_at: now,
+                finished_at: now,
+            },
+            streams,
+        }
+    }
+
+    /// All chunks delivered and verified?
+    pub fn is_done(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Payload bytes verified so far, scaled by the priority weight —
+    /// the fair-share dispatch key (smallest goes next).
+    pub fn weighted_service(&self) -> f64 {
+        self.delivered_bytes as f64 / self.req.priority.weight()
+    }
+
+    /// Deliver one chunk: pick the earliest live stream, traverse the
+    /// path, verify, and either complete the chunk or re-queue it
+    /// (corrupt arrival / stream death). Errors once a chunk exhausts
+    /// its retry budget.
+    pub fn step(
+        &mut self,
+        cfg: &XferConfig,
+        env: &mut SimEnv,
+        faults: &mut FaultInjector,
+    ) -> Result<()> {
+        let Some(chunk) = self.pending.pop_front() else {
+            return Ok(());
+        };
+        let s = match self.streams.best_live() {
+            Some(s) => s,
+            None => {
+                // every stream died: reconnect one and keep going
+                let at = self.streams.horizon();
+                self.streams.revive(0, at, cfg.stream_setup_s);
+                0
+            }
+        };
+        let idx = chunk.index as usize;
+        self.attempts[idx] += 1;
+        if self.attempts[idx] > cfg.max_retries + 1 {
+            bail!(
+                "transfer {}: chunk {} exceeded {} retries",
+                self.req.id,
+                chunk.index,
+                cfg.max_retries
+            );
+        }
+        let t = self.streams.send_chunk(env, &self.path, s, chunk.len, cfg);
+        if faults.drops_stream(s, self.streams.sent(s)) {
+            // the carrying stream died; the chunk is not acked and must
+            // be re-sent on a surviving stream
+            self.streams.kill(s);
+            self.report.stream_drops += 1;
+            self.report.retried_chunks += 1;
+            self.report.retried_bytes += chunk.len;
+            self.pending.push_back(chunk);
+        } else if faults.corrupts(chunk.index, self.attempts[idx]) {
+            // checksum mismatch at the receiver: retry just this chunk
+            self.report.retried_chunks += 1;
+            self.report.retried_bytes += chunk.len;
+            self.pending.push_back(chunk);
+        } else {
+            self.delivered_bytes += chunk.len;
+            self.report.chunks += 1;
+            self.report.finished_at = self.report.finished_at.max(t);
+        }
+        Ok(())
+    }
+
+    /// Consume the flight into its report.
+    pub fn into_report(self) -> TransferReport {
+        self.report
+    }
+}
+
+/// The transfer engine: configuration + transfer execution.
+#[derive(Debug, Clone, Default)]
+pub struct XferEngine {
+    /// Tuning knobs.
+    pub cfg: XferConfig,
+}
+
+impl XferEngine {
+    /// Engine with the given configuration.
+    pub fn new(cfg: XferConfig) -> Self {
+        XferEngine { cfg }
+    }
+
+    /// Run one transfer to completion starting at `now`, charging the
+    /// shared network resources in `env`/`net`. Zero-byte transfers
+    /// complete instantly.
+    pub fn transfer(
+        &self,
+        env: &mut SimEnv,
+        net: &mut Network,
+        req: &TransferRequest,
+        faults: &mut FaultInjector,
+        now: f64,
+    ) -> Result<TransferReport> {
+        let mut flight = Flight::new(&self.cfg, net, req, now);
+        net.begin_transfer(req.src_dc, req.dst_dc);
+        let mut outcome = Ok(());
+        while !flight.is_done() {
+            if let Err(e) = flight.step(&self.cfg, env, faults) {
+                outcome = Err(e);
+                break;
+            }
+        }
+        net.end_transfer(req.src_dc, req.dst_dc);
+        outcome?;
+        Ok(flight.into_report())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetConfig;
+
+    fn setup() -> (SimEnv, Network) {
+        let mut env = SimEnv::new();
+        let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+        (env, net)
+    }
+
+    fn req(bytes: u64, streams: &str) -> TransferRequest {
+        TransferRequest {
+            id: 1,
+            owner: streams.to_string(),
+            src_dc: 0,
+            dst_dc: 1,
+            bytes,
+            priority: Priority::Bulk,
+            submitted_at: 0.0,
+        }
+    }
+
+    fn run(env: &mut SimEnv, net: &mut Network, cfg: XferConfig, bytes: u64) -> TransferReport {
+        let engine = XferEngine::new(cfg);
+        engine
+            .transfer(env, net, &req(bytes, "t"), &mut FaultInjector::none(), 0.0)
+            .expect("transfer")
+    }
+
+    #[test]
+    fn clean_transfer_delivers_every_chunk_once() {
+        let (mut env, mut net) = setup();
+        let rep = run(&mut env, &mut net, XferConfig::default(), 64 << 20);
+        assert_eq!(rep.chunks, 16);
+        assert_eq!(rep.retried_chunks, 0);
+        assert_eq!(rep.retried_bytes, 0);
+        assert_eq!(rep.bytes, 64 << 20);
+        assert!(rep.finished_at > rep.started_at);
+        // conservation: each link carried exactly the payload
+        assert_eq!(env.resource(net.wan.res).total_bytes, 64 << 20);
+        assert_eq!(env.resource(net.lans[0].res).total_bytes, 64 << 20);
+        assert_eq!(env.resource(net.lans[1].res).total_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn more_streams_transfer_faster_then_plateau() {
+        // Acceptance (a): time strictly decreases with stream count on a
+        // fixed WAN, then plateaus at the byte-serialization floor.
+        let total = 256 << 20;
+        let mut secs = Vec::new();
+        for s in [1usize, 2, 4, 8, 32] {
+            let (mut env, mut net) = setup();
+            let cfg = XferConfig { n_streams: s, ..XferConfig::default() };
+            let rep = run(&mut env, &mut net, cfg, total);
+            secs.push(rep.seconds());
+        }
+        assert!(secs[0] > secs[1], "1 -> 2 streams must speed up: {secs:?}");
+        assert!(secs[1] > secs[2], "2 -> 4 streams must speed up: {secs:?}");
+        assert!(secs[2] > secs[3], "4 -> 8 streams must speed up: {secs:?}");
+        // plateau: 8 -> 32 gains little compared to the 1 -> 8 drop
+        let early_gain = secs[0] - secs[3];
+        let late_gain = (secs[3] - secs[4]).max(0.0);
+        assert!(
+            late_gain < early_gain * 0.1,
+            "late gain {late_gain} should be a plateau vs {early_gain}: {secs:?}"
+        );
+        // and the floor is the link serialization time
+        let floor = total as f64 / NetConfig::paper_default().wan_bw;
+        assert!(secs[4] >= floor, "cannot beat the wire: {} < {floor}", secs[4]);
+    }
+
+    #[test]
+    fn corrupt_chunk_retries_only_that_chunk() {
+        // Acceptance (b): retried bytes < total bytes.
+        let (mut env, mut net) = setup();
+        let engine = XferEngine::new(XferConfig::default());
+        let mut faults = FaultInjector::none();
+        faults.force_corrupt(3);
+        let rep = engine
+            .transfer(&mut env, &mut net, &req(64 << 20, "c"), &mut faults, 0.0)
+            .expect("transfer");
+        assert_eq!(rep.chunks, 16, "all chunks must eventually deliver");
+        assert_eq!(rep.retried_chunks, 1);
+        assert_eq!(rep.retried_bytes, 4 << 20);
+        assert!(
+            rep.retried_bytes < rep.bytes,
+            "must not re-send the whole file"
+        );
+        // the retried chunk's bytes crossed the wire twice
+        assert_eq!(env.resource(net.wan.res).total_bytes, (64 << 20) + (4 << 20));
+    }
+
+    #[test]
+    fn dropped_stream_reassigns_chunks() {
+        let (mut env, mut net) = setup();
+        let engine = XferEngine::new(XferConfig { n_streams: 4, ..XferConfig::default() });
+        let mut faults = FaultInjector::none();
+        faults.force_drop(0, 2);
+        let rep = engine
+            .transfer(&mut env, &mut net, &req(64 << 20, "d"), &mut faults, 0.0)
+            .expect("transfer");
+        assert_eq!(rep.stream_drops, 1);
+        assert_eq!(rep.chunks, 16);
+        assert!(rep.retried_bytes >= 4 << 20, "the lost chunk was re-sent");
+    }
+
+    #[test]
+    fn total_stream_loss_reconnects() {
+        let (mut env, mut net) = setup();
+        let engine = XferEngine::new(XferConfig { n_streams: 2, ..XferConfig::default() });
+        let mut faults = FaultInjector::none();
+        faults.force_drop(0, 1);
+        faults.force_drop(1, 1);
+        let rep = engine
+            .transfer(&mut env, &mut net, &req(32 << 20, "r"), &mut faults, 0.0)
+            .expect("transfer survives total stream loss");
+        assert_eq!(rep.stream_drops, 2);
+        assert_eq!(rep.chunks, 8);
+    }
+
+    #[test]
+    fn persistent_corruption_fails_after_budget() {
+        let (mut env, mut net) = setup();
+        let engine = XferEngine::new(XferConfig { max_retries: 2, ..XferConfig::default() });
+        let mut faults = FaultInjector::with_seed(1);
+        faults.corrupt_rate = 1.0; // every delivery corrupt
+        let err = engine
+            .transfer(&mut env, &mut net, &req(8 << 20, "x"), &mut faults, 0.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("retries"), "{err}");
+    }
+
+    #[test]
+    fn zero_byte_transfer_is_instant() {
+        let (mut env, mut net) = setup();
+        let rep = run(&mut env, &mut net, XferConfig::default(), 0);
+        assert_eq!(rep.chunks, 0);
+        assert_eq!(rep.seconds(), 0.0);
+    }
+
+    #[test]
+    fn same_dc_transfer_stays_on_lan() {
+        let (mut env, mut net) = setup();
+        let engine = XferEngine::new(XferConfig::default());
+        let mut r = req(16 << 20, "l");
+        r.dst_dc = 0;
+        engine
+            .transfer(&mut env, &mut net, &r, &mut FaultInjector::none(), 0.0)
+            .expect("transfer");
+        assert_eq!(env.resource(net.wan.res).total_bytes, 0);
+        assert_eq!(env.resource(net.lans[0].res).total_bytes, 16 << 20);
+    }
+}

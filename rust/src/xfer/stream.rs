@@ -1,0 +1,173 @@
+//! Striped parallel streams: N logical connections over one network path.
+//!
+//! Each stream carries chunks stop-and-wait (send, checksum, ack) while
+//! all streams share the underlying link [`crate::simclock::Resource`]s —
+//! so bytes still serialize at link bandwidth, but the per-chunk latency
+//! and checksum overhead that throttles a single stream is paid in
+//! parallel. That is exactly why GridFTP-style movers stripe: transfer
+//! time falls with stream count until the link's byte-serialization floor
+//! is reached, then plateaus.
+
+use crate::simclock::SimEnv;
+use crate::simnet::{Link, Network};
+
+use super::XferConfig;
+
+/// The per-transfer stream group.
+#[derive(Debug, Clone)]
+pub struct StreamSet {
+    clocks: Vec<f64>,
+    live: Vec<bool>,
+    sent: Vec<u64>,
+    /// Latest chunk-completion time observed (the transfer makespan).
+    last_done: f64,
+}
+
+impl StreamSet {
+    /// Open `n` streams at virtual time `start`; connection setup is
+    /// paid once, in parallel, by every stream.
+    pub fn new(n: usize, start: f64, setup_s: f64) -> Self {
+        assert!(n > 0, "need at least one stream");
+        StreamSet {
+            clocks: vec![start + setup_s; n],
+            live: vec![true; n],
+            sent: vec![0; n],
+            last_done: start,
+        }
+    }
+
+    /// Number of streams opened (live or dead).
+    pub fn width(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Live streams remaining.
+    pub fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Chunks delivered by stream `s` (including retries it carried).
+    pub fn sent(&self, s: usize) -> u64 {
+        self.sent[s]
+    }
+
+    /// The live stream with the earliest local clock (deterministic:
+    /// lowest index wins ties), or `None` when every stream has died.
+    pub fn best_live(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for s in 0..self.clocks.len() {
+            if !self.live[s] {
+                continue;
+            }
+            match best {
+                Some(b) if self.clocks[b] <= self.clocks[s] => {}
+                _ => best = Some(s),
+            }
+        }
+        best
+    }
+
+    /// Carry one chunk of `len` bytes over `path` on stream `s`: traverse
+    /// every link (queueing behind all other streams and transfers on the
+    /// shared resources), checksum at both endpoints, then wait for the
+    /// ack to travel back. Returns the chunk completion time.
+    pub fn send_chunk(
+        &mut self,
+        env: &mut SimEnv,
+        path: &[Link],
+        s: usize,
+        len: u64,
+        cfg: &XferConfig,
+    ) -> f64 {
+        debug_assert!(self.live[s], "sending on a dead stream");
+        let mut t = self.clocks[s];
+        for link in path {
+            t = Network::send(env, *link, t, len);
+        }
+        // sender + receiver digest the chunk
+        if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
+            t += 2.0 * len as f64 / cfg.checksum_bw;
+        }
+        // ack rides back latency-only (it is a few bytes)
+        t += path.iter().map(|l| l.latency_s).sum::<f64>() + cfg.ack_op_s;
+        self.clocks[s] = t;
+        self.sent[s] += 1;
+        self.last_done = self.last_done.max(t);
+        t
+    }
+
+    /// Kill stream `s` (fail injection).
+    pub fn kill(&mut self, s: usize) {
+        self.live[s] = false;
+    }
+
+    /// Re-open stream `s` at time `at` (reconnect after total stream
+    /// loss) paying the connection setup again.
+    pub fn revive(&mut self, s: usize, at: f64, setup_s: f64) {
+        self.live[s] = true;
+        self.clocks[s] = at + setup_s;
+    }
+
+    /// Latest clock across all streams (used for reconnect timing).
+    pub fn horizon(&self) -> f64 {
+        self.clocks.iter().copied().fold(self.last_done, f64::max)
+    }
+
+    /// Latest chunk completion observed so far.
+    pub fn makespan(&self) -> f64 {
+        self.last_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetConfig;
+
+    fn setup() -> (SimEnv, Network, XferConfig) {
+        let mut env = SimEnv::new();
+        let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+        (env, net, XferConfig::default())
+    }
+
+    #[test]
+    fn single_stream_serializes_chunks() {
+        let (mut env, net, cfg) = setup();
+        let path = net.path(0, 1);
+        let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        let t1 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg);
+        let t2 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg);
+        assert!(t2 > t1);
+        assert_eq!(ss.sent(0), 2);
+        assert!((ss.makespan() - t2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streams_share_link_bytes() {
+        let (mut env, net, cfg) = setup();
+        let path = net.path(0, 1);
+        let mut ss = StreamSet::new(4, 0.0, cfg.stream_setup_s);
+        for _ in 0..8 {
+            let s = ss.best_live().unwrap();
+            ss.send_chunk(&mut env, &path, s, 1 << 20, &cfg);
+        }
+        // every link carried all bytes exactly once per chunk
+        assert_eq!(env.resource(net.wan.res).total_bytes, 8 << 20);
+        assert_eq!(env.resource(net.lans[0].res).total_bytes, 8 << 20);
+        assert_eq!(env.resource(net.lans[1].res).total_bytes, 8 << 20);
+    }
+
+    #[test]
+    fn best_live_skips_dead_streams() {
+        let (_env, _net, cfg) = setup();
+        let mut ss = StreamSet::new(3, 0.0, cfg.stream_setup_s);
+        ss.kill(0);
+        assert_eq!(ss.best_live(), Some(1));
+        ss.kill(1);
+        ss.kill(2);
+        assert_eq!(ss.best_live(), None);
+        assert_eq!(ss.live_count(), 0);
+        ss.revive(2, 1.0, cfg.stream_setup_s);
+        assert_eq!(ss.best_live(), Some(2));
+    }
+}

@@ -1,0 +1,253 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment cannot reach crates.io, so this vendored crate
+//! provides the (small) subset of the real `anyhow` API the workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros and the [`Context`] extension trait. Error values carry a chain
+//! of human-readable messages; `{}` displays the outermost message and
+//! `{:#}` the whole chain joined with `": "`, matching `anyhow`'s
+//! formatting contract closely enough for CLI output and tests.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-chain error type (drop-in for `anyhow::Error`).
+///
+/// `chain[0]` is the root cause; later entries are contexts added with
+/// [`Context::context`] (outermost last).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result`: a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first.
+            let mut first = true;
+            for msg in self.chain.iter().rev() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket conversion below coherent (same trick as the
+// real `anyhow`).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        let mut src: Option<&(dyn StdError + 'static)> = Some(&e);
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        chain.reverse(); // root cause first
+        Error { chain }
+    }
+}
+
+mod private {
+    use super::{Error, StdError};
+
+    /// Sealed conversion used by [`super::Context`] so the trait applies
+    /// both to `Result<T, E: std::error::Error>` and `Result<T, Error>`.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option` (drop-in for `anyhow::Context`).
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                stringify!($cond)
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing"))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e2 = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 and 2");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(n: i32) -> Result<i32> {
+            if n < 0 {
+                bail!("negative {n}");
+            }
+            Ok(n)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative -2");
+    }
+
+    #[test]
+    fn ensure_checks() {
+        fn f(n: i32) -> Result<i32> {
+            ensure!(n > 0, "need positive, got {n}");
+            Ok(n)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(0).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let e: Error = io_fail().context("frame header").unwrap_err();
+        assert_eq!(e.to_string(), "frame header");
+        assert_eq!(format!("{e:#}"), "frame header: missing");
+        let e = e.context("outer");
+        assert_eq!(format!("{e:#}"), "outer: frame header: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn with_context_and_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("slot {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 7");
+        let r: Result<u32> = Err(anyhow!("root"));
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: root");
+    }
+}
