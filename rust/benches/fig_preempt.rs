@@ -1,0 +1,26 @@
+//! Fig preempt: Interactive tail latency vs Bulk background load.
+//!
+//! Interactive transfers arrive against Bulk traffic saturating the
+//! WAN, drained through the event-driven flow scheduler — once with
+//! preemption off (weighted processor sharing only) and once with
+//! preemption on (an Interactive arrival pauses every admitted Bulk
+//! flow mid-transfer, resumed when the burst drains). Expected shape:
+//! Interactive p50/p99 strictly lower with preemption, Bulk makespan
+//! strictly higher — the scheduler trades background throughput for
+//! foreground tail latency.
+//!
+//! Run: `cargo bench --bench fig_preempt [-- --interactive 32M --bulk 1G]`
+
+use scispace::bench::{fig_preempt, print_preempt};
+use scispace::util::cli::Args;
+use scispace::util::units::parse_bytes;
+
+fn main() {
+    let args = Args::from_env();
+    let interactive = parse_bytes(&args.opt("interactive", "32M")).unwrap_or(32 << 20);
+    let bulk = parse_bytes(&args.opt("bulk", "1G")).unwrap_or(1 << 30);
+    let n_interactive: usize = args.opt_parse("arrivals", 16);
+    let n_bulk: usize = args.opt_parse("bulk-transfers", 4);
+    let rows = fig_preempt(n_interactive, interactive, n_bulk, bulk);
+    print_preempt(&rows);
+}

@@ -9,16 +9,18 @@
 //! target, not absolute MB/s.
 
 use crate::db::Value;
+use crate::engine::Engine;
 use crate::meu;
 use crate::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
 use crate::shdf;
-use crate::simclock::SimEnv;
 use crate::simnet::{NetConfig, Network};
+use crate::util::timer::percentile_sorted as percentile;
 use crate::util::units::{fmt_bytes, fmt_secs};
 use crate::workload::{self, IorConfig, ModisConfig};
 use crate::workspace::{AccessMode, Testbed, TestbedConfig};
 use crate::xfer::{
-    run_queue, FaultInjector, Priority, TransferQueue, TransferRequest, XferConfig, XferEngine,
+    run_flows, run_queue, FaultInjector, Priority, TransferQueue, TransferRequest, XferConfig,
+    XferEngine,
 };
 
 /// Build the scaled bench testbed (see module docs).
@@ -438,7 +440,7 @@ pub fn fig_xfer_streams_cfg(
     stream_counts
         .iter()
         .map(|&s| {
-            let mut env = SimEnv::new();
+            let mut env = Engine::new();
             let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
             let engine = XferEngine::new(XferConfig { n_streams: s, ..base.clone() });
             let req = TransferRequest {
@@ -482,7 +484,7 @@ pub struct XferMixRow {
 /// priority/fair-share scheduler. Shows (a) weighted bandwidth sharing
 /// and (b) the interactive transfer finishing first despite equal size.
 pub fn fig_xfer_mix(per_transfer: u64) -> Vec<XferMixRow> {
-    let mut env = SimEnv::new();
+    let mut env = Engine::new();
     let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
     let engine = XferEngine::new(XferConfig::default());
     let mut queue = TransferQueue::new();
@@ -526,6 +528,119 @@ pub fn fig_xfer_mix(per_transfer: u64) -> Vec<XferMixRow> {
             wan_peak: peak,
         })
         .collect()
+}
+
+/// One `fig_preempt` row: Interactive latency under Bulk background
+/// load, with or without scheduler preemption.
+#[derive(Debug, Clone)]
+pub struct PreemptRow {
+    /// Preemption enabled?
+    pub preempt: bool,
+    /// Median Interactive submission-to-completion latency, seconds.
+    pub interactive_p50_s: f64,
+    /// 99th-percentile Interactive latency, seconds.
+    pub interactive_p99_s: f64,
+    /// Mean Interactive latency, seconds.
+    pub interactive_mean_s: f64,
+    /// When the last Bulk transfer finished (the price paid), seconds.
+    pub bulk_makespan_s: f64,
+}
+
+/// `fig_preempt`: Interactive arrivals against saturating Bulk
+/// background traffic on one WAN, through the event-driven flow
+/// scheduler — once with preemption off (classes share links by weight
+/// only) and once with preemption on (an Interactive arrival pauses
+/// every admitted Bulk flow mid-transfer). The ROADMAP's scheduler-
+/// preemption item, made measurable: Interactive p50/p99 drop, Bulk
+/// makespan grows.
+pub fn fig_preempt(
+    n_interactive: usize,
+    interactive_bytes: u64,
+    n_bulk: usize,
+    bulk_bytes: u64,
+) -> Vec<PreemptRow> {
+    let wire = NetConfig::paper_default().wan_bw;
+    // spread the interactive arrivals across the bulk work's wire time,
+    // so every arrival lands while Bulk still saturates the WAN
+    let span = (n_bulk as u64 * bulk_bytes) as f64 / wire;
+    let mut reqs: Vec<TransferRequest> = Vec::new();
+    for b in 0..n_bulk {
+        reqs.push(TransferRequest {
+            id: b as u64,
+            owner: format!("bulk{b}"),
+            src_dc: 0,
+            dst_dc: 1,
+            bytes: bulk_bytes,
+            priority: Priority::Bulk,
+            submitted_at: 0.0,
+        });
+    }
+    for k in 0..n_interactive {
+        reqs.push(TransferRequest {
+            id: 1000 + k as u64,
+            owner: format!("analyst{k}"),
+            src_dc: 0,
+            dst_dc: 1,
+            bytes: interactive_bytes,
+            priority: Priority::Interactive,
+            submitted_at: span * (k as f64 + 0.5) / n_interactive as f64,
+        });
+    }
+    [false, true]
+        .iter()
+        .map(|&preempt| {
+            let mut env = Engine::new();
+            let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
+            let reports = run_flows(&mut env, &mut net, &XferConfig::default(), &reqs, preempt);
+            assert_eq!(reports.len(), reqs.len(), "every transfer must complete");
+            let mut lats: Vec<f64> = reports
+                .iter()
+                .filter(|r| r.priority == Priority::Interactive)
+                .map(|r| r.latency())
+                .collect();
+            lats.sort_by(f64::total_cmp);
+            let bulk_makespan_s = reports
+                .iter()
+                .filter(|r| r.priority == Priority::Bulk)
+                .map(|r| r.finished_at)
+                .fold(0.0, f64::max);
+            PreemptRow {
+                preempt,
+                interactive_p50_s: percentile(&lats, 0.50),
+                interactive_p99_s: percentile(&lats, 0.99),
+                interactive_mean_s: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
+                bulk_makespan_s,
+            }
+        })
+        .collect()
+}
+
+/// Print `fig_preempt` rows.
+pub fn print_preempt(rows: &[PreemptRow]) {
+    println!("\n== Fig preempt: Interactive tail latency vs Bulk background ==");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>14}",
+        "preempt", "int-p50", "int-p99", "int-mean", "bulk-makespan"
+    );
+    for r in rows {
+        println!(
+            "{:>10} {:>12} {:>12} {:>12} {:>14}",
+            if r.preempt { "on" } else { "off" },
+            fmt_secs(r.interactive_p50_s),
+            fmt_secs(r.interactive_p99_s),
+            fmt_secs(r.interactive_mean_s),
+            fmt_secs(r.bulk_makespan_s)
+        );
+    }
+    if let (Some(off), Some(on)) =
+        (rows.iter().find(|r| !r.preempt), rows.iter().find(|r| r.preempt))
+    {
+        println!(
+            "p99 gain: {:.1}% lower with preemption (bulk pays {:.1}% longer makespan)",
+            (off.interactive_p99_s - on.interactive_p99_s) / off.interactive_p99_s * 100.0,
+            (on.bulk_makespan_s - off.bulk_makespan_s) / off.bulk_makespan_s * 100.0
+        );
+    }
 }
 
 /// Print `fig_xfer_streams` rows.
@@ -700,6 +815,33 @@ mod tests {
         assert!(
             finish("analyst") < finish("climate").min(finish("genomics")),
             "interactive must beat bulk: {rows:?}"
+        );
+    }
+
+    #[test]
+    fn fig_preempt_lowers_interactive_tail() {
+        // Tentpole acceptance: Interactive p99 strictly lower with
+        // preemption than without, under Bulk background load.
+        let rows = fig_preempt(8, 32 << 20, 3, 512 << 20);
+        let off = rows.iter().find(|r| !r.preempt).expect("off row");
+        let on = rows.iter().find(|r| r.preempt).expect("on row");
+        assert!(
+            on.interactive_p99_s < off.interactive_p99_s,
+            "preemption must cut the tail: on={} off={}",
+            on.interactive_p99_s,
+            off.interactive_p99_s
+        );
+        assert!(
+            on.interactive_p50_s <= off.interactive_p50_s,
+            "the median must not regress: on={} off={}",
+            on.interactive_p50_s,
+            off.interactive_p50_s
+        );
+        assert!(
+            on.bulk_makespan_s >= off.bulk_makespan_s,
+            "the win is paid by bulk, not conjured: on={} off={}",
+            on.bulk_makespan_s,
+            off.bulk_makespan_s
         );
     }
 

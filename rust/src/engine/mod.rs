@@ -1,0 +1,858 @@
+//! Discrete-event simulation core: a deterministic event queue plus
+//! processor-sharing links and FIFO servers.
+//!
+//! This is the time model the rest of the simulated testbed runs on.
+//! Two resource kinds exist:
+//!
+//! * [`PsLink`] — a *processor-sharing* link. Every flow currently in
+//!   service receives `bandwidth * weight / total_weight`; whenever a
+//!   flow joins, leaves, pauses or resumes, the engine advances every
+//!   co-resident flow's residual bytes to the event time and recomputes
+//!   each projected finish. This is what lets two concurrent WAN
+//!   transfers *share* the wire (each finishing in ~2x the solo time)
+//!   instead of serializing back-to-back — the contention behaviour the
+//!   paper's interference figures depend on, and the one the old
+//!   `busy_until` horizon could not express.
+//! * [`Server`] — a FIFO server with a per-op latency and a streaming
+//!   bandwidth (an OST, an NFS daemon, a metadata-service CPU). A single
+//!   FIFO server's completion times are identical whether computed
+//!   eagerly at admission or replayed through an event queue, so the
+//!   engine keeps the closed-form `busy_until` arithmetic for servers
+//!   and reserves events for the resources where ordering actually
+//!   changes outcomes: shared links.
+//!
+//! ## Flows
+//!
+//! A [`FlowId`] traverses its path hop-by-hop (store-and-forward, like
+//! the bulk movers it models): it serializes its payload through hop
+//! `i` under processor sharing, pays that hop's propagation latency,
+//! then arrives at hop `i+1`. For an *uncontended* flow this reproduces
+//! the legacy busy-horizon cost `Σ (bytes/bw_i + latency_i)` bit for
+//! bit (see `tests/engine_model.rs`), which is what keeps the two time
+//! models equivalent on every sequential call site.
+//!
+//! Flows support [`Engine::pause`] / [`Engine::resume`]: a paused flow
+//! is removed from its link (the survivors immediately speed up) and
+//! keeps its residual byte count; resuming rejoins the current hop.
+//! This is the primitive the `xfer` scheduler's Interactive-preempts-
+//! Bulk policy is built on.
+//!
+//! ## Determinism
+//!
+//! The event queue is ordered by `(time, sequence)` — ties broken by
+//! insertion sequence number — and every per-link flow set iterates in
+//! ascending flow id. Two runs of the same seeded workload therefore
+//! produce byte-identical event traces ([`Engine::record_trace`]), the
+//! property the reproducibility story depends on.
+//!
+//! ## Causality and the per-link clamp
+//!
+//! The engine never rewinds a link: a flow arriving at a link whose
+//! flows have already been advanced to `last_update > t_arrive` joins
+//! at `last_update`. Sequential callers that start one flow and
+//! immediately block on [`Engine::completion`] therefore see exactly
+//! the old serialize-behind-the-horizon behaviour; callers that want
+//! true sharing submit every concurrent flow *before* draining the
+//! queue (as the event-driven `xfer` scheduler does).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Handle to a FIFO server registered in an [`Engine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ServerId(pub usize);
+
+/// Handle to a processor-sharing link registered in an [`Engine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LinkId(pub usize);
+
+/// Handle to a flow started with [`Engine::start_flow`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowId(pub usize);
+
+/// A FIFO-served component with per-op latency and streaming bandwidth.
+///
+/// Kept arithmetically identical to the pre-event-core `Resource` so the
+/// `simclock` compatibility shim is exact.
+#[derive(Debug, Clone)]
+pub struct Server {
+    /// Human-readable name (for traces and debugging).
+    pub name: String,
+    /// Fixed cost per operation, seconds (seek, RPC handling, syscall...).
+    pub per_op_s: f64,
+    /// Streaming bandwidth, bytes/second (`f64::INFINITY` = latency-only).
+    pub bytes_per_s: f64,
+    /// Horizon up to which the server is already committed.
+    pub busy_until: f64,
+    /// Total bytes pushed through (for utilization reports).
+    pub total_bytes: u64,
+    /// Total operations served.
+    pub total_ops: u64,
+}
+
+/// A processor-sharing link: all in-service flows split the bandwidth
+/// in proportion to their weights.
+#[derive(Debug, Clone)]
+pub struct PsLink {
+    /// Human-readable name.
+    pub name: String,
+    /// Link bandwidth, bytes/second.
+    pub bytes_per_s: f64,
+    /// One-way propagation latency, seconds, paid after serialization.
+    pub latency_s: f64,
+    /// Payload bytes fully carried (counted at hop completion).
+    pub total_bytes: u64,
+    /// Hop completions served.
+    pub total_flows: u64,
+    /// Virtual time the in-service flows' residuals were last advanced to.
+    last_update: f64,
+    /// Flows currently in service, ascending by flow index (determinism).
+    active: Vec<usize>,
+}
+
+impl PsLink {
+    /// Number of flows currently in service.
+    pub fn active_flows(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Virtual time this link last made progress (its causality floor).
+    pub fn last_update(&self) -> f64 {
+        self.last_update
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FlowState {
+    /// An arrival event is pending (initial start or inter-hop transit).
+    Scheduled,
+    /// In service on `path[hop]`.
+    InService,
+    /// Removed from service; residual bytes retained.
+    Paused,
+    /// All hops served; `finished_at` is valid.
+    Done,
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    path: Vec<LinkId>,
+    bytes: u64,
+    weight: f64,
+    hop: usize,
+    /// Bytes left to serialize on the current hop.
+    remaining: f64,
+    state: FlowState,
+    /// Event-invalidation generation: any membership change on the
+    /// flow's link bumps this, orphaning stale heap entries.
+    gen: u64,
+    /// Time of the currently-scheduled arrival (valid while `Scheduled`).
+    next_arrival: f64,
+    /// Arrival time captured when a pause lands before the arrival fired.
+    held_arrival: Option<f64>,
+    started_at: f64,
+    finished_at: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    Arrive { flow: usize, gen: u64 },
+    HopDone { flow: usize, gen: u64 },
+    Control { tag: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// What [`Engine::run_next`] surfaced to the caller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Occurrence {
+    /// A flow served its last hop; `at` includes the final latency.
+    FlowDone {
+        /// The completed flow.
+        flow: FlowId,
+        /// Completion time (virtual seconds).
+        at: f64,
+    },
+    /// A control event scheduled with [`Engine::schedule_control`] fired.
+    Control {
+        /// Caller-chosen tag.
+        tag: u64,
+        /// Fire time (virtual seconds).
+        at: f64,
+    },
+    /// The event queue is empty.
+    Idle,
+}
+
+/// The discrete-event simulation environment: servers, links, flows and
+/// the time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct Engine {
+    servers: Vec<Server>,
+    links: Vec<PsLink>,
+    flows: Vec<Flow>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now: f64,
+    trace: Option<Vec<String>>,
+}
+
+impl Engine {
+    /// Create an empty engine.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---------------------------------------------------------------- servers
+
+    /// Register a FIFO server; returns its id.
+    pub fn add_server(&mut self, name: &str, per_op_s: f64, bytes_per_s: f64) -> ServerId {
+        self.servers.push(Server {
+            name: name.to_string(),
+            per_op_s,
+            bytes_per_s,
+            busy_until: 0.0,
+            total_bytes: 0,
+            total_ops: 0,
+        });
+        ServerId(self.servers.len() - 1)
+    }
+
+    /// Immutable view of a server.
+    pub fn server(&self, id: ServerId) -> &Server {
+        &self.servers[id.0]
+    }
+
+    /// Serve `bytes` through the server for an actor whose local clock is
+    /// `now`; returns the completion time. The request queues behind any
+    /// earlier committed work, pays one `per_op_s`, then streams at
+    /// `bytes_per_s`.
+    pub fn serve(&mut self, id: ServerId, now: f64, bytes: u64) -> f64 {
+        let r = &mut self.servers[id.0];
+        let start = now.max(r.busy_until);
+        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
+            bytes as f64 / r.bytes_per_s
+        } else {
+            0.0
+        };
+        let end = start + r.per_op_s + xfer;
+        r.busy_until = end;
+        r.total_bytes += bytes;
+        r.total_ops += 1;
+        end
+    }
+
+    /// Serve `n_ops` zero-byte operations back-to-back (metadata traffic).
+    pub fn serve_ops(&mut self, id: ServerId, now: f64, n_ops: u64) -> f64 {
+        let r = &mut self.servers[id.0];
+        let start = now.max(r.busy_until);
+        let end = start + r.per_op_s * n_ops as f64;
+        r.busy_until = end;
+        r.total_ops += n_ops;
+        end
+    }
+
+    /// Occupy the server for a fixed duration (CPU-bound service work);
+    /// returns the completion time.
+    pub fn serve_for(&mut self, id: ServerId, now: f64, seconds: f64) -> f64 {
+        let r = &mut self.servers[id.0];
+        let start = now.max(r.busy_until);
+        let end = start + seconds;
+        r.busy_until = end;
+        r.total_ops += 1;
+        end
+    }
+
+    /// Non-queuing cost estimate: what `bytes` would take on an idle copy
+    /// of the server (capacity planning / roofline reports).
+    pub fn idle_cost(&self, id: ServerId, bytes: u64) -> f64 {
+        let r = &self.servers[id.0];
+        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
+            bytes as f64 / r.bytes_per_s
+        } else {
+            0.0
+        };
+        r.per_op_s + xfer
+    }
+
+    // ------------------------------------------------------------------ links
+
+    /// Register a processor-sharing link; returns its id.
+    pub fn add_link(&mut self, name: &str, bytes_per_s: f64, latency_s: f64) -> LinkId {
+        self.links.push(PsLink {
+            name: name.to_string(),
+            bytes_per_s,
+            latency_s,
+            total_bytes: 0,
+            total_flows: 0,
+            last_update: 0.0,
+            active: Vec::new(),
+        });
+        LinkId(self.links.len() - 1)
+    }
+
+    /// Immutable view of a link.
+    pub fn link(&self, id: LinkId) -> &PsLink {
+        &self.links[id.0]
+    }
+
+    // ------------------------------------------------------------------ flows
+
+    /// Start a flow of `bytes` over `path` at virtual time `at` with the
+    /// given fair-share `weight`. The flow serializes hop-by-hop under
+    /// processor sharing; drive it with [`Engine::completion`] or
+    /// [`Engine::run_next`].
+    pub fn start_flow(&mut self, path: &[LinkId], bytes: u64, at: f64, weight: f64) -> FlowId {
+        assert!(!path.is_empty(), "a flow needs at least one hop");
+        assert!(weight > 0.0, "flow weight must be positive");
+        let id = self.flows.len();
+        self.flows.push(Flow {
+            path: path.to_vec(),
+            bytes,
+            weight,
+            hop: 0,
+            remaining: bytes as f64,
+            state: FlowState::Scheduled,
+            gen: 0,
+            next_arrival: at,
+            held_arrival: None,
+            started_at: at,
+            finished_at: f64::NAN,
+        });
+        self.schedule_arrive(id, at);
+        FlowId(id)
+    }
+
+    /// The flow's completion time, if it has finished.
+    pub fn flow_finish(&self, f: FlowId) -> Option<f64> {
+        let fl = &self.flows[f.0];
+        if fl.state == FlowState::Done {
+            Some(fl.finished_at)
+        } else {
+            None
+        }
+    }
+
+    /// Drive the event queue until `f` completes; returns its finish time
+    /// (final-hop latency included). Panics if the queue drains first —
+    /// that means the flow was left paused.
+    ///
+    /// Control events that come due while blocking are *not* consumed:
+    /// they are re-enqueued (in their original relative order, at their
+    /// original times) so an outer scheduler loop still observes them.
+    pub fn completion(&mut self, f: FlowId) -> f64 {
+        let mut held_controls: Vec<(f64, u64)> = Vec::new();
+        let finish = loop {
+            if self.flows[f.0].state == FlowState::Done {
+                break self.flows[f.0].finished_at;
+            }
+            match self.run_next() {
+                Occurrence::Idle => {
+                    panic!("event queue drained before flow {} completed (still paused?)", f.0)
+                }
+                Occurrence::Control { tag, at } => held_controls.push((at, tag)),
+                Occurrence::FlowDone { .. } => {}
+            }
+        };
+        for (at, tag) in held_controls {
+            self.schedule_control(at, tag);
+        }
+        finish
+    }
+
+    /// Remove a flow from service (or hold its pending arrival). The
+    /// survivors on its link immediately recompute to larger shares; the
+    /// flow keeps its residual bytes for [`Engine::resume`]. No-op on
+    /// done or already-paused flows.
+    pub fn pause(&mut self, f: FlowId) {
+        let i = f.0;
+        match self.flows[i].state {
+            FlowState::InService => {
+                let l = self.flows[i].path[self.flows[i].hop].0;
+                let t = self.now.max(self.links[l].last_update);
+                self.advance_link(l, t);
+                if let Ok(pos) = self.links[l].active.binary_search(&i) {
+                    self.links[l].active.remove(pos);
+                }
+                self.flows[i].gen += 1; // orphan its HopDone
+                self.flows[i].state = FlowState::Paused;
+                self.flows[i].held_arrival = None;
+                self.reschedule_link(l, t);
+                if self.trace.is_some() {
+                    let msg = format!("{:.9} pause f{i} rem={:.0}", t, self.flows[i].remaining);
+                    self.trace_push(msg);
+                }
+            }
+            FlowState::Scheduled => {
+                self.flows[i].gen += 1; // orphan the pending arrival
+                self.flows[i].held_arrival = Some(self.flows[i].next_arrival);
+                self.flows[i].state = FlowState::Paused;
+                if self.trace.is_some() {
+                    let msg = format!("{:.9} pause f{i} (held arrival)", self.now);
+                    self.trace_push(msg);
+                }
+            }
+            FlowState::Paused | FlowState::Done => {}
+        }
+    }
+
+    /// Resume a paused flow at virtual time `at` (clamped so the engine
+    /// never rewinds): it rejoins its current hop with its residual
+    /// bytes, or re-fires a held arrival. No-op unless paused.
+    pub fn resume(&mut self, f: FlowId, at: f64) {
+        let i = f.0;
+        if self.flows[i].state != FlowState::Paused {
+            return;
+        }
+        let at = at.max(self.now);
+        let when = match self.flows[i].held_arrival.take() {
+            Some(ta) => ta.max(at),
+            None => at,
+        };
+        if self.trace.is_some() {
+            let msg = format!("{when:.9} resume f{i}");
+            self.trace_push(msg);
+        }
+        self.schedule_arrive(i, when);
+    }
+
+    /// Schedule a control event; [`Engine::run_next`] surfaces it as
+    /// [`Occurrence::Control`] in time order with the flow events.
+    pub fn schedule_control(&mut self, t: f64, tag: u64) {
+        self.push_event(t, EventKind::Control { tag });
+    }
+
+    /// Process events until something notable happens (a flow completes,
+    /// a control event fires) or the queue drains.
+    pub fn run_next(&mut self) -> Occurrence {
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            if ev.t > self.now {
+                self.now = ev.t;
+            }
+            if let Some(occ) = self.process(ev) {
+                return occ;
+            }
+        }
+        Occurrence::Idle
+    }
+
+    /// Drain the event queue completely.
+    pub fn run_until_idle(&mut self) {
+        while !matches!(self.run_next(), Occurrence::Idle) {}
+    }
+
+    /// Time of the most recently processed event.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Latest committed-work horizon across servers, links, completed
+    /// flows and still-pending events.
+    ///
+    /// Unlike the old busy-horizon model (which committed every cost at
+    /// admission), an in-flight flow's completion beyond its *next*
+    /// scheduled event is not knowable without simulating — so this is
+    /// a quiescence time only once the queue has been drained
+    /// ([`Engine::run_until_idle`]); with work still queued it is a
+    /// lower bound.
+    pub fn horizon(&self) -> f64 {
+        let s = self.servers.iter().map(|r| r.busy_until).fold(self.now, f64::max);
+        let l = self.links.iter().map(|r| r.last_update).fold(s, f64::max);
+        let f = self
+            .flows
+            .iter()
+            .filter(|f| f.state == FlowState::Done)
+            .map(|f| f.finished_at)
+            .fold(l, f64::max);
+        self.heap.iter().map(|r| r.0.t).fold(f, f64::max)
+    }
+
+    /// Reset all horizons, counters, flows and pending events (between
+    /// experiment iterations, mirroring the paper's cache drop).
+    pub fn reset(&mut self) {
+        for r in &mut self.servers {
+            r.busy_until = 0.0;
+            r.total_bytes = 0;
+            r.total_ops = 0;
+        }
+        for l in &mut self.links {
+            l.last_update = 0.0;
+            l.total_bytes = 0;
+            l.total_flows = 0;
+            l.active.clear();
+        }
+        self.flows.clear();
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+        if let Some(t) = &mut self.trace {
+            t.clear();
+        }
+    }
+
+    /// Toggle event-trace recording (used by the determinism tests).
+    pub fn record_trace(&mut self, on: bool) {
+        self.trace = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// The recorded event trace (empty when recording is off).
+    pub fn trace(&self) -> &[String] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+
+    // -------------------------------------------------------------- internals
+
+    fn push_event(&mut self, t: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Event { t, seq, kind }));
+    }
+
+    fn schedule_arrive(&mut self, f: usize, at: f64) {
+        self.flows[f].gen += 1;
+        let gen = self.flows[f].gen;
+        self.flows[f].next_arrival = at;
+        self.flows[f].state = FlowState::Scheduled;
+        self.push_event(at, EventKind::Arrive { flow: f, gen });
+    }
+
+    /// Progress every in-service flow on link `l` to time `t >=
+    /// last_update` at its current share.
+    fn advance_link(&mut self, l: usize, t: f64) {
+        let dt = t - self.links[l].last_update;
+        if dt > 0.0 && !self.links[l].active.is_empty() {
+            let bw = self.links[l].bytes_per_s;
+            let active = self.links[l].active.clone();
+            if bw.is_finite() {
+                let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
+                for f in active {
+                    let share = bw * (self.flows[f].weight / total_w);
+                    self.flows[f].remaining = (self.flows[f].remaining - dt * share).max(0.0);
+                }
+            } else {
+                for f in active {
+                    self.flows[f].remaining = 0.0;
+                }
+            }
+        }
+        if t > self.links[l].last_update {
+            self.links[l].last_update = t;
+        }
+    }
+
+    /// Recompute and (re)schedule every in-service flow's projected hop
+    /// completion on link `l`, as of time `t` (= `last_update`).
+    fn reschedule_link(&mut self, l: usize, t: f64) {
+        let active = self.links[l].active.clone();
+        if active.is_empty() {
+            return;
+        }
+        let bw = self.links[l].bytes_per_s;
+        let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
+        for f in active {
+            self.flows[f].gen += 1;
+            let gen = self.flows[f].gen;
+            let dt = if bw.is_finite() {
+                let share = bw * (self.flows[f].weight / total_w);
+                self.flows[f].remaining / share
+            } else {
+                0.0
+            };
+            self.push_event(t + dt, EventKind::HopDone { flow: f, gen });
+        }
+    }
+
+    fn trace_push(&mut self, msg: String) {
+        if let Some(tr) = &mut self.trace {
+            tr.push(msg);
+        }
+    }
+
+    fn process(&mut self, ev: Event) -> Option<Occurrence> {
+        match ev.kind {
+            EventKind::Control { tag } => Some(Occurrence::Control { tag, at: ev.t }),
+            EventKind::Arrive { flow, gen } => {
+                if self.flows[flow].gen != gen {
+                    return None; // orphaned by a pause/reschedule
+                }
+                let hop = self.flows[flow].hop;
+                let l = self.flows[flow].path[hop].0;
+                // never rewind a link: late joiners clamp to its floor
+                let t = ev.t.max(self.links[l].last_update);
+                self.advance_link(l, t);
+                match self.links[l].active.binary_search(&flow) {
+                    Err(pos) => self.links[l].active.insert(pos, flow),
+                    Ok(_) => debug_assert!(false, "flow {flow} already on link {l}"),
+                }
+                self.flows[flow].state = FlowState::InService;
+                self.reschedule_link(l, t);
+                if self.trace.is_some() {
+                    let msg = format!(
+                        "{:>6} {t:.9} join f{flow} hop{hop} l{l} rem={:.0}",
+                        ev.seq, self.flows[flow].remaining
+                    );
+                    self.trace_push(msg);
+                }
+                None
+            }
+            EventKind::HopDone { flow, gen } => {
+                if self.flows[flow].gen != gen {
+                    return None; // membership changed since projection
+                }
+                let hop = self.flows[flow].hop;
+                let l = self.flows[flow].path[hop].0;
+                let t = ev.t.max(self.links[l].last_update);
+                self.advance_link(l, t);
+                if let Ok(pos) = self.links[l].active.binary_search(&flow) {
+                    self.links[l].active.remove(pos);
+                }
+                self.flows[flow].remaining = 0.0;
+                self.links[l].total_bytes += self.flows[flow].bytes;
+                self.links[l].total_flows += 1;
+                self.reschedule_link(l, t);
+                let done_at = t + self.links[l].latency_s;
+                if self.trace.is_some() {
+                    let msg = format!("{:>6} {t:.9} done f{flow} hop{hop} l{l}", ev.seq);
+                    self.trace_push(msg);
+                }
+                if hop + 1 < self.flows[flow].path.len() {
+                    self.flows[flow].hop = hop + 1;
+                    self.flows[flow].remaining = self.flows[flow].bytes as f64;
+                    self.schedule_arrive(flow, done_at);
+                    None
+                } else {
+                    self.flows[flow].state = FlowState::Done;
+                    self.flows[flow].finished_at = done_at;
+                    Some(Occurrence::FlowDone { flow: FlowId(flow), at: done_at })
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_link() -> (Engine, LinkId) {
+        let mut e = Engine::new();
+        let l = e.add_link("wire", 100e6, 1e-3);
+        (e, l)
+    }
+
+    #[test]
+    fn solo_flow_pays_serialization_plus_latency() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let t = e.completion(f);
+        assert!((t - 1.001).abs() < 1e-12, "t={t}");
+    }
+
+    #[test]
+    fn zero_byte_flow_pays_latency_only() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 0, 2.0, 1.0);
+        assert!((e.completion(f) - 2.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_hop_flow_serializes_each_hop() {
+        let mut e = Engine::new();
+        let a = e.add_link("a", 100e6, 1e-3);
+        let b = e.add_link("b", 50e6, 2e-3);
+        let f = e.start_flow(&[a, b], 100_000_000, 0.0, 1.0);
+        // 1.0 + 1e-3 (hop a) + 2.0 + 2e-3 (hop b)
+        assert!((e.completion(f) - 3.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_equal_flows_share_the_link() {
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let f2 = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let t1 = e.completion(f1);
+        let t2 = e.completion(f2);
+        assert!((t1 - t2).abs() < 1e-9, "equal flows finish together: {t1} vs {t2}");
+        assert!((t1 - 2.001).abs() < 1e-9, "each at 2x solo, t1={t1}");
+    }
+
+    #[test]
+    fn weighted_flows_split_proportionally() {
+        // weight 3 vs 1 on a 100 MB/s link, 75 MB and 25 MB payloads:
+        // both drain exactly together at t=1 (75 MB/s vs 25 MB/s).
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 75_000_000, 0.0, 3.0);
+        let f2 = e.start_flow(&[l], 25_000_000, 0.0, 1.0);
+        let t1 = e.completion(f1);
+        let t2 = e.completion(f2);
+        assert!((t1 - 1.001).abs() < 1e-9, "t1={t1}");
+        assert!((t2 - 1.001).abs() < 1e-9, "t2={t2}");
+    }
+
+    #[test]
+    fn late_joiner_slows_the_resident_flow() {
+        let (mut e, l) = one_link();
+        // both submitted before the queue drains => true sharing
+        let f1 = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let f2 = e.start_flow(&[l], 100_000_000, 0.5, 1.0);
+        let t1 = e.completion(f1);
+        let t2 = e.completion(f2);
+        // f1: 50 MB solo, then 50 MB at half rate -> 1.5 (+latency)
+        assert!((t1 - 1.501).abs() < 1e-9, "t1={t1}");
+        // f2: 50 MB at half rate, then 50 MB solo -> 2.0 (+latency)
+        assert!((t2 - 2.001).abs() < 1e-9, "t2={t2}");
+    }
+
+    #[test]
+    fn sequential_submission_matches_busy_horizon() {
+        // run-to-completion callers see serialize-behind-the-floor,
+        // exactly like the legacy `busy_until` model
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+        let a = e.completion(f1);
+        let f2 = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+        let b = e.completion(f2);
+        assert!((a - 0.501).abs() < 1e-12);
+        // f2 joins at the link floor (0.5), not at 0
+        assert!((b - 1.001).abs() < 1e-12, "b={b}");
+    }
+
+    #[test]
+    fn pause_freezes_and_resume_continues() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        e.schedule_control(0.3, 7);
+        match e.run_next() {
+            Occurrence::Control { tag, at } => {
+                assert_eq!(tag, 7);
+                assert!((at - 0.3).abs() < 1e-12);
+            }
+            other => panic!("expected control, got {other:?}"),
+        }
+        e.pause(f);
+        e.resume(f, 0.7);
+        let t = e.completion(f);
+        // 30 MB before the pause, 70 MB from t=0.7 -> 1.4 + latency
+        assert!((t - 1.401).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn pause_speeds_up_the_survivor() {
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let f2 = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        e.schedule_control(0.5, 0);
+        assert!(matches!(e.run_next(), Occurrence::Control { .. }));
+        e.pause(f2);
+        let t1 = e.completion(f1);
+        // f1: 25 MB shared by 0.5, then 75 MB solo -> 1.25 + latency
+        assert!((t1 - 1.251).abs() < 1e-9, "t1={t1}");
+        e.resume(f2, t1);
+        let t2 = e.completion(f2);
+        assert!(t2 > t1, "paused flow finishes after the survivor");
+    }
+
+    #[test]
+    fn control_events_interleave_in_time_order() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        e.schedule_control(2.0, 2);
+        e.schedule_control(0.5, 1);
+        assert!(matches!(e.run_next(), Occurrence::Control { tag: 1, .. }));
+        assert!(matches!(e.run_next(), Occurrence::FlowDone { .. }));
+        assert!(matches!(e.run_next(), Occurrence::Control { tag: 2, .. }));
+        assert!(matches!(e.run_next(), Occurrence::Idle));
+        assert_eq!(e.flow_finish(f), Some(1.001));
+    }
+
+    #[test]
+    fn completion_preserves_pending_controls() {
+        let (mut e, l) = one_link();
+        e.schedule_control(0.2, 9);
+        let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let t = e.completion(f); // blocks well past the control's due time
+        assert!((t - 1.001).abs() < 1e-9);
+        // the blocking wait must not have swallowed the control event
+        assert!(matches!(e.run_next(), Occurrence::Control { tag: 9, .. }));
+        assert!(matches!(e.run_next(), Occurrence::Idle));
+    }
+
+    #[test]
+    fn horizon_covers_pending_events() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 100_000_000, 5.0, 1.0);
+        assert!(e.horizon() >= 5.0, "a pending arrival keeps the system non-quiescent");
+        e.completion(f);
+        assert!(e.horizon() >= 6.0, "horizon covers the completed flow");
+    }
+
+    #[test]
+    fn link_counts_bytes_at_hop_completion() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        e.completion(f);
+        assert_eq!(e.link(l).total_bytes, 1 << 20);
+        assert_eq!(e.link(l).total_flows, 1);
+        assert_eq!(e.link(l).active_flows(), 0);
+    }
+
+    #[test]
+    fn server_semantics_match_legacy_acquire() {
+        let mut e = Engine::new();
+        let s = e.add_server("disk", 0.001, 100e6);
+        let end = e.serve(s, 0.0, 100_000_000);
+        assert!((end - 1.001).abs() < 1e-9);
+        let end2 = e.serve(s, 0.0, 100_000_000); // queues behind
+        assert!((end2 - 2.002).abs() < 1e-9);
+        let ops = e.serve_ops(s, end2, 3);
+        assert!((ops - end2 - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        e.completion(f);
+        let s = e.add_server("cpu", 1e-6, f64::INFINITY);
+        e.serve_ops(s, 0.0, 5);
+        e.reset();
+        assert_eq!(e.link(l).total_bytes, 0);
+        assert_eq!(e.link(l).last_update(), 0.0);
+        assert_eq!(e.server(s).total_ops, 0);
+        assert_eq!(e.now(), 0.0);
+        assert_eq!(e.horizon(), 0.0);
+    }
+
+    #[test]
+    fn trace_is_recorded_and_cleared() {
+        let (mut e, l) = one_link();
+        e.record_trace(true);
+        let f = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        e.completion(f);
+        assert!(!e.trace().is_empty());
+        e.reset();
+        assert!(e.trace().is_empty());
+    }
+}

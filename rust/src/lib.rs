@@ -22,6 +22,17 @@
 //!   path hashing), AOT-lowered to HLO text in `artifacts/` and executed
 //!   from [`runtime`] via PJRT. Python never runs on the request path.
 //!
+//! ## The simulation core ([`engine`])
+//!
+//! All simulated experiments run on a discrete-event core: a
+//! deterministic event queue (time-ordered, tie-broken by sequence
+//! number) driving processor-sharing links and FIFO servers. Concurrent
+//! WAN flows genuinely *share* links — joining flows slow the residents,
+//! leavers speed them up, and flows can be paused/resumed mid-transfer —
+//! which is what the paper's contention and interference figures
+//! measure. [`simclock`] remains as a thin compatibility shim over the
+//! engine for the cold paths.
+//!
 //! ## The data plane ([`xfer`])
 //!
 //! Bulk data motion between centers — the capability the paper's
@@ -30,11 +41,14 @@
 //! bandwidth, scheduled through a priority + per-collaboration
 //! fair-share queue, and chunk-checksummed with retry of only the
 //! affected spans under injected failures (corrupt chunk, dying
-//! stream). [`workspace`] routes above-threshold remote reads/writes
-//! through it, and [`metadata::replication`] uses it to re-replicate
-//! payloads after a DTN outage (`scispace xfer` demos it from the CLI).
+//! stream). An event-driven flow scheduler adds Interactive-preempts-
+//! Bulk semantics (the `fig_preempt` bench). [`workspace`] routes
+//! above-threshold remote reads/writes through it, and
+//! [`metadata::replication`] uses it to re-replicate payloads after a
+//! DTN outage (`scispace xfer` demos it from the CLI).
 
 pub mod util;
+pub mod engine;
 pub mod simclock;
 pub mod simnet;
 pub mod xfer;

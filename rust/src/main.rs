@@ -5,8 +5,10 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|all>`
-//!   — regenerate a paper table/figure on the simulated testbed.
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|all>`
+//!   — regenerate a paper table/figure on the simulated testbed
+//!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
+//!   comparison on the discrete-event core).
 //! * `xfer [--size 512M] [--streams 1,2,4,8] [--chunk 4M] [--corrupt N]
 //!   [--drop-stream S] [--mix]` — drive the WAN bulk-transfer engine:
 //!   stream-count sweep, optional fault injection (corrupt chunks /
@@ -139,8 +141,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig9b" => bench::print_sds_modes(&bench::fig9b(&[5, 20], 50)),
         "fig9c" => bench::print_end2end(&bench::fig9c(&[8, 32, 64], None)),
         "table2" => bench::print_table2(&bench::table2(4_000, 50)),
+        "preempt" => bench::print_preempt(&bench::fig_preempt(16, 32 << 20, 4, 1 << 30)),
         "all" => {
-            for w in ["fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2"] {
+            for w in
+                ["fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2", "preempt"]
+            {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];
                 cmd_bench(&sub)?;

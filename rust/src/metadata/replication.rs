@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::simclock::SimEnv;
+use crate::engine::Engine;
 use crate::simnet::Network;
 use crate::xfer::{
     run_queue, FaultInjector, Priority, TransferQueue, TransferReport, TransferRequest, XferEngine,
@@ -150,10 +150,11 @@ pub struct RepairReport {
 /// fair-share queue so concurrent repairs contend realistically).
 ///
 /// `dc_of_shard[s]` maps each shard (DTN) to its hosting data center.
+#[allow(clippy::too_many_arguments)]
 pub fn repair_with_xfer(
     plane: &mut ReplicatedPlane,
     shard: usize,
-    env: &mut SimEnv,
+    env: &mut Engine,
     net: &mut Network,
     engine: &XferEngine,
     dc_of_shard: &[usize],
@@ -277,11 +278,10 @@ mod tests {
 
     #[test]
     fn xfer_repair_rereplicates_and_failover_succeeds() {
-        use crate::simclock::SimEnv;
         use crate::simnet::{NetConfig, Network};
         use crate::xfer::XferConfig;
 
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
         let engine = XferEngine::new(XferConfig { chunk_bytes: 256 << 10, ..XferConfig::default() });
         // 4 DTNs: shards 0,1 hosted in dc0; shards 2,3 in dc1.
@@ -321,7 +321,7 @@ mod tests {
         assert!(rep.finished_at > 0.0, "moving bytes takes time");
         // the data plane actually crossed the network
         assert!(
-            env.resource(net.lans[0].res).total_bytes >= rep.bytes_moved,
+            env.link(net.lans[0].res).total_bytes >= rep.bytes_moved,
             "repair payload must traverse the destination LAN"
         );
         // Failover: with every *other* shard down, any entry whose owner

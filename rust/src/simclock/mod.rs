@@ -1,47 +1,49 @@
-//! Virtual time + shared-resource contention model.
+//! Compatibility shim over the discrete-event core ([`crate::engine`]).
 //!
-//! The paper's testbed (two Lustre data centers, IB EDR, NFS-mounted DTNs)
-//! is reproduced as a *time-advancing shared-server* simulation: every
-//! physical component that can be a bottleneck (an OST, an OSS page cache
-//! drain, an NFS server, a DTN NIC, the inter-DC link, a metadata service
-//! CPU) is a [`Resource`] with a per-operation latency and a bandwidth.
-//! Logical actors (collaborators) each carry their own virtual `now`;
-//! acquiring a resource serializes behind its `busy_until` horizon, which
-//! yields queueing, saturation and fair-share contention — the effects the
-//! paper's figures measure — without a full event-driven core.
+//! Historically this module *was* the time model: every shared component
+//! was a `Resource` whose `busy_until` horizon serialized all comers.
+//! That model cannot express flows that share a link concurrently, get
+//! preempted, or back off, so the simulation core moved to the
+//! event-driven [`crate::engine`]: a deterministic event queue plus
+//! processor-sharing links, with FIFO [`crate::engine::Server`]s for the
+//! components where admission-order arithmetic is already event-exact
+//! (an OST, an NFS daemon, a metadata CPU).
 //!
-//! All simulated experiments report *virtual* seconds; wall-clock
-//! microbenches of the real Rust hot paths live in `util::timer`.
+//! What remains here is the legacy vocabulary, kept so the cold paths
+//! (`meu`, `fusemodel`, `sds`) compile unchanged:
+//!
+//! * [`SimEnv`] wraps an [`Engine`] and derefs to it, so call sites can
+//!   mix the old `acquire*` API with native engine calls on one
+//!   environment.
+//! * [`Resource`]/[`ResourceId`] are aliases for the engine's FIFO
+//!   server type. `acquire` == `serve` — same arithmetic, bit for bit.
+//!
+//! Hot paths (`simnet`, `xfer`, `simfs`, `workspace`, `bench`) call the
+//! engine directly; new code should too. All simulated experiments
+//! report *virtual* seconds; wall-clock microbenches of the real Rust
+//! hot paths live in `util::timer`.
 
-/// Handle to a resource registered in a [`SimEnv`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct ResourceId(pub usize);
+pub use crate::engine::{Engine, Server as Resource, ServerId as ResourceId};
 
-/// A serially-shared component with per-op latency and bandwidth.
-#[derive(Debug, Clone)]
-pub struct Resource {
-    /// Human-readable name (for traces and debugging).
-    pub name: String,
-    /// Fixed cost per operation, seconds (seek, RPC handling, syscall...).
-    pub per_op_s: f64,
-    /// Streaming bandwidth, bytes/second (`f64::INFINITY` = latency-only).
-    pub bytes_per_s: f64,
-    /// Horizon up to which the resource is already committed.
-    pub busy_until: f64,
-    /// Total bytes pushed through (for utilization reports).
-    pub total_bytes: u64,
-    /// Total operations served.
-    pub total_ops: u64,
-}
-
-/// The simulation environment: a registry of shared resources.
-///
-/// `SimEnv` is deliberately single-threaded (callers interleave logical
-/// actors themselves); this keeps runs deterministic for a given actor
-/// schedule, which the reproducibility of EXPERIMENTS.md depends on.
+/// Legacy environment handle: an [`Engine`] plus the pre-event-core
+/// method names. Derefs to the engine, so every native engine API
+/// (links, flows, controls) is available through it as well.
 #[derive(Debug, Default)]
 pub struct SimEnv {
-    resources: Vec<Resource>,
+    engine: Engine,
+}
+
+impl std::ops::Deref for SimEnv {
+    type Target = Engine;
+    fn deref(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl std::ops::DerefMut for SimEnv {
+    fn deref_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
 }
 
 impl SimEnv {
@@ -50,91 +52,33 @@ impl SimEnv {
         Self::default()
     }
 
-    /// Register a resource; returns its id.
+    /// Register a FIFO resource; returns its id.
     pub fn add_resource(&mut self, name: &str, per_op_s: f64, bytes_per_s: f64) -> ResourceId {
-        self.resources.push(Resource {
-            name: name.to_string(),
-            per_op_s,
-            bytes_per_s,
-            busy_until: 0.0,
-            total_bytes: 0,
-            total_ops: 0,
-        });
-        ResourceId(self.resources.len() - 1)
+        self.engine.add_server(name, per_op_s, bytes_per_s)
     }
 
     /// Immutable view of a resource.
     pub fn resource(&self, id: ResourceId) -> &Resource {
-        &self.resources[id.0]
+        self.engine.server(id)
     }
 
-    /// Serve `bytes` through the resource for an actor whose local clock is
-    /// `now`; returns the completion time (the actor's new `now`).
-    ///
-    /// The request queues behind any earlier committed work, pays one
-    /// `per_op_s`, then streams at `bytes_per_s`.
+    /// Serve `bytes` through the resource for an actor whose local clock
+    /// is `now`; returns the completion time (the actor's new `now`).
+    /// Alias of [`Engine::serve`].
     pub fn acquire(&mut self, id: ResourceId, now: f64, bytes: u64) -> f64 {
-        let r = &mut self.resources[id.0];
-        let start = now.max(r.busy_until);
-        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
-            bytes as f64 / r.bytes_per_s
-        } else {
-            0.0
-        };
-        let end = start + r.per_op_s + xfer;
-        r.busy_until = end;
-        r.total_bytes += bytes;
-        r.total_ops += 1;
-        end
+        self.engine.serve(id, now, bytes)
     }
 
-    /// Serve `n_ops` zero-byte operations back-to-back (metadata traffic).
+    /// Serve `n_ops` zero-byte operations back-to-back (metadata
+    /// traffic). Alias of [`Engine::serve_ops`].
     pub fn acquire_ops(&mut self, id: ResourceId, now: f64, n_ops: u64) -> f64 {
-        let r = &mut self.resources[id.0];
-        let start = now.max(r.busy_until);
-        let end = start + r.per_op_s * n_ops as f64;
-        r.busy_until = end;
-        r.total_ops += n_ops;
-        end
+        self.engine.serve_ops(id, now, n_ops)
     }
 
-    /// Occupy the resource for a fixed duration (CPU-bound service work,
-    /// e.g. attribute extraction on a DTN); returns completion time.
+    /// Occupy the resource for a fixed duration (CPU-bound service
+    /// work). Alias of [`Engine::serve_for`].
     pub fn acquire_for(&mut self, id: ResourceId, now: f64, seconds: f64) -> f64 {
-        let r = &mut self.resources[id.0];
-        let start = now.max(r.busy_until);
-        let end = start + seconds;
-        r.busy_until = end;
-        r.total_ops += 1;
-        end
-    }
-
-    /// Non-queuing cost estimate: what `bytes` would take on an idle copy of
-    /// the resource (used for capacity planning / roofline reports).
-    pub fn idle_cost(&self, id: ResourceId, bytes: u64) -> f64 {
-        let r = &self.resources[id.0];
-        let xfer = if r.bytes_per_s.is_finite() && r.bytes_per_s > 0.0 {
-            bytes as f64 / r.bytes_per_s
-        } else {
-            0.0
-        };
-        r.per_op_s + xfer
-    }
-
-    /// Latest committed-work horizon across all resources (the earliest
-    /// time at which the whole system is quiescent).
-    pub fn horizon(&self) -> f64 {
-        self.resources.iter().map(|r| r.busy_until).fold(0.0, f64::max)
-    }
-
-    /// Reset all busy horizons and counters (between experiment iterations,
-    /// mirroring the paper's "drop cache after each iteration").
-    pub fn reset(&mut self) {
-        for r in &mut self.resources {
-            r.busy_until = 0.0;
-            r.total_bytes = 0;
-            r.total_ops = 0;
-        }
+        self.engine.serve_for(id, now, seconds)
     }
 }
 
@@ -211,5 +155,18 @@ mod tests {
         e.reset();
         assert_eq!(e.resource(id).busy_until, 0.0);
         assert_eq!(e.resource(id).total_ops, 0);
+    }
+
+    #[test]
+    fn shim_and_engine_apis_interoperate() {
+        // the same SimEnv can serve legacy acquires and native flows
+        let mut e = SimEnv::new();
+        let cpu = e.add_resource("cpu", 1e-6, f64::INFINITY);
+        let wire = e.add_link("wire", 100e6, 0.0);
+        let t = e.acquire_ops(cpu, 0.0, 1);
+        let f = e.start_flow(&[wire], 100_000_000, t, 1.0);
+        let done = e.completion(f);
+        assert!((done - (t + 1.0)).abs() < 1e-9, "done={done}");
+        assert_eq!(e.link(wire).total_bytes, 100_000_000);
     }
 }

@@ -8,7 +8,8 @@
 //! `stripe_size` chunks; an OSS write-back cache that absorbs bursts and
 //! stalls on flush; an OSS read page cache (LRU).
 
-use crate::simclock::{ResourceId, SimEnv};
+use crate::engine::Engine;
+use crate::simclock::ResourceId;
 use crate::simfs::cache::{LruCache, WriteBack};
 
 /// Lustre deployment parameters (one data center).
@@ -102,19 +103,19 @@ pub struct Lustre {
 
 impl Lustre {
     /// Build resources for one data center inside `env`.
-    pub fn build(env: &mut SimEnv, dc: usize, cfg: &LustreConfig) -> Lustre {
+    pub fn build(env: &mut Engine, dc: usize, cfg: &LustreConfig) -> Lustre {
         let mds = (0..2)
-            .map(|i| env.add_resource(&format!("dc{dc}.mds{i}"), cfg.mds_per_op, f64::INFINITY))
+            .map(|i| env.add_server(&format!("dc{dc}.mds{i}"), cfg.mds_per_op, f64::INFINITY))
             .collect();
         let oss = (0..cfg.n_oss)
             .map(|o| OssNode {
                 osts: (0..cfg.osts_per_oss)
                     .map(|t| {
-                        env.add_resource(&format!("dc{dc}.oss{o}.ost{t}"), cfg.ost_per_op, cfg.ost_bw)
+                        env.add_server(&format!("dc{dc}.oss{o}.ost{t}"), cfg.ost_per_op, cfg.ost_bw)
                     })
                     .collect(),
-                cache_res: env.add_resource(&format!("dc{dc}.oss{o}.cache"), 0.0, cfg.oss_cache_bw),
-                read_array: env.add_resource(
+                cache_res: env.add_server(&format!("dc{dc}.oss{o}.cache"), 0.0, cfg.oss_cache_bw),
+                read_array: env.add_server(
                     &format!("dc{dc}.oss{o}.rdarray"),
                     cfg.read_per_op,
                     cfg.ost_bw * cfg.osts_per_oss as f64 * cfg.read_array_factor,
@@ -129,10 +130,10 @@ impl Lustre {
 
     /// Charge `n` metadata operations (open/stat/setattr...). Round-robins
     /// across MDS nodes like Lustre DNE.
-    pub fn metadata_ops(&mut self, env: &mut SimEnv, now: f64, n: u64) -> f64 {
+    pub fn metadata_ops(&mut self, env: &mut Engine, now: f64, n: u64) -> f64 {
         let id = self.mds[self.rr_mds % self.mds.len()];
         self.rr_mds += 1;
-        env.acquire_ops(id, now, n)
+        env.serve_ops(id, now, n)
     }
 
     fn oss_for(&self, obj: u64, stripe: u64) -> (usize, usize) {
@@ -145,7 +146,7 @@ impl Lustre {
     /// Write `len` bytes of object `obj` at `offset`. Data is absorbed by
     /// the OSS write cache; crossing the high-water mark stalls the writer
     /// behind a flush to the OSTs (the multi-level-flush effect in Fig. 8).
-    pub fn write(&mut self, env: &mut SimEnv, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
+    pub fn write(&mut self, env: &mut Engine, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
         let mut t = now;
         let ss = self.cfg.stripe_size;
         let mut remaining = len;
@@ -156,7 +157,7 @@ impl Lustre {
             let (oi, _ti) = self.oss_for(obj, stripe);
             // absorb into OSS write cache at cache speed
             let cache_res = self.oss[oi].cache_res;
-            t = env.acquire(cache_res, t, span);
+            t = env.serve(cache_res, t, span);
             self.oss[oi].read_cache.fill(obj, off, span); // written data is cached
             if let Some(flush) = self.oss[oi].write_cache.write(span) {
                 // Double-buffered drain: wait for the *previous* flush to
@@ -168,7 +169,7 @@ impl Lustre {
                 let mut end = t;
                 for k in 0..n as usize {
                     let ost = self.oss[oi].osts[k];
-                    end = end.max(env.acquire(ost, t, per));
+                    end = end.max(env.serve(ost, t, per));
                 }
                 self.oss[oi].pending_flush = end;
             }
@@ -180,7 +181,7 @@ impl Lustre {
 
     /// Read `len` bytes of object `obj` at `offset`; page-cache hits are
     /// served at cache bandwidth, misses stream from the striped OSTs.
-    pub fn read(&mut self, env: &mut SimEnv, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
+    pub fn read(&mut self, env: &mut Engine, now: f64, obj: u64, offset: u64, len: u64) -> f64 {
         let mut t = now;
         let ss = self.cfg.stripe_size;
         let mut remaining = len;
@@ -192,12 +193,12 @@ impl Lustre {
             let (hit, miss) = self.oss[oi].read_cache.access(obj, off, span);
             if hit > 0 {
                 let cache_res = self.oss[oi].cache_res;
-                t = env.acquire(cache_res, t, hit);
+                t = env.serve(cache_res, t, hit);
             }
             if miss > 0 {
                 // striped read-ahead across the OSS's OST array
                 let ra = self.oss[oi].read_array;
-                t = env.acquire(ra, t, miss);
+                t = env.serve(ra, t, miss);
             }
             off += span;
             remaining -= span;
@@ -219,8 +220,8 @@ impl Lustre {
 mod tests {
     use super::*;
 
-    fn setup() -> (SimEnv, Lustre) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, Lustre) {
+        let mut env = Engine::new();
         let l = Lustre::build(&mut env, 0, &LustreConfig::paper_default());
         (env, l)
     }
@@ -242,7 +243,7 @@ mod tests {
 
     #[test]
     fn write_stalls_on_flush() {
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let mut cfg = LustreConfig::paper_default();
         cfg.oss_write_cache = 8 << 20; // tiny write cache
         let mut l = Lustre::build(&mut env, 0, &cfg);
@@ -275,14 +276,14 @@ mod tests {
         let used = l
             .oss
             .iter()
-            .filter(|o| env.resource(o.read_array).total_bytes > 0)
+            .filter(|o| env.server(o.read_array).total_bytes > 0)
             .count();
         assert_eq!(used, 2, "both OSS read arrays must serve stripes");
     }
 
     #[test]
     fn flush_striping_engages_multiple_osts() {
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let mut cfg = LustreConfig::paper_default();
         cfg.oss_write_cache = 4 << 20;
         let mut l = Lustre::build(&mut env, 0, &cfg);
@@ -294,7 +295,7 @@ mod tests {
             .oss
             .iter()
             .flat_map(|o| &o.osts)
-            .filter(|&&id| env.resource(id).total_bytes > 0)
+            .filter(|&&id| env.server(id).total_bytes > 0)
             .count();
         assert!(used >= 8, "flush must stripe across OSTs, used={used}");
     }

@@ -1,8 +1,9 @@
 //! Simulated storage substrates: Lustre PFS, NFS mounts and caches.
 //!
 //! These reproduce the paper's testbed (Table I) as calibrated cost models
-//! over the virtual clock in [`crate::simclock`]; real bytes live in
-//! [`crate::vfs`]. See DESIGN.md §2 for the substitution rationale.
+//! over FIFO servers of the discrete-event core ([`crate::engine`]); real
+//! bytes live in [`crate::vfs`]. See DESIGN.md §2 for the substitution
+//! rationale.
 
 pub mod cache;
 pub mod lustre;

@@ -3,7 +3,8 @@
 //! cost, a server-side read cache, and write-back absorption whose flush
 //! behaviour causes the 8–16-collaborator read dip in Fig. 8.
 
-use crate::simclock::{ResourceId, SimEnv};
+use crate::engine::Engine;
+use crate::simclock::ResourceId;
 use crate::simfs::cache::{LruCache, WriteBack};
 
 /// NFS mount parameters.
@@ -53,10 +54,10 @@ pub struct NfsServer {
 
 impl NfsServer {
     /// Build one server's resources inside `env`.
-    pub fn build(env: &mut SimEnv, name: &str, cfg: &NfsConfig) -> NfsServer {
+    pub fn build(env: &mut Engine, name: &str, cfg: &NfsConfig) -> NfsServer {
         NfsServer {
-            rpc: env.add_resource(&format!("{name}.rpc"), cfg.per_rpc, f64::INFINITY),
-            cache_res: env.add_resource(&format!("{name}.cache"), 0.0, cfg.cache_bw),
+            rpc: env.add_server(&format!("{name}.rpc"), cfg.per_rpc, f64::INFINITY),
+            cache_res: env.add_server(&format!("{name}.cache"), 0.0, cfg.cache_bw),
             read_cache: LruCache::new(cfg.read_cache, cfg.cache_block),
             write_cache: WriteBack::new(cfg.write_cache),
             pending_flush: 0.0,
@@ -69,14 +70,14 @@ impl NfsServer {
     /// multi-level flush the paper calls out.
     pub fn write(
         &mut self,
-        env: &mut SimEnv,
+        env: &mut Engine,
         now: f64,
         obj: u64,
         offset: u64,
         len: u64,
     ) -> (f64, Option<u64>) {
-        let t = env.acquire_ops(self.rpc, now, 1);
-        let t = env.acquire(self.cache_res, t, len);
+        let t = env.serve_ops(self.rpc, now, 1);
+        let t = env.serve(self.cache_res, t, len);
         self.read_cache.fill(obj, offset, len);
         let flush = self.write_cache.write(len);
         (t, flush)
@@ -86,15 +87,15 @@ impl NfsServer {
     /// the caller streams `miss_bytes` from Lustre and then fills the cache.
     pub fn read(
         &mut self,
-        env: &mut SimEnv,
+        env: &mut Engine,
         now: f64,
         obj: u64,
         offset: u64,
         len: u64,
     ) -> (f64, u64) {
-        let t = env.acquire_ops(self.rpc, now, 1);
+        let t = env.serve_ops(self.rpc, now, 1);
         let (hit, miss) = self.read_cache.access(obj, offset, len);
-        let t = if hit > 0 { env.acquire(self.cache_res, t, hit) } else { t };
+        let t = if hit > 0 { env.serve(self.cache_res, t, hit) } else { t };
         (t, miss)
     }
 
@@ -110,8 +111,8 @@ impl NfsServer {
 mod tests {
     use super::*;
 
-    fn setup() -> (SimEnv, NfsServer) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, NfsServer) {
+        let mut env = Engine::new();
         let s = NfsServer::build(&mut env, "dtn0.nfs", &NfsConfig::paper_default());
         (env, s)
     }
@@ -126,7 +127,7 @@ mod tests {
 
     #[test]
     fn write_flush_at_capacity() {
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let mut cfg = NfsConfig::paper_default();
         cfg.write_cache = 4 << 20;
         let mut s = NfsServer::build(&mut env, "x", &cfg);

@@ -1,5 +1,6 @@
 //! Network model: links between collaborator machines, DTNs and data
-//! centers.
+//! centers, carried on the discrete-event core's processor-sharing
+//! links ([`crate::engine`]).
 //!
 //! The paper's testbed connects two data centers over InfiniBand EDR
 //! (100 Gb/s) and deliberately provisions the inter-DC network *faster*
@@ -7,15 +8,24 @@
 //! data centers is higher than the PFS bandwidth of each data center", to
 //! emulate ESnet-class terabit links). [`NetConfig::paper_default`]
 //! encodes that relationship; benches scale it.
+//!
+//! Every payload movement is a *flow* over the hop sequence returned by
+//! [`Network::path`]: it serializes hop-by-hop, sharing each link's
+//! bandwidth with whatever other flows ride it at the same virtual time.
+//! [`Network::route`] and [`Network::send`] are the blocking
+//! conveniences (start one flow, drain the queue until it completes);
+//! schedulers that need concurrent flows to genuinely share the wire
+//! start their flows first and drain the engine afterwards.
 
-use crate::simclock::{ResourceId, SimEnv};
+use crate::engine::{Engine, LinkId};
 
-/// A directed network link (shared medium => one Resource both ways).
+/// A directed network link (shared medium => one engine link both ways).
 #[derive(Debug, Clone, Copy)]
 pub struct Link {
-    /// Underlying shared resource.
-    pub res: ResourceId,
-    /// One-way propagation latency (seconds), paid per message.
+    /// Underlying processor-sharing link in the engine.
+    pub res: LinkId,
+    /// One-way propagation latency (seconds), paid per message. Mirrors
+    /// the engine link's latency (kept here for ack-path math).
     pub latency_s: f64,
 }
 
@@ -63,15 +73,15 @@ pub struct Network {
 }
 
 impl Network {
-    /// Build the network resources inside `env` for `n_dcs` data centers.
-    pub fn build(env: &mut SimEnv, cfg: &NetConfig, n_dcs: usize) -> Network {
+    /// Build the network links inside `env` for `n_dcs` data centers.
+    pub fn build(env: &mut Engine, cfg: &NetConfig, n_dcs: usize) -> Network {
         let wan = Link {
-            res: env.add_resource("net.wan", 0.0, cfg.wan_bw),
+            res: env.add_link("net.wan", cfg.wan_bw, cfg.wan_latency_s),
             latency_s: cfg.wan_latency_s,
         };
         let lans: Vec<Link> = (0..n_dcs)
             .map(|i| Link {
-                res: env.add_resource(&format!("net.lan{i}"), 0.0, cfg.lan_bw),
+                res: env.add_link(&format!("net.lan{i}"), cfg.lan_bw, cfg.lan_latency_s),
                 latency_s: cfg.lan_latency_s,
             })
             .collect();
@@ -79,27 +89,28 @@ impl Network {
         Network { wan, lans, active: vec![0; slots], peak: vec![0; slots] }
     }
 
-    /// Send `bytes` over `link` starting at `now`; returns arrival time.
-    pub fn send(env: &mut SimEnv, link: Link, now: f64, bytes: u64) -> f64 {
-        link.latency_s + env.acquire(link.res, now, bytes)
+    /// Send `bytes` over `link` starting at `now`, blocking to
+    /// completion; returns the arrival time (serialization + latency).
+    pub fn send(env: &mut Engine, link: Link, now: f64, bytes: u64) -> f64 {
+        let f = env.start_flow(&[link.res], bytes, now, 1.0);
+        env.completion(f)
     }
 
     /// Path cost helper: collaborator in `src_dc` touching storage in
     /// `dst_dc` crosses its LAN, then (if different DC) the WAN, then the
-    /// remote LAN. Returns the data arrival time.
+    /// remote LAN — one flow over the whole hop sequence, drained to
+    /// completion. Returns the data arrival time.
     pub fn route(
         &self,
-        env: &mut SimEnv,
+        env: &mut Engine,
         src_dc: usize,
         dst_dc: usize,
         now: f64,
         bytes: u64,
     ) -> f64 {
-        let mut t = now;
-        for link in self.path(src_dc, dst_dc) {
-            t = Self::send(env, link, t, bytes);
-        }
-        t
+        let path = self.flow_path(src_dc, dst_dc);
+        let f = env.start_flow(&path, bytes, now, 1.0);
+        env.completion(f)
     }
 
     /// The single source of hop truth: accounting slots a `src -> dst`
@@ -123,6 +134,15 @@ impl Network {
             .collect()
     }
 
+    /// The same hop sequence as engine link ids, ready for
+    /// [`Engine::start_flow`].
+    pub fn flow_path(&self, src_dc: usize, dst_dc: usize) -> Vec<LinkId> {
+        self.hop_slots(src_dc, dst_dc)
+            .into_iter()
+            .map(|s| if s == 0 { self.wan.res } else { self.lans[s - 1].res })
+            .collect()
+    }
+
     /// Register a bulk transfer on its path (contention accounting).
     pub fn begin_transfer(&mut self, src_dc: usize, dst_dc: usize) {
         for s in self.hop_slots(src_dc, dst_dc) {
@@ -131,9 +151,17 @@ impl Network {
         }
     }
 
-    /// Deregister a completed bulk transfer.
+    /// Deregister a completed bulk transfer. Release semantics stay
+    /// saturating in release builds, but an unbalanced `end_transfer`
+    /// (double-end, or an end without its begin) is a caller bug that
+    /// used to be silently masked — surface it under debug assertions.
     pub fn end_transfer(&mut self, src_dc: usize, dst_dc: usize) {
         for s in self.hop_slots(src_dc, dst_dc) {
+            debug_assert!(
+                self.active[s] > 0,
+                "end_transfer without a matching begin_transfer on slot {s} \
+                 (src_dc={src_dc}, dst_dc={dst_dc})"
+            );
             self.active[s] = self.active[s].saturating_sub(1);
         }
     }
@@ -169,8 +197,8 @@ impl Network {
 mod tests {
     use super::*;
 
-    fn setup() -> (SimEnv, Network) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, Network) {
+        let mut env = Engine::new();
         let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
         (env, net)
     }
@@ -179,7 +207,7 @@ mod tests {
     fn local_route_skips_wan() {
         let (mut env, net) = setup();
         let t = net.route(&mut env, 0, 0, 0.0, 1 << 20);
-        assert_eq!(env.resource(net.wan.res).total_bytes, 0);
+        assert_eq!(env.link(net.wan.res).total_bytes, 0);
         assert!(t > 0.0);
     }
 
@@ -187,9 +215,9 @@ mod tests {
     fn remote_route_crosses_wan_once() {
         let (mut env, net) = setup();
         let _ = net.route(&mut env, 0, 1, 0.0, 1 << 20);
-        assert_eq!(env.resource(net.wan.res).total_bytes, 1 << 20);
-        assert_eq!(env.resource(net.lans[0].res).total_bytes, 1 << 20);
-        assert_eq!(env.resource(net.lans[1].res).total_bytes, 1 << 20);
+        assert_eq!(env.link(net.wan.res).total_bytes, 1 << 20);
+        assert_eq!(env.link(net.lans[0].res).total_bytes, 1 << 20);
+        assert_eq!(env.link(net.lans[1].res).total_bytes, 1 << 20);
     }
 
     #[test]
@@ -223,9 +251,43 @@ mod tests {
             t = Network::send(&mut env, *link, t, bytes);
         }
         assert!(t > 0.0);
-        assert_eq!(env.resource(net.wan.res).total_bytes, bytes);
-        assert_eq!(env.resource(net.lans[0].res).total_bytes, bytes);
-        assert_eq!(env.resource(net.lans[1].res).total_bytes, bytes);
+        assert_eq!(env.link(net.wan.res).total_bytes, bytes);
+        assert_eq!(env.link(net.lans[0].res).total_bytes, bytes);
+        assert_eq!(env.link(net.lans[1].res).total_bytes, bytes);
+    }
+
+    #[test]
+    fn flow_path_mirrors_path() {
+        let (_env, net) = setup();
+        for (src, dst) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+            let by_link: Vec<_> = net.path(src, dst).iter().map(|l| l.res).collect();
+            assert_eq!(by_link, net.flow_path(src, dst));
+        }
+    }
+
+    #[test]
+    fn concurrent_equal_flows_share_the_wan() {
+        // Tentpole acceptance: two equal concurrent WAN flows each
+        // finish in ~2x the solo time — processor sharing, not
+        // serialize-behind-the-horizon.
+        let bytes = 1u64 << 30;
+        let (mut env, net) = setup();
+        let solo = {
+            let f = env.start_flow(&net.flow_path(0, 1), bytes, 0.0, 1.0);
+            env.completion(f)
+        };
+        let (mut env, net) = setup();
+        let path = net.flow_path(0, 1);
+        let f1 = env.start_flow(&path, bytes, 0.0, 1.0);
+        let f2 = env.start_flow(&path, bytes, 0.0, 1.0);
+        let t1 = env.completion(f1);
+        let t2 = env.completion(f2);
+        assert!((t1 - t2).abs() < 1e-6, "equal flows must finish together: {t1} vs {t2}");
+        let ratio = t1.max(t2) / solo;
+        assert!(
+            (1.8..2.05).contains(&ratio),
+            "shared wire must halve bandwidth (ratio ~2), not serialize: ratio={ratio}"
+        );
     }
 
     #[test]
@@ -248,16 +310,26 @@ mod tests {
     }
 
     #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "end_transfer without a matching begin_transfer")]
+    fn unbalanced_end_transfer_asserts_in_debug() {
+        let (_env, mut net) = setup();
+        net.begin_transfer(0, 1);
+        net.end_transfer(0, 1);
+        net.end_transfer(0, 1); // double-end: a caller bug, now loud
+    }
+
+    #[test]
     fn prop_bytes_conserved_across_routes_and_striped_sends() {
-        // Satellite invariant: bytes charged to each Resource equal bytes
+        // Satellite invariant: bytes charged to each link equal bytes
         // offered, across any interleaving of monolithic route() calls
         // and chunk-striped xfer transfers (including retried chunks).
         use crate::util::prop;
         use crate::xfer::{FaultInjector, Priority, TransferRequest, XferConfig, XferEngine};
         prop::check(24, |rng| {
-            let mut env = SimEnv::new();
+            let mut env = Engine::new();
             let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
-            // expected per-resource byte totals: [wan, lan0, lan1]
+            // expected per-link byte totals: [wan, lan0, lan1]
             let ids = [net.wan.res, net.lans[0].res, net.lans[1].res];
             let mut expect = [0u64; 3];
             let mut offer = |expect: &mut [u64; 3], src: usize, dst: usize, b: u64| {
@@ -302,10 +374,10 @@ mod tests {
                 }
             }
             for (k, id) in ids.iter().enumerate() {
-                let got = env.resource(*id).total_bytes;
+                let got = env.link(*id).total_bytes;
                 crate::prop_assert!(
                     got == expect[k],
-                    "resource {k}: charged {got} != offered {}",
+                    "link {k}: charged {got} != offered {}",
                     expect[k]
                 );
             }

@@ -38,13 +38,9 @@ impl Samples {
 
     /// Percentile in `[0, 100]` by nearest-rank on sorted samples.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.xs.is_empty() {
-            return 0.0;
-        }
         let mut s = self.xs.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-        s[rank.min(s.len() - 1)]
+        percentile_sorted(&s, p / 100.0)
     }
 
     /// Median.
@@ -61,6 +57,19 @@ impl Samples {
     pub fn max(&self) -> f64 {
         self.xs.iter().cloned().fold(0.0, f64::max)
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice, `p` in
+/// `[0, 1]`. The single percentile definition shared by wall-clock
+/// sample stats ([`Samples`]) and virtual-time latency reports
+/// (`bench::fig_preempt`), so a reported "p99" always means the same
+/// statistic. Returns 0.0 on an empty slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
 }
 
 /// Time one closure invocation; returns (result, seconds).

@@ -239,7 +239,7 @@ impl Testbed {
         let src_dc = self.collabs[c].dc;
         let dst_dc = self.dtns[dtn].dc;
         let t = self.net.route(&mut self.env, src_dc, dst_dc, t, msg_bytes);
-        let t = self.env.acquire_ops(self.dtns[dtn].meta_cpu, t, 1);
+        let t = self.env.serve_ops(self.dtns[dtn].meta_cpu, t, 1);
         // per-entry packing cost on the service (Table II effect)
         let t = t + self.cfg.meta_entry_s * entries as f64;
         // response trip back to the collaborator
@@ -380,7 +380,7 @@ impl Testbed {
             let fi = self.collabs[c].fuse;
             t = self.fuse_mounts[fi].ops(&mut self.env, t, WRITE_OPS.len() as u64);
             let copy = self.fuse_mounts[fi].copy;
-            t = self.env.acquire(copy, t, len);
+            t = self.env.serve(copy, t, len);
             // metadata assistance: creates need `attr, access, create,
             // open` (4 assisted calls, exhaustive over union branches);
             // plain writes need one stat
@@ -555,7 +555,7 @@ impl Testbed {
                 }
                 let fi = self.collabs[c].fuse;
                 let copy = self.fuse_mounts[fi].copy;
-                t = self.env.acquire(copy, t, len);
+                t = self.env.serve(copy, t, len);
             }
         }
         self.collabs[c].now = t;
@@ -745,9 +745,9 @@ mod tests {
         // collaborator homed in the other DC reads it
         let other = tb.collabs.iter().position(|c| c.dc != data_dc);
         if let Some(oc) = other {
-            let before = tb.env.resource(tb.net.wan.res).total_bytes;
+            let before = tb.env.link(tb.net.wan.res).total_bytes;
             tb.read(oc, "/collab/remote.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
-            let after = tb.env.resource(tb.net.wan.res).total_bytes;
+            let after = tb.env.link(tb.net.wan.res).total_bytes;
             assert!(after > before, "WAN must carry remote read traffic");
         }
     }
@@ -840,10 +840,10 @@ mod tests {
         tb.write(0, "/collab/big.dat", 0, len, None, AccessMode::Scispace).unwrap();
         let (data_dc, _) = tb.locate("/collab/big.dat").unwrap();
         let other = tb.collabs.iter().position(|c| c.dc != data_dc).unwrap();
-        let before = tb.env.resource(tb.net.wan.res).total_bytes;
+        let before = tb.env.link(tb.net.wan.res).total_bytes;
         let bytes = tb.read(other, "/collab/big.dat", 0, len, AccessMode::Scispace).unwrap();
         assert_eq!(bytes.len() as u64, len);
-        let after = tb.env.resource(tb.net.wan.res).total_bytes;
+        let after = tb.env.link(tb.net.wan.res).total_bytes;
         let carried = after - before;
         // the payload crosses exactly once; metadata RPCs may add a few
         // hundred bytes on top

@@ -7,12 +7,15 @@
 //! measurable component instead of a single monolithic `route()` call:
 //!
 //! * [`stream`]    — a transfer is split into chunks striped across N
-//!   concurrent streams that share link bandwidth ([`crate::simclock`]
-//!   resources), so per-chunk latency pipelines while bytes still
-//!   serialize at the link floor (GridFTP-style striping).
+//!   concurrent streams that share link bandwidth (processor-sharing
+//!   [`crate::engine`] links), so per-chunk latency pipelines while
+//!   bytes still serialize at the link floor (GridFTP-style striping).
 //! * [`sched`]     — a priority + per-collaboration fair-share queue
-//!   dispatches chunks across concurrent transfers, modeling contention
-//!   between collaborations on the shared WAN.
+//!   dispatches chunks across concurrent transfers, plus an
+//!   event-driven flow scheduler ([`run_flows`]) where each admitted
+//!   transfer runs as long-lived weighted flows and an Interactive
+//!   arrival can *preempt* admitted Bulk/Scavenger flows mid-transfer
+//!   (the `fig_preempt` bench measures the tail-latency win).
 //! * [`integrity`] — chunk checksums, deterministic fault injection
 //!   (corrupt chunk, dying stream) and retry of *only* the affected
 //!   chunks.
@@ -20,7 +23,7 @@
 //! The engine is consumed by [`crate::workspace`] (remote reads/writes
 //! above a size threshold), [`crate::metadata::replication`] (data-plane
 //! repair after a DTN outage), the `scispace xfer` CLI and the
-//! `fig_xfer_streams` bench.
+//! `fig_xfer_streams` / `fig_preempt` benches.
 
 pub mod integrity;
 pub mod sched;
@@ -30,11 +33,11 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::simclock::SimEnv;
+use crate::engine::Engine;
 use crate::simnet::{Link, Network};
 
 pub use integrity::{checksum, chunk_spans, Chunk, FaultInjector};
-pub use sched::{run_queue, TransferQueue};
+pub use sched::{run_flows, run_queue, FlowReport, TransferQueue};
 pub use stream::StreamSet;
 
 /// Transfer priority class; the weight steers both queue admission and
@@ -221,7 +224,7 @@ impl Flight {
     pub fn step(
         &mut self,
         cfg: &XferConfig,
-        env: &mut SimEnv,
+        env: &mut Engine,
         faults: &mut FaultInjector,
     ) -> Result<()> {
         let Some(chunk) = self.pending.pop_front() else {
@@ -292,7 +295,7 @@ impl XferEngine {
     /// complete instantly.
     pub fn transfer(
         &self,
-        env: &mut SimEnv,
+        env: &mut Engine,
         net: &mut Network,
         req: &TransferRequest,
         faults: &mut FaultInjector,
@@ -318,8 +321,8 @@ mod tests {
     use super::*;
     use crate::simnet::NetConfig;
 
-    fn setup() -> (SimEnv, Network) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, Network) {
+        let mut env = Engine::new();
         let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
         (env, net)
     }
@@ -336,7 +339,7 @@ mod tests {
         }
     }
 
-    fn run(env: &mut SimEnv, net: &mut Network, cfg: XferConfig, bytes: u64) -> TransferReport {
+    fn run(env: &mut Engine, net: &mut Network, cfg: XferConfig, bytes: u64) -> TransferReport {
         let engine = XferEngine::new(cfg);
         engine
             .transfer(env, net, &req(bytes, "t"), &mut FaultInjector::none(), 0.0)
@@ -353,9 +356,9 @@ mod tests {
         assert_eq!(rep.bytes, 64 << 20);
         assert!(rep.finished_at > rep.started_at);
         // conservation: each link carried exactly the payload
-        assert_eq!(env.resource(net.wan.res).total_bytes, 64 << 20);
-        assert_eq!(env.resource(net.lans[0].res).total_bytes, 64 << 20);
-        assert_eq!(env.resource(net.lans[1].res).total_bytes, 64 << 20);
+        assert_eq!(env.link(net.wan.res).total_bytes, 64 << 20);
+        assert_eq!(env.link(net.lans[0].res).total_bytes, 64 << 20);
+        assert_eq!(env.link(net.lans[1].res).total_bytes, 64 << 20);
     }
 
     #[test]
@@ -403,7 +406,7 @@ mod tests {
             "must not re-send the whole file"
         );
         // the retried chunk's bytes crossed the wire twice
-        assert_eq!(env.resource(net.wan.res).total_bytes, (64 << 20) + (4 << 20));
+        assert_eq!(env.link(net.wan.res).total_bytes, (64 << 20) + (4 << 20));
     }
 
     #[test]
@@ -463,7 +466,7 @@ mod tests {
         engine
             .transfer(&mut env, &mut net, &r, &mut FaultInjector::none(), 0.0)
             .expect("transfer");
-        assert_eq!(env.resource(net.wan.res).total_bytes, 0);
-        assert_eq!(env.resource(net.lans[0].res).total_bytes, 16 << 20);
+        assert_eq!(env.link(net.wan.res).total_bytes, 0);
+        assert_eq!(env.link(net.lans[0].res).total_bytes, 16 << 20);
     }
 }

@@ -1,15 +1,15 @@
 //! Striped parallel streams: N logical connections over one network path.
 //!
-//! Each stream carries chunks stop-and-wait (send, checksum, ack) while
-//! all streams share the underlying link [`crate::simclock::Resource`]s —
+//! Each stream carries chunks stop-and-wait (send, checksum, ack) as a
+//! flow over the engine's processor-sharing links ([`crate::engine`]) —
 //! so bytes still serialize at link bandwidth, but the per-chunk latency
 //! and checksum overhead that throttles a single stream is paid in
 //! parallel. That is exactly why GridFTP-style movers stripe: transfer
 //! time falls with stream count until the link's byte-serialization floor
 //! is reached, then plateaus.
 
-use crate::simclock::SimEnv;
-use crate::simnet::{Link, Network};
+use crate::engine::{Engine, LinkId};
+use crate::simnet::Link;
 
 use super::XferConfig;
 
@@ -67,23 +67,23 @@ impl StreamSet {
         best
     }
 
-    /// Carry one chunk of `len` bytes over `path` on stream `s`: traverse
-    /// every link (queueing behind all other streams and transfers on the
-    /// shared resources), checksum at both endpoints, then wait for the
-    /// ack to travel back. Returns the chunk completion time.
+    /// Carry one chunk of `len` bytes over `path` on stream `s`: one
+    /// flow traverses every hop (sharing each link with whatever other
+    /// streams and transfers ride it), checksum at both endpoints, then
+    /// wait for the ack to travel back. Returns the chunk completion
+    /// time.
     pub fn send_chunk(
         &mut self,
-        env: &mut SimEnv,
+        env: &mut Engine,
         path: &[Link],
         s: usize,
         len: u64,
         cfg: &XferConfig,
     ) -> f64 {
         debug_assert!(self.live[s], "sending on a dead stream");
-        let mut t = self.clocks[s];
-        for link in path {
-            t = Network::send(env, *link, t, len);
-        }
+        let ids: Vec<LinkId> = path.iter().map(|l| l.res).collect();
+        let flow = env.start_flow(&ids, len, self.clocks[s], 1.0);
+        let mut t = env.completion(flow);
         // sender + receiver digest the chunk
         if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
             t += 2.0 * len as f64 / cfg.checksum_bw;
@@ -122,10 +122,10 @@ impl StreamSet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simnet::NetConfig;
+    use crate::simnet::{NetConfig, Network};
 
-    fn setup() -> (SimEnv, Network, XferConfig) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, Network, XferConfig) {
+        let mut env = Engine::new();
         let net = Network::build(&mut env, &NetConfig::paper_default(), 2);
         (env, net, XferConfig::default())
     }
@@ -152,9 +152,9 @@ mod tests {
             ss.send_chunk(&mut env, &path, s, 1 << 20, &cfg);
         }
         // every link carried all bytes exactly once per chunk
-        assert_eq!(env.resource(net.wan.res).total_bytes, 8 << 20);
-        assert_eq!(env.resource(net.lans[0].res).total_bytes, 8 << 20);
-        assert_eq!(env.resource(net.lans[1].res).total_bytes, 8 << 20);
+        assert_eq!(env.link(net.wan.res).total_bytes, 8 << 20);
+        assert_eq!(env.link(net.lans[0].res).total_bytes, 8 << 20);
+        assert_eq!(env.link(net.lans[1].res).total_bytes, 8 << 20);
     }
 
     #[test]

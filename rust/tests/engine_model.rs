@@ -1,0 +1,137 @@
+//! Model-level guarantees of the discrete-event core ([`scispace::engine`]):
+//!
+//! * **Busy-horizon equivalence** — for a single uncontended flow the
+//!   event engine and the legacy `busy_until` model agree on completion
+//!   time within 1e-9 virtual seconds, across randomized sizes,
+//!   bandwidths, latencies and hop counts. This is what lets the hot
+//!   paths port onto the engine without perturbing any calibrated
+//!   experiment.
+//! * **Determinism** — two runs of the same seeded multi-flow workload
+//!   (joins, leaves, pauses, resumes, controls) produce byte-identical
+//!   event traces: the queue is ordered by `(time, sequence)` and every
+//!   per-link flow set iterates in a fixed order.
+//! * **Processor sharing** — k equal concurrent flows each finish in
+//!   ~k× the solo time instead of serializing back-to-back.
+
+use scispace::engine::Engine;
+use scispace::simclock::SimEnv;
+use scispace::util::prop;
+use scispace::util::rng::Rng;
+
+#[test]
+fn prop_uncontended_flow_matches_busy_horizon_model() {
+    prop::check(96, |rng| {
+        let hops = rng.range(1, 5);
+        let mut engine = Engine::new();
+        let mut legacy = SimEnv::new();
+        let mut path = Vec::new();
+        let mut horizon_hops = Vec::new();
+        for h in 0..hops {
+            let bw = (rng.below(20_000) + 1) as f64 * 1e6; // 1 MB/s .. 20 GB/s
+            let lat = rng.below(100_000) as f64 * 1e-6; // 0 .. 100 ms
+            path.push(engine.add_link(&format!("l{h}"), bw, lat));
+            horizon_hops.push((legacy.add_resource(&format!("l{h}"), 0.0, bw), lat));
+        }
+        let bytes = rng.below(1 << 30);
+        let at = rng.below(10_000) as f64 * 1e-3;
+        // legacy busy-horizon arithmetic: serialize on each hop's
+        // resource, then pay the hop latency (simnet's old route())
+        let mut t_old = at;
+        for &(id, lat) in &horizon_hops {
+            t_old = lat + legacy.acquire(id, t_old, bytes);
+        }
+        let f = engine.start_flow(&path, bytes, at, 1.0);
+        let t_new = engine.completion(f);
+        scispace::prop_assert!(
+            (t_new - t_old).abs() <= 1e-9,
+            "engine {t_new} vs busy-horizon {t_old} (hops={hops} bytes={bytes} at={at})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_equal_concurrent_flows_scale_like_processor_sharing() {
+    prop::check(32, |rng| {
+        let k = rng.range(2, 6);
+        let bw = 1e9;
+        let bytes = (rng.below(256) + 64) * (1 << 20);
+        let solo = {
+            let mut e = Engine::new();
+            let l = e.add_link("wire", bw, 0.0);
+            let f = e.start_flow(&[l], bytes, 0.0, 1.0);
+            e.completion(f)
+        };
+        let mut e = Engine::new();
+        let l = e.add_link("wire", bw, 0.0);
+        let flows: Vec<_> =
+            (0..k).map(|_| e.start_flow(&[l], bytes, 0.0, 1.0)).collect();
+        let finishes: Vec<f64> = flows.into_iter().map(|f| e.completion(f)).collect();
+        for &t in &finishes {
+            let ratio = t / solo;
+            scispace::prop_assert!(
+                (ratio - k as f64).abs() < 0.02 * k as f64,
+                "k={k}: each flow should take ~{k}x solo, got ratio {ratio}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// One seeded multi-flow workload: starts, multi-hop paths, weights,
+/// pauses, resumes and control events, drained to idle.
+fn seeded_trace(seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut e = Engine::new();
+    e.record_trace(true);
+    let links: Vec<_> = (0..4)
+        .map(|i| e.add_link(&format!("l{i}"), (i as f64 + 1.0) * 1e9, 10e-6 * (i as f64 + 1.0)))
+        .collect();
+    let mut flows = Vec::new();
+    for k in 0..48 {
+        let hops = rng.range(1, 4);
+        let path: Vec<_> = (0..hops).map(|_| *rng.pick(&links)).collect();
+        let bytes = rng.below(64 << 20) + 1;
+        let at = rng.below(1_000) as f64 * 1e-3;
+        let w = [1.0, 2.0, 8.0][rng.range(0, 3)];
+        flows.push(e.start_flow(&path, bytes, at, w));
+        if k % 13 == 9 {
+            // advance the queue mid-workload so some pauses land on
+            // flows that are already in service (mid-hop residuals)
+            let _ = e.run_next();
+        }
+        if k % 7 == 3 {
+            let victim = flows[rng.range(0, flows.len())];
+            e.pause(victim);
+        }
+        if k % 5 == 4 {
+            let revived = flows[rng.range(0, flows.len())];
+            e.resume(revived, at);
+        }
+        if k % 11 == 6 {
+            e.schedule_control(at, k as u64);
+        }
+    }
+    // resume everything so the workload drains completely
+    for &f in &flows {
+        e.resume(f, 2.0);
+    }
+    e.run_until_idle();
+    e.trace().to_vec()
+}
+
+#[test]
+fn seeded_multi_flow_traces_are_byte_identical() {
+    for seed in [0u64, 7, 42, 1234] {
+        let a = seeded_trace(seed);
+        let b = seeded_trace(seed);
+        assert!(a.len() > 100, "workload must be non-trivial: {} events", a.len());
+        assert_eq!(a, b, "seed {seed}: two runs must produce identical event traces");
+    }
+}
+
+#[test]
+fn different_seeds_produce_different_traces() {
+    // sanity: the trace actually reflects the workload
+    assert_ne!(seeded_trace(1), seeded_trace(2));
+}
