@@ -3,14 +3,20 @@
 //! (a) stream-count sweep on a fixed-bandwidth WAN — transfer time
 //! strictly decreases while per-chunk latency dominates, then plateaus
 //! at the link's byte-serialization floor (the GridFTP striping shape);
-//! (b) a concurrent-transfer mix from several collaborations drained
+//! (b) the same sweep on the congestion-managed geo WAN — AIMD windows
+//! per stream, synthesized loss under sustained overload — showing the
+//! over-striping rise-peak-collapse curve instead of a plateau;
+//! (c) a concurrent-transfer mix from several collaborations drained
 //! through the priority/fair-share scheduler;
-//! (c) a fault-injected run showing chunk-level retry (only the corrupt
+//! (d) a fault-injected run showing chunk-level retry (only the corrupt
 //! chunk's bytes are re-sent).
 //!
 //! Run: `cargo bench --bench fig_xfer_streams [-- --data 512M]`
 
-use scispace::bench::{fig_xfer_mix, fig_xfer_streams, print_xfer_mix, print_xfer_streams};
+use scispace::bench::{
+    fig_xfer_mix, fig_xfer_streams, fig_xfer_streams_cc, print_xfer_mix, print_xfer_streams,
+    print_xfer_streams_cc,
+};
 use scispace::simclock::SimEnv;
 use scispace::simnet::{NetConfig, Network};
 use scispace::util::cli::Args;
@@ -32,6 +38,8 @@ fn main() {
         best.streams,
         fmt_secs(best.secs)
     );
+
+    print_xfer_streams_cc(total, &fig_xfer_streams_cc(total, &streams));
 
     print_xfer_mix(&fig_xfer_mix(total / 4));
 

@@ -14,6 +14,7 @@ use crate::meu;
 use crate::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
 use crate::shdf;
 use crate::simnet::{NetConfig, Network};
+use crate::util::json::Json;
 use crate::util::timer::percentile_sorted as percentile;
 use crate::util::units::{fmt_bytes, fmt_secs};
 use crate::workload::{self, IorConfig, ModisConfig};
@@ -460,6 +461,97 @@ pub fn fig_xfer_streams_cfg(
         .collect()
 }
 
+/// One `fig_xfer_streams_cc` row: stream-count sweep on the
+/// congestion-managed geo WAN.
+#[derive(Debug, Clone)]
+pub struct XferCcRow {
+    /// Streams striped over the transfer.
+    pub streams: usize,
+    /// Virtual transfer time, seconds.
+    pub secs: f64,
+    /// Goodput, MB/s.
+    pub mbps: f64,
+    /// Congestion losses the streams absorbed.
+    pub losses: u64,
+    /// Bytes re-queued for retransmission by those losses.
+    pub retransmit_bytes: u64,
+}
+
+/// Stream-count sweep with AIMD congestion control on the geo WAN
+/// ([`NetConfig::geo_default`]): each stream is a windowed flow, so
+/// striping multiplies aggregate window growth *and* loss exposure.
+/// Expected shape — the over-striping curve wide-area file systems
+/// report: throughput rises while the aggregate window ceiling is below
+/// the wire, peaks near saturation, then collapses as synthesized loss
+/// and go-back retransmission eat the extra streams' gains. Contrast
+/// with [`fig_xfer_streams`], whose lossless fair-share WAN only
+/// plateaus.
+pub fn fig_xfer_streams_cc(total: u64, stream_counts: &[usize]) -> Vec<XferCcRow> {
+    stream_counts
+        .iter()
+        .map(|&s| {
+            let mut env = Engine::new();
+            let mut net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+            let cfg = XferConfig {
+                n_streams: s,
+                cc: crate::xfer::CongestionConfig::on(),
+                ..XferConfig::default()
+            };
+            let req = TransferRequest {
+                id: s as u64,
+                owner: "bench".into(),
+                src_dc: 0,
+                dst_dc: 1,
+                bytes: total,
+                priority: Priority::Bulk,
+                submitted_at: 0.0,
+            };
+            let rep = run_flows(&mut env, &mut net, &cfg, &[req], false).remove(0);
+            let secs = rep.latency();
+            XferCcRow {
+                streams: s,
+                secs,
+                mbps: crate::util::units::mbps(total, secs),
+                losses: rep.losses,
+                retransmit_bytes: rep.retransmit_bytes,
+            }
+        })
+        .collect()
+}
+
+/// Print `fig_xfer_streams_cc` rows.
+pub fn print_xfer_streams_cc(total: u64, rows: &[XferCcRow]) {
+    println!(
+        "\n== Fig xfer-streams (congested): {} over the geo WAN (AIMD windows) ==",
+        fmt_bytes(total)
+    );
+    println!("{:>8} {:>12} {:>12} {:>8} {:>12}", "streams", "time", "goodput", "losses", "retx");
+    for r in rows {
+        println!(
+            "{:>8} {:>12} {:>9.1}MB/s {:>8} {:>12}",
+            r.streams,
+            fmt_secs(r.secs),
+            r.mbps,
+            r.losses,
+            fmt_bytes(r.retransmit_bytes)
+        );
+    }
+    if let (Some(peak), Some(last)) = (
+        rows.iter().cloned().reduce(|a, b| if b.mbps > a.mbps { b } else { a }),
+        rows.last(),
+    ) {
+        if last.streams != peak.streams {
+            println!(
+                "over-striping: peak {:.1} MB/s at {} streams, {:.1}% lower at {}",
+                peak.mbps,
+                peak.streams,
+                (peak.mbps - last.mbps) / peak.mbps * 100.0,
+                last.streams
+            );
+        }
+    }
+}
+
 /// One `fig_xfer_mix` row: a transfer inside a concurrent mix.
 #[derive(Debug, Clone)]
 pub struct XferMixRow {
@@ -643,6 +735,62 @@ pub fn print_preempt(rows: &[PreemptRow]) {
     }
 }
 
+/// Machine-readable `BENCH_xfer.json` payload: the lossless and the
+/// congested stream sweeps side by side, so CI tracks the striping
+/// plateau *and* the over-striping collapse per PR.
+pub fn xfer_json(total: u64, plain: &[XferStreamRow], congested: &[XferCcRow]) -> Json {
+    use std::collections::BTreeMap;
+    let plain_rows: Vec<Json> = plain
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("streams".to_string(), Json::Num(r.streams as f64));
+            m.insert("secs".to_string(), Json::Num(r.secs));
+            m.insert("mbps".to_string(), Json::Num(r.mbps));
+            Json::Obj(m)
+        })
+        .collect();
+    let cc_rows: Vec<Json> = congested
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("streams".to_string(), Json::Num(r.streams as f64));
+            m.insert("secs".to_string(), Json::Num(r.secs));
+            m.insert("mbps".to_string(), Json::Num(r.mbps));
+            m.insert("losses".to_string(), Json::Num(r.losses as f64));
+            m.insert("retransmit_bytes".to_string(), Json::Num(r.retransmit_bytes as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("xfer".to_string()));
+    top.insert("total_bytes".to_string(), Json::Num(total as f64));
+    top.insert("plain".to_string(), Json::Arr(plain_rows));
+    top.insert("congested".to_string(), Json::Arr(cc_rows));
+    Json::Obj(top)
+}
+
+/// Machine-readable `BENCH_preempt.json` payload.
+pub fn preempt_json(rows: &[PreemptRow]) -> Json {
+    use std::collections::BTreeMap;
+    let out: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("preempt".to_string(), Json::Bool(r.preempt));
+            m.insert("interactive_p50_s".to_string(), Json::Num(r.interactive_p50_s));
+            m.insert("interactive_p99_s".to_string(), Json::Num(r.interactive_p99_s));
+            m.insert("interactive_mean_s".to_string(), Json::Num(r.interactive_mean_s));
+            m.insert("bulk_makespan_s".to_string(), Json::Num(r.bulk_makespan_s));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("preempt".to_string()));
+    top.insert("rows".to_string(), Json::Arr(out));
+    Json::Obj(top)
+}
+
 /// Print `fig_xfer_streams` rows.
 pub fn print_xfer_streams(total: u64, rows: &[XferStreamRow]) {
     println!("\n== Fig xfer-streams: {} DC0->DC1, stream-count sweep ==", fmt_bytes(total));
@@ -802,6 +950,47 @@ mod tests {
         assert!(late < early * 0.1, "plateau expected: {rows:?}");
         let floor = (128u64 << 20) as f64 / NetConfig::paper_default().wan_bw;
         assert!(rows[4].secs >= floor);
+    }
+
+    #[test]
+    fn fig_xfer_streams_cc_shows_over_striping_collapse() {
+        // Tentpole acceptance: with congestion enabled the sweep is
+        // non-monotonic — throughput peaks at an intermediate stream
+        // count and degrades >= 10% past it — while the lossless sweep
+        // (fig_xfer_streams_shape above) keeps its plateau.
+        let counts = [1usize, 2, 4, 8, 16, 32, 64];
+        let rows = fig_xfer_streams_cc(512 << 20, &counts);
+        let peak = rows
+            .iter()
+            .cloned()
+            .reduce(|a, b| if b.mbps > a.mbps { b } else { a })
+            .expect("rows");
+        let last = rows.last().expect("rows");
+        assert!(peak.streams > 1 && peak.streams < 64, "the peak must be interior: {rows:?}");
+        assert!(rows[0].mbps < peak.mbps * 0.8, "few streams must be window-limited: {rows:?}");
+        assert!(
+            last.mbps <= peak.mbps * 0.90,
+            "over-striping must collapse >= 10% past the peak: {rows:?}"
+        );
+        assert!(last.losses > 0, "the collapse must be loss-driven: {rows:?}");
+        assert!(last.retransmit_bytes > 0);
+        // below saturation the window ceiling, not loss, is the limit
+        assert_eq!(rows[0].losses, 0, "a lone window-limited stream never overloads: {rows:?}");
+    }
+
+    #[test]
+    fn bench_json_payloads_round_trip() {
+        let plain = fig_xfer_streams(32 << 20, &[1, 4]);
+        let cc = fig_xfer_streams_cc(32 << 20, &[1, 4]);
+        let j = xfer_json(32 << 20, &plain, &cc);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("xfer"));
+        assert_eq!(parsed.get("plain").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
+        assert_eq!(parsed.get("congested").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
+        let rows = fig_preempt(4, 8 << 20, 2, 64 << 20);
+        let j = preempt_json(&rows);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("rows").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
     }
 
     #[test]

@@ -37,6 +37,44 @@
 //! This is the primitive the `xfer` scheduler's Interactive-preempts-
 //! Bulk policy is built on.
 //!
+//! ## Windowed flows and congestion
+//!
+//! A flow started with [`Engine::start_windowed_flow`] carries an AIMD
+//! congestion window. On a *congestion-managed* link (one whose loss
+//! knob was armed with [`Engine::set_link_loss_detect`]) the flow's
+//! service rate obeys
+//!
+//! ```text
+//! rate = min(ps_share, window / rtt)
+//! ```
+//!
+//! where `ps_share` is the weighted processor-sharing allocation (with
+//! bandwidth a capped flow cannot use redistributed to the others by
+//! water-filling) and `rtt` is the flow's end-to-end round-trip time
+//! (twice the sum of its path latencies, floored at
+//! [`CcConfig::min_rtt_s`]). The window opens in slow start — one byte
+//! per delivered byte, doubling per RTT — until it crosses `ssthresh`,
+//! then grows by [`CcConfig::add_per_rtt`] per RTT (additive increase),
+//! clamped to [`CcConfig::max_window`].
+//!
+//! **Loss synthesis**: a managed link whose windowed flows demand more
+//! than it can carry (some flow's `window / rtt` exceeds its allocated
+//! rate) is *overloaded*. When the overload has persisted for the
+//! link's `loss_detect_s`, the link synthesizes one loss event: every
+//! still-overloaded windowed flow multiplies its window by
+//! [`CcConfig::md_factor`] (floored at [`CcConfig::min_window`]), drops
+//! `ssthresh` to the new window, and re-queues
+//! [`CcConfig::loss_retx_bytes`] onto its residual — the go-back
+//! retransmission of the chunk the drop voided, bounded by 3/4 of what
+//! the flow delivered since its previous loss so progress is always
+//! made. Per-link totals land in [`PsLink::total_losses`] /
+//! [`PsLink::total_retransmit_bytes`].
+//!
+//! On *unmanaged* links (the default) a windowed flow takes exactly the
+//! legacy processor-sharing arithmetic — bit-identical to
+//! [`Engine::start_flow`] — so uncongested topologies and every
+//! pre-congestion call site are untouched.
+//!
 //! ## Determinism
 //!
 //! The event queue is ordered by `(time, sequence)` — ties broken by
@@ -69,6 +107,79 @@ pub struct LinkId(pub usize);
 /// Handle to a flow started with [`Engine::start_flow`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FlowId(pub usize);
+
+/// AIMD congestion-window parameters for a windowed flow (see the
+/// module docs for the rate law and the loss-synthesis rule).
+#[derive(Debug, Clone, Copy)]
+pub struct CcConfig {
+    /// Initial window, bytes.
+    pub init_window: u64,
+    /// Floor the window never decreases below, bytes.
+    pub min_window: u64,
+    /// Ceiling the window never grows past, bytes (the per-stream
+    /// socket-buffer limit — the reason striping helps at all).
+    pub max_window: u64,
+    /// Additive increase per RTT once past `ssthresh`, bytes.
+    pub add_per_rtt: u64,
+    /// Initial slow-start threshold, bytes; clamped to `max_window`.
+    /// The default (`u64::MAX`) starts in pure slow start. Callers that
+    /// resume a connection's congestion state (e.g. `xfer::StreamSet`
+    /// carrying it across chunks) seed this with the prior threshold so
+    /// a loss's multiplicative decrease is not forgotten.
+    pub init_ssthresh: u64,
+    /// Multiplicative-decrease factor applied on loss (0 < f < 1).
+    pub md_factor: f64,
+    /// Bytes re-queued onto the flow per synthesized loss: the go-back
+    /// retransmission of the chunk the drop voided.
+    pub loss_retx_bytes: u64,
+    /// RTT floor, seconds (keeps `window / rtt` finite on zero-latency
+    /// paths).
+    pub min_rtt_s: f64,
+}
+
+impl Default for CcConfig {
+    /// Defaults tuned so a geo WAN sweep reproduces the over-striping
+    /// rise-peak-collapse curve (see `bench::fig_xfer_streams_cc`).
+    fn default() -> Self {
+        CcConfig {
+            init_window: 1 << 20,
+            min_window: 512 << 10,
+            max_window: 8 << 20,
+            add_per_rtt: 256 << 10,
+            init_ssthresh: u64::MAX,
+            md_factor: 0.5,
+            loss_retx_bytes: 2 << 20,
+            min_rtt_s: 100e-6,
+        }
+    }
+}
+
+/// Per-flow congestion state (windowed flows only).
+#[derive(Debug, Clone, Copy)]
+struct CcState {
+    cfg: CcConfig,
+    /// End-to-end RTT: twice the path's one-way latency sum, floored.
+    rtt_s: f64,
+    /// Current congestion window, bytes.
+    window: f64,
+    /// Slow-start threshold, bytes.
+    ssthresh: f64,
+    /// Synthesized losses this flow absorbed.
+    losses: u64,
+    /// Bytes re-queued by those losses.
+    retransmitted: f64,
+    /// Bytes delivered on managed links since the last loss — the upper
+    /// bound on what a loss can force back into the queue (there is
+    /// nothing else in flight to retransmit).
+    delivered_since_loss: f64,
+}
+
+impl CcState {
+    /// The flow's self-imposed rate cap, bytes/s.
+    fn cap(&self) -> f64 {
+        self.window / self.rtt_s
+    }
+}
 
 /// A FIFO-served component with per-op latency and streaming bandwidth.
 ///
@@ -104,6 +215,26 @@ pub struct PsLink {
     pub total_bytes: u64,
     /// Hop completions served.
     pub total_flows: u64,
+    /// Congestion losses synthesized on this link (one per affected
+    /// flow per loss event). Tracked next to the payload counters;
+    /// always zero on unmanaged links.
+    pub total_losses: u64,
+    /// Bytes those losses re-queued for retransmission (go-back bytes;
+    /// counted separately from `total_bytes`, which only counts payload
+    /// at hop completion).
+    pub total_retransmit_bytes: u64,
+    /// Sustained-overload interval before the link synthesizes a loss
+    /// for its windowed flows. `INFINITY` (the default) = unmanaged:
+    /// windowed flows take plain processor sharing here.
+    loss_detect_s: f64,
+    /// When the current sustained-overload episode began.
+    congested_since: Option<f64>,
+    /// Generation guard orphaning stale pending loss events.
+    loss_gen: u64,
+    /// Due time of the earliest queued window-growth tick (`INFINITY`
+    /// = none). A faster-RTT flow joining mid-tick schedules an
+    /// earlier one; the superseded tick fires as a harmless no-op.
+    tick_at: f64,
     /// Virtual time the in-service flows' residuals were last advanced to.
     last_update: f64,
     /// Flows currently in service, ascending by flow index (determinism).
@@ -119,6 +250,12 @@ impl PsLink {
     /// Virtual time this link last made progress (its causality floor).
     pub fn last_update(&self) -> f64 {
         self.last_update
+    }
+
+    /// The link's sustained-overload interval before synthesizing loss
+    /// (`INFINITY` = unmanaged, never loses).
+    pub fn loss_detect_s(&self) -> f64 {
+        self.loss_detect_s
     }
 }
 
@@ -139,6 +276,8 @@ struct Flow {
     path: Vec<LinkId>,
     bytes: u64,
     weight: f64,
+    /// AIMD congestion state (windowed flows only).
+    cc: Option<CcState>,
     hop: usize,
     /// Bytes left to serialize on the current hop.
     remaining: f64,
@@ -159,6 +298,12 @@ enum EventKind {
     Arrive { flow: usize, gen: u64 },
     HopDone { flow: usize, gen: u64 },
     Control { tag: u64 },
+    /// Sustained overload on a managed link came due: apply AIMD
+    /// multiplicative decrease to its still-overloaded windowed flows.
+    Loss { link: usize, gen: u64 },
+    /// Window-growth re-examination of a managed link: a window-capped
+    /// flow's rate rises as its window opens, so re-project its finish.
+    CcTick { link: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -307,10 +452,25 @@ impl Engine {
             latency_s,
             total_bytes: 0,
             total_flows: 0,
+            total_losses: 0,
+            total_retransmit_bytes: 0,
+            loss_detect_s: f64::INFINITY,
+            congested_since: None,
+            loss_gen: 0,
+            tick_at: f64::INFINITY,
             last_update: 0.0,
             active: Vec::new(),
         });
         LinkId(self.links.len() - 1)
+    }
+
+    /// Arm (or disarm, with `INFINITY`) a link's congestion management:
+    /// windowed flows on a managed link are capped at `window / rtt`
+    /// and suffer synthesized loss after `detect_s` of sustained
+    /// overload. Plain flows are unaffected either way.
+    pub fn set_link_loss_detect(&mut self, id: LinkId, detect_s: f64) {
+        assert!(detect_s > 0.0, "loss-detect interval must be positive");
+        self.links[id.0].loss_detect_s = detect_s;
     }
 
     /// Immutable view of a link.
@@ -325,6 +485,51 @@ impl Engine {
     /// processor sharing; drive it with [`Engine::completion`] or
     /// [`Engine::run_next`].
     pub fn start_flow(&mut self, path: &[LinkId], bytes: u64, at: f64, weight: f64) -> FlowId {
+        self.spawn_flow(path, bytes, at, weight, None)
+    }
+
+    /// Start a *windowed* flow: same as [`Engine::start_flow`] plus an
+    /// AIMD congestion window that caps the flow's rate at
+    /// `window / rtt` on congestion-managed links (see the module
+    /// docs). The flow's RTT is twice the sum of its path latencies,
+    /// floored at `cc.min_rtt_s`.
+    pub fn start_windowed_flow(
+        &mut self,
+        path: &[LinkId],
+        bytes: u64,
+        at: f64,
+        weight: f64,
+        cc: &CcConfig,
+    ) -> FlowId {
+        assert!(cc.min_window > 0, "the window floor must be positive");
+        assert!(cc.min_rtt_s > 0.0, "the rtt floor must be positive");
+        assert!(
+            cc.md_factor > 0.0 && cc.md_factor < 1.0,
+            "multiplicative decrease must shrink the window"
+        );
+        let rtt_s = (2.0 * path.iter().map(|l| self.links[l.0].latency_s).sum::<f64>())
+            .max(cc.min_rtt_s);
+        let window = cc.init_window.max(cc.min_window).min(cc.max_window) as f64;
+        let state = CcState {
+            cfg: *cc,
+            rtt_s,
+            window,
+            ssthresh: cc.init_ssthresh.min(cc.max_window) as f64,
+            losses: 0,
+            retransmitted: 0.0,
+            delivered_since_loss: 0.0,
+        };
+        self.spawn_flow(path, bytes, at, weight, Some(state))
+    }
+
+    fn spawn_flow(
+        &mut self,
+        path: &[LinkId],
+        bytes: u64,
+        at: f64,
+        weight: f64,
+        cc: Option<CcState>,
+    ) -> FlowId {
         assert!(!path.is_empty(), "a flow needs at least one hop");
         assert!(weight > 0.0, "flow weight must be positive");
         let id = self.flows.len();
@@ -332,6 +537,7 @@ impl Engine {
             path: path.to_vec(),
             bytes,
             weight,
+            cc,
             hop: 0,
             remaining: bytes as f64,
             state: FlowState::Scheduled,
@@ -353,6 +559,31 @@ impl Engine {
         } else {
             None
         }
+    }
+
+    /// The flow's current congestion window in bytes (`None` for plain
+    /// flows started with [`Engine::start_flow`]).
+    pub fn flow_window(&self, f: FlowId) -> Option<f64> {
+        self.flows[f.0].cc.map(|cc| cc.window)
+    }
+
+    /// The flow's current slow-start threshold in bytes (`None` for
+    /// plain flows). Together with [`Engine::flow_window`] this is the
+    /// congestion state a caller needs to resume the connection later
+    /// (see [`CcConfig::init_ssthresh`]).
+    pub fn flow_ssthresh(&self, f: FlowId) -> Option<f64> {
+        self.flows[f.0].cc.map(|cc| cc.ssthresh)
+    }
+
+    /// Synthesized losses this flow has absorbed (always 0 for plain
+    /// flows and on unmanaged links).
+    pub fn flow_losses(&self, f: FlowId) -> u64 {
+        self.flows[f.0].cc.map_or(0, |cc| cc.losses)
+    }
+
+    /// Bytes re-queued onto this flow by synthesized losses.
+    pub fn flow_retransmitted_bytes(&self, f: FlowId) -> u64 {
+        self.flows[f.0].cc.map_or(0, |cc| cc.retransmitted as u64)
     }
 
     /// Drive the event queue until `f` completes; returns its finish time
@@ -421,6 +652,13 @@ impl Engine {
     /// Resume a paused flow at virtual time `at` (clamped so the engine
     /// never rewinds): it rejoins its current hop with its residual
     /// bytes, or re-fires a held arrival. No-op unless paused.
+    ///
+    /// Contract edge cases (pinned by `tests/engine_model.rs`):
+    /// resuming a running, completed, or never-paused flow is a no-op;
+    /// a second resume of the same flow is a no-op (the first already
+    /// moved it out of `Paused`); and an `at` earlier than the pause
+    /// time cannot rewind — the flow rejoins no earlier than the link's
+    /// causality floor, so its residual is never double-served.
     pub fn resume(&mut self, f: FlowId, at: f64) {
         let i = f.0;
         if self.flows[i].state != FlowState::Paused {
@@ -501,6 +739,11 @@ impl Engine {
             l.last_update = 0.0;
             l.total_bytes = 0;
             l.total_flows = 0;
+            l.total_losses = 0;
+            l.total_retransmit_bytes = 0;
+            l.congested_since = None;
+            l.loss_gen = 0;
+            l.tick_at = f64::INFINITY;
             l.active.clear();
         }
         self.flows.clear();
@@ -538,22 +781,110 @@ impl Engine {
         self.push_event(at, EventKind::Arrive { flow: f, gen });
     }
 
+    /// Per-flow service rates on link `l`, aligned with its `active`
+    /// set. With no windowed flow on a managed link this is the plain
+    /// weighted processor-sharing allocation — the exact legacy
+    /// arithmetic, bit for bit. Otherwise each windowed flow's rate is
+    /// capped at `window / rtt` and the bandwidth a capped flow cannot
+    /// use is redistributed to the uncapped flows by weight
+    /// (deterministic water-filling over the ascending flow order).
+    fn link_rates(&self, l: usize) -> Vec<f64> {
+        let active = &self.links[l].active;
+        let bw = self.links[l].bytes_per_s;
+        let n = active.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if !bw.is_finite() {
+            return vec![f64::INFINITY; n];
+        }
+        if !self.link_has_windowed(l) {
+            let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
+            return active.iter().map(|&f| bw * (self.flows[f].weight / total_w)).collect();
+        }
+        let mut rate: Vec<Option<f64>> = vec![None; n];
+        let mut rem_bw = bw;
+        loop {
+            let total_w: f64 = active
+                .iter()
+                .zip(&rate)
+                .filter(|(_, r)| r.is_none())
+                .map(|(&f, _)| self.flows[f].weight)
+                .sum();
+            if total_w <= 0.0 {
+                break;
+            }
+            let mut newly_capped = false;
+            for (i, &f) in active.iter().enumerate() {
+                if rate[i].is_some() {
+                    continue;
+                }
+                let share = rem_bw * (self.flows[f].weight / total_w);
+                if let Some(cc) = &self.flows[f].cc {
+                    let cap = cc.cap();
+                    if cap < share {
+                        rate[i] = Some(cap);
+                        newly_capped = true;
+                    }
+                }
+            }
+            if !newly_capped {
+                for (i, &f) in active.iter().enumerate() {
+                    if rate[i].is_none() {
+                        rate[i] = Some(rem_bw * (self.flows[f].weight / total_w));
+                    }
+                }
+                break;
+            }
+            rem_bw = (bw - rate.iter().flatten().sum::<f64>()).max(0.0);
+        }
+        rate.into_iter().map(|r| r.unwrap_or(0.0)).collect()
+    }
+
+    /// Does `l` currently host a windowed flow it manages? The rate
+    /// cap, growth, and loss logic only run then; everything else takes
+    /// the legacy zero-allocation processor-sharing path.
+    fn link_has_windowed(&self, l: usize) -> bool {
+        self.links[l].loss_detect_s.is_finite()
+            && self.links[l].active.iter().any(|&f| self.flows[f].cc.is_some())
+    }
+
     /// Progress every in-service flow on link `l` to time `t >=
-    /// last_update` at its current share.
+    /// last_update` at its current rate; on a managed link, windowed
+    /// flows also open their windows (slow start below `ssthresh`,
+    /// additive increase above it).
     fn advance_link(&mut self, l: usize, t: f64) {
         let dt = t - self.links[l].last_update;
         if dt > 0.0 && !self.links[l].active.is_empty() {
             let bw = self.links[l].bytes_per_s;
             let active = self.links[l].active.clone();
-            if bw.is_finite() {
+            if !bw.is_finite() {
+                for f in active {
+                    self.flows[f].remaining = 0.0;
+                }
+            } else if self.link_has_windowed(l) {
+                let rates = self.link_rates(l);
+                for (i, f) in active.into_iter().enumerate() {
+                    let rate = rates[i];
+                    let delivered = (dt * rate).min(self.flows[f].remaining);
+                    if let Some(cc) = &mut self.flows[f].cc {
+                        let grow = if cc.window < cc.ssthresh {
+                            delivered
+                        } else {
+                            cc.cfg.add_per_rtt as f64 * (dt / cc.rtt_s)
+                        };
+                        cc.window = (cc.window + grow).min(cc.cfg.max_window as f64);
+                        cc.delivered_since_loss += delivered;
+                    }
+                    self.flows[f].remaining = (self.flows[f].remaining - dt * rate).max(0.0);
+                }
+            } else {
+                // the legacy inline share math: no allocation, and
+                // bit-identical to the pre-congestion engine
                 let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
                 for f in active {
                     let share = bw * (self.flows[f].weight / total_w);
                     self.flows[f].remaining = (self.flows[f].remaining - dt * share).max(0.0);
-                }
-            } else {
-                for f in active {
-                    self.flows[f].remaining = 0.0;
                 }
             }
         }
@@ -563,13 +894,35 @@ impl Engine {
     }
 
     /// Recompute and (re)schedule every in-service flow's projected hop
-    /// completion on link `l`, as of time `t` (= `last_update`).
+    /// completion on link `l`, as of time `t` (= `last_update`); on a
+    /// managed link, also re-examine the congestion state (arm or clear
+    /// the loss timer, queue a growth tick for capped flows).
     fn reschedule_link(&mut self, l: usize, t: f64) {
         let active = self.links[l].active.clone();
         if active.is_empty() {
+            // a drained link cannot be overloaded
+            if self.links[l].congested_since.take().is_some() {
+                self.links[l].loss_gen += 1;
+            }
             return;
         }
         let bw = self.links[l].bytes_per_s;
+        if self.link_has_windowed(l) {
+            let rates = self.link_rates(l);
+            for (i, &f) in active.iter().enumerate() {
+                self.flows[f].gen += 1;
+                let gen = self.flows[f].gen;
+                let dt = if bw.is_finite() {
+                    self.flows[f].remaining / rates[i]
+                } else {
+                    0.0
+                };
+                self.push_event(t + dt, EventKind::HopDone { flow: f, gen });
+            }
+            self.update_congestion(l, t, &active, &rates);
+            return;
+        }
+        // the legacy inline share math: no allocation, bit-identical
         let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
         for f in active {
             self.flows[f].gen += 1;
@@ -582,6 +935,50 @@ impl Engine {
             };
             self.push_event(t + dt, EventKind::HopDone { flow: f, gen });
         }
+        // a managed link hosting no windowed flow has no windowed
+        // demand: any overload episode is over
+        if self.links[l].loss_detect_s.is_finite()
+            && self.links[l].congested_since.take().is_some()
+        {
+            self.links[l].loss_gen += 1;
+        }
+    }
+
+    /// Congestion bookkeeping for managed link `l` after its rates were
+    /// recomputed: start or clear the sustained-overload episode (and
+    /// its pending loss event), and queue a growth tick while any
+    /// window-capped flow is still opening its window.
+    fn update_congestion(&mut self, l: usize, t: f64, active: &[usize], rates: &[f64]) {
+        let mut overloaded = false;
+        let mut want_tick = false;
+        let mut tick_rtt = f64::INFINITY;
+        for (i, &f) in active.iter().enumerate() {
+            let Some(cc) = &self.flows[f].cc else { continue };
+            if self.flows[f].remaining <= 0.0 {
+                continue;
+            }
+            if cc.cap() > rates[i] * (1.0 + 1e-9) {
+                // pushing more than the link allocates: oversubscribed
+                overloaded = true;
+            } else if cc.window < cc.cfg.max_window as f64 {
+                // window-limited but still growing: its rate will rise
+                want_tick = true;
+                tick_rtt = tick_rtt.min(cc.rtt_s);
+            }
+        }
+        if overloaded {
+            if self.links[l].congested_since.is_none() {
+                self.links[l].congested_since = Some(t);
+                let gen = self.links[l].loss_gen;
+                self.push_event(t + self.links[l].loss_detect_s, EventKind::Loss { link: l, gen });
+            }
+        } else if self.links[l].congested_since.take().is_some() {
+            self.links[l].loss_gen += 1; // orphan the pending loss
+        }
+        if want_tick && t + tick_rtt < self.links[l].tick_at {
+            self.links[l].tick_at = t + tick_rtt;
+            self.push_event(t + tick_rtt, EventKind::CcTick { link: l });
+        }
     }
 
     fn trace_push(&mut self, msg: String) {
@@ -593,6 +990,60 @@ impl Engine {
     fn process(&mut self, ev: Event) -> Option<Occurrence> {
         match ev.kind {
             EventKind::Control { tag } => Some(Occurrence::Control { tag, at: ev.t }),
+            EventKind::Loss { link, gen } => {
+                if self.links[link].loss_gen != gen {
+                    return None; // the overload episode cleared in time
+                }
+                let t = ev.t.max(self.links[link].last_update);
+                self.advance_link(link, t);
+                // hit every windowed flow still pushing more than its
+                // allocation: multiplicative decrease + go-back bytes
+                let active = self.links[link].active.clone();
+                let rates = self.link_rates(link);
+                for (i, &f) in active.iter().enumerate() {
+                    let Some(cc) = &self.flows[f].cc else { continue };
+                    if self.flows[f].remaining <= 0.0 || cc.cap() <= rates[i] * (1.0 + 1e-9) {
+                        continue;
+                    }
+                    let cc = self.flows[f].cc.as_mut().expect("checked above");
+                    // Go-back retransmission, bounded by what the flow
+                    // actually delivered since its previous loss: a
+                    // quarter of the delivery always gets through, so
+                    // even a chronically overloaded flow makes forward
+                    // progress (the simulation terminates at any
+                    // over-striping depth). Floored to whole bytes so
+                    // the per-flow and per-link counters agree exactly.
+                    let bound = 0.75 * cc.delivered_since_loss;
+                    let retx = (cc.cfg.loss_retx_bytes as f64).min(bound).floor();
+                    cc.delivered_since_loss = 0.0;
+                    cc.window = (cc.window * cc.cfg.md_factor).max(cc.cfg.min_window as f64);
+                    cc.ssthresh = cc.window;
+                    cc.losses += 1;
+                    cc.retransmitted += retx;
+                    let win = cc.window;
+                    self.flows[f].remaining += retx;
+                    self.links[link].total_losses += 1;
+                    self.links[link].total_retransmit_bytes += retx as u64;
+                    if self.trace.is_some() {
+                        let msg = format!("{:>6} {t:.9} loss f{f} l{link} win={win:.0}", ev.seq);
+                        self.trace_push(msg);
+                    }
+                }
+                self.links[link].loss_gen += 1;
+                self.links[link].congested_since = None;
+                self.reschedule_link(link, t);
+                None
+            }
+            EventKind::CcTick { link } => {
+                self.links[link].tick_at = f64::INFINITY;
+                if self.links[link].active.is_empty() {
+                    return None;
+                }
+                let t = ev.t.max(self.links[link].last_update);
+                self.advance_link(link, t);
+                self.reschedule_link(link, t);
+                None
+            }
             EventKind::Arrive { flow, gen } => {
                 if self.flows[flow].gen != gen {
                     return None; // orphaned by a pause/reschedule
@@ -854,5 +1305,147 @@ mod tests {
         assert!(!e.trace().is_empty());
         e.reset();
         assert!(e.trace().is_empty());
+    }
+
+    // -------------------------------------------------- windowed flows
+
+    /// A 100 MB/s managed link with a 10 ms RTT and a 20 ms loss-detect
+    /// interval.
+    fn managed_link() -> (Engine, LinkId) {
+        let mut e = Engine::new();
+        let l = e.add_link("wan", 100e6, 5e-3);
+        e.set_link_loss_detect(l, 20e-3);
+        (e, l)
+    }
+
+    #[test]
+    fn windowed_flow_on_unmanaged_link_matches_plain_exactly() {
+        // the no-loss back-compat guarantee: on an unmanaged link the
+        // windowed flow takes the legacy arithmetic bit for bit
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+        let t_plain = e.completion(f);
+        let (mut e, l) = one_link();
+        let f = e.start_windowed_flow(&[l], 100_000_000, 0.0, 1.0, &CcConfig::default());
+        let t_cc = e.completion(f);
+        assert!(t_cc == t_plain, "unmanaged link must be exact: {t_cc} vs {t_plain}");
+        assert_eq!(e.flow_losses(f), 0);
+        assert_eq!(e.link(l).total_losses, 0);
+    }
+
+    #[test]
+    fn windowed_flow_caps_rate_at_window_over_rtt() {
+        // fixed 1 MiB window on a 10 ms RTT => 104.8576 MB/s cap, far
+        // below the 1 GB/s wire: serialization runs at the cap
+        let mut e = Engine::new();
+        let l = e.add_link("wan", 1e9, 5e-3);
+        e.set_link_loss_detect(l, 20e-3);
+        let cc = CcConfig {
+            init_window: 1 << 20,
+            min_window: 1 << 20,
+            max_window: 1 << 20,
+            ..CcConfig::default()
+        };
+        let f = e.start_windowed_flow(&[l], 50 << 20, 0.0, 1.0, &cc);
+        let t = e.completion(f);
+        // 50 MiB at (1 MiB / 10 ms) = 0.5 s, plus the hop latency
+        assert!((t - 0.505).abs() < 1e-9, "t={t}");
+        assert_eq!(e.flow_losses(f), 0, "window-capped below the wire is not overload");
+    }
+
+    #[test]
+    fn slow_start_doubles_the_window_per_rtt() {
+        let mut e = Engine::new();
+        let l = e.add_link("wan", 10e9, 5e-3);
+        e.set_link_loss_detect(l, 20e-3);
+        let cc = CcConfig { init_window: 1 << 20, max_window: 8 << 20, ..CcConfig::default() };
+        let f = e.start_windowed_flow(&[l], 15 << 20, 0.0, 1.0, &cc);
+        let t = e.completion(f);
+        // rtt = 10 ms; slow start delivers 1+2+4 MiB over three RTTs,
+        // then the remaining 8 MiB drains at the 8 MiB/rtt ceiling
+        assert!((t - 0.045).abs() < 1e-6, "t={t}");
+        assert_eq!(e.flow_window(f), Some((8 << 20) as f64), "window must reach the ceiling");
+    }
+
+    #[test]
+    fn seeded_ssthresh_resumes_additive_increase() {
+        // a resumed connection (window 2 MiB, ssthresh 2 MiB — i.e. a
+        // loss happened earlier) must grow additively, not double back
+        // through slow start
+        let mut e = Engine::new();
+        let l = e.add_link("wan", 10e9, 5e-3);
+        e.set_link_loss_detect(l, 20e-3);
+        let cc = CcConfig {
+            init_window: 2 << 20,
+            init_ssthresh: 2 << 20,
+            max_window: 8 << 20,
+            ..CcConfig::default()
+        };
+        let f = e.start_windowed_flow(&[l], 8 << 20, 0.0, 1.0, &cc);
+        e.completion(f);
+        let w = e.flow_window(f).unwrap();
+        // slow start would have hit the 8 MiB ceiling (2 -> 4 -> 8);
+        // additive increase adds 256 KiB per RTT instead
+        assert!(w < (4 << 20) as f64, "additive increase only: w={w}");
+        assert!(w > (2 << 20) as f64, "but the window must still grow: w={w}");
+        assert_eq!(e.flow_ssthresh(f), Some((2 << 20) as f64));
+    }
+
+    #[test]
+    fn sustained_overload_synthesizes_loss_and_shrinks_the_window() {
+        let (mut e, l) = managed_link();
+        let cc = CcConfig { init_window: 4 << 20, ..CcConfig::default() };
+        let baseline = {
+            let (mut e2, l2) = one_link();
+            let f = e2.start_flow(&[l2], 20 << 20, 0.0, 1.0);
+            e2.completion(f)
+        };
+        // 4 MiB window / 10 ms = 400 MB/s demanded of a 100 MB/s wire:
+        // overloaded from the first byte
+        let f = e.start_windowed_flow(&[l], 20 << 20, 0.0, 1.0, &cc);
+        let t = e.completion(f);
+        assert!(e.flow_losses(f) >= 2, "sustained overload must keep synthesizing loss");
+        assert!(e.flow_retransmitted_bytes(f) > 0);
+        assert_eq!(e.link(l).total_losses, e.flow_losses(f));
+        assert!(e.link(l).total_retransmit_bytes > 0);
+        assert!(
+            e.flow_window(f).unwrap() < (4 << 20) as f64,
+            "multiplicative decrease must have shrunk the window"
+        );
+        assert!(t > baseline, "retransmissions cost time: {t} vs lossless {baseline}");
+    }
+
+    #[test]
+    fn loss_retransmit_never_exceeds_delivery_since_last_loss() {
+        // chronic overload at a tiny share must still make forward
+        // progress (the go-back bytes are bounded by actual delivery)
+        let (mut e, l) = managed_link();
+        let cc = CcConfig { init_window: 8 << 20, min_window: 4 << 20, ..CcConfig::default() };
+        let flows: Vec<FlowId> = (0..8)
+            .map(|_| e.start_windowed_flow(&[l], 4 << 20, 0.0, 1.0, &cc))
+            .collect();
+        for f in &flows {
+            let t = e.completion(*f);
+            assert!(t.is_finite());
+        }
+        let payload: u64 = flows.iter().map(|f| e.flows[f.0].bytes).sum();
+        let retx = e.link(l).total_retransmit_bytes;
+        assert!(e.link(l).total_losses > 0, "this workload must be lossy");
+        // each loss re-queues at most 3/4 of what was delivered since
+        // the previous one, so total retransmit <= 3x the payload
+        assert!(retx <= 3 * payload, "retransmit {retx} breaches the progress bound");
+    }
+
+    #[test]
+    fn reset_clears_loss_accounting() {
+        let (mut e, l) = managed_link();
+        let cc = CcConfig { init_window: 8 << 20, ..CcConfig::default() };
+        let f = e.start_windowed_flow(&[l], 16 << 20, 0.0, 1.0, &cc);
+        e.completion(f);
+        assert!(e.link(l).total_losses > 0);
+        e.reset();
+        assert_eq!(e.link(l).total_losses, 0);
+        assert_eq!(e.link(l).total_retransmit_bytes, 0);
+        assert!(e.link(l).loss_detect_s().is_finite(), "the loss knob is configuration");
     }
 }

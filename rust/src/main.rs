@@ -5,10 +5,13 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|all>`
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|all>`
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
-//!   comparison on the discrete-event core).
+//!   comparison on the discrete-event core; `xfer` sweeps stream
+//!   counts on the lossless and the congestion-managed geo WAN).
+//!   `bench preempt` and `bench xfer` also emit machine-readable
+//!   `BENCH_preempt.json` / `BENCH_xfer.json` for CI perf tracking.
 //! * `xfer [--size 512M] [--streams 1,2,4,8] [--chunk 4M] [--corrupt N]
 //!   [--drop-stream S] [--mix]` — drive the WAN bulk-transfer engine:
 //!   stream-count sweep, optional fault injection (corrupt chunks /
@@ -141,11 +144,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig9b" => bench::print_sds_modes(&bench::fig9b(&[5, 20], 50)),
         "fig9c" => bench::print_end2end(&bench::fig9c(&[8, 32, 64], None)),
         "table2" => bench::print_table2(&bench::table2(4_000, 50)),
-        "preempt" => bench::print_preempt(&bench::fig_preempt(16, 32 << 20, 4, 1 << 30)),
+        "preempt" => {
+            let rows = bench::fig_preempt(16, 32 << 20, 4, 1 << 30);
+            bench::print_preempt(&rows);
+            emit_json("BENCH_preempt.json", &bench::preempt_json(&rows))?;
+        }
+        "xfer" => {
+            let total = parse_bytes(&args.opt("data", "512M")).unwrap_or(512 << 20);
+            let streams = [1usize, 2, 4, 8, 16, 32, 64];
+            let plain = bench::fig_xfer_streams(total, &streams);
+            bench::print_xfer_streams(total, &plain);
+            let congested = bench::fig_xfer_streams_cc(total, &streams);
+            bench::print_xfer_streams_cc(total, &congested);
+            emit_json("BENCH_xfer.json", &bench::xfer_json(total, &plain, &congested))?;
+        }
         "all" => {
-            for w in
-                ["fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2", "preempt"]
-            {
+            for w in [
+                "fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2",
+                "preempt", "xfer",
+            ] {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];
                 cmd_bench(&sub)?;
@@ -153,6 +170,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         other => bail!("unknown bench {other}"),
     }
+    Ok(())
+}
+
+/// Write a machine-readable bench payload next to the working directory
+/// (the CI smoke step checks these exist and parse).
+fn emit_json(path: &str, payload: &scispace::util::json::Json) -> Result<()> {
+    std::fs::write(path, format!("{payload}\n"))?;
+    println!("wrote {path}");
     Ok(())
 }
 

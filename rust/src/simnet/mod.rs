@@ -40,6 +40,15 @@ pub struct NetConfig {
     pub lan_bw: f64,
     /// Intra-DC one-way latency, seconds.
     pub lan_latency_s: f64,
+    /// The WAN loss knob: sustained-overload interval before the WAN
+    /// synthesizes congestion loss for windowed flows
+    /// ([`crate::engine::CcConfig`]). `INFINITY` (the default) keeps
+    /// the WAN lossless — windowed flows then behave exactly like
+    /// plain processor-sharing flows.
+    pub wan_loss_detect_s: f64,
+    /// Same knob for the intra-DC fabrics (lossless by default; real
+    /// datacenter fabrics are flow-controlled, not drop-based).
+    pub lan_loss_detect_s: f64,
 }
 
 impl NetConfig {
@@ -53,6 +62,25 @@ impl NetConfig {
             wan_latency_s: 50e-6,
             lan_bw: 12.5e9,
             lan_latency_s: 20e-6,
+            wan_loss_detect_s: f64::INFINITY,
+            lan_loss_detect_s: f64::INFINITY,
+        }
+    }
+
+    /// A genuinely geo-distributed deployment (the regime the paper's
+    /// same-room emulation abstracts away): a 10 Gb/s WAN with a 25 ms
+    /// one-way latency that *is* the bottleneck, congestion-managed so
+    /// windowed flows see synthesized loss under sustained overload.
+    /// The LANs stay at fabric speed and lossless. This is the network
+    /// the over-striping sweeps (`fig_xfer_streams_cc`) run on.
+    pub fn geo_default() -> Self {
+        NetConfig {
+            wan_bw: 1.25e9,
+            wan_latency_s: 25e-3,
+            lan_bw: 12.5e9,
+            lan_latency_s: 20e-6,
+            wan_loss_detect_s: 20e-3,
+            lan_loss_detect_s: f64::INFINITY,
         }
     }
 }
@@ -79,10 +107,16 @@ impl Network {
             res: env.add_link("net.wan", cfg.wan_bw, cfg.wan_latency_s),
             latency_s: cfg.wan_latency_s,
         };
+        if cfg.wan_loss_detect_s.is_finite() {
+            env.set_link_loss_detect(wan.res, cfg.wan_loss_detect_s);
+        }
         let lans: Vec<Link> = (0..n_dcs)
-            .map(|i| Link {
-                res: env.add_link(&format!("net.lan{i}"), cfg.lan_bw, cfg.lan_latency_s),
-                latency_s: cfg.lan_latency_s,
+            .map(|i| {
+                let res = env.add_link(&format!("net.lan{i}"), cfg.lan_bw, cfg.lan_latency_s);
+                if cfg.lan_loss_detect_s.is_finite() {
+                    env.set_link_loss_detect(res, cfg.lan_loss_detect_s);
+                }
+                Link { res, latency_s: cfg.lan_latency_s }
             })
             .collect();
         let slots = 1 + lans.len();
@@ -143,6 +177,13 @@ impl Network {
             .collect()
     }
 
+    /// Round-trip time of the `src_dc -> dst_dc` path: twice the sum of
+    /// its per-hop one-way latencies. This is the RTT a windowed flow's
+    /// `window / rtt` cap is computed against.
+    pub fn path_rtt(&self, src_dc: usize, dst_dc: usize) -> f64 {
+        2.0 * self.path(src_dc, dst_dc).iter().map(|l| l.latency_s).sum::<f64>()
+    }
+
     /// Register a bulk transfer on its path (contention accounting).
     pub fn begin_transfer(&mut self, src_dc: usize, dst_dc: usize) {
         for s in self.hop_slots(src_dc, dst_dc) {
@@ -184,6 +225,28 @@ impl Network {
     /// Peak concurrent bulk transfers seen on LAN `dc`.
     pub fn lan_peak(&self, dc: usize) -> u32 {
         self.peak[1 + dc]
+    }
+
+    /// Congestion losses synthesized on the WAN (next to
+    /// [`Network::wan_peak`] in the contention accounting; always 0
+    /// unless the WAN loss knob is armed).
+    pub fn wan_losses(&self, env: &Engine) -> u64 {
+        env.link(self.wan.res).total_losses
+    }
+
+    /// Bytes those WAN losses re-queued for retransmission.
+    pub fn wan_retransmit_bytes(&self, env: &Engine) -> u64 {
+        env.link(self.wan.res).total_retransmit_bytes
+    }
+
+    /// Congestion losses synthesized on LAN `dc`.
+    pub fn lan_losses(&self, env: &Engine, dc: usize) -> u64 {
+        env.link(self.lans[dc].res).total_losses
+    }
+
+    /// Bytes LAN `dc`'s losses re-queued for retransmission.
+    pub fn lan_retransmit_bytes(&self, env: &Engine, dc: usize) -> u64 {
+        env.link(self.lans[dc].res).total_retransmit_bytes
     }
 
     /// Clear contention counters (between experiment iterations).
@@ -288,6 +351,54 @@ mod tests {
             (1.8..2.05).contains(&ratio),
             "shared wire must halve bandwidth (ratio ~2), not serialize: ratio={ratio}"
         );
+    }
+
+    #[test]
+    fn path_rtt_sums_hops_both_ways() {
+        let (_env, net) = setup();
+        let cfg = NetConfig::paper_default();
+        let local = net.path_rtt(0, 0);
+        assert!((local - 2.0 * cfg.lan_latency_s).abs() < 1e-12);
+        let remote = net.path_rtt(0, 1);
+        assert!(
+            (remote - 2.0 * (2.0 * cfg.lan_latency_s + cfg.wan_latency_s)).abs() < 1e-12,
+            "remote rtt {remote}"
+        );
+    }
+
+    #[test]
+    fn default_wan_is_lossless_for_windowed_flows() {
+        use crate::engine::CcConfig;
+        let (mut env, net) = setup();
+        let path = net.flow_path(0, 1);
+        // oversubscribe wildly; without the loss knob nothing happens
+        let flows: Vec<_> = (0..4)
+            .map(|_| env.start_windowed_flow(&path, 64 << 20, 0.0, 1.0, &CcConfig::default()))
+            .collect();
+        for f in flows {
+            env.completion(f);
+        }
+        assert_eq!(net.wan_losses(&env), 0);
+        assert_eq!(net.wan_retransmit_bytes(&env), 0);
+    }
+
+    #[test]
+    fn geo_wan_synthesizes_loss_under_oversubscription() {
+        use crate::engine::CcConfig;
+        let mut env = Engine::new();
+        let net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+        let path = net.flow_path(0, 1);
+        // 16 windowed flows demand far more than the 1.25 GB/s WAN
+        let flows: Vec<_> = (0..16)
+            .map(|_| env.start_windowed_flow(&path, 16 << 20, 0.0, 1.0, &CcConfig::default()))
+            .collect();
+        for f in flows {
+            env.completion(f);
+        }
+        assert!(net.wan_losses(&env) > 0, "sustained WAN overload must synthesize loss");
+        assert!(net.wan_retransmit_bytes(&env) > 0);
+        assert_eq!(net.lan_losses(&env, 0), 0, "the lossless LANs never drop");
+        assert_eq!(net.lan_losses(&env, 1), 0);
     }
 
     #[test]

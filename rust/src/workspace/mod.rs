@@ -32,7 +32,9 @@ use crate::simclock::{ResourceId, SimEnv};
 use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
 use crate::simnet::{NetConfig, Network};
 use crate::vfs::ObjectStore;
-use crate::xfer::{FaultInjector, Priority, TransferReport, TransferRequest, XferConfig, XferEngine};
+use crate::xfer::{
+    DigestSinks, FaultInjector, Priority, TransferReport, TransferRequest, XferConfig, XferEngine,
+};
 use localfs::LocalFs;
 
 /// Which path an operation takes through the stack.
@@ -120,7 +122,10 @@ pub struct Dtn {
     pub dc: usize,
     /// NFS server model.
     pub nfs: NfsServer,
-    /// Metadata + discovery service CPU.
+    /// Metadata + discovery service CPU. Also the DTN's digest engine:
+    /// bulk transfers charge their chunk checksums here
+    /// ([`DigestSinks`]), so integrity cost queues behind — and delays —
+    /// concurrent metadata traffic instead of being free stream time.
     pub meta_cpu: ResourceId,
 }
 
@@ -181,7 +186,16 @@ impl Testbed {
                 dtns.push(Dtn {
                     dc: d,
                     nfs: NfsServer::build(&mut env, &name, &cfg.nfs),
-                    meta_cpu: env.add_resource(&format!("{name}.metasvc"), cfg.meta_op_s, f64::INFINITY),
+                    // digest streaming runs at the xfer engine's
+                    // checksum rate, and each digest request also pays
+                    // the CPU's per-op admission cost (it is a service
+                    // request like any other); metadata ops are
+                    // zero-byte, so their cost is untouched
+                    meta_cpu: env.add_resource(
+                        &format!("{name}.metasvc"),
+                        cfg.meta_op_s,
+                        cfg.xfer.checksum_bw,
+                    ),
                 });
             }
         }
@@ -451,9 +465,19 @@ impl Testbed {
                         priority: Priority::Interactive,
                         submitted_at: t2,
                     };
+                    // the ingest DTN verifies chunk digests on its
+                    // service CPU; the collaborator side stays private
+                    let sinks = DigestSinks { src: None, dst: Some(self.dtns[dtn].meta_cpu) };
                     let engine = XferEngine::new(self.cfg.xfer.clone());
                     engine
-                        .transfer(&mut self.env, &mut self.net, &req, &mut FaultInjector::none(), t2)?
+                        .transfer_with_sinks(
+                            &mut self.env,
+                            &mut self.net,
+                            &req,
+                            &mut FaultInjector::none(),
+                            t2,
+                            sinks,
+                        )?
                         .finished_at
                 } else {
                     self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len)
@@ -524,13 +548,17 @@ impl Testbed {
                         priority: Priority::Interactive,
                         submitted_at: t,
                     };
+                    // the staging DTN digests outbound chunks on its
+                    // service CPU; the collaborator side stays private
+                    let sinks = DigestSinks { src: Some(self.dtns[dtn].meta_cpu), dst: None };
                     let engine = XferEngine::new(self.cfg.xfer.clone());
-                    let rep = engine.transfer(
+                    let rep = engine.transfer_with_sinks(
                         &mut self.env,
                         &mut self.net,
                         &req,
                         &mut FaultInjector::none(),
                         t,
+                        sinks,
                     )?;
                     t = rep.finished_at;
                 } else {
@@ -619,8 +647,14 @@ impl Testbed {
             priority: Priority::Bulk,
             submitted_at: t,
         };
+        // DTN-to-DTN repair: both endpoints digest on their service CPUs
+        let sinks = DigestSinks::on(
+            self.dtns[self.dtn_in_dc(src_dc, c)].meta_cpu,
+            self.dtns[self.dtn_in_dc(dst_dc, c)].meta_cpu,
+        );
         let engine = XferEngine::new(self.cfg.xfer.clone());
-        let rep = engine.transfer(&mut self.env, &mut self.net, &req, faults, t)?;
+        let rep =
+            engine.transfer_with_sinks(&mut self.env, &mut self.net, &req, faults, t, sinks)?;
         // materialize the replica: real payloads are copied byte-for-byte
         // (whatever their size); synthetic holes stay synthetic
         let replica = if self.dcs[src_dc].store.is_hole(obj).unwrap_or(true) {
@@ -862,6 +896,44 @@ mod tests {
         let other = tb.collabs.iter().position(|c| c.dc != data_dc).unwrap();
         tb.read(other, "/collab/small.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
         assert_eq!(tb.net.wan_peak(), 0, "below-threshold reads bypass the engine");
+    }
+
+    #[test]
+    fn bulk_transfer_digests_charge_the_dtn_cpu() {
+        // Checksum offload: the ingest DTN's service CPU digests every
+        // chunk of a bulk write (bytes served on meta_cpu), instead of
+        // the cost hiding as private stream time.
+        let mut tb = bed_with(1);
+        let len = 16u64 << 20; // above the bulk threshold
+        let before: u64 =
+            (0..tb.dtns.len()).map(|i| tb.env.resource(tb.dtns[i].meta_cpu).total_bytes).sum();
+        assert_eq!(before, 0);
+        tb.write(0, "/collab/big.dat", 0, len, None, AccessMode::Scispace).unwrap();
+        let digested: u64 =
+            (0..tb.dtns.len()).map(|i| tb.env.resource(tb.dtns[i].meta_cpu).total_bytes).sum();
+        assert_eq!(digested, len, "every chunk must be digested exactly once on a DTN CPU");
+    }
+
+    #[test]
+    fn digest_load_queues_behind_metadata_service_load() {
+        // Fig. 9b-style interference on the data plane: a busy
+        // metadata CPU delays the bulk transfer that digests on it.
+        let quiet = {
+            let mut tb = bed_with(1);
+            tb.write(0, "/collab/a.dat", 0, 16 << 20, None, AccessMode::Scispace).unwrap();
+            tb.now(0)
+        };
+        let contended = {
+            let mut tb = bed_with(1);
+            let cpu = tb.dtns[tb.collabs[0].dtn].meta_cpu;
+            tb.env.serve_for(cpu, 0.0, 0.25); // pre-existing service backlog
+            tb.write(0, "/collab/a.dat", 0, 16 << 20, None, AccessMode::Scispace).unwrap();
+            tb.now(0)
+        };
+        assert!(
+            contended > quiet + 0.2,
+            "digests must queue behind the busy service CPU: {contended} vs {quiet}"
+        );
     }
 
     #[test]

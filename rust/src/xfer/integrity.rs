@@ -9,7 +9,32 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
+use crate::engine::ServerId;
 use crate::util::rng::Rng;
+
+/// Where each endpoint computes its chunk digests.
+///
+/// `None` (the default) charges the digest as private stream time at
+/// `XferConfig::checksum_bw` — the pre-offload model, where integrity
+/// is free parallel work. `Some(server)` serves the chunk's bytes
+/// through that FIFO server ([`crate::engine::Engine::serve`]) —
+/// in the testbed, the DTN's metadata-service CPU — so integrity cost
+/// queues behind (and delays) concurrent metadata traffic: the
+/// Fig. 9b-style interference, now on the data plane.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DigestSinks {
+    /// Sender-side digest CPU (digests before the chunk leaves).
+    pub src: Option<ServerId>,
+    /// Receiver-side digest CPU (verifies on arrival).
+    pub dst: Option<ServerId>,
+}
+
+impl DigestSinks {
+    /// Digest on the given endpoint CPUs.
+    pub fn on(src: ServerId, dst: ServerId) -> Self {
+        DigestSinks { src: Some(src), dst: Some(dst) }
+    }
+}
 
 /// One contiguous span of a transfer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -33,10 +33,10 @@ use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
-use crate::engine::Engine;
+use crate::engine::{CcConfig, Engine};
 use crate::simnet::{Link, Network};
 
-pub use integrity::{checksum, chunk_spans, Chunk, FaultInjector};
+pub use integrity::{checksum, chunk_spans, Chunk, DigestSinks, FaultInjector};
 pub use sched::{run_flows, run_queue, FlowReport, TransferQueue};
 pub use stream::StreamSet;
 
@@ -72,6 +72,33 @@ impl Priority {
     }
 }
 
+/// Congestion-control tuning for a transfer's streams.
+///
+/// When enabled, every stream runs as a *windowed* flow
+/// ([`Engine::start_windowed_flow`]): its rate is capped at
+/// `window / rtt` on congestion-managed links and it suffers
+/// multiplicative decrease + go-back retransmission when a sustained
+/// overload synthesizes loss there. Striping N streams multiplies the
+/// aggregate window (and its growth) by N — and multiplies the loss
+/// exposure the same way, which is where the over-striping collapse
+/// comes from. Disabled (the default), streams are plain
+/// processor-sharing flows and every pre-congestion behaviour is
+/// byte-identical.
+#[derive(Debug, Clone, Default)]
+pub struct CongestionConfig {
+    /// Run streams as AIMD windowed flows.
+    pub enabled: bool,
+    /// Per-stream window parameters.
+    pub window: CcConfig,
+}
+
+impl CongestionConfig {
+    /// Congestion control on, with the default AIMD window.
+    pub fn on() -> Self {
+        CongestionConfig { enabled: true, window: CcConfig::default() }
+    }
+}
+
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
 pub struct XferConfig {
@@ -84,9 +111,14 @@ pub struct XferConfig {
     /// Per-chunk ack processing, seconds.
     pub ack_op_s: f64,
     /// Endpoint checksum throughput, bytes/s (each side digests once).
+    /// Used for the private-time fallback when a digest side has no
+    /// [`DigestSinks`] server; the DTN CPUs are provisioned at the same
+    /// rate (see `workspace`).
     pub checksum_bw: f64,
     /// Retries allowed per chunk before the transfer fails.
     pub max_retries: u32,
+    /// Per-stream congestion control (off by default).
+    pub cc: CongestionConfig,
 }
 
 impl Default for XferConfig {
@@ -98,6 +130,7 @@ impl Default for XferConfig {
             ack_op_s: 20e-6,
             checksum_bw: 10e9,
             max_retries: 4,
+            cc: CongestionConfig::default(),
         }
     }
 }
@@ -143,6 +176,13 @@ pub struct TransferReport {
     pub retried_bytes: u64,
     /// Streams that died mid-transfer.
     pub stream_drops: u32,
+    /// Congestion losses the streams absorbed (windowed flows on
+    /// managed links only; see [`CongestionConfig`]).
+    pub cc_losses: u64,
+    /// Bytes those losses re-queued for retransmission inside the
+    /// engine (distinct from `retried_bytes`, which counts whole-chunk
+    /// integrity retries).
+    pub cc_retransmit_bytes: u64,
     /// Virtual start time (first stream opened).
     pub started_at: f64,
     /// Virtual completion time (last chunk verified).
@@ -170,6 +210,7 @@ pub struct Flight {
     pub req: TransferRequest,
     path: Vec<Link>,
     streams: StreamSet,
+    sinks: DigestSinks,
     pending: VecDeque<Chunk>,
     attempts: Vec<u32>,
     delivered_bytes: u64,
@@ -177,8 +218,22 @@ pub struct Flight {
 }
 
 impl Flight {
-    /// Open streams and stage every chunk at virtual time `now`.
+    /// Open streams and stage every chunk at virtual time `now`; chunk
+    /// digests are private stream time (no [`DigestSinks`]).
     pub fn new(cfg: &XferConfig, net: &Network, req: &TransferRequest, now: f64) -> Flight {
+        Self::with_sinks(cfg, net, req, now, DigestSinks::default())
+    }
+
+    /// [`Flight::new`] with the chunk digests charged to the given
+    /// endpoint servers (the DTN service CPUs) instead of private
+    /// stream time.
+    pub fn with_sinks(
+        cfg: &XferConfig,
+        net: &Network,
+        req: &TransferRequest,
+        now: f64,
+        sinks: DigestSinks,
+    ) -> Flight {
         let chunks = chunk_spans(req.bytes, cfg.chunk_bytes);
         let width = cfg.n_streams.max(1).min(chunks.len().max(1));
         let streams = StreamSet::new(width, now, cfg.stream_setup_s);
@@ -186,6 +241,7 @@ impl Flight {
         Flight {
             req: req.clone(),
             path: net.path(req.src_dc, req.dst_dc),
+            sinks,
             pending: chunks.into_iter().collect(),
             attempts,
             delivered_bytes: 0,
@@ -199,6 +255,8 @@ impl Flight {
                 retried_chunks: 0,
                 retried_bytes: 0,
                 stream_drops: 0,
+                cc_losses: 0,
+                cc_retransmit_bytes: 0,
                 started_at: now,
                 finished_at: now,
             },
@@ -249,17 +307,19 @@ impl Flight {
                 cfg.max_retries
             );
         }
-        let t = self.streams.send_chunk(env, &self.path, s, chunk.len, cfg);
+        let t = self.streams.send_chunk(env, &self.path, s, chunk.len, cfg, self.sinks);
         if faults.drops_stream(s, self.streams.sent(s)) {
             // the carrying stream died; the chunk is not acked and must
             // be re-sent on a surviving stream
             self.streams.kill(s);
+            self.streams.discount(s, chunk.len);
             self.report.stream_drops += 1;
             self.report.retried_chunks += 1;
             self.report.retried_bytes += chunk.len;
             self.pending.push_back(chunk);
         } else if faults.corrupts(chunk.index, self.attempts[idx]) {
             // checksum mismatch at the receiver: retry just this chunk
+            self.streams.discount(s, chunk.len);
             self.report.retried_chunks += 1;
             self.report.retried_bytes += chunk.len;
             self.pending.push_back(chunk);
@@ -272,7 +332,9 @@ impl Flight {
     }
 
     /// Consume the flight into its report.
-    pub fn into_report(self) -> TransferReport {
+    pub fn into_report(mut self) -> TransferReport {
+        self.report.cc_losses = self.streams.cc_losses();
+        self.report.cc_retransmit_bytes = self.streams.cc_retransmit_bytes();
         self.report
     }
 }
@@ -292,7 +354,9 @@ impl XferEngine {
 
     /// Run one transfer to completion starting at `now`, charging the
     /// shared network resources in `env`/`net`. Zero-byte transfers
-    /// complete instantly.
+    /// complete instantly. Chunk digests are private stream time; use
+    /// [`XferEngine::transfer_with_sinks`] to charge them to the DTN
+    /// service CPUs instead.
     pub fn transfer(
         &self,
         env: &mut Engine,
@@ -301,7 +365,23 @@ impl XferEngine {
         faults: &mut FaultInjector,
         now: f64,
     ) -> Result<TransferReport> {
-        let mut flight = Flight::new(&self.cfg, net, req, now);
+        self.transfer_with_sinks(env, net, req, faults, now, DigestSinks::default())
+    }
+
+    /// [`XferEngine::transfer`] with the per-chunk digests served by
+    /// the endpoint DTN CPUs ([`Engine::serve`]) — integrity cost then
+    /// queues behind (and delays) whatever metadata service load those
+    /// CPUs are carrying, instead of being free private stream time.
+    pub fn transfer_with_sinks(
+        &self,
+        env: &mut Engine,
+        net: &mut Network,
+        req: &TransferRequest,
+        faults: &mut FaultInjector,
+        now: f64,
+        sinks: DigestSinks,
+    ) -> Result<TransferReport> {
+        let mut flight = Flight::with_sinks(&self.cfg, net, req, now, sinks);
         net.begin_transfer(req.src_dc, req.dst_dc);
         let mut outcome = Ok(());
         while !flight.is_done() {

@@ -182,6 +182,11 @@ pub struct FlowReport {
     pub finished_at: f64,
     /// Preemption bursts that paused this transfer mid-flight.
     pub pauses: u32,
+    /// Congestion losses the transfer's streams absorbed (windowed
+    /// flows on managed links only).
+    pub losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub retransmit_bytes: u64,
 }
 
 impl FlowReport {
@@ -198,6 +203,13 @@ impl FlowReport {
 /// weighted by the request's priority class, so concurrent transfers
 /// split every shared link proportionally — genuine processor sharing,
 /// not serialize-behind-the-horizon.
+///
+/// With `cfg.cc` enabled every stream is a *windowed* flow: its rate is
+/// additionally capped at `window / rtt`, and sustained overload on a
+/// congestion-managed link (the geo WAN) synthesizes loss — so striping
+/// more streams multiplies window growth *and* loss exposure, which is
+/// what bends the stream-count sweep from a plateau into the
+/// rise-peak-collapse curve (`bench::fig_xfer_streams_cc`).
 ///
 /// With `preempt` set, an Interactive arrival pauses every admitted
 /// Bulk/Scavenger flow (mid-hop — residual bytes are retained) and a
@@ -247,7 +259,11 @@ pub fn run_flows(
                 let t0 = at + cfg.stream_setup_s;
                 for k in 0..n {
                     let b = per + u64::from(k < extra);
-                    let f = env.start_flow(&path, b, t0, r.priority.weight());
+                    let f = if cfg.cc.enabled {
+                        env.start_windowed_flow(&path, b, t0, r.priority.weight(), &cfg.cc.window)
+                    } else {
+                        env.start_flow(&path, b, t0, r.priority.weight())
+                    };
                     owner_of.insert(f.0, i);
                     flows_of[i].push(f);
                 }
@@ -313,6 +329,8 @@ pub fn run_flows(
             started_at: started[i],
             finished_at: finished[i],
             pauses: pauses[i],
+            losses: flows_of[i].iter().map(|&f| env.flow_losses(f)).sum(),
+            retransmit_bytes: flows_of[i].iter().map(|&f| env.flow_retransmitted_bytes(f)).sum(),
         })
         .collect()
 }
@@ -512,6 +530,34 @@ mod tests {
             "held bulk finishes after the burst: bulk={} urgent={}",
             bulk.finished_at,
             urgent.finished_at
+        );
+    }
+
+    #[test]
+    fn windowed_flows_on_geo_wan_lose_and_slow_down() {
+        use crate::simnet::NetConfig;
+        use crate::xfer::CongestionConfig;
+        let mk = |cc: CongestionConfig| {
+            let mut env = Engine::new();
+            let mut net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+            let cfg = XferConfig { n_streams: 32, cc, ..XferConfig::default() };
+            let reqs = [req(1, "a", 256 << 20, Priority::Bulk)];
+            let rep = run_flows(&mut env, &mut net, &cfg, &reqs, false).remove(0);
+            let losses = net.wan_losses(&env);
+            (rep, losses)
+        };
+        let (plain, l_plain) = mk(CongestionConfig::default());
+        let (cc, l_cc) = mk(CongestionConfig::on());
+        assert_eq!(l_plain, 0, "cc off: the WAN knob never fires");
+        assert_eq!(plain.losses, 0);
+        assert!(l_cc > 0, "32 windowed streams must overload the geo WAN");
+        assert_eq!(cc.losses, l_cc, "the report aggregates its streams' losses");
+        assert!(cc.retransmit_bytes > 0);
+        assert!(
+            cc.finished_at > plain.finished_at,
+            "congestion must cost time: cc={} plain={}",
+            cc.finished_at,
+            plain.finished_at
         );
     }
 

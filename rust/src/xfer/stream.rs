@@ -7,11 +7,18 @@
 //! parallel. That is exactly why GridFTP-style movers stripe: transfer
 //! time falls with stream count until the link's byte-serialization floor
 //! is reached, then plateaus.
+//!
+//! With congestion control enabled (`XferConfig::cc`), every chunk rides
+//! a *windowed* flow and the stream's AIMD window survives across its
+//! chunks — slow start is paid once per stream, not once per chunk — so
+//! the stream behaves like one long-lived connection. The per-stream
+//! goodput ([`StreamSet::goodput`]) and loss counters expose what the
+//! window did to each stripe.
 
 use crate::engine::{Engine, LinkId};
 use crate::simnet::Link;
 
-use super::XferConfig;
+use super::{DigestSinks, XferConfig};
 
 /// The per-transfer stream group.
 #[derive(Debug, Clone)]
@@ -19,6 +26,19 @@ pub struct StreamSet {
     clocks: Vec<f64>,
     live: Vec<bool>,
     sent: Vec<u64>,
+    /// Bytes each stream has carried (retries included).
+    carried: Vec<u64>,
+    /// Carried bytes later voided (failed verification / dead stream).
+    wasted: Vec<u64>,
+    /// Congestion state `(window, ssthresh)` carried across a stream's
+    /// chunks (`None` until the stream sends its first windowed chunk).
+    windows: Vec<Option<(f64, f64)>>,
+    /// Synthesized congestion losses per stream.
+    losses: Vec<u64>,
+    /// Engine-level retransmit bytes per stream.
+    retransmit: Vec<u64>,
+    /// When the streams were opened (for goodput).
+    opened_at: f64,
     /// Latest chunk-completion time observed (the transfer makespan).
     last_done: f64,
 }
@@ -32,6 +52,12 @@ impl StreamSet {
             clocks: vec![start + setup_s; n],
             live: vec![true; n],
             sent: vec![0; n],
+            carried: vec![0; n],
+            wasted: vec![0; n],
+            windows: vec![None; n],
+            losses: vec![0; n],
+            retransmit: vec![0; n],
+            opened_at: start,
             last_done: start,
         }
     }
@@ -49,6 +75,49 @@ impl StreamSet {
     /// Chunks delivered by stream `s` (including retries it carried).
     pub fn sent(&self, s: usize) -> u64 {
         self.sent[s]
+    }
+
+    /// Bytes stream `s` has carried (retries included).
+    pub fn carried(&self, s: usize) -> u64 {
+        self.carried[s]
+    }
+
+    /// Stream `s`'s observed goodput over its lifetime so far, bytes/s
+    /// (0 before it completes its first chunk): bytes that actually
+    /// counted — voided deliveries ([`StreamSet::discount`]) excluded.
+    /// Striping multiplies aggregate window growth by the stream count;
+    /// this is where each stripe's actual yield — including its loss
+    /// exposure — shows up.
+    pub fn goodput(&self, s: usize) -> f64 {
+        let dt = self.clocks[s] - self.opened_at;
+        if dt > 0.0 {
+            (self.carried[s] - self.wasted[s]) as f64 / dt
+        } else {
+            0.0
+        }
+    }
+
+    /// Void `len` previously-carried bytes on stream `s`: the chunk
+    /// failed verification (or its stream died before the ack), so the
+    /// delivery crossed the wire but did not count as goodput.
+    pub fn discount(&mut self, s: usize, len: u64) {
+        self.wasted[s] += len;
+    }
+
+    /// Stream `s`'s current congestion window, if it has sent windowed
+    /// chunks.
+    pub fn window(&self, s: usize) -> Option<f64> {
+        self.windows[s].map(|(w, _)| w)
+    }
+
+    /// Total synthesized congestion losses across the streams.
+    pub fn cc_losses(&self) -> u64 {
+        self.losses.iter().sum()
+    }
+
+    /// Total engine-level retransmit bytes across the streams.
+    pub fn cc_retransmit_bytes(&self) -> u64 {
+        self.retransmit.iter().sum()
     }
 
     /// The live stream with the earliest local clock (deterministic:
@@ -72,6 +141,16 @@ impl StreamSet {
     /// streams and transfers ride it), checksum at both endpoints, then
     /// wait for the ack to travel back. Returns the chunk completion
     /// time.
+    ///
+    /// Digests: a `sinks` endpoint charges its digest to that server
+    /// (sender before the chunk leaves, receiver on arrival); a `None`
+    /// endpoint pays private stream time at `cfg.checksum_bw`.
+    ///
+    /// With `cfg.cc` enabled the chunk rides a windowed flow seeded
+    /// with the stream's carried window *and* slow-start threshold; the
+    /// grown (or loss-shrunk) state is read back afterwards, so the
+    /// stream's congestion state — including a loss's multiplicative
+    /// decrease — persists across its chunks.
     pub fn send_chunk(
         &mut self,
         env: &mut Engine,
@@ -79,19 +158,52 @@ impl StreamSet {
         s: usize,
         len: u64,
         cfg: &XferConfig,
+        sinks: DigestSinks,
     ) -> f64 {
         debug_assert!(self.live[s], "sending on a dead stream");
         let ids: Vec<LinkId> = path.iter().map(|l| l.res).collect();
-        let flow = env.start_flow(&ids, len, self.clocks[s], 1.0);
+        let private_digest = if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
+            len as f64 / cfg.checksum_bw
+        } else {
+            0.0
+        };
+        // sender digest: on the DTN CPU it precedes (and gates) the
+        // send; as private time it overlaps and is charged at the end,
+        // exactly like the pre-offload model
+        let t_send = match sinks.src {
+            Some(srv) => env.serve(srv, self.clocks[s], len),
+            None => self.clocks[s],
+        };
+        let flow = if cfg.cc.enabled {
+            let mut window = cfg.cc.window;
+            if let Some((w, ss)) = self.windows[s] {
+                window.init_window = w as u64;
+                window.init_ssthresh = ss as u64;
+            }
+            env.start_windowed_flow(&ids, len, t_send, 1.0, &window)
+        } else {
+            env.start_flow(&ids, len, t_send, 1.0)
+        };
         let mut t = env.completion(flow);
-        // sender + receiver digest the chunk
-        if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
-            t += 2.0 * len as f64 / cfg.checksum_bw;
+        if cfg.cc.enabled {
+            self.windows[s] = env.flow_window(flow).zip(env.flow_ssthresh(flow));
+            self.losses[s] += env.flow_losses(flow);
+            self.retransmit[s] += env.flow_retransmitted_bytes(flow);
         }
+        // receiver verifies the digest on arrival; a sender without a
+        // sink pays its digest as private time here too (the no-sink
+        // arithmetic stays bit-identical to the pre-offload model)
+        t = match (sinks.src, sinks.dst) {
+            (None, None) => t + 2.0 * private_digest,
+            (None, Some(srv)) => env.serve(srv, t + private_digest, len),
+            (Some(_), Some(srv)) => env.serve(srv, t, len),
+            (Some(_), None) => t + private_digest,
+        };
         // ack rides back latency-only (it is a few bytes)
         t += path.iter().map(|l| l.latency_s).sum::<f64>() + cfg.ack_op_s;
         self.clocks[s] = t;
         self.sent[s] += 1;
+        self.carried[s] += len;
         self.last_done = self.last_done.max(t);
         t
     }
@@ -102,10 +214,12 @@ impl StreamSet {
     }
 
     /// Re-open stream `s` at time `at` (reconnect after total stream
-    /// loss) paying the connection setup again.
+    /// loss) paying the connection setup again. A reconnected stream
+    /// starts a fresh congestion window (slow start from scratch).
     pub fn revive(&mut self, s: usize, at: f64, setup_s: f64) {
         self.live[s] = true;
         self.clocks[s] = at + setup_s;
+        self.windows[s] = None;
     }
 
     /// Latest clock across all streams (used for reconnect timing).
@@ -123,6 +237,7 @@ impl StreamSet {
 mod tests {
     use super::*;
     use crate::simnet::{NetConfig, Network};
+    use crate::xfer::CongestionConfig;
 
     fn setup() -> (Engine, Network, XferConfig) {
         let mut env = Engine::new();
@@ -135,10 +250,12 @@ mod tests {
         let (mut env, net, cfg) = setup();
         let path = net.path(0, 1);
         let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
-        let t1 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg);
-        let t2 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg);
+        let t1 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg, DigestSinks::default());
+        let t2 = ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg, DigestSinks::default());
         assert!(t2 > t1);
         assert_eq!(ss.sent(0), 2);
+        assert_eq!(ss.carried(0), 2 << 20);
+        assert!(ss.goodput(0) > 0.0);
         assert!((ss.makespan() - t2).abs() < 1e-12);
     }
 
@@ -149,7 +266,7 @@ mod tests {
         let mut ss = StreamSet::new(4, 0.0, cfg.stream_setup_s);
         for _ in 0..8 {
             let s = ss.best_live().unwrap();
-            ss.send_chunk(&mut env, &path, s, 1 << 20, &cfg);
+            ss.send_chunk(&mut env, &path, s, 1 << 20, &cfg, DigestSinks::default());
         }
         // every link carried all bytes exactly once per chunk
         assert_eq!(env.link(net.wan.res).total_bytes, 8 << 20);
@@ -169,5 +286,54 @@ mod tests {
         assert_eq!(ss.live_count(), 0);
         ss.revive(2, 1.0, cfg.stream_setup_s);
         assert_eq!(ss.best_live(), Some(2));
+    }
+
+    #[test]
+    fn window_persists_across_chunks_and_resets_on_revive() {
+        // geo WAN, cc on: the window grown on chunk 1 seeds chunk 2
+        let mut env = Engine::new();
+        let net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+        let cfg = XferConfig { cc: CongestionConfig::on(), ..XferConfig::default() };
+        let path = net.path(0, 1);
+        let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        ss.send_chunk(&mut env, &path, 0, 4 << 20, &cfg, DigestSinks::default());
+        let w1 = ss.window(0).expect("windowed chunk must record a window");
+        assert!(
+            w1 > cfg.cc.window.init_window as f64,
+            "a solo uncontended stream must have grown its window: {w1}"
+        );
+        ss.send_chunk(&mut env, &path, 0, 4 << 20, &cfg, DigestSinks::default());
+        let w2 = ss.window(0).expect("window persists");
+        assert!(w2 >= w1, "the carried window must not reset between chunks");
+        ss.kill(0);
+        ss.revive(0, ss.horizon(), cfg.stream_setup_s);
+        assert_eq!(ss.window(0), None, "a reconnect restarts slow start");
+    }
+
+    #[test]
+    fn discounted_deliveries_reduce_goodput() {
+        let (mut env, net, cfg) = setup();
+        let path = net.path(0, 1);
+        let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg, DigestSinks::default());
+        ss.send_chunk(&mut env, &path, 0, 1 << 20, &cfg, DigestSinks::default());
+        let raw = ss.goodput(0);
+        assert!(raw > 0.0);
+        ss.discount(0, 1 << 20); // one delivery was voided (integrity retry)
+        assert!((ss.goodput(0) - raw / 2.0).abs() < raw * 1e-9, "voided bytes must not count");
+    }
+
+    #[test]
+    fn digest_sinks_charge_the_endpoint_servers() {
+        let (mut env, net, cfg) = setup();
+        let src_cpu = env.add_server("src.digest", 10e-6, cfg.checksum_bw);
+        let dst_cpu = env.add_server("dst.digest", 10e-6, cfg.checksum_bw);
+        let path = net.path(0, 1);
+        let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        let len = 4u64 << 20;
+        ss.send_chunk(&mut env, &path, 0, len, &cfg, DigestSinks::on(src_cpu, dst_cpu));
+        assert_eq!(env.server(src_cpu).total_bytes, len, "sender digest served on the CPU");
+        assert_eq!(env.server(dst_cpu).total_bytes, len, "receiver digest served on the CPU");
+        assert_eq!(env.server(src_cpu).total_ops, 1);
     }
 }

@@ -13,7 +13,7 @@
 //! * **Processor sharing** — k equal concurrent flows each finish in
 //!   ~k× the solo time instead of serializing back-to-back.
 
-use scispace::engine::Engine;
+use scispace::engine::{CcConfig, Engine};
 use scispace::simclock::SimEnv;
 use scispace::util::prop;
 use scispace::util::rng::Rng;
@@ -134,4 +134,148 @@ fn seeded_multi_flow_traces_are_byte_identical() {
 fn different_seeds_produce_different_traces() {
     // sanity: the trace actually reflects the workload
     assert_ne!(seeded_trace(1), seeded_trace(2));
+}
+
+/// Replay one fixed multi-flow workload on an engine whose links are
+/// already registered (links survive [`Engine::reset`]).
+fn replay_workload(e: &mut Engine, links: &[scispace::engine::LinkId]) -> Vec<String> {
+    let mut rng = Rng::new(11);
+    let mut flows = Vec::new();
+    for k in 0..24 {
+        let path: Vec<_> = (0..rng.range(1, 4)).map(|_| *rng.pick(links)).collect();
+        let bytes = rng.below(32 << 20) + 1;
+        let at = rng.below(500) as f64 * 1e-3;
+        flows.push(e.start_flow(&path, bytes, at, 1.0));
+        if k % 5 == 2 {
+            let _ = e.run_next();
+        }
+        if k % 7 == 3 {
+            e.pause(flows[rng.range(0, flows.len())]);
+        }
+    }
+    for &f in &flows {
+        e.resume(f, 1.0);
+    }
+    e.run_until_idle();
+    e.trace().to_vec()
+}
+
+#[test]
+fn reset_then_rerun_reproduces_a_fresh_engine_trace() {
+    // Regression pin for the reset/trace interaction: record a trace,
+    // reset, re-run the identical workload — the second trace must be
+    // byte-identical to a fresh engine's (sequence numbers, link
+    // floors, congestion state: everything must really reset).
+    let build = |e: &mut Engine| -> Vec<scispace::engine::LinkId> {
+        (0..3).map(|i| e.add_link(&format!("l{i}"), (i as f64 + 1.0) * 1e9, 10e-6)).collect()
+    };
+    let mut fresh = Engine::new();
+    fresh.record_trace(true);
+    let links = build(&mut fresh);
+    let expect = replay_workload(&mut fresh, &links);
+    assert!(!expect.is_empty());
+
+    let mut reused = Engine::new();
+    reused.record_trace(true);
+    let links = build(&mut reused);
+    let first = replay_workload(&mut reused, &links);
+    assert_eq!(first, expect, "sanity: same workload, same trace");
+    reused.reset();
+    assert!(reused.trace().is_empty(), "reset must clear the recorded trace");
+    let second = replay_workload(&mut reused, &links);
+    assert_eq!(second, expect, "a reset engine must replay byte-identically to a fresh one");
+}
+
+#[test]
+fn pause_resume_edge_cases_are_pinned_no_ops() {
+    // The documented contract (see Engine::pause / Engine::resume):
+    // pausing a completed flow, double-resume, and resume-at-a-time-
+    // before-the-pause are all safe no-ops — none may panic, rewind, or
+    // double-serve residual bytes.
+    let mut e = Engine::new();
+    let l = e.add_link("wire", 100e6, 1e-3);
+
+    // (a) pausing an already-completed flow is a no-op
+    let f = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+    let t = e.completion(f);
+    e.pause(f);
+    assert_eq!(e.flow_finish(f), Some(t), "pause must not disturb a done flow");
+    e.resume(f, t + 1.0);
+    assert_eq!(e.flow_finish(f), Some(t), "resume of a done flow is a no-op");
+
+    // (b) double-resume: the second resume must not reschedule anew
+    let mut e = Engine::new();
+    let l = e.add_link("wire", 100e6, 1e-3);
+    let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+    e.schedule_control(0.2, 0);
+    assert!(matches!(e.run_next(), scispace::engine::Occurrence::Control { .. }));
+    e.pause(f);
+    e.resume(f, 0.5);
+    e.resume(f, 0.9); // later double-resume: must not move the restart
+    let t = e.completion(f);
+    // 20 MB before the pause, 80 MB from t=0.5 -> 1.3 + latency
+    assert!((t - 1.301).abs() < 1e-9, "double-resume must keep the first restart: t={t}");
+
+    // (c) resume at a time before the pause cannot rewind the engine
+    let mut e = Engine::new();
+    let l = e.add_link("wire", 100e6, 1e-3);
+    let f = e.start_flow(&[l], 100_000_000, 0.0, 1.0);
+    e.schedule_control(0.4, 0);
+    assert!(matches!(e.run_next(), scispace::engine::Occurrence::Control { .. }));
+    e.pause(f); // paused at 0.4 with 60 MB residual
+    e.resume(f, 0.1); // "earlier" resume: clamps to the pause point
+    let t = e.completion(f);
+    assert!(
+        (t - 1.001).abs() < 1e-9,
+        "a rewound resume must not re-serve or skip residual bytes: t={t}"
+    );
+}
+
+#[test]
+fn prop_windowed_flows_on_uncongested_links_match_plain_within_1e9() {
+    // The tentpole's no-loss guarantee: on uncongested (unmanaged)
+    // links — every link that existed before this PR — windowed flows
+    // take the legacy processor-sharing arithmetic, so a whole seeded
+    // concurrent workload completes within 1e-9 of the plain-flow run
+    // across randomized sizes, bandwidths, latencies and hop counts.
+    prop::check(48, |rng| {
+        let hops = rng.range(1, 4);
+        let n_flows = rng.range(1, 6);
+        let mut plain = Engine::new();
+        let mut windowed = Engine::new();
+        let mut p_links = Vec::new();
+        let mut w_links = Vec::new();
+        for h in 0..hops {
+            let bw = (rng.below(10_000) + 1) as f64 * 1e6;
+            let lat = rng.below(50_000) as f64 * 1e-6;
+            p_links.push(plain.add_link(&format!("l{h}"), bw, lat));
+            w_links.push(windowed.add_link(&format!("l{h}"), bw, lat));
+        }
+        let cc = CcConfig::default();
+        let mut pairs = Vec::new();
+        for _ in 0..n_flows {
+            let path: Vec<usize> =
+                (0..rng.range(1, hops + 1)).map(|_| rng.range(0, hops)).collect();
+            let p_path: Vec<_> = path.iter().map(|&i| p_links[i]).collect();
+            let w_path: Vec<_> = path.iter().map(|&i| w_links[i]).collect();
+            let bytes = rng.below(128 << 20);
+            let at = rng.below(200) as f64 * 1e-3;
+            let fp = plain.start_flow(&p_path, bytes, at, 1.0);
+            let fw = windowed.start_windowed_flow(&w_path, bytes, at, 1.0, &cc);
+            pairs.push((fp, fw));
+        }
+        for (fp, fw) in pairs {
+            let t_plain = plain.completion(fp);
+            let t_cc = windowed.completion(fw);
+            scispace::prop_assert!(
+                (t_cc - t_plain).abs() <= 1e-9,
+                "windowed {t_cc} vs plain {t_plain} (hops={hops} flows={n_flows})"
+            );
+            scispace::prop_assert!(
+                windowed.flow_losses(fw) == 0,
+                "uncongested links must never synthesize loss"
+            );
+        }
+        Ok(())
+    });
 }
