@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..n {
         let path = format!("/campaign/granule_{i:03}.shdf");
         let bytes = granule(i).to_bytes();
-        tb.write(writer, &path, 0, bytes.len() as u64, Some(&bytes), AccessMode::ScispaceLw)?;
+        tb.session(writer).write(&path).data(&bytes).mode(AccessMode::ScispaceLw).submit()?;
         paths.push((path, bytes));
     }
     let rep = meu::export(&mut tb, writer, "/campaign", None)?;
@@ -57,14 +57,24 @@ fn main() -> anyhow::Result<()> {
         if i == 0 {
             faults.force_drop(0, 2); // and on the first file a stream dies
         }
-        let rep = tb.bulk_replicate(writer, path, 1, &mut faults)?;
+        let rep = tb
+            .session(writer)
+            .replicate(path)
+            .to(1)
+            .faults(&mut faults)
+            .submit()?
+            .replicated()?;
+        let goodput: Vec<String> =
+            rep.stream_goodput.iter().map(|g| format!("{:.0}", g / 1e6)).collect();
         println!(
-            "  {path}: {} in {} | {} retried chunk(s) ({} re-sent), {} stream drop(s)",
+            "  {path}: {} in {} | {} retried chunk(s) ({} re-sent), {} stream drop(s); \
+             per-stream goodput [{}] MB/s",
             fmt_bytes(rep.bytes),
             fmt_secs(rep.seconds()),
             rep.retried_chunks,
             fmt_bytes(rep.retried_bytes),
-            rep.stream_drops
+            rep.stream_drops,
+            goodput.join(", ")
         );
         // 3. Verify the replica byte-for-byte at the destination.
         let e = tb.dcs[1].fs.get(path).expect("replica entry");

@@ -22,7 +22,7 @@ use scispace::db::Value;
 use scispace::meu;
 use scispace::msg::Wire;
 use scispace::runtime::{self, ComputeService};
-use scispace::sds::{self, Query, Sds, SdsConfig};
+use scispace::sds::{self, Sds, SdsConfig};
 use scispace::shdf::ShdfFile;
 use scispace::util::units::{fmt_bytes, fmt_secs};
 use scispace::workload::{modis_corpus, ModisConfig};
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_bytes = 0u64;
     for (path, f) in &corpus {
         let bytes = f.to_bytes();
-        tb.write(pipeline, path, 0, bytes.len() as u64, Some(&bytes), AccessMode::ScispaceLw)?;
+        tb.session(pipeline).write(path).data(&bytes).mode(AccessMode::ScispaceLw).submit()?;
         total_bytes += bytes.len() as u64;
     }
     let ingest_s = tb.now(pipeline) - t0;
@@ -88,8 +88,8 @@ fn main() -> anyhow::Result<()> {
 
     // ---- stage 3: SCISPACE path — query + in-place PJRT diff ------------
     let t0 = tb.now(analyst);
-    let (day, q_lat) = sds::run_query(&mut tb, &mut sds, analyst, &Query::parse("DayNight = 1")?)?;
-    let (night, _) = sds::run_query(&mut tb, &mut sds, analyst, &Query::parse("DayNight = 0")?)?;
+    let (day, q_lat) = run_query(&mut tb, &mut sds, analyst, "DayNight = 1")?;
+    let (night, _) = run_query(&mut tb, &mut sds, analyst, "DayNight = 0")?;
     println!(
         "[3] discovery: {} day / {} night granules (query latency {})",
         day.len(),
@@ -107,7 +107,7 @@ fn main() -> anyhow::Result<()> {
         n_diff_total += r.n_diff;
         max_abs_total = max_abs_total.max(r.max_abs);
         // compute time charged at 2 GB/s effective over both streams
-        tb.collabs[analyst].now += (da.data.len() as f64 * 8.0) / 2.0e9;
+        tb.session(analyst).advance((da.data.len() as f64 * 8.0) / 2.0e9);
     }
     let scispace_s = tb.now(analyst) - t0;
     println!(
@@ -119,14 +119,15 @@ fn main() -> anyhow::Result<()> {
     // ---- stage 4: traditional path — list + migrate + local diff --------
     tb.drop_caches_and_reset();
     let t0 = tb.now(analyst);
-    let listing = tb.ls(analyst, "/modis");
+    let listing = tb.session(analyst).ls("/modis").submit()?.entries()?;
     let mut migrated = Vec::new();
     let mut moved_bytes = 0u64;
     for m in &listing {
-        let raw = tb.read(analyst, &m.path, 0, m.size, AccessMode::Scispace)?;
+        let mut sess = tb.session(analyst);
+        let raw = sess.read(&m.path).len(m.size).submit()?.data()?;
         moved_bytes += raw.len() as u64;
         let local = format!("/scratch{}", m.path);
-        tb.write(analyst, &local, 0, raw.len() as u64, Some(&raw), AccessMode::ScispaceLw)?;
+        sess.write(&local).data(&raw).mode(AccessMode::ScispaceLw).submit()?;
         migrated.push(raw);
     }
     // screen manually for day/night (no attribute index in the
@@ -148,7 +149,7 @@ fn main() -> anyhow::Result<()> {
         );
         let r = h.diff(&da.data, &db.data, 0.5)?;
         n_diff_check += r.n_diff;
-        tb.collabs[analyst].now += (da.data.len() as f64 * 8.0) / 2.0e9;
+        tb.session(analyst).advance((da.data.len() as f64 * 8.0) / 2.0e9);
     }
     let baseline_s = tb.now(analyst) - t0;
     println!(
@@ -174,8 +175,20 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn read_granule(tb: &mut Testbed, c: usize, path: &str) -> anyhow::Result<ShdfFile> {
-    let (dc, obj) = tb.locate(path).ok_or_else(|| anyhow::anyhow!("lost {path}"))?;
-    let size = tb.dcs[dc].store.len(obj).unwrap_or(0);
-    let raw = tb.read(c, path, 0, size, AccessMode::Scispace)?;
+    // whole-file read: the Session builder sizes it via the metadata
+    let raw = tb.session(c).read(path).submit()?.data()?;
     Ok(ShdfFile::from_bytes(&raw)?)
+}
+
+/// Typed attribute query returning (hits, latency).
+fn run_query(
+    tb: &mut Testbed,
+    sds: &mut scispace::sds::Sds,
+    c: usize,
+    text: &str,
+) -> anyhow::Result<(Vec<String>, f64)> {
+    match tb.session(c).query(sds, text).submit()? {
+        scispace::api::OpResult::Hits { files, latency_s, .. } => Ok((files, latency_s)),
+        other => anyhow::bail!("expected Hits, got {other:?}"),
+    }
 }

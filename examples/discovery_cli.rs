@@ -7,7 +7,7 @@
 
 use scispace::db::Value;
 use scispace::runtime;
-use scispace::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
+use scispace::sds::{self, ExtractionMode, Sds, SdsConfig};
 use scispace::workload::{modis_corpus, ModisConfig};
 use scispace::workspace::Testbed;
 
@@ -43,14 +43,18 @@ fn main() -> anyhow::Result<()> {
     // Index a corpus written through the workspace (Inline-Sync).
     let corpus = modis_corpus(&ModisConfig { n_files: 60, elems_per_file: 4096, seed: 42 });
     for (path, f) in &corpus {
-        sds::write_indexed(&mut tb, &mut sds, curator, path, f, ExtractionMode::InlineSync, Some(&mut *stats_fn))?;
+        tb.session(curator)
+            .write_indexed(&mut sds, path, f)
+            .extraction(ExtractionMode::InlineSync)
+            .submit_stats(Some(&mut *stats_fn))?;
     }
     println!("indexed {} granules, {} tuples", sds.files_indexed, sds.tuples_indexed);
     tb.quiesce();
 
     // Tag a few interesting granules manually.
-    sds::tag(&mut tb, &mut sds, curator, &corpus[3].0, "campaign", Value::Text("elnino-2018".into()))?;
-    sds::tag(&mut tb, &mut sds, curator, &corpus[9].0, "campaign", Value::Text("elnino-2018".into()))?;
+    let mut sess = tb.session(curator);
+    sess.tag(&mut sds, &corpus[3].0, "campaign", Value::Text("elnino-2018".into())).submit()?;
+    sess.tag(&mut sds, &corpus[9].0, "campaign", Value::Text("elnino-2018".into())).submit()?;
 
     // CLI-style query session.
     for qtext in [
@@ -61,11 +65,18 @@ fn main() -> anyhow::Result<()> {
         "sst.min < 0.0",
         "campaign = elnino-2018",
     ] {
-        let q = Query::parse(qtext)?;
-        let (files, lat) = sds::run_query(&mut tb, &mut sds, analyst, &q)?;
-        println!("query {qtext:?}: {} hit(s) in {:.2}ms (virtual)", files.len(), lat * 1e3);
-        for f in files.iter().take(3) {
-            println!("    {f}");
+        match tb.session(analyst).query(&mut sds, qtext).submit()? {
+            scispace::api::OpResult::Hits { files, latency_s, .. } => {
+                println!(
+                    "query {qtext:?}: {} hit(s) in {:.2}ms (virtual)",
+                    files.len(),
+                    latency_s * 1e3
+                );
+                for f in files.iter().take(3) {
+                    println!("    {f}");
+                }
+            }
+            other => anyhow::bail!("expected Hits, got {other:?}"),
         }
     }
     println!("discovery_cli OK");

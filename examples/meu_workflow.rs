@@ -1,6 +1,7 @@
 //! The local-writes + Metadata Export Utility workflow (paper §III-B3,
 //! Fig. 5): fast native writes, pruned re-scans, selective (subset)
-//! publishing, and the batched single-RPC commit.
+//! publishing, and the batched single-RPC commit — driven through the
+//! Session API.
 //!
 //! Run: `cargo run --release --example meu_workflow`
 
@@ -14,25 +15,30 @@ fn main() -> anyhow::Result<()> {
 
     // A simulation campaign writes 3 runs x 100 files natively (no FUSE,
     // no workspace metadata on the hot path).
+    let mut sess = tb.session(sim);
     for run in 0..3 {
         for f in 0..100 {
             let path = format!("/campaign/run{run}/step{f:03}.shdf");
-            tb.write(sim, &path, 0, 1024, None, AccessMode::ScispaceLw)?;
+            sess.write(&path).len(1024).mode(AccessMode::ScispaceLw).submit()?;
         }
     }
     println!("campaign wrote 300 files natively in {:.4}s virtual", tb.now(sim));
+
+    let count = |tb: &mut Testbed| -> anyhow::Result<usize> {
+        Ok(tb.session(remote).ls("/campaign").submit()?.entries()?.len())
+    };
 
     // Share only run0 first (fine-grained sharing).
     let rep = meu::export(&mut tb, sim, "/campaign", Some("/campaign/run0"))?;
     println!("subset export: {} files, {} RPC(s), {} bytes of messages",
         rep.exported, rep.rpcs, rep.msg_bytes);
-    assert_eq!(tb.ls(remote, "/campaign").len(), 100);
+    assert_eq!(count(&mut tb)?, 100);
 
     // Later, export the rest; the pruned scan skips run0 entirely.
     let rep = meu::export(&mut tb, sim, "/campaign", None)?;
     println!("full export: {} files (scanned {} entries — run0 pruned)",
         rep.exported, rep.scanned);
-    assert_eq!(tb.ls(remote, "/campaign").len(), 300);
+    assert_eq!(count(&mut tb)?, 300);
 
     // Idempotence: nothing left to export.
     let rep = meu::export(&mut tb, sim, "/campaign", None)?;
@@ -40,7 +46,11 @@ fn main() -> anyhow::Result<()> {
     println!("re-run exports nothing (all sync flags true)");
 
     // Touch one file; only it (plus parents) is re-scanned and exported.
-    tb.write(sim, "/campaign/run1/step050.shdf", 0, 2048, None, AccessMode::ScispaceLw)?;
+    tb.session(sim)
+        .write("/campaign/run1/step050.shdf")
+        .len(2048)
+        .mode(AccessMode::ScispaceLw)
+        .submit()?;
     let rep = meu::export(&mut tb, sim, "/campaign", None)?;
     println!("incremental export after touch: {} file, visited {} entries",
         rep.exported, rep.scanned);

@@ -1,9 +1,10 @@
 //! Quickstart: build a two-data-center collaboration, share data through
 //! the workspace, publish local writes with the MEU, and read across
-//! sites.
+//! sites — all through the typed Session API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use scispace::api::ScispaceError;
 use scispace::meu;
 use scispace::namespace::Scope;
 use scispace::workspace::{AccessMode, Testbed};
@@ -19,27 +20,47 @@ fn main() -> anyhow::Result<()> {
     tb.ns.define("climate", "alice", "/collab/climate", Scope::Global)?;
 
     // 1. Workspace write: immediately visible to every collaborator.
-    tb.write(alice, "/collab/climate/run42.out", 0, 11, Some(b"sim-output!"), AccessMode::Scispace)?;
+    let mut sess = tb.session(alice);
+    sess.write("/collab/climate/run42.out").data(b"sim-output!").submit()?;
     println!("alice wrote run42.out through scifs (sync=true on write)");
 
-    // 2. Native (LW) write: fast local path, not yet published.
-    tb.write(alice, "/home/alice/notes.txt", 0, 6, Some(b"secret"), AccessMode::ScispaceLw)?;
-    tb.write(alice, "/collab/climate/raw.dat", 0, 8, Some(b"raw-data"), AccessMode::ScispaceLw)?;
-    println!("alice wrote 2 files natively (LW) — bob sees: {:?}",
-        tb.ls(bob, "/").iter().map(|m| m.path.clone()).collect::<Vec<_>>());
+    // 2. Native (LW) writes: fast local path, not yet published.
+    sess.write("/home/alice/notes.txt").data(b"secret").mode(AccessMode::ScispaceLw).submit()?;
+    sess.write("/collab/climate/raw.dat").data(b"raw-data").mode(AccessMode::ScispaceLw).submit()?;
+    let bob_view: Vec<String> = tb
+        .session(bob)
+        .ls("/")
+        .submit()?
+        .entries()?
+        .into_iter()
+        .map(|m| m.path)
+        .collect();
+    println!("alice wrote 2 files natively (LW) — bob sees: {bob_view:?}");
 
     // 3. MEU export publishes the local writes' metadata (git-push-like).
     let rep = meu::export(&mut tb, alice, "/", None)?;
     println!("alice ran MEU: {} files exported in {} batched RPC(s)", rep.exported, rep.rpcs);
 
-    // 4. Bob's view: global namespace visible, alice's Local scope hidden.
-    let view: Vec<String> = tb.ls(bob, "/").iter().map(|m| m.path.clone()).collect();
+    // 4. Bob's view: global namespace visible, alice's Local scope hidden
+    //    — and the denial is a *typed* error, not a string.
+    let view: Vec<String> = tb
+        .session(bob)
+        .ls("/")
+        .submit()?
+        .entries()?
+        .into_iter()
+        .map(|m| m.path)
+        .collect();
     println!("bob now sees: {view:?}");
     assert!(view.contains(&"/collab/climate/raw.dat".to_string()));
     assert!(!view.contains(&"/home/alice/notes.txt".to_string()), "Local scope must hide notes");
+    match tb.session(bob).read("/home/alice/notes.txt").submit() {
+        Err(ScispaceError::NotVisible { .. }) => println!("bob's peek denied: NotVisible (typed)"),
+        other => anyhow::bail!("expected NotVisible, got {other:?}"),
+    }
 
     // 5. Bob reads across the WAN through the workspace.
-    let data = tb.read(bob, "/collab/climate/raw.dat", 0, 8, AccessMode::Scispace)?;
+    let data = tb.session(bob).read("/collab/climate/raw.dat").submit()?.data()?;
     assert_eq!(data, b"raw-data");
     println!("bob read raw.dat across sites: {:?}", String::from_utf8_lossy(&data));
     println!("virtual time elapsed: alice={:.6}s bob={:.6}s", tb.now(alice), tb.now(bob));

@@ -95,12 +95,15 @@ fn main() {
         use scispace::workspace::{AccessMode, Testbed};
         let mut tb = Testbed::paper_default();
         tb.register("c0", 0);
+        let mut sess = tb.session(0);
         for i in 0..20_000 {
-            tb.write(0, &format!("/big/d{}/f{i}", i / 100), 0, 0, None, AccessMode::ScispaceLw)
+            sess.write(&format!("/big/d{}/f{i}", i / 100))
+                .mode(AccessMode::ScispaceLw)
+                .submit()
                 .unwrap();
         }
         scispace::meu::export(&mut tb, 0, "/", None).unwrap();
-        tb.write(0, "/fresh/new.dat", 0, 0, None, AccessMode::ScispaceLw).unwrap();
+        tb.session(0).write("/fresh/new.dat").mode(AccessMode::ScispaceLw).submit().unwrap();
         let s = bench_fn(5, 500, || tb.dcs[0].fs.scan_unsynced("/").0.len());
         println!("{}", summary("meu: pruned scan (20k synced tree)", &s));
     }

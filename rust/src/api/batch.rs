@@ -1,0 +1,382 @@
+//! Concurrent batch execution: lowering `(collaborator, Op)` pairs onto
+//! the discrete-event engine so different collaborators genuinely
+//! overlap.
+//!
+//! ## Semantics
+//!
+//! A batch preserves each collaborator's *program order* — their own
+//! ops run serially, in submission order — while ops from different
+//! collaborators overlap. Execution proceeds in **waves**: each wave
+//! takes the next pending op of every collaborator, and within a wave
+//!
+//! 1. every op's *front end* (FUSE calls, metadata consults, PFS/NFS
+//!    staging) is charged in ascending collaborator-clock order — these
+//!    land on FIFO servers, whose completion arithmetic is
+//!    admission-order exact;
+//! 2. every bulk op's *payload* is then started on the shared links as
+//!    weighted engine flows — all of them **before** the event queue is
+//!    drained, which is exactly what processor sharing requires (the
+//!    engine's per-link causality clamp serializes flows submitted
+//!    one-at-a-time); one drain completes the whole wave;
+//! 3. each bulk op's *back end* (NFS ingest + flush, destination PFS
+//!    write, FUSE copy-out) is charged from its flows' finish time and
+//!    the collaborator clocks advance.
+//!
+//! ## Fidelity trade
+//!
+//! Bulk payloads here ride priority-weighted flows (the same lowering
+//! as [`crate::xfer::run_flows`]) instead of the chunked stop-and-wait
+//! stream engine: per-chunk acks and digest offload are not modelled in
+//! a batch, in exchange for true link sharing. Single-op [`Session`]
+//! calls keep the chunk-exact legacy path bit for bit. Small and
+//! local ops execute through the same sequential lowering as single-op
+//! calls; their (microsecond-scale) RPCs meet on FIFO metadata servers,
+//! where contention is already admission-order exact.
+//!
+//! Waves are *synchronized rounds*: the engine never rewinds a link, so
+//! an op in wave k+1 joins shared links no earlier than wave k's
+//! horizon on them. A collaborator's later ops can therefore wait on an
+//! unrelated slow op from the previous round (they overlap *within* a
+//! round, not across rounds). Workloads mixing very asymmetric op sizes
+//! should submit them in separate batches — or extend this executor to
+//! event-driven per-collaborator admission (see the ROADMAP "batch
+//! lowering fidelity" item).
+//!
+//! Namespace/payload *state* changes apply at stage time (front end),
+//! not at virtual completion — a concurrent read in the same wave can
+//! observe a write staged before it even though their completion times
+//! overlap. This mirrors the legacy sequential semantics (execution
+//! order decides visibility, virtual clocks decide cost), with wave
+//! order standing in for execution order.
+//!
+//! [`Session`]: crate::api::Session
+
+use std::collections::VecDeque;
+
+use crate::api::{exec_op, Op, OpResult, ScispaceError};
+use crate::engine::FlowId;
+use crate::sds::Sds;
+use crate::vfs::ObjectId;
+use crate::workspace::{AccessMode, Testbed};
+use crate::xfer::{path_loss_baseline, path_loss_delta, Priority, TransferReport};
+
+/// Run a batch with a discovery service attached, so [`Op::Query`] and
+/// [`Op::Tag`] are executable alongside workspace ops. Same semantics
+/// as [`Testbed::run_batch`].
+pub fn run_batch_with_sds(tb: &mut Testbed, sds: &mut Sds, ops: Vec<(usize, Op)>) -> Vec<OpResult> {
+    run_batch(tb, Some(sds), ops)
+}
+
+/// What a staged bulk op still owes after its front end was charged.
+enum PlanKind {
+    Read { obj: ObjectId, offset: u64, len: u64 },
+    Write { path: String, obj: ObjectId, dtn: usize, data_dc: usize, offset: u64, len: u64 },
+    Replicate { path: String, src_obj: ObjectId, size: u64, driver: String },
+}
+
+/// One bulk op lowered onto the engine: front end charged, payload
+/// flows pending.
+struct BulkPlan {
+    idx: usize,
+    c: usize,
+    kind: PlanKind,
+    src_dc: usize,
+    dst_dc: usize,
+    bytes: u64,
+    weight: f64,
+    ready: f64,
+    /// Started flows with the byte count each one carries.
+    flows: Vec<(FlowId, u64)>,
+    /// Per-hop congestion baseline captured at launch (for the
+    /// [`crate::xfer::PathLoss`] deltas in the replicate report).
+    loss_base: Vec<(u64, u64)>,
+}
+
+enum Staged {
+    Plan(Box<BulkPlan>),
+    Sequential(Op),
+}
+
+pub(crate) fn run_batch(
+    tb: &mut Testbed,
+    mut sds: Option<&mut Sds>,
+    ops: Vec<(usize, Op)>,
+) -> Vec<OpResult> {
+    let n = ops.len();
+    let mut results: Vec<Option<OpResult>> = (0..n).map(|_| None).collect();
+    let n_collabs = tb.collabs.len();
+    let mut queues: Vec<VecDeque<(usize, Op)>> = vec![VecDeque::new(); n_collabs];
+    for (idx, (c, op)) in ops.into_iter().enumerate() {
+        if c >= n_collabs {
+            results[idx] = Some(OpResult::Failed(ScispaceError::Unsupported {
+                msg: format!("collaborator {c} not registered"),
+            }));
+        } else {
+            queues[c].push_back((idx, op));
+        }
+    }
+
+    loop {
+        let mut wave: Vec<(usize, usize, Op)> = Vec::new();
+        for (c, q) in queues.iter_mut().enumerate() {
+            if let Some((idx, op)) = q.pop_front() {
+                wave.push((idx, c, op));
+            }
+        }
+        if wave.is_empty() {
+            break;
+        }
+        // deterministic admission order: earliest collaborator clock
+        // first, collaborator index as the tie-break
+        wave.sort_by(|a, b| {
+            tb.collabs[a.1].now.total_cmp(&tb.collabs[b.1].now).then(a.1.cmp(&b.1))
+        });
+
+        // 1. front ends (and whole small/local ops) run sequentially
+        let mut plans: Vec<Box<BulkPlan>> = Vec::new();
+        for (idx, c, op) in wave {
+            match try_stage(tb, c, idx, op) {
+                Ok(Staged::Plan(p)) => plans.push(p),
+                Ok(Staged::Sequential(op)) => {
+                    let r = match exec_op(tb, c, sds.as_deref_mut(), op) {
+                        Ok(r) => r,
+                        Err(e) => OpResult::Failed(e),
+                    };
+                    results[idx] = Some(r);
+                }
+                Err(e) => results[idx] = Some(OpResult::Failed(e)),
+            }
+        }
+
+        // 2. every plan's flows start before the single drain — this is
+        // the step that turns serialize-behind-the-horizon into
+        // processor sharing
+        for plan in &mut plans {
+            launch(tb, plan);
+        }
+        tb.env.run_until_idle();
+
+        // 3. back ends and results
+        for plan in plans {
+            let (idx, r) = finish(tb, *plan);
+            results[idx] = Some(r);
+        }
+    }
+
+    results.into_iter().map(|r| r.expect("every op resolved")).collect()
+}
+
+/// Charge an op's front end and produce its flow plan — or hand it back
+/// for sequential execution when it has no shareable bulk payload.
+fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, ScispaceError> {
+    match op {
+        Op::Read { ref path, offset, len, mode } if mode != AccessMode::ScispaceLw => {
+            // uncharged peek for classification; the charged lookup
+            // happens in whichever lowering actually runs
+            let Some((data_dc, obj)) = tb.locate(path) else {
+                return Ok(Staged::Sequential(op));
+            };
+            let len = match len {
+                Some(l) => l,
+                None => tb.dcs[data_dc].store.len(obj).unwrap_or(0).saturating_sub(offset),
+            };
+            let home_dc = tb.collabs[c].dc;
+            if data_dc == home_dc || len < tb.cfg.xfer_threshold {
+                return Ok(Staged::Sequential(op));
+            }
+            let path = path.clone();
+            let (data_dc, obj) = tb
+                .locate_for(c, &path)
+                .ok_or_else(|| ScispaceError::NoSuchFile { path: path.clone() })?;
+            let viewer = tb.collabs[c].id.clone();
+            if !tb.ns.visible_to(&path, &viewer) {
+                return Err(ScispaceError::NotVisible { path, viewer });
+            }
+            let (ready, _dtn) =
+                tb.read_stage_frontend(c, &path, obj, data_dc, offset, len, mode);
+            Ok(Staged::Plan(Box::new(BulkPlan {
+                idx,
+                c,
+                kind: PlanKind::Read { obj, offset, len },
+                src_dc: data_dc,
+                dst_dc: home_dc,
+                bytes: len,
+                weight: Priority::Interactive.weight(),
+                ready,
+                flows: Vec::new(),
+                loss_base: Vec::new(),
+            })))
+        }
+        Op::Write { ref path, offset, len, ref data, mode }
+            if mode != AccessMode::ScispaceLw && len >= tb.cfg.xfer_threshold =>
+        {
+            let path = path.clone();
+            let home_dc = tb.collabs[c].dc;
+            let dtn = tb.collabs[c].dtn;
+            let (ready, obj, data_dc) =
+                tb.write_frontend(c, &path, offset, len, data.as_deref(), mode)?;
+            Ok(Staged::Plan(Box::new(BulkPlan {
+                idx,
+                c,
+                kind: PlanKind::Write { path, obj, dtn, data_dc, offset, len },
+                src_dc: home_dc,
+                dst_dc: data_dc,
+                bytes: len,
+                weight: Priority::Interactive.weight(),
+                ready,
+                flows: Vec::new(),
+                loss_base: Vec::new(),
+            })))
+        }
+        Op::Replicate { ref path, dst_dc } => {
+            let path = path.clone();
+            let (ready, src_dc, obj, size, driver) = tb.replicate_frontend(c, &path, dst_dc)?;
+            Ok(Staged::Plan(Box::new(BulkPlan {
+                idx,
+                c,
+                kind: PlanKind::Replicate { path, src_obj: obj, size, driver },
+                src_dc,
+                dst_dc,
+                bytes: size,
+                weight: Priority::Bulk.weight(),
+                ready,
+                flows: Vec::new(),
+                loss_base: Vec::new(),
+            })))
+        }
+        other => Ok(Staged::Sequential(other)),
+    }
+}
+
+/// Split a plan's payload into `n_streams` weighted flows and start
+/// them (not drained here — the caller drains once per wave).
+fn launch(tb: &mut Testbed, plan: &mut BulkPlan) {
+    // counters only move while the queue drains, so a baseline taken at
+    // any launch in the wave sees the same pre-drain state
+    plan.loss_base = path_loss_baseline(&tb.env, &tb.net, plan.src_dc, plan.dst_dc);
+    tb.net.begin_transfer(plan.src_dc, plan.dst_dc);
+    if plan.bytes == 0 {
+        return;
+    }
+    let path = tb.net.flow_path(plan.src_dc, plan.dst_dc);
+    let cfg = &tb.cfg.xfer;
+    let n = (cfg.n_streams.max(1) as u64).min(plan.bytes);
+    let per = plan.bytes / n;
+    let extra = plan.bytes % n;
+    let t0 = plan.ready + cfg.stream_setup_s;
+    for k in 0..n {
+        let b = per + u64::from(k < extra);
+        let f = if cfg.cc.enabled {
+            let window = cfg.cc.window;
+            tb.env.start_windowed_flow(&path, b, t0, plan.weight, &window)
+        } else {
+            tb.env.start_flow(&path, b, t0, plan.weight)
+        };
+        plan.flows.push((f, b));
+    }
+}
+
+/// Charge a plan's back end from its flows' finish time, advance the
+/// collaborator clock, and materialize the result.
+fn finish(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
+    let BulkPlan { idx, c, kind, src_dc, dst_dc, bytes: _, weight: _, ready, flows, loss_base } =
+        plan;
+    tb.net.end_transfer(src_dc, dst_dc);
+    let setup = tb.cfg.xfer.stream_setup_s;
+    let tf = flows
+        .iter()
+        .filter_map(|&(f, _)| tb.env.flow_finish(f))
+        .fold(ready + if flows.is_empty() { 0.0 } else { setup }, f64::max);
+    let r = match kind {
+        PlanKind::Read { obj, offset, len } => {
+            let fi = tb.collabs[c].fuse;
+            let copy = tb.fuse_mounts[fi].copy;
+            let t_end = tb.env.serve(copy, tf, len);
+            tb.collabs[c].now = t_end;
+            match tb.dcs[src_dc].store.read_at(obj, offset, len as usize) {
+                Ok(bytes) => OpResult::Data { bytes, finished_at: t_end },
+                Err(e) => OpResult::Failed(e.into()),
+            }
+        }
+        PlanKind::Write { path, obj, dtn, data_dc, offset, len } => {
+            let (tn, flush) = tb.dtns[dtn].nfs.write(&mut tb.env, tf, obj.0, offset, len);
+            let mut t2 = tn;
+            if let Some(fb) = flush {
+                t2 = t2.max(tb.dtns[dtn].nfs.pending_flush);
+                let end = tb.dcs[data_dc].lustre.write(&mut tb.env, t2, obj.0, offset, fb);
+                tb.dtns[dtn].nfs.pending_flush = end;
+            }
+            tb.collabs[c].now = t2;
+            OpResult::Written { path, bytes: len, finished_at: t2 }
+        }
+        PlanKind::Replicate { path, src_obj, size, driver } => {
+            let ctx =
+                ReplicaCtx { c, src_dc, dst_dc, ready, tf, flows: &flows, loss_base: &loss_base };
+            match materialize_replica(tb, &ctx, &path, src_obj, size, driver) {
+                Ok(rep) => OpResult::Replicated(rep),
+                Err(e) => OpResult::Failed(e),
+            }
+        }
+    };
+    (idx, r)
+}
+
+/// The plan context a replicate back end needs (split from [`BulkPlan`]
+/// so the plan's `kind` can be consumed independently).
+struct ReplicaCtx<'a> {
+    c: usize,
+    src_dc: usize,
+    dst_dc: usize,
+    ready: f64,
+    tf: f64,
+    flows: &'a [(FlowId, u64)],
+    loss_base: &'a [(u64, u64)],
+}
+
+fn materialize_replica(
+    tb: &mut Testbed,
+    ctx: &ReplicaCtx<'_>,
+    path: &str,
+    src_obj: ObjectId,
+    size: u64,
+    driver: String,
+) -> Result<TransferReport, ScispaceError> {
+    let (src_dc, dst_dc, tf) = (ctx.src_dc, ctx.dst_dc, ctx.tf);
+    let replica = tb.clone_replica(path, src_dc, dst_dc, src_obj, size)?;
+    let t_done = tb.dcs[dst_dc].lustre.write(&mut tb.env, tf, replica.0, 0, size);
+    tb.collabs[ctx.c].now = tb.collabs[ctx.c].now.max(t_done);
+
+    // adaptive-tuning signals: per-flow goodput + this wave's per-link
+    // loss deltas along the path (shared-wave attribution)
+    let setup = tb.cfg.xfer.stream_setup_s;
+    let stream_goodput: Vec<f64> = ctx
+        .flows
+        .iter()
+        .map(|&(f, b)| match tb.env.flow_finish(f) {
+            Some(end) if end > ctx.ready + setup => b as f64 / (end - ctx.ready - setup),
+            _ => 0.0,
+        })
+        .collect();
+    let path_losses = path_loss_delta(&tb.env, &tb.net, src_dc, dst_dc, ctx.loss_base);
+    Ok(TransferReport {
+        id: tb.next_xfer_id(),
+        owner: driver,
+        priority: Priority::Bulk,
+        bytes: size,
+        chunks: 0, // flow-level lowering: no chunk accounting in batches
+        streams: ctx.flows.len(),
+        retried_chunks: 0,
+        retried_bytes: 0,
+        stream_drops: 0,
+        cc_losses: ctx.flows.iter().map(|&(f, _)| tb.env.flow_losses(f)).sum(),
+        cc_retransmit_bytes: ctx
+            .flows
+            .iter()
+            .map(|&(f, _)| tb.env.flow_retransmitted_bytes(f))
+            .sum(),
+        started_at: ctx.ready,
+        finished_at: tf,
+        stream_goodput,
+        path_losses,
+    })
+}

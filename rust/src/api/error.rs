@@ -1,0 +1,100 @@
+//! The one typed error surface of the public Session API.
+//!
+//! Every collaborator-facing operation reports failure through
+//! [`ScispaceError`] instead of ad-hoc `anyhow!` strings, so callers can
+//! match on *what* went wrong (`NotVisible` vs `NoSuchFile` vs
+//! `NotLocal`) rather than parsing message text. Substrate failures that
+//! have no protocol meaning (storage codec errors, exhausted transfer
+//! retry budgets) are folded into [`ScispaceError::Internal`].
+
+use std::fmt;
+
+/// Typed failure of a workspace / SDS / metadata operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScispaceError {
+    /// The path resolves to a template namespace whose scope hides it
+    /// from the acting collaborator.
+    NotVisible {
+        /// Path that was denied.
+        path: String,
+        /// Collaborator the namespace scope excluded.
+        viewer: String,
+    },
+    /// Native (LW) access is local-only and the payload lives elsewhere.
+    NotLocal {
+        /// Path that was requested.
+        path: String,
+        /// Data center the payload actually lives in.
+        dc: usize,
+    },
+    /// No namespace knows the path.
+    NoSuchFile {
+        /// The missing path.
+        path: String,
+    },
+    /// The named data center does not exist in this testbed.
+    NoSuchDc {
+        /// Out-of-range data-center index.
+        dc: usize,
+    },
+    /// A replica of the path already lives in the destination center.
+    AlreadyReplicated {
+        /// Path of the dataset.
+        path: String,
+        /// Destination that already holds it.
+        dc: usize,
+    },
+    /// The path names a directory where a file was required.
+    IsDirectory {
+        /// The offending path.
+        path: String,
+    },
+    /// A discovery query failed to parse or used an invalid operator.
+    BadQuery {
+        /// Parser / operator diagnostic.
+        msg: String,
+    },
+    /// The operation is not executable in this context (e.g. an SDS op
+    /// submitted without a discovery service attached, or a builder
+    /// missing a required argument).
+    Unsupported {
+        /// What was missing.
+        msg: String,
+    },
+    /// A substrate failure with no protocol-level meaning (storage
+    /// codec, exhausted transfer retries, ...).
+    Internal {
+        /// Underlying diagnostic.
+        msg: String,
+    },
+}
+
+impl fmt::Display for ScispaceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScispaceError::NotVisible { path, viewer } => {
+                write!(f, "{path} not visible to {viewer}")
+            }
+            ScispaceError::NotLocal { path, dc } => {
+                write!(f, "native access is local-only: {path} lives in dc{dc}")
+            }
+            ScispaceError::NoSuchFile { path } => write!(f, "no such file {path}"),
+            ScispaceError::NoSuchDc { dc } => write!(f, "no such data center dc{dc}"),
+            ScispaceError::AlreadyReplicated { path, dc } => {
+                write!(f, "{path} already lives in dc{dc}")
+            }
+            ScispaceError::IsDirectory { path } => write!(f, "{path} is a directory"),
+            ScispaceError::BadQuery { msg } => write!(f, "bad query: {msg}"),
+            ScispaceError::Unsupported { msg } => write!(f, "unsupported operation: {msg}"),
+            ScispaceError::Internal { msg } => write!(f, "internal error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ScispaceError {}
+
+impl From<anyhow::Error> for ScispaceError {
+    fn from(e: anyhow::Error) -> Self {
+        ScispaceError::Internal { msg: format!("{e:#}") }
+    }
+}

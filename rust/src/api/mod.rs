@@ -1,0 +1,892 @@
+//! The public Session API: typed operations, per-collaborator handles,
+//! and concurrent batch submission over the discrete-event engine.
+//!
+//! This module is the user-facing surface of the workspace. Three layers:
+//!
+//! * [`Session`] — a per-collaborator handle created with
+//!   [`Testbed::session`] (or [`Session::new`]). Every collaborator
+//!   operation — `read`, `write`, `ls`, `locate`, `replicate`, `query`,
+//!   `tag`, `write_indexed` — is a builder-style typed call:
+//!
+//!   ```ignore
+//!   let mut sess = tb.session(alice);
+//!   sess.write("/collab/a.dat").data(b"payload").submit()?;
+//!   let bytes = sess.read("/collab/a.dat").len(7).submit()?.data()?;
+//!   ```
+//!
+//! * [`Op`] / [`OpResult`] — the unified request/response model the
+//!   builders lower onto, covering workspace, SDS and metadata
+//!   operations, with one typed [`ScispaceError`] (`NotVisible`,
+//!   `NotLocal`, `NoSuchFile`, ...) replacing ad-hoc string errors.
+//!   Builders also convert into bare [`Op`]s ([`WriteBuilder::into_op`]
+//!   etc.) for batch composition.
+//!
+//! * [`Testbed::run_batch`] — lowers a whole batch of `(collaborator,
+//!   Op)` pairs onto the event engine so operations from *different*
+//!   collaborators genuinely overlap: bulk data paths become weighted
+//!   flows submitted together and drained once, sharing FUSE mounts,
+//!   metadata shards and WAN links under processor sharing instead of
+//!   serializing behind one virtual clock (see [`batch`] for the exact
+//!   lowering and its fidelity trade).
+//!
+//! The legacy positional-argument methods on [`Testbed`]
+//! (`tb.write(c, path, ...)`) remain as thin `pub(crate)` internals;
+//! single-op Session calls produce bit-identical completion times to
+//! them (pinned by the equivalence tests below).
+
+pub mod batch;
+mod error;
+
+pub use error::ScispaceError;
+
+use crate::db::Value;
+use crate::metadata::FileMeta;
+use crate::sds::{ExtractionMode, Query, Sds, StatsFn};
+use crate::shdf::ShdfFile;
+use crate::workspace::{AccessMode, Testbed};
+use crate::xfer::{FaultInjector, TransferReport};
+
+/// One typed collaborator operation (the request half of the model).
+///
+/// `Op`s are built directly or via the [`Session`] builders
+/// (`sess.write(p).len(n).into_op()`), and executed by
+/// [`Session`] submit calls or [`Testbed::run_batch`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// POSIX-like write (create-if-missing).
+    Write {
+        /// Workspace path.
+        path: String,
+        /// Byte offset.
+        offset: u64,
+        /// Payload length (derived from `data` when present).
+        len: u64,
+        /// Real bytes to store; `None` simulates a synthetic payload.
+        data: Option<Vec<u8>>,
+        /// Access path through the stack.
+        mode: AccessMode,
+    },
+    /// POSIX-like read.
+    Read {
+        /// Workspace path.
+        path: String,
+        /// Byte offset.
+        offset: u64,
+        /// Bytes to read; `None` = the rest of the file.
+        len: Option<u64>,
+        /// Access path through the stack.
+        mode: AccessMode,
+    },
+    /// Workspace listing (metadata fan-out + visibility filter).
+    Ls {
+        /// Path prefix to list.
+        prefix: String,
+    },
+    /// Resolve where a path's payload lives.
+    Locate {
+        /// Workspace path.
+        path: String,
+    },
+    /// Replicate a payload into another data center through the bulk
+    /// transfer engine.
+    Replicate {
+        /// Workspace path.
+        path: String,
+        /// Destination data center.
+        dst_dc: usize,
+    },
+    /// Attribute query against the discovery shards.
+    Query {
+        /// Parsed query predicate.
+        query: Query,
+    },
+    /// Collaborator-defined tagging of an indexed file.
+    Tag {
+        /// Workspace path.
+        path: String,
+        /// Attribute name.
+        attr: String,
+        /// Attribute value.
+        value: Value,
+    },
+}
+
+/// The response half of the typed model: one variant per [`Op`] kind,
+/// plus [`OpResult::Failed`] so a batch can report per-op errors
+/// without aborting.
+#[derive(Debug, Clone)]
+pub enum OpResult {
+    /// A write completed.
+    Written {
+        /// Path written.
+        path: String,
+        /// Bytes written.
+        bytes: u64,
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// A read completed.
+    Data {
+        /// The payload (zeros for synthetic objects).
+        bytes: Vec<u8>,
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// A listing completed.
+    Listing {
+        /// Visible entries under the prefix.
+        entries: Vec<FileMeta>,
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// A locate completed.
+    Located {
+        /// Data center holding the payload.
+        dc: usize,
+        /// Payload size, bytes.
+        size: u64,
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// A replication completed. The report carries the adaptive-tuning
+    /// signal set: per-stream goodput ([`TransferReport::stream_goodput`])
+    /// and per-path loss deltas ([`TransferReport::path_losses`]).
+    Replicated(TransferReport),
+    /// A query completed.
+    Hits {
+        /// Matching file paths (sorted, deduplicated).
+        files: Vec<String>,
+        /// Query latency, virtual seconds.
+        latency_s: f64,
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// A tag was applied.
+    Tagged {
+        /// Collaborator-visible completion time.
+        finished_at: f64,
+    },
+    /// The operation failed (typed).
+    Failed(ScispaceError),
+}
+
+impl OpResult {
+    /// Completion time of a successful op (`NAN` for [`OpResult::Failed`]).
+    pub fn finished_at(&self) -> f64 {
+        match self {
+            OpResult::Written { finished_at, .. }
+            | OpResult::Data { finished_at, .. }
+            | OpResult::Listing { finished_at, .. }
+            | OpResult::Located { finished_at, .. }
+            | OpResult::Hits { finished_at, .. }
+            | OpResult::Tagged { finished_at } => *finished_at,
+            OpResult::Replicated(rep) => rep.finished_at,
+            OpResult::Failed(_) => f64::NAN,
+        }
+    }
+
+    /// True unless this is [`OpResult::Failed`].
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, OpResult::Failed(_))
+    }
+
+    /// The typed error, when failed.
+    pub fn err(&self) -> Option<&ScispaceError> {
+        match self {
+            OpResult::Failed(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    fn unexpected(self, wanted: &str) -> ScispaceError {
+        match self {
+            OpResult::Failed(e) => e,
+            other => ScispaceError::Internal {
+                msg: format!("expected {wanted}, got {other:?}"),
+            },
+        }
+    }
+
+    /// Unwrap a read result into its payload.
+    pub fn data(self) -> Result<Vec<u8>, ScispaceError> {
+        match self {
+            OpResult::Data { bytes, .. } => Ok(bytes),
+            other => Err(other.unexpected("Data")),
+        }
+    }
+
+    /// Unwrap a listing result into its entries.
+    pub fn entries(self) -> Result<Vec<FileMeta>, ScispaceError> {
+        match self {
+            OpResult::Listing { entries, .. } => Ok(entries),
+            other => Err(other.unexpected("Listing")),
+        }
+    }
+
+    /// Unwrap a locate result into `(dc, size)`.
+    pub fn located(self) -> Result<(usize, u64), ScispaceError> {
+        match self {
+            OpResult::Located { dc, size, .. } => Ok((dc, size)),
+            other => Err(other.unexpected("Located")),
+        }
+    }
+
+    /// Unwrap a replication result into its transfer report.
+    pub fn replicated(self) -> Result<TransferReport, ScispaceError> {
+        match self {
+            OpResult::Replicated(rep) => Ok(rep),
+            other => Err(other.unexpected("Replicated")),
+        }
+    }
+
+    /// Unwrap a query result into its matching files.
+    pub fn files(self) -> Result<Vec<String>, ScispaceError> {
+        match self {
+            OpResult::Hits { files, .. } => Ok(files),
+            other => Err(other.unexpected("Hits")),
+        }
+    }
+}
+
+/// A per-collaborator handle over the testbed: the entry point for every
+/// typed operation. Short-lived and cheap — create one per scope (it
+/// exclusively borrows the testbed).
+pub struct Session<'t> {
+    tb: &'t mut Testbed,
+    c: usize,
+}
+
+impl Testbed {
+    /// Open a [`Session`] for a registered collaborator.
+    pub fn session(&mut self, c: usize) -> Session<'_> {
+        assert!(c < self.collabs.len(), "collaborator {c} not registered");
+        Session { tb: self, c }
+    }
+
+    /// Execute a batch of typed operations, overlapping operations from
+    /// different collaborators on the shared engine (each collaborator's
+    /// own ops stay serial, in submission order). Results are returned
+    /// in submission order; failures are reported per-op as
+    /// [`OpResult::Failed`] without aborting the batch.
+    ///
+    /// SDS operations ([`Op::Query`], [`Op::Tag`]) need a discovery
+    /// service — use [`batch::run_batch_with_sds`] for mixed batches.
+    pub fn run_batch(&mut self, ops: Vec<(usize, Op)>) -> Vec<OpResult> {
+        batch::run_batch(self, None, ops)
+    }
+}
+
+impl<'t> Session<'t> {
+    /// Open a session for collaborator `c` (equivalent to
+    /// [`Testbed::session`]).
+    pub fn new(tb: &'t mut Testbed, c: usize) -> Self {
+        assert!(c < tb.collabs.len(), "collaborator {c} not registered");
+        Session { tb, c }
+    }
+
+    /// The collaborator this session acts as.
+    pub fn collab(&self) -> usize {
+        self.c
+    }
+
+    /// The collaborator's current virtual time.
+    pub fn now(&self) -> f64 {
+        self.tb.now(self.c)
+    }
+
+    /// Advance the collaborator's clock by `seconds` of client-side work
+    /// the testbed does not model (e.g. local analysis compute).
+    pub fn advance(&mut self, seconds: f64) {
+        self.tb.collabs[self.c].now += seconds;
+    }
+
+    /// Build a write (defaults: offset 0, length 0, synthetic payload,
+    /// [`AccessMode::Scispace`]).
+    pub fn write(&mut self, path: &str) -> WriteBuilder<'_, 't> {
+        WriteBuilder {
+            sess: self,
+            path: path.to_string(),
+            offset: 0,
+            len: None,
+            data: None,
+            mode: AccessMode::Scispace,
+        }
+    }
+
+    /// Build a read (defaults: offset 0, whole file,
+    /// [`AccessMode::Scispace`]).
+    pub fn read(&mut self, path: &str) -> ReadBuilder<'_, 't> {
+        ReadBuilder {
+            sess: self,
+            path: path.to_string(),
+            offset: 0,
+            len: None,
+            mode: AccessMode::Scispace,
+        }
+    }
+
+    /// Build a workspace listing under `prefix`.
+    pub fn ls(&mut self, prefix: &str) -> LsBuilder<'_, 't> {
+        LsBuilder { sess: self, prefix: prefix.to_string() }
+    }
+
+    /// Build a locate of `path`.
+    pub fn locate(&mut self, path: &str) -> LocateBuilder<'_, 't> {
+        LocateBuilder { sess: self, path: path.to_string() }
+    }
+
+    /// Build a replication of `path` (destination set with
+    /// [`ReplicateBuilder::to`]).
+    pub fn replicate(&mut self, path: &str) -> ReplicateBuilder<'_, 't, '_> {
+        ReplicateBuilder { sess: self, path: path.to_string(), dst_dc: None, faults: None }
+    }
+
+    /// Build an attribute query against the discovery service (text is
+    /// parsed at submit; `attr op value` with `=`, `<`, `>`, `like`).
+    pub fn query<'s>(&mut self, sds: &'s mut Sds, text: &str) -> QueryBuilder<'_, 't, 's> {
+        QueryBuilder { sess: self, sds, text: text.to_string(), parsed: None }
+    }
+
+    /// Build a query from an already-parsed predicate.
+    pub fn query_parsed<'s>(&mut self, sds: &'s mut Sds, q: Query) -> QueryBuilder<'_, 't, 's> {
+        QueryBuilder { sess: self, sds, text: String::new(), parsed: Some(q) }
+    }
+
+    /// Build a tag of `path` with `attr = value`.
+    pub fn tag<'s>(
+        &mut self,
+        sds: &'s mut Sds,
+        path: &str,
+        attr: &str,
+        value: Value,
+    ) -> TagBuilder<'_, 't, 's> {
+        TagBuilder {
+            sess: self,
+            sds,
+            path: path.to_string(),
+            attr: attr.to_string(),
+            value,
+        }
+    }
+
+    /// Build an SDS-indexed SHDF write (defaults:
+    /// [`ExtractionMode::InlineSync`], no derived stats).
+    pub fn write_indexed<'s, 'f>(
+        &mut self,
+        sds: &'s mut Sds,
+        path: &str,
+        file: &'f ShdfFile,
+    ) -> WriteIndexedBuilder<'_, 't, 's, 'f> {
+        WriteIndexedBuilder {
+            sess: self,
+            sds,
+            path: path.to_string(),
+            file,
+            xmode: ExtractionMode::InlineSync,
+        }
+    }
+
+    /// Execute one typed [`Op`] (workspace/metadata ops only; SDS ops
+    /// need [`Session::submit_with_sds`]).
+    pub fn submit(&mut self, op: Op) -> Result<OpResult, ScispaceError> {
+        exec_op(self.tb, self.c, None, op)
+    }
+
+    /// Execute one typed [`Op`] with a discovery service attached.
+    pub fn submit_with_sds(&mut self, sds: &mut Sds, op: Op) -> Result<OpResult, ScispaceError> {
+        exec_op(self.tb, self.c, Some(sds), op)
+    }
+}
+
+/// Builder for [`Op::Write`].
+pub struct WriteBuilder<'s, 't> {
+    sess: &'s mut Session<'t>,
+    path: String,
+    offset: u64,
+    len: Option<u64>,
+    data: Option<Vec<u8>>,
+    mode: AccessMode,
+}
+
+impl WriteBuilder<'_, '_> {
+    /// Byte offset (default 0).
+    pub fn offset(mut self, offset: u64) -> Self {
+        self.offset = offset;
+        self
+    }
+
+    /// Synthetic payload length (ignored when [`WriteBuilder::data`] is
+    /// set).
+    pub fn len(mut self, len: u64) -> Self {
+        self.len = Some(len);
+        self
+    }
+
+    /// Real bytes to store (sets the length).
+    pub fn data(mut self, data: &[u8]) -> Self {
+        self.data = Some(data.to_vec());
+        self
+    }
+
+    /// Access path (default [`AccessMode::Scispace`]).
+    pub fn mode(mut self, mode: AccessMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// The one place the payload-length rule lives: `data` wins, then an
+    /// explicit `len`, else 0 (a bare create).
+    fn build(path: String, offset: u64, len: Option<u64>, data: Option<Vec<u8>>, mode: AccessMode) -> Op {
+        let len = data.as_ref().map(|d| d.len() as u64).or(len).unwrap_or(0);
+        Op::Write { path, offset, len, data, mode }
+    }
+
+    /// The typed request this builder describes (for batch composition).
+    pub fn into_op(self) -> Op {
+        Self::build(self.path, self.offset, self.len, self.data, self.mode)
+    }
+
+    /// Execute now; returns [`OpResult::Written`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let WriteBuilder { sess, path, offset, len, data, mode } = self;
+        exec_op(sess.tb, sess.c, None, Self::build(path, offset, len, data, mode))
+    }
+}
+
+/// Builder for [`Op::Read`].
+pub struct ReadBuilder<'s, 't> {
+    sess: &'s mut Session<'t>,
+    path: String,
+    offset: u64,
+    len: Option<u64>,
+    mode: AccessMode,
+}
+
+impl ReadBuilder<'_, '_> {
+    /// Byte offset (default 0).
+    pub fn offset(mut self, offset: u64) -> Self {
+        self.offset = offset;
+        self
+    }
+
+    /// Bytes to read (default: the rest of the file).
+    pub fn len(mut self, len: u64) -> Self {
+        self.len = Some(len);
+        self
+    }
+
+    /// Access path (default [`AccessMode::Scispace`]).
+    pub fn mode(mut self, mode: AccessMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// The typed request this builder describes.
+    pub fn into_op(self) -> Op {
+        Op::Read { path: self.path, offset: self.offset, len: self.len, mode: self.mode }
+    }
+
+    /// Execute now; returns [`OpResult::Data`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let op = Op::Read { path: self.path, offset: self.offset, len: self.len, mode: self.mode };
+        exec_op(self.sess.tb, self.sess.c, None, op)
+    }
+}
+
+/// Builder for [`Op::Ls`].
+pub struct LsBuilder<'s, 't> {
+    sess: &'s mut Session<'t>,
+    prefix: String,
+}
+
+impl LsBuilder<'_, '_> {
+    /// The typed request this builder describes.
+    pub fn into_op(self) -> Op {
+        Op::Ls { prefix: self.prefix }
+    }
+
+    /// Execute now; returns [`OpResult::Listing`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let op = Op::Ls { prefix: self.prefix };
+        exec_op(self.sess.tb, self.sess.c, None, op)
+    }
+}
+
+/// Builder for [`Op::Locate`].
+pub struct LocateBuilder<'s, 't> {
+    sess: &'s mut Session<'t>,
+    path: String,
+}
+
+impl LocateBuilder<'_, '_> {
+    /// The typed request this builder describes.
+    pub fn into_op(self) -> Op {
+        Op::Locate { path: self.path }
+    }
+
+    /// Execute now; returns [`OpResult::Located`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let op = Op::Locate { path: self.path };
+        exec_op(self.sess.tb, self.sess.c, None, op)
+    }
+}
+
+/// Builder for [`Op::Replicate`].
+pub struct ReplicateBuilder<'s, 't, 'f> {
+    sess: &'s mut Session<'t>,
+    path: String,
+    dst_dc: Option<usize>,
+    faults: Option<&'f mut FaultInjector>,
+}
+
+impl<'s, 't, 'f> ReplicateBuilder<'s, 't, 'f> {
+    /// Destination data center (required).
+    pub fn to(mut self, dst_dc: usize) -> Self {
+        self.dst_dc = Some(dst_dc);
+        self
+    }
+
+    /// Inject faults into the transfer (single-op submit only; batch
+    /// replication runs fault-free).
+    pub fn faults(mut self, faults: &'f mut FaultInjector) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// The one place the missing-destination rule lives.
+    fn require_dst(dst_dc: Option<usize>) -> Result<usize, ScispaceError> {
+        dst_dc.ok_or(ScispaceError::Unsupported {
+            msg: "replicate needs a destination: .to(dc)".into(),
+        })
+    }
+
+    /// The typed request this builder describes (drops any fault
+    /// injector — batch replication runs fault-free).
+    pub fn into_op(self) -> Result<Op, ScispaceError> {
+        let dst_dc = Self::require_dst(self.dst_dc)?;
+        Ok(Op::Replicate { path: self.path, dst_dc })
+    }
+
+    /// Execute now; returns [`OpResult::Replicated`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let dst_dc = Self::require_dst(self.dst_dc)?;
+        let mut none = FaultInjector::none();
+        let faults = match self.faults {
+            Some(f) => f,
+            None => &mut none,
+        };
+        let rep = self.sess.tb.bulk_replicate(self.sess.c, &self.path, dst_dc, faults)?;
+        Ok(OpResult::Replicated(rep))
+    }
+}
+
+/// Builder for [`Op::Query`].
+pub struct QueryBuilder<'s, 't, 'd> {
+    sess: &'s mut Session<'t>,
+    sds: &'d mut Sds,
+    text: String,
+    parsed: Option<Query>,
+}
+
+impl QueryBuilder<'_, '_, '_> {
+    /// The one place the parse rule lives.
+    fn build(text: String, parsed: Option<Query>) -> Result<Op, ScispaceError> {
+        let query = match parsed {
+            Some(q) => q,
+            None => Query::parse(&text)
+                .map_err(|e| ScispaceError::BadQuery { msg: format!("{e:#}") })?,
+        };
+        Ok(Op::Query { query })
+    }
+
+    /// The typed request this builder describes (parses the text).
+    pub fn into_op(self) -> Result<Op, ScispaceError> {
+        Self::build(self.text, self.parsed)
+    }
+
+    /// Execute now; returns [`OpResult::Hits`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let QueryBuilder { sess, sds, text, parsed } = self;
+        exec_op(sess.tb, sess.c, Some(sds), Self::build(text, parsed)?)
+    }
+}
+
+/// Builder for [`Op::Tag`].
+pub struct TagBuilder<'s, 't, 'd> {
+    sess: &'s mut Session<'t>,
+    sds: &'d mut Sds,
+    path: String,
+    attr: String,
+    value: Value,
+}
+
+impl TagBuilder<'_, '_, '_> {
+    /// The typed request this builder describes.
+    pub fn into_op(self) -> Op {
+        Op::Tag { path: self.path, attr: self.attr, value: self.value }
+    }
+
+    /// Execute now; returns [`OpResult::Tagged`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        let op = Op::Tag { path: self.path, attr: self.attr, value: self.value };
+        exec_op(self.sess.tb, self.sess.c, Some(self.sds), op)
+    }
+}
+
+/// Builder for an SDS-indexed SHDF write (not expressible as a bare
+/// [`Op`]: it carries a borrowed file, and submit optionally takes a
+/// derived-stats provider).
+pub struct WriteIndexedBuilder<'s, 't, 'd, 'f> {
+    sess: &'s mut Session<'t>,
+    sds: &'d mut Sds,
+    path: String,
+    file: &'f ShdfFile,
+    xmode: ExtractionMode,
+}
+
+impl WriteIndexedBuilder<'_, '_, '_, '_> {
+    /// Extraction mode (default [`ExtractionMode::InlineSync`]).
+    pub fn extraction(mut self, mode: ExtractionMode) -> Self {
+        self.xmode = mode;
+        self
+    }
+
+    /// Execute now without derived stats; returns [`OpResult::Written`].
+    pub fn submit(self) -> Result<OpResult, ScispaceError> {
+        self.submit_stats(None)
+    }
+
+    /// Execute now, deriving content statistics with the given provider;
+    /// returns [`OpResult::Written`].
+    pub fn submit_stats(
+        self,
+        stats: Option<StatsFn<'_, '_>>,
+    ) -> Result<OpResult, ScispaceError> {
+        let (finished_at, bytes) = crate::sds::write_indexed(
+            self.sess.tb,
+            self.sds,
+            self.sess.c,
+            &self.path,
+            self.file,
+            self.xmode,
+            stats,
+        )?;
+        Ok(OpResult::Written { path: self.path, bytes, finished_at })
+    }
+}
+
+/// The single lowering of a typed [`Op`] onto the testbed internals —
+/// shared by the [`Session`] builders and (for its sequential arm) the
+/// batch executor.
+pub(crate) fn exec_op(
+    tb: &mut Testbed,
+    c: usize,
+    sds: Option<&mut Sds>,
+    op: Op,
+) -> Result<OpResult, ScispaceError> {
+    if c >= tb.collabs.len() {
+        return Err(ScispaceError::Unsupported { msg: format!("collaborator {c} not registered") });
+    }
+    match op {
+        Op::Write { path, offset, len, data, mode } => {
+            tb.write(c, &path, offset, len, data.as_deref(), mode)?;
+            Ok(OpResult::Written { path, bytes: len, finished_at: tb.now(c) })
+        }
+        Op::Read { path, offset, len, mode } => {
+            let len = match len {
+                Some(l) => l,
+                None => {
+                    // whole-file read: size peek is free; the charged
+                    // lookup happens inside the read itself. The peek
+                    // must resolve the same copy the read will use:
+                    // native (LW) access reads the home-DC namespace,
+                    // workspace modes go through the metadata plane.
+                    let located = match mode {
+                        AccessMode::ScispaceLw => {
+                            let home = tb.collabs[c].dc;
+                            match tb.dcs[home].fs.get(&path) {
+                                Some(e) => Some((
+                                    home,
+                                    e.obj.ok_or_else(|| ScispaceError::IsDirectory {
+                                        path: path.clone(),
+                                    })?,
+                                )),
+                                None => None,
+                            }
+                        }
+                        _ => tb.locate(&path),
+                    };
+                    let (dc, obj) = match located {
+                        Some(hit) => hit,
+                        None => {
+                            // delegate the failure to the read itself, so
+                            // a missing path pays exactly the same
+                            // charges (per-DC locate fallback + stats) and
+                            // returns the same typed error as an
+                            // explicit-length read of it
+                            tb.read(c, &path, offset, 0, mode)?;
+                            return Err(ScispaceError::NoSuchFile { path });
+                        }
+                    };
+                    tb.dcs[dc].store.len(obj).unwrap_or(0).saturating_sub(offset)
+                }
+            };
+            let bytes = tb.read(c, &path, offset, len, mode)?;
+            Ok(OpResult::Data { bytes, finished_at: tb.now(c) })
+        }
+        Op::Ls { prefix } => {
+            let entries = tb.ls(c, &prefix);
+            Ok(OpResult::Listing { entries, finished_at: tb.now(c) })
+        }
+        Op::Locate { path } => {
+            let (dc, obj) = tb
+                .locate_for(c, &path)
+                .ok_or_else(|| ScispaceError::NoSuchFile { path: path.clone() })?;
+            let size = tb.dcs[dc].store.len(obj).unwrap_or(0);
+            Ok(OpResult::Located { dc, size, finished_at: tb.now(c) })
+        }
+        Op::Replicate { path, dst_dc } => {
+            let rep = tb.bulk_replicate(c, &path, dst_dc, &mut FaultInjector::none())?;
+            Ok(OpResult::Replicated(rep))
+        }
+        Op::Query { query } => {
+            let sds = sds.ok_or(ScispaceError::Unsupported {
+                msg: "query needs a discovery service (Session::query / run_batch_with_sds)".into(),
+            })?;
+            let (files, latency_s) = crate::sds::run_query(tb, sds, c, &query)?;
+            Ok(OpResult::Hits { files, latency_s, finished_at: tb.now(c) })
+        }
+        Op::Tag { path, attr, value } => {
+            let sds = sds.ok_or(ScispaceError::Unsupported {
+                msg: "tag needs a discovery service (Session::tag / run_batch_with_sds)".into(),
+            })?;
+            crate::sds::tag(tb, sds, c, &path, &attr, value)?;
+            Ok(OpResult::Tagged { finished_at: tb.now(c) })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sds::{Sds, SdsConfig};
+
+    fn bed() -> Testbed {
+        let mut tb = Testbed::paper_default();
+        tb.register("c0", 0);
+        tb.register("c1", 1);
+        tb
+    }
+
+    /// Equivalence regression (the PR-2-style property): every single-op
+    /// Session call lands on the exact same completion time as the
+    /// legacy positional-argument path — bit for bit.
+    #[test]
+    fn session_single_ops_bit_identical_to_legacy_path() {
+        let mut a = bed(); // legacy positional calls
+        let mut b = bed(); // Session builder calls
+        let bits = |x: &Testbed, c: usize| x.now(c).to_bits();
+
+        // create-write with real bytes
+        a.write(0, "/eq/x.dat", 0, 5, Some(b"hello"), AccessMode::Scispace).unwrap();
+        b.session(0).write("/eq/x.dat").data(b"hello").submit().unwrap();
+        assert_eq!(bits(&a, 0), bits(&b, 0), "small write");
+
+        // bulk synthetic write (striped-engine path)
+        a.write(0, "/eq/big.dat", 0, 16 << 20, None, AccessMode::Scispace).unwrap();
+        b.session(0).write("/eq/big.dat").len(16 << 20).submit().unwrap();
+        assert_eq!(bits(&a, 0), bits(&b, 0), "bulk write");
+
+        // remote bulk read (WAN + striped engine)
+        a.read(1, "/eq/big.dat", 0, 16 << 20, AccessMode::Scispace).unwrap();
+        b.session(1).read("/eq/big.dat").len(16 << 20).submit().unwrap();
+        assert_eq!(bits(&a, 1), bits(&b, 1), "bulk read");
+
+        // whole-file read with builder-resolved length
+        a.read(1, "/eq/x.dat", 0, 5, AccessMode::Scispace).unwrap();
+        b.session(1).read("/eq/x.dat").submit().unwrap();
+        assert_eq!(bits(&a, 1), bits(&b, 1), "whole-file read");
+
+        // listing fan-out
+        a.ls(1, "/eq");
+        b.session(1).ls("/eq").submit().unwrap();
+        assert_eq!(bits(&a, 1), bits(&b, 1), "ls");
+
+        // charged locate
+        a.locate_for(0, "/eq/x.dat").unwrap();
+        b.session(0).locate("/eq/x.dat").submit().unwrap();
+        assert_eq!(bits(&a, 0), bits(&b, 0), "locate");
+
+        // replication data plane
+        a.bulk_replicate(0, "/eq/big.dat", 1, &mut FaultInjector::none()).unwrap();
+        b.session(0).replicate("/eq/big.dat").to(1).submit().unwrap();
+        assert_eq!(bits(&a, 0), bits(&b, 0), "replicate");
+
+        // SDS tag + query
+        let mut sa = Sds::new(a.dtns.len(), SdsConfig::default());
+        let mut sb = Sds::new(b.dtns.len(), SdsConfig::default());
+        crate::sds::tag(&mut a, &mut sa, 0, "/eq/x.dat", "k", Value::Int(1)).unwrap();
+        b.session(0).tag(&mut sb, "/eq/x.dat", "k", Value::Int(1)).submit().unwrap();
+        assert_eq!(bits(&a, 0), bits(&b, 0), "tag");
+        let q = Query::parse("k = 1").unwrap();
+        crate::sds::run_query(&mut a, &mut sa, 1, &q).unwrap();
+        let hits =
+            b.session(1).query_parsed(&mut sb, q).submit().unwrap().files().unwrap();
+        assert_eq!(hits, vec!["/eq/x.dat".to_string()]);
+        assert_eq!(bits(&a, 1), bits(&b, 1), "query");
+    }
+
+    #[test]
+    fn typed_errors_replace_stringly_failures() {
+        let mut tb = bed();
+        let mut sess = tb.session(0);
+        match sess.read("/nope").submit() {
+            Err(ScispaceError::NoSuchFile { path }) => assert_eq!(path, "/nope"),
+            other => panic!("expected NoSuchFile, got {other:?}"),
+        }
+        sess.write("/e/f.dat").data(b"x").submit().unwrap();
+        match sess.replicate("/e/f.dat").to(9).submit() {
+            Err(ScispaceError::NoSuchDc { dc }) => assert_eq!(dc, 9),
+            other => panic!("expected NoSuchDc, got {other:?}"),
+        }
+        let home = tb.collabs[0].dc;
+        match tb.session(0).replicate("/e/f.dat").to(home).submit() {
+            Err(ScispaceError::AlreadyReplicated { dc, .. }) => assert_eq!(dc, home),
+            other => panic!("expected AlreadyReplicated, got {other:?}"),
+        }
+        match tb.session(0).replicate("/e/f.dat").submit() {
+            Err(ScispaceError::Unsupported { .. }) => {}
+            other => panic!("expected Unsupported (missing .to), got {other:?}"),
+        }
+        // SDS ops without a discovery service attached are typed too
+        match tb.session(0).submit(Op::Query { query: Query::parse("a = 1").unwrap() }) {
+            Err(ScispaceError::Unsupported { .. }) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builders_compose_into_batch_ops() {
+        let mut tb = bed();
+        let mut sess = tb.session(0);
+        let w = sess.write("/b/a.dat").offset(8).len(16).into_op();
+        assert_eq!(
+            w,
+            Op::Write {
+                path: "/b/a.dat".into(),
+                offset: 8,
+                len: 16,
+                data: None,
+                mode: AccessMode::Scispace
+            }
+        );
+        let r = sess.read("/b/a.dat").mode(AccessMode::Baseline).into_op();
+        assert_eq!(
+            r,
+            Op::Read { path: "/b/a.dat".into(), offset: 0, len: None, mode: AccessMode::Baseline }
+        );
+        let rep = sess.replicate("/b/a.dat").to(1).into_op().unwrap();
+        assert_eq!(rep, Op::Replicate { path: "/b/a.dat".into(), dst_dc: 1 });
+        assert!(sess.replicate("/b/a.dat").into_op().is_err(), "destination required");
+    }
+}

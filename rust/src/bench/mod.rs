@@ -8,6 +8,7 @@
 //! EXPERIMENTS.md) — the *shape* of each result is the reproduction
 //! target, not absolute MB/s.
 
+use crate::api::{Op, OpResult};
 use crate::db::Value;
 use crate::engine::Engine;
 use crate::meu;
@@ -139,8 +140,11 @@ pub fn fig9a(counts: &[u64]) -> Vec<MeuRow> {
             // baseline: every create pays FUSE + all-branch metadata
             let mut tb = bench_testbed();
             tb.register("c0", 0);
+            let mut sess = tb.session(0);
             for i in 0..n {
-                tb.write(0, &format!("/meu/d{}/f{i}", i / 1000), 0, 0, None, AccessMode::Baseline)
+                sess.write(&format!("/meu/d{}/f{i}", i / 1000))
+                    .mode(AccessMode::Baseline)
+                    .submit()
                     .expect("create");
             }
             let baseline_s = tb.now(0);
@@ -148,8 +152,11 @@ pub fn fig9a(counts: &[u64]) -> Vec<MeuRow> {
             // LW: native creates
             let mut tb = bench_testbed();
             tb.register("c0", 0);
+            let mut sess = tb.session(0);
             for i in 0..n {
-                tb.write(0, &format!("/meu/d{}/f{i}", i / 1000), 0, 0, None, AccessMode::ScispaceLw)
+                sess.write(&format!("/meu/d{}/f{i}", i / 1000))
+                    .mode(AccessMode::ScispaceLw)
+                    .submit()
                     .expect("create");
             }
             let lw_s = tb.now(0);
@@ -203,7 +210,11 @@ pub fn fig9b(attr_counts: &[usize], files_per_collab: usize) -> Vec<SdsModeRow> 
                 for (i, (path, f)) in corpus.iter().enumerate() {
                     let c = i % 4;
                     let p = format!("/c{c}{path}");
-                    sds::write_indexed(&mut tb, &mut sds, c, &p, f, mode, None).expect("write");
+                    tb.session(c)
+                        .write_indexed(&mut sds, &p, f)
+                        .extraction(mode)
+                        .submit()
+                        .expect("write");
                 }
                 match mode {
                     ExtractionMode::LwOffline => {
@@ -265,14 +276,19 @@ pub fn table2(n_tuples: usize, queries: usize) -> Vec<QueryLatencyRow> {
             //   matches (k-1)/4.
             for i in 0..n_tuples {
                 let path = format!("/t2/f{i}.shdf");
-                tb.write(0, &path, 0, 64, None, AccessMode::ScispaceLw).expect("create");
+                tb.session(0)
+                    .write(&path)
+                    .len(64)
+                    .mode(AccessMode::ScispaceLw)
+                    .submit()
+                    .expect("create");
                 let q = i * 4 / n_tuples + 1; // quartile 1..4
                 let v = if is_text {
                     Value::Text("m".repeat(q))
                 } else {
                     Value::Int(q as i64)
                 };
-                sds::tag(&mut tb, &mut sds, 0, &path, attr, v).expect("tag");
+                tb.session(0).tag(&mut sds, &path, attr, v).submit().expect("tag");
             }
             tb.quiesce(); // population backlog must not pollute latencies
             let latencies = ratios
@@ -299,8 +315,12 @@ pub fn table2(n_tuples: usize, queries: usize) -> Vec<QueryLatencyRow> {
                             let k = r / 25 + 1; // matches quartiles < k
                             Query::parse(&format!("{attr} < {k}")).unwrap()
                         };
-                        let (_files, lat) = sds::run_query(&mut tb, &mut sds, c, &q).expect("query");
-                        total += lat;
+                        let res =
+                            tb.session(c).query_parsed(&mut sds, q).submit().expect("query");
+                        match res {
+                            OpResult::Hits { latency_s, .. } => total += latency_s,
+                            other => panic!("expected Hits, got {other:?}"),
+                        }
                     }
                     (r, total / queries as f64)
                 })
@@ -345,15 +365,21 @@ pub fn fig9c(
 
             // ---- baseline: filename search (exhaustive ls) + migrate + diff
             let t0 = tb.now(analyst);
-            let listing = tb.ls(analyst, "/modis"); // exhaustive namespace walk
+            let listing = tb.session(analyst).ls("/modis").submit().expect("ls").entries()
+                .expect("listing"); // exhaustive namespace walk
             // filename-based search cannot use attributes: the analyst
             // lists everything and migrates all candidate files
             let mut migrated: Vec<(String, Vec<u8>)> = Vec::new();
             for m in &listing {
-                let raw = tb.read(analyst, &m.path, 0, m.size, AccessMode::Scispace).expect("read");
+                let mut sess = tb.session(analyst);
+                let raw =
+                    sess.read(&m.path).len(m.size).submit().expect("read").data().expect("data");
                 // store a local copy (the migration the paper describes)
                 let local = format!("/local{}", m.path);
-                tb.write(analyst, &local, 0, raw.len() as u64, Some(&raw), AccessMode::ScispaceLw)
+                sess.write(&local)
+                    .data(&raw)
+                    .mode(AccessMode::ScispaceLw)
+                    .submit()
                     .expect("migrate");
                 migrated.push((local, raw));
             }
@@ -373,8 +399,7 @@ pub fn fig9c(
                 if let (Some(da), Some(db)) = (fa.get_dataset("sst"), fb.get_dataset("sst")) {
                     n_diff_base += compute(&da.data, &db.data);
                     // charge compute cost on the analyst's clock
-                    tb.collabs[analyst].now +=
-                        (da.data.len() as f64) / 2.0e9 * 2.0;
+                    tb.session(analyst).advance((da.data.len() as f64) / 2.0e9 * 2.0);
                 }
             }
             let baseline_s = tb.now(analyst) - t0;
@@ -382,16 +407,22 @@ pub fn fig9c(
             // ---- scispace: attribute query + in-place diff (no migration)
             tb.drop_caches_and_reset();
             let t0 = tb.now(analyst);
-            let (hits, _lat) =
-                sds::run_query(&mut tb, &mut sds, analyst, &Query::parse("Instrument like MODIS%").unwrap())
-                    .expect("query");
+            let hits = tb
+                .session(analyst)
+                .query(&mut sds, "Instrument like MODIS%")
+                .submit()
+                .expect("query")
+                .files()
+                .expect("hits");
             let mut n_diff_sci = 0u64;
             let mut raws: Vec<Vec<u8>> = Vec::new();
             for h in &hits {
-                if let Some((dc, obj)) = tb.locate(h) {
-                    let size = tb.dcs[dc].store.len(obj).unwrap_or(0);
-                    let raw = tb.read(analyst, h, 0, size, AccessMode::Scispace).expect("read");
-                    raws.push(raw);
+                // whole-file read (the builder sizes it via the metadata);
+                // a lost record is skipped, any other failure is a bug
+                match tb.session(analyst).read(h).submit() {
+                    Ok(res) => raws.push(res.data().expect("data")),
+                    Err(crate::api::ScispaceError::NoSuchFile { .. }) => {}
+                    Err(e) => panic!("fig9c read failed: {e}"),
                 }
             }
             for pair in raws.chunks(2) {
@@ -402,13 +433,154 @@ pub fn fig9c(
                 let fb: shdf::ShdfFile = crate::msg::Wire::from_bytes(&pair[1]).expect("parse");
                 if let (Some(da), Some(db)) = (fa.get_dataset("sst"), fb.get_dataset("sst")) {
                     n_diff_sci += compute(&da.data, &db.data);
-                    tb.collabs[analyst].now += (da.data.len() as f64) / 2.0e9 * 2.0;
+                    tb.session(analyst).advance((da.data.len() as f64) / 2.0e9 * 2.0);
                 }
             }
             let scispace_s = tb.now(analyst) - t0;
             End2EndRow { files: nf, baseline_s, scispace_s, n_diff: n_diff_sci.max(n_diff_base) }
         })
         .collect()
+}
+
+/// One `fig_collab_concurrency` row: typed-op latency under N
+/// concurrent collaborators submitted through `Testbed::run_batch`.
+#[derive(Debug, Clone)]
+pub struct CollabRow {
+    /// Concurrent collaborators in the batch.
+    pub collabs: usize,
+    /// Serial ops each collaborator submitted.
+    pub ops_per_collab: usize,
+    /// Median per-op latency, virtual seconds.
+    pub p50_s: f64,
+    /// 99th-percentile per-op latency, virtual seconds.
+    pub p99_s: f64,
+    /// Mean per-op latency, virtual seconds.
+    pub mean_s: f64,
+    /// Batch makespan (first submit to last completion), seconds.
+    pub makespan_s: f64,
+}
+
+/// The multi-user contention scenario the Session API makes
+/// first-class: N collaborators (split across the data centers) each
+/// stream `bytes`-sized remote reads through one `run_batch`, all
+/// contending on the shared inter-DC link. The WAN is provisioned as
+/// the bottleneck (geo regime), so per-op latency grows with the
+/// collaborator count — processor sharing, not queueing collapse.
+pub fn fig_collab_concurrency(counts: &[usize], ops_per_collab: usize, bytes: u64) -> Vec<CollabRow> {
+    counts
+        .iter()
+        .map(|&n| {
+            let mut cfg = TestbedConfig::paper_default();
+            // geo regime: a 400 MB/s, 5 ms WAN is what the readers share
+            cfg.net.wan_bw = 400e6;
+            cfg.net.wan_latency_s = 5e-3;
+            let mut tb = Testbed::build(cfg);
+            let readers: Vec<usize> =
+                (0..n).map(|i| tb.register(&format!("r{i}"), i % 2)).collect();
+            // one publisher per DC so every reader has a remote granule
+            let pubs: Vec<usize> = (0..2).map(|d| tb.register(&format!("pub{d}"), d)).collect();
+            for (i, &r) in readers.iter().enumerate() {
+                let remote_dc = (tb.collabs[r].dc + 1) % 2;
+                let path = format!("/collab/shared/g{i}.dat");
+                tb.session(pubs[remote_dc]).write(&path).len(bytes).submit().expect("populate");
+            }
+            tb.quiesce();
+            let start = tb.now(readers[0]);
+
+            let mut ops: Vec<(usize, Op)> = Vec::new();
+            let mut owner_of: Vec<usize> = Vec::new();
+            for _ in 0..ops_per_collab {
+                for (i, &r) in readers.iter().enumerate() {
+                    ops.push((
+                        r,
+                        Op::Read {
+                            path: format!("/collab/shared/g{i}.dat"),
+                            offset: 0,
+                            len: Some(bytes),
+                            mode: AccessMode::Scispace,
+                        },
+                    ));
+                    owner_of.push(r);
+                }
+            }
+            let results = tb.run_batch(ops);
+
+            // a collaborator's ops are serial, so its k-th latency is the
+            // gap between consecutive completions
+            let mut prev: Vec<f64> = vec![start; tb.collabs.len()];
+            let mut lats: Vec<f64> = Vec::new();
+            let mut makespan = 0.0f64;
+            for (res, &r) in results.iter().zip(&owner_of) {
+                assert!(res.is_ok(), "collab bench op failed: {:?}", res.err());
+                let f = res.finished_at();
+                lats.push(f - prev[r]);
+                prev[r] = f;
+                makespan = makespan.max(f - start);
+            }
+            lats.sort_by(f64::total_cmp);
+            CollabRow {
+                collabs: n,
+                ops_per_collab,
+                p50_s: percentile(&lats, 0.50),
+                p99_s: percentile(&lats, 0.99),
+                mean_s: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
+                makespan_s: makespan,
+            }
+        })
+        .collect()
+}
+
+/// Print `fig_collab_concurrency` rows.
+pub fn print_collab(rows: &[CollabRow]) {
+    println!("\n== Fig collab-concurrency: run_batch remote reads on one WAN ==");
+    println!(
+        "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "collabs", "ops", "op-p50", "op-p99", "op-mean", "makespan"
+    );
+    for r in rows {
+        println!(
+            "{:>10} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            r.collabs,
+            r.ops_per_collab,
+            fmt_secs(r.p50_s),
+            fmt_secs(r.p99_s),
+            fmt_secs(r.mean_s),
+            fmt_secs(r.makespan_s)
+        );
+    }
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        if last.collabs > first.collabs && first.p50_s > 0.0 {
+            println!(
+                "contention: p50 grows {:.1}x from {} to {} collaborators (shared WAN)",
+                last.p50_s / first.p50_s,
+                first.collabs,
+                last.collabs
+            );
+        }
+    }
+}
+
+/// Machine-readable `BENCH_collab.json` payload: p50/p99 per-op latency
+/// per concurrency level, for CI perf tracking.
+pub fn collab_json(rows: &[CollabRow]) -> Json {
+    use std::collections::BTreeMap;
+    let out: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("collabs".to_string(), Json::Num(r.collabs as f64));
+            m.insert("ops_per_collab".to_string(), Json::Num(r.ops_per_collab as f64));
+            m.insert("p50_s".to_string(), Json::Num(r.p50_s));
+            m.insert("p99_s".to_string(), Json::Num(r.p99_s));
+            m.insert("mean_s".to_string(), Json::Num(r.mean_s));
+            m.insert("makespan_s".to_string(), Json::Num(r.makespan_s));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("collab".to_string()));
+    top.insert("rows".to_string(), Json::Arr(out));
+    Json::Obj(top)
 }
 
 /// One `fig_xfer_streams` row: stream-count sweep on the fixed WAN.
@@ -1032,6 +1204,31 @@ mod tests {
             on.bulk_makespan_s,
             off.bulk_makespan_s
         );
+    }
+
+    #[test]
+    fn fig_collab_concurrency_latency_grows_with_contention() {
+        // run_batch acceptance at bench scale: more concurrent
+        // collaborators on the shared WAN => higher per-op latency
+        // (processor sharing), without starving anyone.
+        let rows = fig_collab_concurrency(&[1, 4], 2, 16 << 20);
+        assert_eq!(rows.len(), 2);
+        let (one, four) = (&rows[0], &rows[1]);
+        assert!(one.p50_s > 0.0 && four.p50_s > 0.0);
+        assert!(
+            four.p50_s > one.p50_s * 1.5,
+            "4 collaborators sharing the WAN must slow each op: 1={} 4={}",
+            one.p50_s,
+            four.p50_s
+        );
+        for r in &rows {
+            assert!(r.p99_s >= r.p50_s, "{r:?}");
+            assert!(r.makespan_s >= r.p99_s, "{r:?}");
+        }
+        let j = collab_json(&rows);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("collab"));
+        assert_eq!(parsed.get("rows").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
     }
 
     #[test]

@@ -22,6 +22,17 @@
 //!   path hashing), AOT-lowered to HLO text in `artifacts/` and executed
 //!   from [`runtime`] via PJRT. Python never runs on the request path.
 //!
+//! ## The public surface ([`api`])
+//!
+//! User code drives the workspace through [`api::Session`] — a
+//! per-collaborator handle with builder-style typed calls
+//! (`sess.write("/a").len(n).submit()`) over the unified
+//! [`api::Op`]/[`api::OpResult`] model and one typed
+//! [`api::ScispaceError`] — and through `Testbed::run_batch`, which
+//! lowers a batch of ops from many collaborators onto the event engine
+//! so they genuinely contend on shared FUSE mounts, metadata shards and
+//! WAN links.
+//!
 //! ## The simulation core ([`engine`])
 //!
 //! All simulated experiments run on a discrete-event core: a
@@ -47,6 +58,7 @@
 //! [`metadata::replication`] uses it to re-replicate payloads after a
 //! DTN outage (`scispace xfer` demos it from the CLI).
 
+pub mod api;
 pub mod util;
 pub mod engine;
 pub mod simclock;

@@ -5,13 +5,16 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|all>`
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|all>`
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
 //!   comparison on the discrete-event core; `xfer` sweeps stream
-//!   counts on the lossless and the congestion-managed geo WAN).
-//!   `bench preempt` and `bench xfer` also emit machine-readable
-//!   `BENCH_preempt.json` / `BENCH_xfer.json` for CI perf tracking.
+//!   counts on the lossless and the congestion-managed geo WAN;
+//!   `collab` measures per-op p50/p99 latency at 1/4/16 concurrent
+//!   collaborators batched through the Session API's `run_batch`).
+//!   `bench preempt`, `bench xfer` and `bench collab` also emit
+//!   machine-readable `BENCH_preempt.json` / `BENCH_xfer.json` /
+//!   `BENCH_collab.json` for CI perf tracking.
 //! * `xfer [--size 512M] [--streams 1,2,4,8] [--chunk 4M] [--corrupt N]
 //!   [--drop-stream S] [--mix]` — drive the WAN bulk-transfer engine:
 //!   stream-count sweep, optional fault injection (corrupt chunks /
@@ -77,21 +80,29 @@ fn cmd_demo() -> Result<()> {
     let mut tb = Testbed::paper_default();
     let alice = tb.register("alice", 0);
     let bob = tb.register("bob", 1);
-    tb.write(alice, "/collab/sim/out.dat", 0, 20, Some(b"simulation-artifacts"), AccessMode::Scispace)?;
+    tb.session(alice).write("/collab/sim/out.dat").data(b"simulation-artifacts").submit()?;
     println!("alice wrote /collab/sim/out.dat via the workspace");
-    tb.write(bob, "/home/bob/raw.dat", 0, 9, Some(b"raw-local"), AccessMode::ScispaceLw)?;
+    tb.session(bob)
+        .write("/home/bob/raw.dat")
+        .data(b"raw-local")
+        .mode(AccessMode::ScispaceLw)
+        .submit()?;
     println!("bob wrote /home/bob/raw.dat natively (LW)");
-    println!(
-        "workspace ls /: {:?}",
-        tb.ls(alice, "/").iter().map(|m| m.path.clone()).collect::<Vec<_>>()
-    );
+    let view = |tb: &mut Testbed| -> Result<Vec<String>> {
+        Ok(tb
+            .session(alice)
+            .ls("/")
+            .submit()?
+            .entries()?
+            .into_iter()
+            .map(|m| m.path)
+            .collect())
+    };
+    println!("workspace ls /: {:?}", view(&mut tb)?);
     let rep = scispace::meu::export(&mut tb, bob, "/", None)?;
     println!("bob ran MEU: exported {} files in {} RPCs", rep.exported, rep.rpcs);
-    println!(
-        "workspace ls /: {:?}",
-        tb.ls(alice, "/").iter().map(|m| m.path.clone()).collect::<Vec<_>>()
-    );
-    let data = tb.read(alice, "/home/bob/raw.dat", 0, 9, AccessMode::Scispace)?;
+    println!("workspace ls /: {:?}", view(&mut tb)?);
+    let data = tb.session(alice).read("/home/bob/raw.dat").submit()?.data()?;
     println!("alice read bob's file across the WAN: {:?}", String::from_utf8_lossy(&data));
     Ok(())
 }
@@ -158,10 +169,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::print_xfer_streams_cc(total, &congested);
             emit_json("BENCH_xfer.json", &bench::xfer_json(total, &plain, &congested))?;
         }
+        "collab" => {
+            let bytes = parse_bytes(&args.opt("data", "16M")).unwrap_or(16 << 20);
+            let ops: usize = args.opt_parse("ops", 4);
+            let rows = bench::fig_collab_concurrency(&[1, 4, 16], ops, bytes);
+            bench::print_collab(&rows);
+            emit_json("BENCH_collab.json", &bench::collab_json(&rows))?;
+        }
         "all" => {
             for w in [
                 "fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2",
-                "preempt", "xfer",
+                "preempt", "xfer", "collab",
             ] {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];

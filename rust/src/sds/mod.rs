@@ -283,8 +283,11 @@ impl Sds {
 }
 
 /// Write an SHDF file through the workspace with the chosen extraction
-/// mode. Returns the collaborator-visible completion time.
-pub fn write_indexed(
+/// mode. Returns the collaborator-visible completion time and the
+/// serialized payload size (so callers don't re-serialize to learn it).
+/// Crate-internal: the public surface is
+/// [`crate::api::Session::write_indexed`].
+pub(crate) fn write_indexed(
     tb: &mut Testbed,
     sds: &mut Sds,
     c: usize,
@@ -292,7 +295,7 @@ pub fn write_indexed(
     file: &ShdfFile,
     mode: ExtractionMode,
     stats: Option<StatsFn<'_, '_>>,
-) -> Result<f64> {
+) -> Result<(f64, u64), crate::api::ScispaceError> {
     let bytes = file.to_bytes();
     let access = match mode {
         ExtractionMode::LwOffline => AccessMode::ScispaceLw,
@@ -328,7 +331,7 @@ pub fn write_indexed(
             // nothing on the write path; `offline_index` runs on the DTN
         }
     }
-    Ok(tb.collabs[c].now)
+    Ok((tb.collabs[c].now, bytes.len() as u64))
 }
 
 /// Drain the Inline-Async queue (background indexing service on the DTNs).
@@ -385,9 +388,17 @@ pub fn offline_index(
 }
 
 /// Manual tagging (paper: "collaborator-defined tagging").
-pub fn tag(tb: &mut Testbed, sds: &mut Sds, c: usize, path: &str, attr: &str, value: Value) -> Result<()> {
+/// Crate-internal: the public surface is [`crate::api::Session::tag`].
+pub(crate) fn tag(
+    tb: &mut Testbed,
+    sds: &mut Sds,
+    c: usize,
+    path: &str,
+    attr: &str,
+    value: Value,
+) -> Result<(), crate::api::ScispaceError> {
     if tb.locate(path).is_none() {
-        return Err(anyhow!("no such file {path}"));
+        return Err(crate::api::ScispaceError::NoSuchFile { path: path.into() });
     }
     let shard = placement::shard_for(path, sds.shards.len());
     sds.shards[shard].insert(attr, path, value)?;
@@ -398,7 +409,13 @@ pub fn tag(tb: &mut Testbed, sds: &mut Sds, c: usize, path: &str, attr: &str, va
 
 /// Evaluate a query from collaborator `c` against all discovery shards
 /// (parallel fan-out); returns matching file paths and the query latency.
-pub fn run_query(tb: &mut Testbed, sds: &mut Sds, c: usize, q: &Query) -> Result<(Vec<String>, f64)> {
+/// Crate-internal: the public surface is [`crate::api::Session::query`].
+pub(crate) fn run_query(
+    tb: &mut Testbed,
+    sds: &mut Sds,
+    c: usize,
+    q: &Query,
+) -> Result<(Vec<String>, f64), crate::api::ScispaceError> {
     let t0 = tb.collabs[c].now;
     let src_dc = tb.collabs[c].dc;
     let mut files = Vec::new();

@@ -52,7 +52,12 @@ pub fn ior_write(tb: &mut Testbed, cfg: &IorConfig) -> IorResult {
     for blk in 0..n_blocks {
         for c in 0..cfg.n_collabs {
             let path = ior_path(cfg.mode, c);
-            tb.write(c, &path, blk * cfg.block_size, cfg.block_size, None, cfg.mode)
+            tb.session(c)
+                .write(&path)
+                .offset(blk * cfg.block_size)
+                .len(cfg.block_size)
+                .mode(cfg.mode)
+                .submit()
                 .expect("ior write");
         }
     }
@@ -69,7 +74,12 @@ pub fn ior_read(tb: &mut Testbed, cfg: &IorConfig) -> IorResult {
     for blk in 0..n_blocks {
         for c in 0..cfg.n_collabs {
             let path = ior_path(cfg.mode, c);
-            tb.read(c, &path, blk * cfg.block_size, cfg.block_size, cfg.mode)
+            tb.session(c)
+                .read(&path)
+                .offset(blk * cfg.block_size)
+                .len(cfg.block_size)
+                .mode(cfg.mode)
+                .submit()
                 .expect("ior read");
         }
     }
@@ -170,7 +180,7 @@ pub fn load_corpus(
     let mut total = 0u64;
     for (path, f) in corpus {
         let bytes = crate::msg::Wire::to_bytes(f);
-        tb.write(c, path, 0, bytes.len() as u64, Some(&bytes), mode).expect("corpus write");
+        tb.session(c).write(path).data(&bytes).mode(mode).submit().expect("corpus write");
         total += bytes.len() as u64;
     }
     total

@@ -22,8 +22,7 @@
 
 pub mod localfs;
 
-use anyhow::{anyhow, bail, Result};
-
+use crate::api::ScispaceError;
 use crate::fusemodel::{FuseConfig, FuseMount, READ_OPS, WRITE_OPS};
 use crate::metadata::{FileMeta, MetaPlane, MetaReq, MetaResp};
 use crate::msg::Wire;
@@ -144,6 +143,17 @@ pub struct Collaborator {
     pub now: f64,
 }
 
+/// Operation-level counters the cost model keeps next to the substrate
+/// stats (consumed by tests and capacity reports).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpStats {
+    /// Reads/replications whose metadata lookup missed and fell back to
+    /// consulting the per-DC namespaces.
+    pub locate_fallbacks: u64,
+    /// Per-DC metadata consults those fallbacks charged.
+    pub locate_fallback_consults: u64,
+}
+
 /// The assembled collaboration testbed.
 pub struct Testbed {
     /// Configuration.
@@ -162,7 +172,9 @@ pub struct Testbed {
     pub ns: NamespaceRegistry,
     /// Collaborator sessions.
     pub collabs: Vec<Collaborator>,
-    fuse_mounts: Vec<FuseMount>,
+    /// Operation-level counters (metadata-miss fallbacks etc.).
+    pub stats: OpStats,
+    pub(crate) fuse_mounts: Vec<FuseMount>,
     rr_dtn: usize,
     next_xfer: u64,
 }
@@ -209,6 +221,7 @@ impl Testbed {
             meta: MetaPlane::new(n_dtns),
             ns: NamespaceRegistry::new(),
             collabs: Vec::new(),
+            stats: OpStats::default(),
             fuse_mounts: Vec::new(),
             rr_dtn: 0,
             next_xfer: 0,
@@ -249,7 +262,14 @@ impl Testbed {
     /// Charge a metadata RPC from collaborator `c` to DTN `dtn` carrying
     /// `msg_bytes`; executes nothing (pure cost) — callers pair it with a
     /// real `MetaPlane` operation.
-    fn meta_rpc_cost(&mut self, c: usize, dtn: usize, t: f64, msg_bytes: u64, entries: u64) -> f64 {
+    pub(crate) fn meta_rpc_cost(
+        &mut self,
+        c: usize,
+        dtn: usize,
+        t: f64,
+        msg_bytes: u64,
+        entries: u64,
+    ) -> f64 {
         let src_dc = self.collabs[c].dc;
         let dst_dc = self.dtns[dtn].dc;
         let t = self.net.route(&mut self.env, src_dc, dst_dc, t, msg_bytes);
@@ -268,7 +288,7 @@ impl Testbed {
     /// §IV-D). `exhaustive`: a create must verify **every** branch in the
     /// union (no short-circuit), which is exactly the "increased contact
     /// points" overhead Fig. 9a measures.
-    fn meta_consult(
+    pub(crate) fn meta_consult(
         &mut self,
         c: usize,
         path: &str,
@@ -306,16 +326,19 @@ impl Testbed {
         }
     }
 
-    fn ensure_file(
+    pub(crate) fn ensure_file(
         &mut self,
         c: usize,
         path: &str,
         data_dc: usize,
         mode: AccessMode,
         t: f64,
-    ) -> Result<(f64, crate::vfs::ObjectId)> {
+    ) -> Result<(f64, crate::vfs::ObjectId), ScispaceError> {
         if let Some(e) = self.dcs[data_dc].fs.get(path) {
-            return Ok((t, e.obj.ok_or_else(|| anyhow!("{path} is a directory"))?));
+            return Ok((
+                t,
+                e.obj.ok_or_else(|| ScispaceError::IsDirectory { path: path.into() })?,
+            ));
         }
         let owner = self.collabs[c].id.clone();
         let obj = self.dcs[data_dc].store.create_hole(0);
@@ -350,8 +373,11 @@ impl Testbed {
     }
 
     /// Where a path's data lives: workspace metadata first, then local
-    /// namespaces (covers unexported LW files).
-    pub fn locate(&mut self, path: &str) -> Option<(usize, crate::vfs::ObjectId)> {
+    /// namespaces (covers unexported LW files). Pure lookup — charges no
+    /// simulated time; collaborator operations go through
+    /// [`Testbed::locate_for`] instead so the metadata-miss fallback is
+    /// costed.
+    pub(crate) fn locate(&mut self, path: &str) -> Option<(usize, crate::vfs::ObjectId)> {
         if let MetaResp::Meta(Some(m)) = self.meta.route(&MetaReq::Get(path.into())) {
             let dc = m.dc as usize;
             if let Some(e) = self.dcs[dc].fs.get(path) {
@@ -368,9 +394,49 @@ impl Testbed {
         None
     }
 
-    /// POSIX-like write (create-if-missing). `data = None` simulates a
-    /// synthetic (IOR) payload; `Some` stores real bytes.
-    pub fn write(
+    /// [`Testbed::locate`] on behalf of collaborator `c`, with the
+    /// metadata-miss fallback *charged*: when the workspace metadata has
+    /// no record (the file was never exported, or the record is stale),
+    /// the workspace consults the data centers' namespaces one by one —
+    /// one metadata RPC per DC probed, stopping at the DC that has the
+    /// file — on the collaborator's clock, counted in
+    /// [`OpStats::locate_fallbacks`]. The old uncharged linear scan
+    /// silently bypassed the metadata-export protocol.
+    pub(crate) fn locate_for(
+        &mut self,
+        c: usize,
+        path: &str,
+    ) -> Option<(usize, crate::vfs::ObjectId)> {
+        if let MetaResp::Meta(Some(m)) = self.meta.route(&MetaReq::Get(path.into())) {
+            let dc = m.dc as usize;
+            if let Some(e) = self.dcs[dc].fs.get(path) {
+                return e.obj.map(|o| (dc, o));
+            }
+        }
+        self.stats.locate_fallbacks += 1;
+        let mut t = self.collabs[c].now;
+        let mut found = None;
+        for d in 0..self.dcs.len() {
+            let dtn = self.dtn_in_dc(d, c);
+            t = self.meta_rpc_cost(c, dtn, t, self.cfg.meta_msg_bytes, 1);
+            self.stats.locate_fallback_consults += 1;
+            if let Some(o) = self.dcs[d].fs.get(path).and_then(|e| e.obj) {
+                found = Some((d, o));
+                break;
+            }
+        }
+        self.collabs[c].now = t;
+        found
+    }
+
+    /// Front half of a write: FUSE calls + user-space copy + metadata
+    /// assistance + file materialization (bytes stored, namespace
+    /// touched, workspace metadata upserted for Scispace mode). Returns
+    /// `(ready, obj, data_dc)` — the time the payload is ready to leave
+    /// the client, the object written, and its hosting DC. Shared by
+    /// [`Testbed::write`] and the batch executor so the charging
+    /// arithmetic cannot drift between them.
+    pub(crate) fn write_frontend(
         &mut self,
         c: usize,
         path: &str,
@@ -378,7 +444,7 @@ impl Testbed {
         len: u64,
         data: Option<&[u8]>,
         mode: AccessMode,
-    ) -> Result<()> {
+    ) -> Result<(f64, crate::vfs::ObjectId, usize), ScispaceError> {
         let t0 = self.collabs[c].now;
         let home_dc = self.collabs[c].dc;
         let dtn = self.collabs[c].dtn;
@@ -408,7 +474,7 @@ impl Testbed {
             t += self.cfg.lustre_client_op;
         }
 
-        let (mut t2, obj) = self.ensure_file(c, path, data_dc, mode, t)?;
+        let (t2, obj) = self.ensure_file(c, path, data_dc, mode, t)?;
 
         // real byte movement
         if let Some(d) = data {
@@ -441,6 +507,24 @@ impl Testbed {
             };
             self.meta.route(&MetaReq::Upsert(meta));
         }
+        Ok((t2, obj, data_dc))
+    }
+
+    /// POSIX-like write (create-if-missing). `data = None` simulates a
+    /// synthetic (IOR) payload; `Some` stores real bytes. Crate-internal:
+    /// the public surface is [`crate::api::Session`].
+    pub(crate) fn write(
+        &mut self,
+        c: usize,
+        path: &str,
+        offset: u64,
+        len: u64,
+        data: Option<&[u8]>,
+        mode: AccessMode,
+    ) -> Result<(), ScispaceError> {
+        let home_dc = self.collabs[c].dc;
+        let dtn = self.collabs[c].dtn;
+        let (mut t2, obj, data_dc) = self.write_frontend(c, path, offset, len, data, mode)?;
 
         // data path cost
         match mode {
@@ -497,48 +581,58 @@ impl Testbed {
     }
 
     /// POSIX-like read. Returns real bytes when the object holds them.
-    pub fn read(
+    /// Crate-internal: the public surface is [`crate::api::Session`].
+    pub(crate) fn read(
         &mut self,
         c: usize,
         path: &str,
         offset: u64,
         len: u64,
         mode: AccessMode,
-    ) -> Result<Vec<u8>> {
-        let t0 = self.collabs[c].now;
+    ) -> Result<Vec<u8>, ScispaceError> {
         let home_dc = self.collabs[c].dc;
-        let (data_dc, obj) = self.locate(path).ok_or_else(|| anyhow!("no such file {path}"))?;
+        // native (LW) access resolves in the local data-center namespace
+        // directly — no workspace metadata on the path; workspace modes
+        // locate through the metadata plane, paying the per-DC consult
+        // fallback when the record is missing
+        let (data_dc, obj) = match mode {
+            AccessMode::ScispaceLw => match self.dcs[home_dc].fs.get(path) {
+                Some(e) => (
+                    home_dc,
+                    e.obj.ok_or_else(|| ScispaceError::IsDirectory { path: path.into() })?,
+                ),
+                None => {
+                    return Err(match self.locate(path) {
+                        Some((dc, _)) => ScispaceError::NotLocal { path: path.into(), dc },
+                        None => ScispaceError::NoSuchFile { path: path.into() },
+                    })
+                }
+            },
+            _ => self
+                .locate_for(c, path)
+                .ok_or_else(|| ScispaceError::NoSuchFile { path: path.into() })?,
+        };
+        let t0 = self.collabs[c].now;
 
         // visibility: template namespace scope
         let viewer = self.collabs[c].id.clone();
         if mode != AccessMode::ScispaceLw && !self.ns.visible_to(path, &viewer) {
-            bail!("{path} not visible to {viewer}");
+            return Err(ScispaceError::NotVisible { path: path.into(), viewer });
         }
 
         let mut t = t0;
         match mode {
             AccessMode::ScispaceLw => {
-                if data_dc != home_dc {
-                    bail!("native access is local-only: {path} lives in dc{data_dc}");
-                }
                 t += self.cfg.lustre_client_op;
                 t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, offset, len);
             }
             _ => {
-                let fi = self.collabs[c].fuse;
-                t = self.fuse_mounts[fi].ops(&mut self.env, t, READ_OPS.len() as u64);
-                t = self.meta_consult(c, path, t, mode, 1, false);
-                let dtn = self.dtn_in_dc(data_dc, c);
                 if data_dc != home_dc && len >= self.cfg.xfer_threshold {
                     // bulk remote read: the DTN stages the object once,
                     // then the striped engine carries it across the WAN
                     // (chunk checksums + retry included)
-                    let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, offset, len);
-                    t = tn;
-                    if miss > 0 {
-                        t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, offset, miss);
-                        self.dtns[dtn].nfs.read_cache.fill(obj.0, offset, len);
-                    }
+                    let (ts, dtn) = self.read_stage_frontend(c, path, obj, data_dc, offset, len, mode);
+                    t = ts;
                     let req = TransferRequest {
                         id: self.next_xfer_id(),
                         owner: viewer.clone(),
@@ -564,6 +658,10 @@ impl Testbed {
                 } else {
                     // reads are synchronous RPCs in rsize chunks to a DTN
                     // in the hosting DC
+                    let fi = self.collabs[c].fuse;
+                    t = self.fuse_mounts[fi].ops(&mut self.env, t, READ_OPS.len() as u64);
+                    t = self.meta_consult(c, path, t, mode, 1, false);
+                    let dtn = self.dtn_in_dc(data_dc, c);
                     let rsize = self.cfg.nfs_rsize;
                     let mut off = offset;
                     let mut remaining = len;
@@ -587,12 +685,108 @@ impl Testbed {
             }
         }
         self.collabs[c].now = t;
-        self.dcs[data_dc].store.read_at(obj, offset, len as usize)
+        Ok(self.dcs[data_dc].store.read_at(obj, offset, len as usize)?)
+    }
+
+    /// Front half of a workspace-mode *bulk remote* read: FUSE calls,
+    /// metadata consult, and the DTN staging of the object (NFS read +
+    /// PFS miss fill). Returns `(ready, dtn)` — the time the payload is
+    /// staged and ready to cross the network, and the staging DTN.
+    /// Shared by [`Testbed::read`] and the batch executor so the
+    /// charging arithmetic cannot drift between them.
+    pub(crate) fn read_stage_frontend(
+        &mut self,
+        c: usize,
+        path: &str,
+        obj: crate::vfs::ObjectId,
+        data_dc: usize,
+        offset: u64,
+        len: u64,
+        mode: AccessMode,
+    ) -> (f64, usize) {
+        let t0 = self.collabs[c].now;
+        let fi = self.collabs[c].fuse;
+        let mut t = self.fuse_mounts[fi].ops(&mut self.env, t0, READ_OPS.len() as u64);
+        t = self.meta_consult(c, path, t, mode, 1, false);
+        let dtn = self.dtn_in_dc(data_dc, c);
+        let (tn, miss) = self.dtns[dtn].nfs.read(&mut self.env, t, obj.0, offset, len);
+        t = tn;
+        if miss > 0 {
+            t = self.dcs[data_dc].lustre.read(&mut self.env, t, obj.0, offset, miss);
+            self.dtns[dtn].nfs.read_cache.fill(obj.0, offset, len);
+        }
+        (t, dtn)
+    }
+
+    /// Front half of a replication: charged locate + destination /
+    /// visibility checks + the source PFS streaming the payload out.
+    /// Returns `(ready, src_dc, obj, size, driver)`. Shared by
+    /// [`Testbed::bulk_replicate`] and the batch executor.
+    pub(crate) fn replicate_frontend(
+        &mut self,
+        c: usize,
+        path: &str,
+        dst_dc: usize,
+    ) -> Result<(f64, usize, crate::vfs::ObjectId, u64, String), ScispaceError> {
+        let (src_dc, obj) = self
+            .locate_for(c, path)
+            .ok_or_else(|| ScispaceError::NoSuchFile { path: path.into() })?;
+        if dst_dc >= self.dcs.len() {
+            return Err(ScispaceError::NoSuchDc { dc: dst_dc });
+        }
+        if src_dc == dst_dc {
+            return Err(ScispaceError::AlreadyReplicated { path: path.into(), dc: dst_dc });
+        }
+        // same visibility control as read(): the data plane must not
+        // leak payloads the driving collaborator cannot see
+        let driver = self.collabs[c].id.clone();
+        if !self.ns.visible_to(path, &driver) {
+            return Err(ScispaceError::NotVisible { path: path.into(), viewer: driver });
+        }
+        let size = self.dcs[src_dc].store.len(obj).unwrap_or(0);
+        let t0 = self.collabs[c].now;
+        // source PFS streams the payload out
+        let t = self.dcs[src_dc].lustre.read(&mut self.env, t0, obj.0, 0, size);
+        Ok((t, src_dc, obj, size, driver))
+    }
+
+    /// Materialize a replica of `obj` (hosted in `src_dc` under `path`)
+    /// in `dst_dc`'s store + namespace: real payloads copy byte for
+    /// byte, synthetic holes stay synthetic, and the namespace entry
+    /// mirrors the source's owner/mtime/sync. Shared by
+    /// [`Testbed::bulk_replicate`] and the batch executor.
+    pub(crate) fn clone_replica(
+        &mut self,
+        path: &str,
+        src_dc: usize,
+        dst_dc: usize,
+        obj: crate::vfs::ObjectId,
+        size: u64,
+    ) -> Result<crate::vfs::ObjectId, ScispaceError> {
+        let replica = if self.dcs[src_dc].store.is_hole(obj).unwrap_or(true) {
+            self.dcs[dst_dc].store.create_hole(size)
+        } else {
+            let raw = self.dcs[src_dc].store.read_all(obj)?;
+            let id = self.dcs[dst_dc].store.create();
+            self.dcs[dst_dc].store.write_at(id, 0, &raw)?;
+            id
+        };
+        let (owner, mtime, sync) = {
+            let e = self.dcs[src_dc].fs.get(path).ok_or_else(|| ScispaceError::Internal {
+                msg: format!("{path} missing from dc{src_dc} namespace"),
+            })?;
+            (e.owner.clone(), e.mtime, e.sync)
+        };
+        self.dcs[dst_dc].fs.create_file(path, Some(replica), size, &owner, mtime)?;
+        if sync {
+            self.dcs[dst_dc].fs.set_sync(path, true);
+        }
+        Ok(replica)
     }
 
     /// Pick a DTN inside `dc` for collaborator `c` (its assigned DTN when
     /// it matches, else round-robin by collaborator id).
-    fn dtn_in_dc(&self, dc: usize, c: usize) -> usize {
+    pub(crate) fn dtn_in_dc(&self, dc: usize, c: usize) -> usize {
         let assigned = self.collabs[c].dtn;
         if self.dtns[assigned].dc == dc {
             return assigned;
@@ -603,7 +797,7 @@ impl Testbed {
     }
 
     /// Allocate a transfer id (monotone per testbed).
-    fn next_xfer_id(&mut self) -> u64 {
+    pub(crate) fn next_xfer_id(&mut self) -> u64 {
         self.next_xfer += 1;
         self.next_xfer
     }
@@ -614,30 +808,14 @@ impl Testbed {
     /// destination namespace + object store; collaborator `c` drives the
     /// transfer and its clock advances to replica durability (the
     /// destination PFS write completing).
-    pub fn bulk_replicate(
+    pub(crate) fn bulk_replicate(
         &mut self,
         c: usize,
         path: &str,
         dst_dc: usize,
         faults: &mut FaultInjector,
-    ) -> Result<TransferReport> {
-        let (src_dc, obj) = self.locate(path).ok_or_else(|| anyhow!("no such file {path}"))?;
-        if dst_dc >= self.dcs.len() {
-            bail!("no such data center dc{dst_dc}");
-        }
-        if src_dc == dst_dc {
-            bail!("{path} already lives in dc{dst_dc}");
-        }
-        // same visibility control as read(): the data plane must not
-        // leak payloads the driving collaborator cannot see
-        let driver = self.collabs[c].id.clone();
-        if !self.ns.visible_to(path, &driver) {
-            bail!("{path} not visible to {driver}");
-        }
-        let size = self.dcs[src_dc].store.len(obj).unwrap_or(0);
-        let t0 = self.collabs[c].now;
-        // source PFS streams the payload out
-        let t = self.dcs[src_dc].lustre.read(&mut self.env, t0, obj.0, 0, size);
+    ) -> Result<TransferReport, ScispaceError> {
+        let (t, src_dc, obj, size, driver) = self.replicate_frontend(c, path, dst_dc)?;
         let req = TransferRequest {
             id: self.next_xfer_id(),
             owner: driver,
@@ -657,25 +835,7 @@ impl Testbed {
             engine.transfer_with_sinks(&mut self.env, &mut self.net, &req, faults, t, sinks)?;
         // materialize the replica: real payloads are copied byte-for-byte
         // (whatever their size); synthetic holes stay synthetic
-        let replica = if self.dcs[src_dc].store.is_hole(obj).unwrap_or(true) {
-            self.dcs[dst_dc].store.create_hole(size)
-        } else {
-            let raw = self.dcs[src_dc].store.read_all(obj)?;
-            let id = self.dcs[dst_dc].store.create();
-            self.dcs[dst_dc].store.write_at(id, 0, &raw)?;
-            id
-        };
-        let (owner, mtime, sync) = {
-            let e = self.dcs[src_dc]
-                .fs
-                .get(path)
-                .ok_or_else(|| anyhow!("{path} missing from dc{src_dc} namespace"))?;
-            (e.owner.clone(), e.mtime, e.sync)
-        };
-        self.dcs[dst_dc].fs.create_file(path, Some(replica), size, &owner, mtime)?;
-        if sync {
-            self.dcs[dst_dc].fs.set_sync(path, true);
-        }
+        let replica = self.clone_replica(path, src_dc, dst_dc, obj, size)?;
         // replica durability: the destination PFS absorbs the payload
         let t_done = self.dcs[dst_dc].lustre.write(&mut self.env, rep.finished_at, replica.0, 0, size);
         self.collabs[c].now = self.collabs[c].now.max(t_done);
@@ -685,7 +845,7 @@ impl Testbed {
     /// `ls` of the collaboration workspace: fan-out to all metadata shards
     /// **in parallel** (virtual time = slowest shard), merge, filter by
     /// namespace visibility.
-    pub fn ls(&mut self, c: usize, prefix: &str) -> Vec<FileMeta> {
+    pub(crate) fn ls(&mut self, c: usize, prefix: &str) -> Vec<FileMeta> {
         let t0 = self.collabs[c].now;
         let results = self.meta.list(prefix, None);
         let mut t_end = t0;

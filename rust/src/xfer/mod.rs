@@ -154,6 +154,63 @@ pub struct TransferRequest {
     pub submitted_at: f64,
 }
 
+/// Congestion accounting observed on one link of a transfer's path
+/// while the transfer ran (the delta of the link's counters). This is
+/// the per-path loss signal an adaptive stream-count controller needs:
+/// a path whose loss deltas keep climbing should shed striping width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathLoss {
+    /// Link name (as registered in the engine, e.g. `net.wan`).
+    pub link: String,
+    /// Congestion losses synthesized on the link during the transfer.
+    pub losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub retransmit_bytes: u64,
+}
+
+/// Snapshot the `(losses, retransmit_bytes)` counters of each hop of
+/// the `src_dc -> dst_dc` path, in path order. Pair with
+/// [`path_loss_delta`] around a transfer to attribute its per-link
+/// congestion — the one place the delta arithmetic lives.
+pub fn path_loss_baseline(
+    env: &Engine,
+    net: &Network,
+    src_dc: usize,
+    dst_dc: usize,
+) -> Vec<(u64, u64)> {
+    net.path(src_dc, dst_dc)
+        .iter()
+        .map(|l| {
+            let lk = env.link(l.res);
+            (lk.total_losses, lk.total_retransmit_bytes)
+        })
+        .collect()
+}
+
+/// The per-hop [`PathLoss`] deltas of the `src_dc -> dst_dc` path since
+/// `baseline` (which must come from [`path_loss_baseline`] on the same
+/// path).
+pub fn path_loss_delta(
+    env: &Engine,
+    net: &Network,
+    src_dc: usize,
+    dst_dc: usize,
+    baseline: &[(u64, u64)],
+) -> Vec<PathLoss> {
+    net.path(src_dc, dst_dc)
+        .iter()
+        .zip(baseline)
+        .map(|(l, &(l0, r0))| {
+            let lk = env.link(l.res);
+            PathLoss {
+                link: lk.name.clone(),
+                losses: lk.total_losses - l0,
+                retransmit_bytes: lk.total_retransmit_bytes - r0,
+            }
+        })
+        .collect()
+}
+
 /// Outcome of one completed transfer.
 #[derive(Debug, Clone)]
 pub struct TransferReport {
@@ -187,6 +244,15 @@ pub struct TransferReport {
     pub started_at: f64,
     /// Virtual completion time (last chunk verified).
     pub finished_at: f64,
+    /// Observed per-stream goodput, bytes/s ([`StreamSet::goodput`]):
+    /// what each stripe actually yielded over its lifetime, voided
+    /// deliveries excluded. Together with `path_losses` this is the
+    /// signal set for an adaptive stream-count controller.
+    pub stream_goodput: Vec<f64>,
+    /// Per-link congestion accounting deltas along the transfer's path
+    /// (filled by [`XferEngine::transfer_with_sinks`]; empty for
+    /// flights driven chunk-by-chunk by an external scheduler).
+    pub path_losses: Vec<PathLoss>,
 }
 
 impl TransferReport {
@@ -259,6 +325,8 @@ impl Flight {
                 cc_retransmit_bytes: 0,
                 started_at: now,
                 finished_at: now,
+                stream_goodput: Vec::new(),
+                path_losses: Vec::new(),
             },
             streams,
         }
@@ -335,6 +403,8 @@ impl Flight {
     pub fn into_report(mut self) -> TransferReport {
         self.report.cc_losses = self.streams.cc_losses();
         self.report.cc_retransmit_bytes = self.streams.cc_retransmit_bytes();
+        self.report.stream_goodput =
+            (0..self.streams.width()).map(|s| self.streams.goodput(s)).collect();
         self.report
     }
 }
@@ -382,6 +452,9 @@ impl XferEngine {
         sinks: DigestSinks,
     ) -> Result<TransferReport> {
         let mut flight = Flight::with_sinks(&self.cfg, net, req, now, sinks);
+        // per-path congestion baseline: report the loss *delta* this
+        // transfer experienced on each hop of its path
+        let before = path_loss_baseline(env, net, req.src_dc, req.dst_dc);
         net.begin_transfer(req.src_dc, req.dst_dc);
         let mut outcome = Ok(());
         while !flight.is_done() {
@@ -392,7 +465,9 @@ impl XferEngine {
         }
         net.end_transfer(req.src_dc, req.dst_dc);
         outcome?;
-        Ok(flight.into_report())
+        let mut report = flight.into_report();
+        report.path_losses = path_loss_delta(env, net, req.src_dc, req.dst_dc, &before);
+        Ok(report)
     }
 }
 

@@ -1,0 +1,277 @@
+//! The Session API contract: typed errors for namespace visibility,
+//! metadata-miss fallback charging, replicate signal plumbing, and the
+//! tentpole acceptance — `run_batch` gives true processor-sharing
+//! concurrency on the shared WAN instead of serialization.
+
+use scispace::api::{Op, OpResult, ScispaceError};
+use scispace::meu;
+use scispace::namespace::Scope;
+use scispace::workspace::{AccessMode, Testbed, TestbedConfig};
+
+// ---------------------------------------------------------- visibility
+
+#[test]
+fn private_template_read_across_dcs_is_typed_not_visible() {
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    tb.ns.define("alice-priv", "alice", "/home/alice", Scope::Local).unwrap();
+    tb.session(alice).write("/home/alice/secret.dat").data(b"ssst").submit().unwrap();
+    match tb.session(bob).read("/home/alice/secret.dat").len(4).submit() {
+        Err(ScispaceError::NotVisible { path, viewer }) => {
+            assert_eq!(path, "/home/alice/secret.dat");
+            assert_eq!(viewer, "bob");
+        }
+        other => panic!("expected NotVisible, got {other:?}"),
+    }
+    // the replication data plane enforces the same scope, same type
+    match tb.session(bob).replicate("/home/alice/secret.dat").to(1).submit() {
+        Err(ScispaceError::NotVisible { viewer, .. }) => assert_eq!(viewer, "bob"),
+        other => panic!("expected NotVisible, got {other:?}"),
+    }
+    // the owner still reads it fine, across the workspace
+    assert!(tb.session(alice).read("/home/alice/secret.dat").submit().is_ok());
+}
+
+#[test]
+fn overlapping_prefix_scopes_resolve_longest_match() {
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    // a Local namespace nested inside a Global one, plus a sibling whose
+    // name shares the prefix without a component boundary
+    tb.ns.define("outer", "alice", "/collab/x", Scope::Global).unwrap();
+    tb.ns.define("inner", "alice", "/collab/x/priv", Scope::Local).unwrap();
+    let mut sess = tb.session(alice);
+    sess.write("/collab/x/pub.dat").data(b"open").submit().unwrap();
+    sess.write("/collab/x/priv/sec.dat").data(b"mine").submit().unwrap();
+    sess.write("/collab/xz/f.dat").data(b"side").submit().unwrap();
+
+    // outer Global: visible
+    assert!(tb.session(bob).read("/collab/x/pub.dat").submit().is_ok());
+    // inner Local wins the longest-prefix match: typed denial
+    match tb.session(bob).read("/collab/x/priv/sec.dat").submit() {
+        Err(ScispaceError::NotVisible { path, viewer }) => {
+            assert_eq!(path, "/collab/x/priv/sec.dat");
+            assert_eq!(viewer, "bob");
+        }
+        other => panic!("expected NotVisible, got {other:?}"),
+    }
+    // "/collab/xz" does not fall into "/collab/x" (component boundary):
+    // default namespace, global
+    assert!(tb.session(bob).read("/collab/xz/f.dat").submit().is_ok());
+    // a missing path is NoSuchFile, not a visibility denial
+    match tb.session(bob).read("/collab/x/priv/none.dat").submit() {
+        Err(ScispaceError::NoSuchFile { path }) => assert_eq!(path, "/collab/x/priv/none.dat"),
+        other => panic!("expected NoSuchFile, got {other:?}"),
+    }
+}
+
+#[test]
+fn lw_remote_read_is_typed_not_local() {
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    tb.session(alice).write("/collab/far.dat").data(b"data").submit().unwrap();
+    let (data_dc, _) = tb.session(alice).locate("/collab/far.dat").submit().unwrap().located().unwrap();
+    let outsider = if tb.collabs[bob].dc != data_dc { bob } else { alice };
+    if tb.collabs[outsider].dc != data_dc {
+        match tb.session(outsider).read("/collab/far.dat").mode(AccessMode::ScispaceLw).submit() {
+            Err(ScispaceError::NotLocal { path, dc }) => {
+                assert_eq!(path, "/collab/far.dat");
+                assert_eq!(dc, data_dc);
+            }
+            other => panic!("expected NotLocal, got {other:?}"),
+        }
+    }
+}
+
+// ------------------------------------------------- locate fallback cost
+
+#[test]
+fn locate_fallback_charges_consults_and_counts_stats() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    // an unexported LW file has no workspace metadata record
+    tb.session(a)
+        .write("/lw/file.dat")
+        .len(1024)
+        .mode(AccessMode::ScispaceLw)
+        .submit()
+        .unwrap();
+    assert_eq!(tb.stats.locate_fallbacks, 0);
+    let before = tb.now(a);
+    let (dc, size) = tb.session(a).locate("/lw/file.dat").submit().unwrap().located().unwrap();
+    assert_eq!(dc, 0);
+    assert_eq!(size, 1024);
+    assert_eq!(tb.stats.locate_fallbacks, 1, "metadata miss must be counted");
+    assert!(tb.stats.locate_fallback_consults >= 1);
+    assert!(tb.now(a) > before, "the per-DC consults must charge simulated time");
+
+    // once exported, the metadata plane serves the lookup: no fallback
+    meu::export(&mut tb, a, "/lw", None).unwrap();
+    let n = tb.stats.locate_fallbacks;
+    let t = tb.now(a);
+    tb.session(a).locate("/lw/file.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_fallbacks, n, "metadata hit must not fall back");
+    assert_eq!(tb.now(a).to_bits(), t.to_bits(), "metadata-served locate stays free");
+}
+
+// ------------------------------------------- replicate signal plumbing
+
+#[test]
+fn replicate_reports_stream_goodput_and_path_losses() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    tb.session(a).write("/collab/big.dat").len(16 << 20).submit().unwrap();
+    let rep = tb
+        .session(a)
+        .replicate("/collab/big.dat")
+        .to(1)
+        .submit()
+        .unwrap()
+        .replicated()
+        .unwrap();
+    assert_eq!(rep.bytes, 16 << 20);
+    assert_eq!(rep.stream_goodput.len(), rep.streams, "one goodput sample per stripe");
+    assert!(rep.stream_goodput.iter().all(|&g| g > 0.0), "{:?}", rep.stream_goodput);
+    // cross-DC path: source LAN, WAN, destination LAN
+    assert_eq!(rep.path_losses.len(), 3);
+    assert!(rep.path_losses.iter().any(|p| p.link == "net.wan"));
+    // the default WAN is lossless: deltas present, zero-valued
+    assert!(rep.path_losses.iter().all(|p| p.losses == 0 && p.retransmit_bytes == 0));
+}
+
+#[test]
+fn batch_replicate_reports_the_same_signal_set() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    tb.session(a).write("/collab/rep.dat").len(16 << 20).submit().unwrap();
+    let results =
+        tb.run_batch(vec![(a, Op::Replicate { path: "/collab/rep.dat".into(), dst_dc: 1 })]);
+    let rep = results[0].clone().replicated().unwrap();
+    assert_eq!(rep.bytes, 16 << 20);
+    assert!(!rep.stream_goodput.is_empty());
+    assert!(rep.stream_goodput.iter().all(|&g| g > 0.0));
+    assert_eq!(rep.path_losses.len(), 3);
+    // the replica materialized for real
+    assert!(tb.dcs[1].fs.get("/collab/rep.dat").is_some());
+}
+
+// --------------------------------------------------- batch concurrency
+
+fn wan_bottleneck_config() -> TestbedConfig {
+    let mut cfg = TestbedConfig::paper_default();
+    // make the shared inter-DC link the bottleneck by an order of
+    // magnitude, so op latency is dominated by WAN serialization
+    cfg.net.wan_bw = 100e6;
+    cfg
+}
+
+/// Build a two-DC bed where reader `r{d}` (homed in DC d) has a remote
+/// 32 MiB granule `/collab/shared/g{d}.dat` living in the *other* DC.
+fn concurrency_bed() -> (Testbed, usize, usize) {
+    let mut tb = Testbed::build(wan_bottleneck_config());
+    let r0 = tb.register("r0", 0);
+    let r1 = tb.register("r1", 1);
+    let w0 = tb.register("w0", 0);
+    let w1 = tb.register("w1", 1);
+    // writer in DC1 publishes the granule reader0 will pull, and vice versa
+    tb.session(w1).write("/collab/shared/g0.dat").len(32 << 20).submit().unwrap();
+    tb.session(w0).write("/collab/shared/g1.dat").len(32 << 20).submit().unwrap();
+    tb.quiesce();
+    (tb, r0, r1)
+}
+
+fn read_op(d: usize) -> Op {
+    Op::Read {
+        path: format!("/collab/shared/g{d}.dat"),
+        offset: 0,
+        len: Some(32 << 20),
+        mode: AccessMode::Scispace,
+    }
+}
+
+#[test]
+fn run_batch_overlaps_collaborators_on_the_shared_wan() {
+    // Tentpole acceptance: two equal-size reads from collaborators in
+    // different DCs over the shared WAN each finish in ~2x the solo
+    // time (processor sharing), not serialized back-to-back (~>=2x for
+    // one of them and ~1x for the other would also fail the band).
+    let solo = {
+        let (mut tb, r0, _) = concurrency_bed();
+        let start = tb.now(r0);
+        let results = tb.run_batch(vec![(r0, read_op(0))]);
+        assert!(results[0].is_ok(), "{:?}", results[0].err());
+        results[0].finished_at() - start
+    };
+    let (mut tb, r0, r1) = concurrency_bed();
+    let start = tb.now(r0);
+    assert_eq!(start, tb.now(r1), "quiesce aligns the clocks");
+    let results = tb.run_batch(vec![(r0, read_op(0)), (r1, read_op(1))]);
+    assert!(results.iter().all(|r| r.is_ok()), "{results:?}");
+    let l0 = results[0].finished_at() - start;
+    let l1 = results[1].finished_at() - start;
+    let skew = (l0 - l1).abs() / l0.max(l1);
+    assert!(skew < 0.05, "equal readers must finish together: {l0} vs {l1}");
+    for l in [l0, l1] {
+        let ratio = l / solo;
+        assert!(
+            (1.6..2.15).contains(&ratio),
+            "shared WAN must halve each reader's bandwidth (PS), not serialize: \
+             ratio={ratio} solo={solo} shared={l}"
+        );
+    }
+    // both reads genuinely rode the WAN concurrently
+    assert_eq!(tb.net.wan_peak(), 2);
+}
+
+#[test]
+fn batch_bulk_write_then_remote_read_round_trips_bytes() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    let b = tb.register("b", 1);
+    let payload: Vec<u8> = (0..(9u32 << 20)).map(|i| (i % 251) as u8).collect();
+    let results = tb.run_batch(vec![(
+        a,
+        Op::Write {
+            path: "/batch/pay.dat".into(),
+            offset: 0,
+            len: payload.len() as u64,
+            data: Some(payload.clone()),
+            mode: AccessMode::Scispace,
+        },
+    )]);
+    assert!(results[0].is_ok(), "{:?}", results[0].err());
+    let results = tb.run_batch(vec![(
+        b,
+        Op::Read {
+            path: "/batch/pay.dat".into(),
+            offset: 0,
+            len: Some(payload.len() as u64),
+            mode: AccessMode::Scispace,
+        },
+    )]);
+    let bytes = results[0].clone().data().unwrap();
+    assert_eq!(bytes, payload, "the batch data plane must move real bytes");
+}
+
+#[test]
+fn batch_preserves_per_collaborator_program_order() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    let ops = vec![
+        (a, Op::Write { path: "/ord/x.dat".into(), offset: 0, len: 4, data: Some(b"one!".to_vec()), mode: AccessMode::Scispace }),
+        (a, Op::Read { path: "/ord/x.dat".into(), offset: 0, len: Some(4), mode: AccessMode::Scispace }),
+        (a, Op::Ls { prefix: "/ord".into() }),
+    ];
+    let results = tb.run_batch(ops);
+    assert!(results.iter().all(|r| r.is_ok()), "{results:?}");
+    // completions are monotone for one collaborator (serial program order)
+    let t: Vec<f64> = results.iter().map(|r| r.finished_at()).collect();
+    assert!(t[0] <= t[1] && t[1] <= t[2], "{t:?}");
+    match &results[1] {
+        OpResult::Data { bytes, .. } => assert_eq!(bytes, b"one!"),
+        other => panic!("expected Data, got {other:?}"),
+    }
+}

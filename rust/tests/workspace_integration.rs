@@ -1,12 +1,26 @@
 //! Integration: full collaboration scenarios across workspace + metadata
-//! + MEU + SDS + namespaces on the simulated two-DC testbed.
+//! + MEU + SDS + namespaces on the simulated two-DC testbed, driven
+//! through the typed Session API.
 
+use scispace::api::ScispaceError;
 use scispace::db::Value;
 use scispace::meu;
 use scispace::namespace::Scope;
-use scispace::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
+use scispace::sds::{self, ExtractionMode, Sds, SdsConfig};
 use scispace::workload::{load_corpus, modis_corpus, ModisConfig};
 use scispace::workspace::{AccessMode, Testbed};
+
+fn ls_paths(tb: &mut Testbed, c: usize, prefix: &str) -> Vec<String> {
+    tb.session(c)
+        .ls(prefix)
+        .submit()
+        .unwrap()
+        .entries()
+        .unwrap()
+        .into_iter()
+        .map(|m| m.path)
+        .collect()
+}
 
 #[test]
 fn two_site_share_and_analyze() {
@@ -16,9 +30,10 @@ fn two_site_share_and_analyze() {
     let corpus = modis_corpus(&ModisConfig { n_files: 20, elems_per_file: 512, seed: 9 });
     load_corpus(&mut tb, a, &corpus, AccessMode::Scispace);
     // bob sees all granules and can parse one
-    let ls = tb.ls(b, "/modis");
+    let mut sess = tb.session(b);
+    let ls = sess.ls("/modis").submit().unwrap().entries().unwrap();
     assert_eq!(ls.len(), 20);
-    let raw = tb.read(b, &ls[3].path, 0, ls[3].size, AccessMode::Scispace).unwrap();
+    let raw = sess.read(&ls[3].path).len(ls[3].size).submit().unwrap().data().unwrap();
     let f: scispace::shdf::ShdfFile = scispace::msg::Wire::from_bytes(&raw).unwrap();
     assert!(f.get_attr("Instrument").is_some());
 }
@@ -33,14 +48,14 @@ fn lw_plus_meu_equals_workspace_visibility() {
     let c1 = tb1.register("x", 0);
     let viewer1 = tb1.register("v", 1);
     load_corpus(&mut tb1, c1, &corpus, AccessMode::Scispace);
-    let direct: Vec<String> = tb1.ls(viewer1, "/modis").into_iter().map(|m| m.path).collect();
+    let direct = ls_paths(&mut tb1, viewer1, "/modis");
 
     let mut tb2 = Testbed::paper_default();
     let c2 = tb2.register("x", 0);
     let viewer2 = tb2.register("v", 1);
     load_corpus(&mut tb2, c2, &corpus, AccessMode::ScispaceLw);
     meu::export(&mut tb2, c2, "/", None).unwrap();
-    let exported: Vec<String> = tb2.ls(viewer2, "/modis").into_iter().map(|m| m.path).collect();
+    let exported = ls_paths(&mut tb2, viewer2, "/modis");
 
     assert_eq!(direct, exported);
 }
@@ -53,15 +68,23 @@ fn multi_collaboration_scopes_isolate() {
     let carol = tb.register("carol", 0);
     tb.ns.define("ab-collab", "alice", "/collab/ab", Scope::Global).unwrap();
     tb.ns.define("alice-private", "alice", "/priv/alice", Scope::Local).unwrap();
-    tb.write(alice, "/collab/ab/shared.dat", 0, 4, Some(b"ab!!"), AccessMode::Scispace).unwrap();
-    tb.write(alice, "/priv/alice/own.dat", 0, 4, Some(b"mine"), AccessMode::Scispace).unwrap();
-    // bob: sees the global collab, not the private namespace
-    assert_eq!(tb.ls(bob, "/").len(), 1);
-    assert!(tb.read(bob, "/priv/alice/own.dat", 0, 4, AccessMode::Scispace).is_err());
+    let mut sess = tb.session(alice);
+    sess.write("/collab/ab/shared.dat").data(b"ab!!").submit().unwrap();
+    sess.write("/priv/alice/own.dat").data(b"mine").submit().unwrap();
+    // bob: sees the global collab, not the private namespace — and the
+    // denial is typed, not a string
+    assert_eq!(ls_paths(&mut tb, bob, "/").len(), 1);
+    match tb.session(bob).read("/priv/alice/own.dat").len(4).submit() {
+        Err(ScispaceError::NotVisible { path, viewer }) => {
+            assert_eq!(path, "/priv/alice/own.dat");
+            assert_eq!(viewer, "bob");
+        }
+        other => panic!("expected NotVisible, got {other:?}"),
+    }
     // carol: same DC as alice but still scope-filtered
-    assert_eq!(tb.ls(carol, "/priv").len(), 0);
+    assert_eq!(ls_paths(&mut tb, carol, "/priv").len(), 0);
     // alice sees both
-    assert_eq!(tb.ls(alice, "/").len(), 2);
+    assert_eq!(ls_paths(&mut tb, alice, "/").len(), 2);
 }
 
 #[test]
@@ -72,7 +95,7 @@ fn sds_modes_converge_to_same_index() {
         let c = tb.register("w", 0);
         let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
         for (p, f) in &corpus {
-            sds::write_indexed(&mut tb, &mut sds, c, p, f, mode, None).unwrap();
+            tb.session(c).write_indexed(&mut sds, p, f).extraction(mode).submit().unwrap();
         }
         match mode {
             ExtractionMode::InlineAsync => {
@@ -84,7 +107,13 @@ fn sds_modes_converge_to_same_index() {
             ExtractionMode::InlineSync => {}
         }
         tb.quiesce();
-        let (files, _) = sds::run_query(&mut tb, &mut sds, c, &Query::parse("Instrument like %").unwrap()).unwrap();
+        let files = tb
+            .session(c)
+            .query(&mut sds, "Instrument like %")
+            .submit()
+            .unwrap()
+            .files()
+            .unwrap();
         files.len()
     };
     let sync = count_hits(ExtractionMode::InlineSync);
@@ -103,12 +132,13 @@ fn unsynced_lw_files_invisible_until_export_then_queryable() {
     let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
     let corpus = modis_corpus(&ModisConfig { n_files: 6, elems_per_file: 128, seed: 12 });
     load_corpus(&mut tb, w, &corpus, AccessMode::ScispaceLw);
-    assert!(tb.ls(r, "/modis").is_empty());
+    assert!(ls_paths(&mut tb, r, "/modis").is_empty());
     meu::export(&mut tb, w, "/", None).unwrap();
     sds::offline_index(&mut tb, &mut sds, w, "/modis", None).unwrap();
     tb.quiesce();
-    assert_eq!(tb.ls(r, "/modis").len(), 6);
-    let (files, _) = sds::run_query(&mut tb, &mut sds, r, &Query::parse("GranuleId < 3").unwrap()).unwrap();
+    assert_eq!(ls_paths(&mut tb, r, "/modis").len(), 6);
+    let files =
+        tb.session(r).query(&mut sds, "GranuleId < 3").submit().unwrap().files().unwrap();
     assert_eq!(files.len(), 3);
 }
 
@@ -119,11 +149,11 @@ fn remote_delete_extension_works() {
     let mut tb = Testbed::paper_default();
     let a = tb.register("a", 0);
     let b = tb.register("b", 1);
-    tb.write(a, "/d/gone.dat", 0, 4, Some(b"temp"), AccessMode::Scispace).unwrap();
-    assert_eq!(tb.ls(b, "/d").len(), 1);
+    tb.session(a).write("/d/gone.dat").data(b"temp").submit().unwrap();
+    assert_eq!(ls_paths(&mut tb, b, "/d").len(), 1);
     use scispace::metadata::{MetaReq, MetaResp};
     assert_eq!(tb.meta.route(&MetaReq::Delete("/d/gone.dat".into())), MetaResp::Ok(1));
-    assert!(tb.ls(b, "/d").is_empty());
+    assert!(ls_paths(&mut tb, b, "/d").is_empty());
 }
 
 #[test]
@@ -138,19 +168,47 @@ fn interleaved_collaborators_make_progress() {
         for c in 0..8usize {
             let path = format!("/work/c{c}/r{round}.dat");
             let payload = format!("payload-{c}-{round}");
-            tb.write(c, &path, 0, payload.len() as u64, Some(payload.as_bytes()), AccessMode::Scispace)
-                .unwrap();
+            tb.session(c).write(&path).data(payload.as_bytes()).submit().unwrap();
         }
     }
     for c in 0..8usize {
         for round in 0..5u64 {
             let path = format!("/work/c{c}/r{round}.dat");
             let want = format!("payload-{c}-{round}");
-            let got = tb.read(c, &path, 0, want.len() as u64, AccessMode::Scispace).unwrap();
+            let got = tb.session(c).read(&path).submit().unwrap().data().unwrap();
             assert_eq!(got, want.as_bytes());
         }
     }
-    assert_eq!(tb.ls(0, "/work").len(), 40);
+    assert_eq!(ls_paths(&mut tb, 0, "/work").len(), 40);
     // times advanced monotonically for everyone
     assert!((0..8).all(|c| tb.now(c) > 0.0));
+}
+
+#[test]
+fn batch_mixes_workspace_and_sds_ops() {
+    use scispace::api::{batch, Op, OpResult};
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("alice", 0);
+    let b = tb.register("bob", 1);
+    let mut sds = Sds::new(tb.dtns.len(), SdsConfig::default());
+    tb.session(a).write("/mix/x.dat").data(b"xx").submit().unwrap();
+    let ops = vec![
+        (a, Op::Tag {
+            path: "/mix/x.dat".into(),
+            attr: "campaign".into(),
+            value: Value::Text("alpha".into()),
+        }),
+        (b, Op::Ls { prefix: "/mix".into() }),
+        (a, Op::Query { query: scispace::sds::Query::parse("campaign = alpha").unwrap() }),
+        (b, Op::Read { path: "/missing.dat".into(), offset: 0, len: Some(4), mode: AccessMode::Scispace }),
+    ];
+    let results = batch::run_batch_with_sds(&mut tb, &mut sds, ops);
+    assert_eq!(results.len(), 4);
+    assert!(results[0].is_ok(), "tag: {results:?}");
+    assert_eq!(results[1].clone().entries().unwrap().len(), 1);
+    assert_eq!(results[2].clone().files().unwrap(), vec!["/mix/x.dat".to_string()]);
+    match &results[3] {
+        OpResult::Failed(ScispaceError::NoSuchFile { path }) => assert_eq!(path, "/missing.dat"),
+        other => panic!("expected NoSuchFile, got {other:?}"),
+    }
 }
