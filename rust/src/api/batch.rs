@@ -6,59 +6,84 @@
 //!
 //! A batch preserves each collaborator's *program order* — their own
 //! ops run serially, in submission order — while ops from different
-//! collaborators overlap. Execution proceeds in **waves**: each wave
-//! takes the next pending op of every collaborator, and within a wave
+//! collaborators overlap. Each collaborator is a small state machine
+//! driven by engine events, with **no cross-collaborator barrier**:
 //!
-//! 1. every op's *front end* (FUSE calls, metadata consults, PFS/NFS
-//!    staging) is charged in ascending collaborator-clock order — these
-//!    land on FIFO servers, whose completion arithmetic is
-//!    admission-order exact;
-//! 2. every bulk op's *payload* is then started on the shared links as
-//!    weighted engine flows — all of them **before** the event queue is
-//!    drained, which is exactly what processor sharing requires (the
-//!    engine's per-link causality clamp serializes flows submitted
-//!    one-at-a-time); one drain completes the whole wave;
-//! 3. each bulk op's *back end* (NFS ingest + flush, destination PFS
-//!    write, FUSE copy-out) is charged from its flows' finish time and
-//!    the collaborator clocks advance.
+//! * **Admission** is a control event. A collaborator's next op is
+//!   admitted at the virtual time its previous op completed (its first
+//!   op at its current clock); admissions interleave with every other
+//!   collaborator's chunk completions in global virtual-time order,
+//!   ties broken deterministically by collaborator index.
+//! * At admission, the op's *front end* (FUSE calls, metadata consults,
+//!   PFS/NFS staging) is charged through the same shared [`Testbed`]
+//!   helpers the single-op path uses. Small and local ops execute whole
+//!   at admission time through the exact single-op lowering; their
+//!   (microsecond-scale) RPCs meet on FIFO metadata servers, where
+//!   contention is admission-order exact.
+//! * A bulk op's payload runs as a chunked stop-and-wait
+//!   [`crate::xfer::Flight`] — **the same chunk/digest/ack machinery as
+//!   a single-op transfer**, driven event-by-event instead of blocking:
+//!   a *payload-launch* control fires at the staged-ready time (so the
+//!   first chunk's FIFO digest serve is committed when virtual time
+//!   reaches it, never early in code order), then each chunk's payload
+//!   flow is started mid-drain ([`Flight::begin_chunk`]) and resolved
+//!   when the engine reports it done ([`Flight::finish_chunk`]), so
+//!   chunks from concurrent transfers are in flight together and share
+//!   links under processor sharing. Per-chunk acks and DTN-CPU digest
+//!   offload are charged identically to the single-op path — a batch
+//!   of one is *bit-identical* to the corresponding single-op call
+//!   (pinned in `tests/session_api.rs`).
+//! * When a bulk op's last chunk verifies, its *back end* (NFS ingest +
+//!   flush, destination PFS write, FUSE copy-out) is charged through
+//!   the shared back-end helpers, the collaborator clock advances, and
+//!   the collaborator's next op is admitted at that time.
 //!
-//! ## Fidelity trade
+//! There are no synchronized rounds: an interactive op admitted while
+//! an unrelated multi-gigabyte transfer is mid-flight joins the shared
+//! resources at its own admission time (processor sharing where paths
+//! overlap, unperturbed where they don't) instead of queueing behind
+//! the slow op's horizon.
 //!
-//! Bulk payloads here ride priority-weighted flows (the same lowering
-//! as [`crate::xfer::run_flows`]) instead of the chunked stop-and-wait
-//! stream engine: per-chunk acks and digest offload are not modelled in
-//! a batch, in exchange for true link sharing. Single-op [`Session`]
-//! calls keep the chunk-exact legacy path bit for bit. Small and
-//! local ops execute through the same sequential lowering as single-op
-//! calls; their (microsecond-scale) RPCs meet on FIFO metadata servers,
-//! where contention is already admission-order exact.
+//! ## Admission-time visibility
 //!
-//! Waves are *synchronized rounds*: the engine never rewinds a link, so
-//! an op in wave k+1 joins shared links no earlier than wave k's
-//! horizon on them. A collaborator's later ops can therefore wait on an
-//! unrelated slow op from the previous round (they overlap *within* a
-//! round, not across rounds). Workloads mixing very asymmetric op sizes
-//! should submit them in separate batches — or extend this executor to
-//! event-driven per-collaborator admission (see the ROADMAP "batch
-//! lowering fidelity" item).
+//! Namespace/payload *state* changes apply at admission time (when the
+//! front end is charged), not at virtual completion — a read admitted
+//! after a write was admitted observes that write's bytes even if their
+//! virtual completion intervals overlap. This mirrors the sequential
+//! semantics (execution order decides visibility, virtual clocks decide
+//! cost), with admission order — which is virtual-time order across
+//! collaborators — standing in for execution order.
 //!
-//! Namespace/payload *state* changes apply at stage time (front end),
-//! not at virtual completion — a concurrent read in the same wave can
-//! observe a write staged before it even though their completion times
-//! overlap. This mirrors the legacy sequential semantics (execution
-//! order decides visibility, virtual clocks decide cost), with wave
-//! order standing in for execution order.
+//! ## Nested sequential drains
+//!
+//! A sequential op executed at admission may internally block on its
+//! own flows ([`crate::engine::Engine::completion`]), which can consume
+//! other plans' chunk-completion events and defer pending admission
+//! controls (the engine re-enqueues them). The executor therefore
+//! re-scans in-flight chunks after every event and resolves any that
+//! completed, in completion-time order — the chunk arithmetic is
+//! unaffected because flow finish times are fixed by the engine, and a
+//! follow-up chunk begun "late" (in wall-clock code order) starts at
+//! its correct virtual time: on links nobody else advanced it joins
+//! exactly there, and on links the nested drain pushed further it
+//! clamps to the per-link causality floor (bounded by the small op's
+//! own flow time — the engine never rewinds a link).
 //!
 //! [`Session`]: crate::api::Session
+//! [`Flight::begin_chunk`]: crate::xfer::Flight::begin_chunk
+//! [`Flight::finish_chunk`]: crate::xfer::Flight::finish_chunk
 
 use std::collections::VecDeque;
 
 use crate::api::{exec_op, Op, OpResult, ScispaceError};
-use crate::engine::FlowId;
+use crate::engine::Occurrence;
 use crate::sds::Sds;
 use crate::vfs::ObjectId;
 use crate::workspace::{AccessMode, Testbed};
-use crate::xfer::{path_loss_baseline, path_loss_delta, Priority, TransferReport};
+use crate::xfer::{
+    path_loss_baseline, path_loss_delta, DigestSinks, FaultInjector, Flight, FlightChunk,
+    Priority, TransferRequest,
+};
 
 /// Run a batch with a discovery service attached, so [`Op::Query`] and
 /// [`Op::Tag`] are executable alongside workspace ops. Same semantics
@@ -67,28 +92,32 @@ pub fn run_batch_with_sds(tb: &mut Testbed, sds: &mut Sds, ops: Vec<(usize, Op)>
     run_batch(tb, Some(sds), ops)
 }
 
-/// What a staged bulk op still owes after its front end was charged.
+/// What a bulk op still owes after its payload flight completes.
 enum PlanKind {
     Read { obj: ObjectId, offset: u64, len: u64 },
     Write { path: String, obj: ObjectId, dtn: usize, data_dc: usize, offset: u64, len: u64 },
-    Replicate { path: String, src_obj: ObjectId, size: u64, driver: String },
+    Replicate { path: String, src_obj: ObjectId, size: u64 },
 }
 
-/// One bulk op lowered onto the engine: front end charged, payload
-/// flows pending.
+/// One bulk op lowered onto the engine: front end charged, chunked
+/// payload flight in progress with (at most) one chunk flow in flight —
+/// exactly the stop-and-wait discipline of the single-op path.
 struct BulkPlan {
     idx: usize,
     c: usize,
     kind: PlanKind,
-    src_dc: usize,
-    dst_dc: usize,
-    bytes: u64,
-    weight: f64,
-    ready: f64,
-    /// Started flows with the byte count each one carries.
-    flows: Vec<(FlowId, u64)>,
-    /// Per-hop congestion baseline captured at launch (for the
-    /// [`crate::xfer::PathLoss`] deltas in the replicate report).
+    /// The chunk-exact transfer state (streams, pending chunks, retry
+    /// accounting) — the same machinery `XferEngine` drives.
+    flight: Flight,
+    /// Batch transfers run fault-free, like the single-op data path.
+    faults: FaultInjector,
+    /// The chunk currently riding the engine, if any.
+    in_flight: Option<FlightChunk>,
+    /// Per-hop congestion baseline, captured at the payload-launch
+    /// control (empty until then) so the [`crate::xfer::PathLoss`]
+    /// deltas in the replicate report cover exactly the payload's
+    /// exposure window — not the front-end staging gap, where another
+    /// collaborator's losses would be misattributed to this transfer.
     loss_base: Vec<(u64, u64)>,
 }
 
@@ -115,59 +144,226 @@ pub(crate) fn run_batch(
             queues[c].push_back((idx, op));
         }
     }
+    let mut active: Vec<Option<BulkPlan>> = (0..n_collabs).map(|_| None).collect();
 
-    loop {
-        let mut wave: Vec<(usize, usize, Op)> = Vec::new();
-        for (c, q) in queues.iter_mut().enumerate() {
-            if let Some((idx, op)) = q.pop_front() {
-                wave.push((idx, c, op));
-            }
-        }
-        if wave.is_empty() {
-            break;
-        }
-        // deterministic admission order: earliest collaborator clock
-        // first, collaborator index as the tie-break
-        wave.sort_by(|a, b| {
-            tb.collabs[a.1].now.total_cmp(&tb.collabs[b.1].now).then(a.1.cmp(&b.1))
-        });
-
-        // 1. front ends (and whole small/local ops) run sequentially
-        let mut plans: Vec<Box<BulkPlan>> = Vec::new();
-        for (idx, c, op) in wave {
-            match try_stage(tb, c, idx, op) {
-                Ok(Staged::Plan(p)) => plans.push(p),
-                Ok(Staged::Sequential(op)) => {
-                    let r = match exec_op(tb, c, sds.as_deref_mut(), op) {
-                        Ok(r) => r,
-                        Err(e) => OpResult::Failed(e),
-                    };
-                    results[idx] = Some(r);
-                }
-                Err(e) => results[idx] = Some(OpResult::Failed(e)),
-            }
-        }
-
-        // 2. every plan's flows start before the single drain — this is
-        // the step that turns serialize-behind-the-horizon into
-        // processor sharing
-        for plan in &mut plans {
-            launch(tb, plan);
-        }
-        tb.env.run_until_idle();
-
-        // 3. back ends and results
-        for plan in plans {
-            let (idx, r) = finish(tb, *plan);
-            results[idx] = Some(r);
+    // admit every collaborator's first op at its own clock; admissions
+    // are control events, so they interleave with chunk completions in
+    // virtual-time order (equal times resolve in scheduling order,
+    // i.e. by collaborator index)
+    for (c, q) in queues.iter().enumerate() {
+        if !q.is_empty() {
+            let t = tb.collabs[c].now;
+            tb.env.schedule_control(t, c as u64);
         }
     }
 
+    loop {
+        match tb.env.run_next() {
+            Occurrence::Control { tag, .. } => {
+                let c = tag as usize;
+                debug_assert!(c < n_collabs, "foreign control tag {tag} in a batch drain");
+                // one control meaning per collaborator state: with a
+                // staged plan pending it is the payload-launch event;
+                // otherwise it admits the next queued op
+                if active[c].is_some() {
+                    launch(tb, c, &mut queues, &mut active, &mut results);
+                } else {
+                    admit(tb, sds.as_deref_mut(), c, &mut queues, &mut active, &mut results);
+                }
+            }
+            Occurrence::FlowDone { .. } => {}
+            Occurrence::Idle => break,
+        }
+        // resolve every chunk flow that has completed — usually the one
+        // the FlowDone above announced, but a nested sequential-op
+        // drain may have consumed several completions before we looked
+        sweep(tb, &mut queues, &mut active, &mut results);
+    }
+
+    debug_assert!(
+        active.iter().all(Option::is_none) && queues.iter().all(VecDeque::is_empty),
+        "batch executor went idle with work outstanding"
+    );
     results.into_iter().map(|r| r.expect("every op resolved")).collect()
 }
 
-/// Charge an op's front end and produce its flow plan — or hand it back
-/// for sequential execution when it has no shareable bulk payload.
+/// Admit collaborator `c`'s next queued op at its current clock: charge
+/// the front end, and either execute it whole (sequential lowering) or
+/// leave its first payload chunk in flight (bulk plan).
+fn admit(
+    tb: &mut Testbed,
+    sds: Option<&mut Sds>,
+    c: usize,
+    queues: &mut [VecDeque<(usize, Op)>],
+    active: &mut [Option<BulkPlan>],
+    results: &mut [Option<OpResult>],
+) {
+    debug_assert!(active[c].is_none(), "program order: one op in flight per collaborator");
+    let Some((idx, op)) = queues[c].pop_front() else { return };
+    match try_stage(tb, c, idx, op) {
+        Ok(Staged::Plan(plan)) => {
+            // do NOT start the first chunk here: its sender digest is a
+            // FIFO serve at the payload-ready time, which can be far in
+            // the future of this admission (the front end just staged
+            // the whole payload through the PFS). Serving it now would
+            // commit the DTN CPU's horizon early in code order and
+            // stall every small op admitted in between — exactly the
+            // cross-stall this executor exists to remove. A launch
+            // control at the ready time keeps FIFO commit order aligned
+            // with virtual time.
+            let t = plan.flight.req.submitted_at;
+            active[c] = Some(*plan);
+            tb.env.schedule_control(t, c as u64);
+        }
+        Ok(Staged::Sequential(op)) => {
+            let r = match exec_op(tb, c, sds, op) {
+                Ok(r) => r,
+                Err(e) => OpResult::Failed(e),
+            };
+            results[idx] = Some(r);
+            schedule_next(tb, c, queues);
+        }
+        Err(e) => {
+            results[idx] = Some(OpResult::Failed(e));
+            schedule_next(tb, c, queues);
+        }
+    }
+}
+
+/// Schedule collaborator `c`'s next admission at its current clock (a
+/// no-op when its queue is drained).
+fn schedule_next(tb: &mut Testbed, c: usize, queues: &[VecDeque<(usize, Op)>]) {
+    if !queues[c].is_empty() {
+        let t = tb.collabs[c].now;
+        tb.env.schedule_control(t, c as u64);
+    }
+}
+
+/// The payload-launch control came due: open the transfer on its path
+/// (loss baseline + contention registration — deferred to now so the
+/// snapshot covers exactly the payload's exposure window, not the
+/// front-end staging gap) and start the staged plan's first chunk (or
+/// complete it outright when the payload is zero bytes).
+fn launch(
+    tb: &mut Testbed,
+    c: usize,
+    queues: &mut [VecDeque<(usize, Op)>],
+    active: &mut [Option<BulkPlan>],
+    results: &mut [Option<OpResult>],
+) {
+    let plan = active[c].as_mut().expect("launch control without a staged plan");
+    let (src_dc, dst_dc) = (plan.flight.req.src_dc, plan.flight.req.dst_dc);
+    plan.loss_base = path_loss_baseline(&tb.env, &tb.net, src_dc, dst_dc);
+    tb.net.begin_transfer(src_dc, dst_dc);
+    let outcome = pump(tb, plan);
+    resolve_pump(tb, c, outcome, queues, active, results);
+}
+
+/// Shared completion handling for a [`pump`] outcome — the executor's
+/// only plan-resolution path, used by both the launch control and the
+/// chunk-completion sweep so the bookkeeping cannot diverge.
+fn resolve_pump(
+    tb: &mut Testbed,
+    c: usize,
+    outcome: Result<bool, ScispaceError>,
+    queues: &mut [VecDeque<(usize, Op)>],
+    active: &mut [Option<BulkPlan>],
+    results: &mut [Option<OpResult>],
+) {
+    match outcome {
+        Ok(true) => {} // a chunk is in flight; nothing to resolve yet
+        Ok(false) => {
+            // no chunks remain: the payload is complete
+            let plan = active[c].take().expect("resolved an active plan");
+            let (idx, r) = finish_plan(tb, plan);
+            results[idx] = Some(r);
+            schedule_next(tb, c, queues);
+        }
+        Err(e) => {
+            let plan = active[c].take().expect("resolved an active plan");
+            let (idx, r) = fail_plan(tb, plan, e);
+            results[idx] = Some(r);
+            schedule_next(tb, c, queues);
+        }
+    }
+}
+
+/// Launch the plan's next chunk without draining the queue. `Ok(true)`
+/// = a chunk is now in flight; `Ok(false)` = no chunks remain (the
+/// payload is complete).
+fn pump(tb: &mut Testbed, plan: &mut BulkPlan) -> Result<bool, ScispaceError> {
+    debug_assert!(plan.in_flight.is_none(), "one chunk in flight per plan");
+    match plan.flight.begin_chunk(&tb.cfg.xfer, &mut tb.env) {
+        Ok(Some(fc)) => {
+            plan.in_flight = Some(fc);
+            Ok(true)
+        }
+        Ok(None) => Ok(false),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Resolve every in-flight chunk whose payload flow has completed, in
+/// completion-time order (collaborator index breaks ties): charge the
+/// receiver digest + ack, then either launch the plan's next chunk at
+/// that virtual time or run its back end and admit the collaborator's
+/// next op.
+fn sweep(
+    tb: &mut Testbed,
+    queues: &mut [VecDeque<(usize, Op)>],
+    active: &mut [Option<BulkPlan>],
+    results: &mut [Option<OpResult>],
+) {
+    // collect first, then resolve: resolving a chunk only *starts*
+    // flows, so it can never complete another plan's in-flight chunk
+    let mut done: Vec<(f64, usize)> = Vec::new();
+    for (c, slot) in active.iter().enumerate() {
+        if let Some(plan) = slot {
+            if let Some(fc) = &plan.in_flight {
+                if let Some(t) = tb.env.flow_finish(fc.flow()) {
+                    done.push((t, c));
+                }
+            }
+        }
+    }
+    done.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for (_, c) in done {
+        let plan = active[c].as_mut().expect("collected above");
+        let fc = plan.in_flight.take().expect("collected above");
+        plan.flight.finish_chunk(&tb.cfg.xfer, &mut tb.env, &mut plan.faults, fc);
+        let outcome = pump(tb, plan);
+        resolve_pump(tb, c, outcome, queues, active, results);
+    }
+}
+
+/// Open a plan's flight. The loss baseline and the path contention
+/// registration (the rest of `XferEngine::transfer_with_sinks`'s
+/// preamble) are deferred to the payload-launch control — see
+/// [`launch`].
+fn stage_plan(
+    tb: &mut Testbed,
+    idx: usize,
+    c: usize,
+    kind: PlanKind,
+    req: TransferRequest,
+    sinks: DigestSinks,
+) -> BulkPlan {
+    let flight = Flight::with_sinks(&tb.cfg.xfer, &tb.net, &req, req.submitted_at, sinks);
+    BulkPlan {
+        idx,
+        c,
+        kind,
+        flight,
+        faults: FaultInjector::none(),
+        in_flight: None,
+        loss_base: Vec::new(),
+    }
+}
+
+/// Charge an op's front end and produce its chunked payload plan — or
+/// hand it back for sequential execution when it has no shareable bulk
+/// payload. The classification and the per-kind charging mirror the
+/// single-op lowerings call for call.
 fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, ScispaceError> {
     match op {
         Op::Read { ref path, offset, len, mode } if mode != AccessMode::ScispaceLw => {
@@ -192,20 +388,21 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
             if !tb.ns.visible_to(&path, &viewer) {
                 return Err(ScispaceError::NotVisible { path, viewer });
             }
-            let (ready, _dtn) =
-                tb.read_stage_frontend(c, &path, obj, data_dc, offset, len, mode);
-            Ok(Staged::Plan(Box::new(BulkPlan {
-                idx,
-                c,
-                kind: PlanKind::Read { obj, offset, len },
+            let (ready, dtn) = tb.read_stage_frontend(c, &path, obj, data_dc, offset, len, mode);
+            let req = TransferRequest {
+                id: tb.next_xfer_id(),
+                owner: viewer,
                 src_dc: data_dc,
                 dst_dc: home_dc,
                 bytes: len,
-                weight: Priority::Interactive.weight(),
-                ready,
-                flows: Vec::new(),
-                loss_base: Vec::new(),
-            })))
+                priority: Priority::Interactive,
+                submitted_at: ready,
+            };
+            // the staging DTN digests outbound chunks on its service
+            // CPU; the collaborator side stays private (single-op sinks)
+            let sinks = DigestSinks { src: Some(tb.dtns[dtn].meta_cpu), dst: None };
+            let kind = PlanKind::Read { obj, offset, len };
+            Ok(Staged::Plan(Box::new(stage_plan(tb, idx, c, kind, req, sinks))))
         }
         Op::Write { ref path, offset, len, ref data, mode }
             if mode != AccessMode::ScispaceLw && len >= tb.cfg.xfer_threshold =>
@@ -215,83 +412,59 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
             let dtn = tb.collabs[c].dtn;
             let (ready, obj, data_dc) =
                 tb.write_frontend(c, &path, offset, len, data.as_deref(), mode)?;
-            Ok(Staged::Plan(Box::new(BulkPlan {
-                idx,
-                c,
-                kind: PlanKind::Write { path, obj, dtn, data_dc, offset, len },
+            let req = TransferRequest {
+                id: tb.next_xfer_id(),
+                owner: tb.collabs[c].id.clone(),
                 src_dc: home_dc,
-                dst_dc: data_dc,
+                dst_dc: tb.dtns[dtn].dc,
                 bytes: len,
-                weight: Priority::Interactive.weight(),
-                ready,
-                flows: Vec::new(),
-                loss_base: Vec::new(),
-            })))
+                priority: Priority::Interactive,
+                submitted_at: ready,
+            };
+            // the ingest DTN verifies chunk digests on its service CPU;
+            // the collaborator side stays private (single-op sinks)
+            let sinks = DigestSinks { src: None, dst: Some(tb.dtns[dtn].meta_cpu) };
+            let kind = PlanKind::Write { path, obj, dtn, data_dc, offset, len };
+            Ok(Staged::Plan(Box::new(stage_plan(tb, idx, c, kind, req, sinks))))
         }
         Op::Replicate { ref path, dst_dc } => {
             let path = path.clone();
             let (ready, src_dc, obj, size, driver) = tb.replicate_frontend(c, &path, dst_dc)?;
-            Ok(Staged::Plan(Box::new(BulkPlan {
-                idx,
-                c,
-                kind: PlanKind::Replicate { path, src_obj: obj, size, driver },
+            let req = TransferRequest {
+                id: tb.next_xfer_id(),
+                owner: driver,
                 src_dc,
                 dst_dc,
                 bytes: size,
-                weight: Priority::Bulk.weight(),
-                ready,
-                flows: Vec::new(),
-                loss_base: Vec::new(),
-            })))
+                priority: Priority::Bulk,
+                submitted_at: ready,
+            };
+            // DTN-to-DTN repair: both endpoints digest on their service
+            // CPUs (single-op sinks)
+            let sinks = DigestSinks::on(
+                tb.dtns[tb.dtn_in_dc(src_dc, c)].meta_cpu,
+                tb.dtns[tb.dtn_in_dc(dst_dc, c)].meta_cpu,
+            );
+            let kind = PlanKind::Replicate { path, src_obj: obj, size };
+            Ok(Staged::Plan(Box::new(stage_plan(tb, idx, c, kind, req, sinks))))
         }
         other => Ok(Staged::Sequential(other)),
     }
 }
 
-/// Split a plan's payload into `n_streams` weighted flows and start
-/// them (not drained here — the caller drains once per wave).
-fn launch(tb: &mut Testbed, plan: &mut BulkPlan) {
-    // counters only move while the queue drains, so a baseline taken at
-    // any launch in the wave sees the same pre-drain state
-    plan.loss_base = path_loss_baseline(&tb.env, &tb.net, plan.src_dc, plan.dst_dc);
-    tb.net.begin_transfer(plan.src_dc, plan.dst_dc);
-    if plan.bytes == 0 {
-        return;
-    }
-    let path = tb.net.flow_path(plan.src_dc, plan.dst_dc);
-    let cfg = &tb.cfg.xfer;
-    let n = (cfg.n_streams.max(1) as u64).min(plan.bytes);
-    let per = plan.bytes / n;
-    let extra = plan.bytes % n;
-    let t0 = plan.ready + cfg.stream_setup_s;
-    for k in 0..n {
-        let b = per + u64::from(k < extra);
-        let f = if cfg.cc.enabled {
-            let window = cfg.cc.window;
-            tb.env.start_windowed_flow(&path, b, t0, plan.weight, &window)
-        } else {
-            tb.env.start_flow(&path, b, t0, plan.weight)
-        };
-        plan.flows.push((f, b));
-    }
-}
-
-/// Charge a plan's back end from its flows' finish time, advance the
-/// collaborator clock, and materialize the result.
-fn finish(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
-    let BulkPlan { idx, c, kind, src_dc, dst_dc, bytes: _, weight: _, ready, flows, loss_base } =
-        plan;
+/// Every chunk verified: close the transfer (contention deregistration,
+/// loss deltas), charge the back end through the shared helpers, and
+/// materialize the result.
+fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
+    let BulkPlan { idx, c, kind, flight, loss_base, .. } = plan;
+    let (src_dc, dst_dc) = (flight.req.src_dc, flight.req.dst_dc);
     tb.net.end_transfer(src_dc, dst_dc);
-    let setup = tb.cfg.xfer.stream_setup_s;
-    let tf = flows
-        .iter()
-        .filter_map(|&(f, _)| tb.env.flow_finish(f))
-        .fold(ready + if flows.is_empty() { 0.0 } else { setup }, f64::max);
+    let mut report = flight.into_report();
+    report.path_losses = path_loss_delta(&tb.env, &tb.net, src_dc, dst_dc, &loss_base);
+    let tf = report.finished_at;
     let r = match kind {
         PlanKind::Read { obj, offset, len } => {
-            let fi = tb.collabs[c].fuse;
-            let copy = tb.fuse_mounts[fi].copy;
-            let t_end = tb.env.serve(copy, tf, len);
+            let t_end = tb.read_backend(c, len, tf);
             tb.collabs[c].now = t_end;
             match tb.dcs[src_dc].store.read_at(obj, offset, len as usize) {
                 Ok(bytes) => OpResult::Data { bytes, finished_at: t_end },
@@ -299,21 +472,13 @@ fn finish(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
             }
         }
         PlanKind::Write { path, obj, dtn, data_dc, offset, len } => {
-            let (tn, flush) = tb.dtns[dtn].nfs.write(&mut tb.env, tf, obj.0, offset, len);
-            let mut t2 = tn;
-            if let Some(fb) = flush {
-                t2 = t2.max(tb.dtns[dtn].nfs.pending_flush);
-                let end = tb.dcs[data_dc].lustre.write(&mut tb.env, t2, obj.0, offset, fb);
-                tb.dtns[dtn].nfs.pending_flush = end;
-            }
+            let t2 = tb.write_backend(dtn, data_dc, obj, offset, len, tf);
             tb.collabs[c].now = t2;
             OpResult::Written { path, bytes: len, finished_at: t2 }
         }
-        PlanKind::Replicate { path, src_obj, size, driver } => {
-            let ctx =
-                ReplicaCtx { c, src_dc, dst_dc, ready, tf, flows: &flows, loss_base: &loss_base };
-            match materialize_replica(tb, &ctx, &path, src_obj, size, driver) {
-                Ok(rep) => OpResult::Replicated(rep),
+        PlanKind::Replicate { path, src_obj, size } => {
+            match tb.replicate_backend(c, &path, src_dc, dst_dc, src_obj, size, tf) {
+                Ok(_) => OpResult::Replicated(report),
                 Err(e) => OpResult::Failed(e),
             }
         }
@@ -321,62 +486,10 @@ fn finish(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
     (idx, r)
 }
 
-/// The plan context a replicate back end needs (split from [`BulkPlan`]
-/// so the plan's `kind` can be consumed independently).
-struct ReplicaCtx<'a> {
-    c: usize,
-    src_dc: usize,
-    dst_dc: usize,
-    ready: f64,
-    tf: f64,
-    flows: &'a [(FlowId, u64)],
-    loss_base: &'a [(u64, u64)],
-}
-
-fn materialize_replica(
-    tb: &mut Testbed,
-    ctx: &ReplicaCtx<'_>,
-    path: &str,
-    src_obj: ObjectId,
-    size: u64,
-    driver: String,
-) -> Result<TransferReport, ScispaceError> {
-    let (src_dc, dst_dc, tf) = (ctx.src_dc, ctx.dst_dc, ctx.tf);
-    let replica = tb.clone_replica(path, src_dc, dst_dc, src_obj, size)?;
-    let t_done = tb.dcs[dst_dc].lustre.write(&mut tb.env, tf, replica.0, 0, size);
-    tb.collabs[ctx.c].now = tb.collabs[ctx.c].now.max(t_done);
-
-    // adaptive-tuning signals: per-flow goodput + this wave's per-link
-    // loss deltas along the path (shared-wave attribution)
-    let setup = tb.cfg.xfer.stream_setup_s;
-    let stream_goodput: Vec<f64> = ctx
-        .flows
-        .iter()
-        .map(|&(f, b)| match tb.env.flow_finish(f) {
-            Some(end) if end > ctx.ready + setup => b as f64 / (end - ctx.ready - setup),
-            _ => 0.0,
-        })
-        .collect();
-    let path_losses = path_loss_delta(&tb.env, &tb.net, src_dc, dst_dc, ctx.loss_base);
-    Ok(TransferReport {
-        id: tb.next_xfer_id(),
-        owner: driver,
-        priority: Priority::Bulk,
-        bytes: size,
-        chunks: 0, // flow-level lowering: no chunk accounting in batches
-        streams: ctx.flows.len(),
-        retried_chunks: 0,
-        retried_bytes: 0,
-        stream_drops: 0,
-        cc_losses: ctx.flows.iter().map(|&(f, _)| tb.env.flow_losses(f)).sum(),
-        cc_retransmit_bytes: ctx
-            .flows
-            .iter()
-            .map(|&(f, _)| tb.env.flow_retransmitted_bytes(f))
-            .sum(),
-        started_at: ctx.ready,
-        finished_at: tf,
-        stream_goodput,
-        path_losses,
-    })
+/// A chunk exhausted its retry budget (unreachable on the fault-free
+/// batch path, kept for parity with the single-op error contract):
+/// close the transfer and surface the typed failure.
+fn fail_plan(tb: &mut Testbed, plan: BulkPlan, e: ScispaceError) -> (usize, OpResult) {
+    tb.net.end_transfer(plan.flight.req.src_dc, plan.flight.req.dst_dc);
+    (plan.idx, OpResult::Failed(e))
 }

@@ -23,11 +23,13 @@
 //!
 //! * [`Testbed::run_batch`] — lowers a whole batch of `(collaborator,
 //!   Op)` pairs onto the event engine so operations from *different*
-//!   collaborators genuinely overlap: bulk data paths become weighted
-//!   flows submitted together and drained once, sharing FUSE mounts,
-//!   metadata shards and WAN links under processor sharing instead of
-//!   serializing behind one virtual clock (see [`batch`] for the exact
-//!   lowering and its fidelity trade).
+//!   collaborators genuinely overlap: each collaborator is admitted
+//!   independently by engine control events, and bulk payloads run the
+//!   same chunked stop-and-wait transfer machinery as single-op calls
+//!   (chunks from concurrent transfers share FUSE mounts, metadata
+//!   shards and WAN links under processor sharing; a batch of one is
+//!   bit-identical to the single-op call — see [`batch`] for the exact
+//!   lowering and the admission-time visibility rule).
 //!
 //! The legacy positional-argument methods on [`Testbed`]
 //! (`tb.write(c, path, ...)`) remain as thin `pub(crate)` internals;

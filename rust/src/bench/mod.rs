@@ -530,6 +530,96 @@ pub fn fig_collab_concurrency(counts: &[usize], ops_per_collab: usize, bytes: u6
         .collect()
 }
 
+/// The asymmetric-op-size scenario of `fig_collab_concurrency`: one
+/// collaborator's interactive read concurrent with another's
+/// multi-hundred-MB bulk replicate on disjoint payload links.
+#[derive(Debug, Clone)]
+pub struct AsymmetricRow {
+    /// Bulk replicate payload, bytes.
+    pub bulk_bytes: u64,
+    /// Interactive read payload, bytes.
+    pub read_bytes: u64,
+    /// Interactive read latency with no concurrent bulk op, seconds.
+    pub read_solo_s: f64,
+    /// Interactive read latency concurrent with the bulk op, seconds.
+    pub read_concurrent_s: f64,
+    /// The bulk replicate's own latency in the concurrent run, seconds.
+    pub bulk_s: f64,
+}
+
+impl AsymmetricRow {
+    /// Concurrent-to-solo latency ratio of the interactive read
+    /// (~1.0 = no cross-stall; the old wave executor had no such
+    /// guarantee for asymmetric op sizes).
+    pub fn stall_ratio(&self) -> f64 {
+        if self.read_solo_s > 0.0 {
+            self.read_concurrent_s / self.read_solo_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Asymmetric batch scenario: alice (dc0) replicates a `bulk_bytes`
+/// granule dc0 -> dc1 while bob (dc2) issues a small `read_bytes` read
+/// of a dc2-local file — disjoint payload links, wildly different op
+/// sizes, one `run_batch`. Event-driven per-collaborator admission
+/// keeps bob at his solo latency; the makespan is alice's.
+pub fn fig_collab_asymmetric(bulk_bytes: u64, read_bytes: u64) -> AsymmetricRow {
+    let bed = || {
+        let mut cfg = TestbedConfig::paper_default();
+        cfg.n_dcs = 3;
+        let mut tb = Testbed::build(cfg);
+        let alice = tb.register("alice", 0);
+        let bob = tb.register("bob", 2);
+        tb.session(alice).write("/asym/big.dat").len(bulk_bytes).submit().expect("populate");
+        tb.session(bob).write("/asym/local.dat").len(read_bytes).submit().expect("populate");
+        tb.quiesce();
+        (tb, alice, bob)
+    };
+    let read_op = || Op::Read {
+        path: "/asym/local.dat".into(),
+        offset: 0,
+        len: Some(read_bytes),
+        mode: AccessMode::Scispace,
+    };
+    let read_solo_s = {
+        let (mut tb, _alice, bob) = bed();
+        let start = tb.now(bob);
+        let results = tb.run_batch(vec![(bob, read_op())]);
+        assert!(results[0].is_ok(), "asymmetric solo read failed: {:?}", results[0].err());
+        results[0].finished_at() - start
+    };
+    let (mut tb, alice, bob) = bed();
+    let start = tb.now(bob);
+    let results = tb.run_batch(vec![
+        (alice, Op::Replicate { path: "/asym/big.dat".into(), dst_dc: 1 }),
+        (bob, read_op()),
+    ]);
+    assert!(results.iter().all(|r| r.is_ok()), "asymmetric batch failed: {results:?}");
+    AsymmetricRow {
+        bulk_bytes,
+        read_bytes,
+        read_solo_s,
+        read_concurrent_s: results[1].finished_at() - start,
+        bulk_s: results[0].finished_at() - start,
+    }
+}
+
+/// Print the asymmetric scenario row.
+pub fn print_asymmetric(row: &AsymmetricRow) {
+    println!("\n== Fig collab-asymmetric: small read vs concurrent bulk replicate ==");
+    println!(
+        "bulk {} | read {}: solo {} concurrent {} (stall ratio {:.4}), bulk {}",
+        fmt_bytes(row.bulk_bytes),
+        fmt_bytes(row.read_bytes),
+        fmt_secs(row.read_solo_s),
+        fmt_secs(row.read_concurrent_s),
+        row.stall_ratio(),
+        fmt_secs(row.bulk_s)
+    );
+}
+
 /// Print `fig_collab_concurrency` rows.
 pub fn print_collab(rows: &[CollabRow]) {
     println!("\n== Fig collab-concurrency: run_batch remote reads on one WAN ==");
@@ -561,8 +651,9 @@ pub fn print_collab(rows: &[CollabRow]) {
 }
 
 /// Machine-readable `BENCH_collab.json` payload: p50/p99 per-op latency
-/// per concurrency level, for CI perf tracking.
-pub fn collab_json(rows: &[CollabRow]) -> Json {
+/// per concurrency level plus the asymmetric-op-size scenario, for CI
+/// perf tracking.
+pub fn collab_json(rows: &[CollabRow], asym: &AsymmetricRow) -> Json {
     use std::collections::BTreeMap;
     let out: Vec<Json> = rows
         .iter()
@@ -577,9 +668,18 @@ pub fn collab_json(rows: &[CollabRow]) -> Json {
             Json::Obj(m)
         })
         .collect();
+    let mut a = BTreeMap::new();
+    a.insert("scenario".to_string(), Json::Str("asymmetric".to_string()));
+    a.insert("bulk_bytes".to_string(), Json::Num(asym.bulk_bytes as f64));
+    a.insert("read_bytes".to_string(), Json::Num(asym.read_bytes as f64));
+    a.insert("read_solo_s".to_string(), Json::Num(asym.read_solo_s));
+    a.insert("read_concurrent_s".to_string(), Json::Num(asym.read_concurrent_s));
+    a.insert("bulk_s".to_string(), Json::Num(asym.bulk_s));
+    a.insert("stall_ratio".to_string(), Json::Num(asym.stall_ratio()));
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("collab".to_string()));
     top.insert("rows".to_string(), Json::Arr(out));
+    top.insert("asymmetric".to_string(), Json::Obj(a));
     Json::Obj(top)
 }
 
@@ -1225,10 +1325,20 @@ mod tests {
             assert!(r.p99_s >= r.p50_s, "{r:?}");
             assert!(r.makespan_s >= r.p99_s, "{r:?}");
         }
-        let j = collab_json(&rows);
+        let asym = fig_collab_asymmetric(64 << 20, 1 << 20);
+        assert!(
+            (0.99..1.01).contains(&asym.stall_ratio()),
+            "unrelated bulk must not stall the small read: {asym:?}"
+        );
+        assert!(asym.bulk_s > asym.read_concurrent_s, "{asym:?}");
+        let j = collab_json(&rows, &asym);
         let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
         assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("collab"));
         assert_eq!(parsed.get("rows").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
+        assert!(
+            parsed.get("asymmetric").is_some(),
+            "the asymmetric scenario must be in the payload: {parsed:?}"
+        );
     }
 
     #[test]

@@ -678,6 +678,15 @@ impl Engine {
 
     /// Schedule a control event; [`Engine::run_next`] surfaces it as
     /// [`Occurrence::Control`] in time order with the flow events.
+    ///
+    /// Re-entrancy contract (what the event-driven batch executor is
+    /// built on): scheduling is legal *mid-drain* — from a completion
+    /// callback, between two [`Engine::run_next`] calls, or while a
+    /// nested [`Engine::completion`] is blocking — and a control whose
+    /// due time `t` is at or before [`Engine::now`] fires on the next
+    /// `run_next` (the clock never rewinds; the event is not lost).
+    /// Controls are traced like every other event, so an admission
+    /// schedule is part of the deterministic replay story.
     pub fn schedule_control(&mut self, t: f64, tag: u64) {
         self.push_event(t, EventKind::Control { tag });
     }
@@ -989,7 +998,13 @@ impl Engine {
 
     fn process(&mut self, ev: Event) -> Option<Occurrence> {
         match ev.kind {
-            EventKind::Control { tag } => Some(Occurrence::Control { tag, at: ev.t }),
+            EventKind::Control { tag } => {
+                if self.trace.is_some() {
+                    let msg = format!("{:>6} {:.9} ctl tag={tag}", ev.seq, ev.t);
+                    self.trace_push(msg);
+                }
+                Some(Occurrence::Control { tag, at: ev.t })
+            }
             EventKind::Loss { link, gen } => {
                 if self.links[link].loss_gen != gen {
                     return None; // the overload episode cleared in time
@@ -1236,6 +1251,50 @@ mod tests {
         assert!(matches!(e.run_next(), Occurrence::Control { tag: 2, .. }));
         assert!(matches!(e.run_next(), Occurrence::Idle));
         assert_eq!(e.flow_finish(f), Some(1.001));
+    }
+
+    #[test]
+    fn controls_scheduled_mid_drain_fire_before_later_events() {
+        // The admission pattern of the event-driven batch executor: a
+        // completion callback schedules a control at the completion
+        // time (now "in the past" once run_next returned) and starts a
+        // follow-up flow; the control must fire before that flow's
+        // later events, and nothing is lost.
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+        let t1 = match e.run_next() {
+            Occurrence::FlowDone { flow, at } => {
+                assert_eq!(flow, f1);
+                at
+            }
+            other => panic!("expected f1 done, got {other:?}"),
+        };
+        e.schedule_control(t1, 42); // due at-or-before Engine::now
+        let f2 = e.start_flow(&[l], 50_000_000, t1, 1.0);
+        match e.run_next() {
+            Occurrence::Control { tag, at } => {
+                assert_eq!(tag, 42);
+                assert_eq!(at.to_bits(), t1.to_bits(), "fires at its due time, not at now");
+            }
+            other => panic!("control must fire before f2's events, got {other:?}"),
+        }
+        let t2 = e.completion(f2);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn control_events_join_the_trace() {
+        let (mut e, l) = one_link();
+        e.record_trace(true);
+        let f = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        e.schedule_control(0.5, 3);
+        e.completion(f);
+        e.run_until_idle();
+        assert!(
+            e.trace().iter().any(|line| line.contains("ctl tag=3")),
+            "controls must be part of the deterministic replay trace: {:?}",
+            e.trace()
+        );
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!   comparison on the discrete-event core; `xfer` sweeps stream
 //!   counts on the lossless and the congestion-managed geo WAN;
 //!   `collab` measures per-op p50/p99 latency at 1/4/16 concurrent
-//!   collaborators batched through the Session API's `run_batch`).
+//!   collaborators batched through the Session API's `run_batch`, plus
+//!   the asymmetric scenario — a small interactive read concurrent
+//!   with an unrelated bulk replicate, pinning the no-cross-stall
+//!   property of event-driven admission).
 //!   `bench preempt`, `bench xfer` and `bench collab` also emit
 //!   machine-readable `BENCH_preempt.json` / `BENCH_xfer.json` /
 //!   `BENCH_collab.json` for CI perf tracking.
@@ -174,7 +177,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let ops: usize = args.opt_parse("ops", 4);
             let rows = bench::fig_collab_concurrency(&[1, 4, 16], ops, bytes);
             bench::print_collab(&rows);
-            emit_json("BENCH_collab.json", &bench::collab_json(&rows))?;
+            // asymmetric-op-size scenario: a small interactive read
+            // concurrent with a bulk replicate ~16x the --data size
+            let asym = bench::fig_collab_asymmetric(bytes.saturating_mul(16), 8 << 20);
+            bench::print_asymmetric(&asym);
+            emit_json("BENCH_collab.json", &bench::collab_json(&rows, &asym))?;
         }
         "all" => {
             for w in [

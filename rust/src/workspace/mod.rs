@@ -566,18 +566,68 @@ impl Testbed {
                 } else {
                     self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len)
                 };
-                let (tn, flush) = self.dtns[dtn].nfs.write(&mut self.env, t2, obj.0, offset, len);
-                t2 = tn;
-                if let Some(fb) = flush {
-                    // double-buffered drain into the DTN's Lustre
-                    t2 = t2.max(self.dtns[dtn].nfs.pending_flush);
-                    let end = self.dcs[data_dc].lustre.write(&mut self.env, t2, obj.0, offset, fb);
-                    self.dtns[dtn].nfs.pending_flush = end;
-                }
+                t2 = self.write_backend(dtn, data_dc, obj, offset, len, t2);
             }
         }
         self.collabs[c].now = t2;
         Ok(())
+    }
+
+    /// Back half of a non-native write, shared by [`Testbed::write`]
+    /// and the batch executor so the charging arithmetic cannot drift:
+    /// the payload has arrived at the DTN at `tf`; ingest it through
+    /// the NFS server and (when the write cache spills) drain the flush
+    /// into the hosting Lustre. Returns the collaborator-visible
+    /// completion time.
+    pub(crate) fn write_backend(
+        &mut self,
+        dtn: usize,
+        data_dc: usize,
+        obj: crate::vfs::ObjectId,
+        offset: u64,
+        len: u64,
+        tf: f64,
+    ) -> f64 {
+        let (tn, flush) = self.dtns[dtn].nfs.write(&mut self.env, tf, obj.0, offset, len);
+        let mut t2 = tn;
+        if let Some(fb) = flush {
+            // double-buffered drain into the DTN's Lustre
+            t2 = t2.max(self.dtns[dtn].nfs.pending_flush);
+            let end = self.dcs[data_dc].lustre.write(&mut self.env, t2, obj.0, offset, fb);
+            self.dtns[dtn].nfs.pending_flush = end;
+        }
+        t2
+    }
+
+    /// Back half of a workspace-mode read, shared by [`Testbed::read`]
+    /// and the batch executor: the payload has reached the collaborator
+    /// machine at `tf`; pay the FUSE user-space copy-out. Returns the
+    /// collaborator-visible completion time.
+    pub(crate) fn read_backend(&mut self, c: usize, len: u64, tf: f64) -> f64 {
+        let fi = self.collabs[c].fuse;
+        let copy = self.fuse_mounts[fi].copy;
+        self.env.serve(copy, tf, len)
+    }
+
+    /// Back half of a replication, shared by [`Testbed::bulk_replicate`]
+    /// and the batch executor: the payload landed in `dst_dc` at `tf`;
+    /// materialize the replica (bytes + namespace) and charge the
+    /// destination PFS absorbing it. Advances collaborator `c`'s clock
+    /// to replica durability; returns the durability time.
+    pub(crate) fn replicate_backend(
+        &mut self,
+        c: usize,
+        path: &str,
+        src_dc: usize,
+        dst_dc: usize,
+        obj: crate::vfs::ObjectId,
+        size: u64,
+        tf: f64,
+    ) -> Result<f64, ScispaceError> {
+        let replica = self.clone_replica(path, src_dc, dst_dc, obj, size)?;
+        let t_done = self.dcs[dst_dc].lustre.write(&mut self.env, tf, replica.0, 0, size);
+        self.collabs[c].now = self.collabs[c].now.max(t_done);
+        Ok(t_done)
     }
 
     /// POSIX-like read. Returns real bytes when the object holds them.
@@ -679,9 +729,7 @@ impl Testbed {
                         remaining -= span;
                     }
                 }
-                let fi = self.collabs[c].fuse;
-                let copy = self.fuse_mounts[fi].copy;
-                t = self.env.serve(copy, t, len);
+                t = self.read_backend(c, len, t);
             }
         }
         self.collabs[c].now = t;
@@ -833,12 +881,10 @@ impl Testbed {
         let engine = XferEngine::new(self.cfg.xfer.clone());
         let rep =
             engine.transfer_with_sinks(&mut self.env, &mut self.net, &req, faults, t, sinks)?;
-        // materialize the replica: real payloads are copied byte-for-byte
-        // (whatever their size); synthetic holes stay synthetic
-        let replica = self.clone_replica(path, src_dc, dst_dc, obj, size)?;
-        // replica durability: the destination PFS absorbs the payload
-        let t_done = self.dcs[dst_dc].lustre.write(&mut self.env, rep.finished_at, replica.0, 0, size);
-        self.collabs[c].now = self.collabs[c].now.max(t_done);
+        // materialize the replica (real payloads copied byte-for-byte,
+        // synthetic holes stay synthetic) and absorb it in the
+        // destination PFS — the shared back end
+        self.replicate_backend(c, path, src_dc, dst_dc, obj, size, rep.finished_at)?;
         Ok(rep)
     }
 

@@ -38,7 +38,7 @@ use crate::simnet::{Link, Network};
 
 pub use integrity::{checksum, chunk_spans, Chunk, DigestSinks, FaultInjector};
 pub use sched::{run_flows, run_queue, FlowReport, TransferQueue};
-pub use stream::StreamSet;
+pub use stream::{ChunkFlight, StreamSet};
 
 /// Transfer priority class; the weight steers both queue admission and
 /// per-chunk dispatch between concurrent transfers.
@@ -267,6 +267,24 @@ impl TransferReport {
     }
 }
 
+/// One chunk of a [`Flight`] in flight on the engine: produced by
+/// [`Flight::begin_chunk`], resolved by [`Flight::finish_chunk`] once
+/// its payload flow completes.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightChunk {
+    chunk: Chunk,
+    cf: ChunkFlight,
+}
+
+impl FlightChunk {
+    /// The engine flow carrying this chunk's payload — what an
+    /// event-driven caller watches ([`Engine::flow_finish`]) to know
+    /// when to call [`Flight::finish_chunk`].
+    pub fn flow(&self) -> crate::engine::FlowId {
+        self.cf.flow
+    }
+}
+
 /// One in-flight transfer: streams + pending chunks + retry accounting.
 /// Exposed to [`sched`] so concurrent transfers can interleave at chunk
 /// granularity on the shared links.
@@ -347,14 +365,39 @@ impl Flight {
     /// path, verify, and either complete the chunk or re-queue it
     /// (corrupt arrival / stream death). Errors once a chunk exhausts
     /// its retry budget.
+    ///
+    /// This is the blocking composition of [`Flight::begin_chunk`] +
+    /// [`Engine::completion`] + [`Flight::finish_chunk`] — the single
+    /// sequential-caller convenience. Event-driven callers (the batch
+    /// executor) drive the halves themselves so chunks from concurrent
+    /// transfers are in flight together.
     pub fn step(
         &mut self,
         cfg: &XferConfig,
         env: &mut Engine,
         faults: &mut FaultInjector,
     ) -> Result<()> {
-        let Some(chunk) = self.pending.pop_front() else {
+        let Some(fc) = self.begin_chunk(cfg, env)? else {
             return Ok(());
+        };
+        env.completion(fc.cf.flow);
+        self.finish_chunk(cfg, env, faults, fc);
+        Ok(())
+    }
+
+    /// First half of [`Flight::step`]: pop the next pending chunk, pick
+    /// its stream (reconnecting if every stream died), charge the
+    /// sender digest and start the payload flow — without draining the
+    /// event queue, so it is usable mid-drain with other transfers'
+    /// chunks in flight. Returns `Ok(None)` when no chunks are pending;
+    /// errors once a chunk exhausts its retry budget.
+    pub fn begin_chunk(
+        &mut self,
+        cfg: &XferConfig,
+        env: &mut Engine,
+    ) -> Result<Option<FlightChunk>> {
+        let Some(chunk) = self.pending.pop_front() else {
+            return Ok(None);
         };
         let s = match self.streams.best_live() {
             Some(s) => s,
@@ -375,7 +418,25 @@ impl Flight {
                 cfg.max_retries
             );
         }
-        let t = self.streams.send_chunk(env, &self.path, s, chunk.len, cfg, self.sinks);
+        let cf = self.streams.begin_chunk(env, &self.path, s, chunk.len, cfg, self.sinks);
+        Ok(Some(FlightChunk { chunk, cf }))
+    }
+
+    /// Second half of [`Flight::step`]: the chunk's flow has completed
+    /// — resolve the receiver digest + ack through the stream, then run
+    /// the integrity verdict (deliver, or re-queue on a forced fault /
+    /// dead stream). Panics if the flow has not finished yet.
+    pub fn finish_chunk(
+        &mut self,
+        cfg: &XferConfig,
+        env: &mut Engine,
+        faults: &mut FaultInjector,
+        fc: FlightChunk,
+    ) {
+        let FlightChunk { chunk, cf } = fc;
+        let s = cf.stream;
+        let idx = chunk.index as usize;
+        let t = self.streams.finish_chunk(env, &self.path, cf, cfg, self.sinks);
         if faults.drops_stream(s, self.streams.sent(s)) {
             // the carrying stream died; the chunk is not acked and must
             // be re-sent on a surviving stream
@@ -396,7 +457,6 @@ impl Flight {
             self.report.chunks += 1;
             self.report.finished_at = self.report.finished_at.max(t);
         }
-        Ok(())
     }
 
     /// Consume the flight into its report.

@@ -15,10 +15,25 @@
 //! goodput ([`StreamSet::goodput`]) and loss counters expose what the
 //! window did to each stripe.
 
-use crate::engine::{Engine, LinkId};
+use crate::engine::{Engine, FlowId, LinkId};
 use crate::simnet::Link;
 
 use super::{DigestSinks, XferConfig};
+
+/// One chunk in flight on a stream: the engine flow carrying its
+/// payload plus what [`StreamSet::finish_chunk`] needs to resolve it.
+/// Produced by [`StreamSet::begin_chunk`]; the caller drives the engine
+/// (blocking [`Engine::completion`], or an event loop watching
+/// [`Engine::flow_finish`]) and hands it back once the flow is done.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkFlight {
+    /// Carrying stream index.
+    pub stream: usize,
+    /// Engine flow serializing the chunk payload over the path.
+    pub flow: FlowId,
+    /// Chunk length, bytes.
+    pub len: u64,
+}
 
 /// The per-transfer stream group.
 #[derive(Debug, Clone)]
@@ -160,13 +175,28 @@ impl StreamSet {
         cfg: &XferConfig,
         sinks: DigestSinks,
     ) -> f64 {
+        let cf = self.begin_chunk(env, path, s, len, cfg, sinks);
+        env.completion(cf.flow);
+        self.finish_chunk(env, path, cf, cfg, sinks)
+    }
+
+    /// First half of [`StreamSet::send_chunk`]: charge the sender-side
+    /// digest and start the chunk's payload flow — without draining the
+    /// event queue, so concurrent transfers can have chunks in flight
+    /// together and genuinely share links. The caller drives the engine
+    /// until the returned [`ChunkFlight::flow`] completes, then resolves
+    /// it with [`StreamSet::finish_chunk`].
+    pub fn begin_chunk(
+        &mut self,
+        env: &mut Engine,
+        path: &[Link],
+        s: usize,
+        len: u64,
+        cfg: &XferConfig,
+        sinks: DigestSinks,
+    ) -> ChunkFlight {
         debug_assert!(self.live[s], "sending on a dead stream");
         let ids: Vec<LinkId> = path.iter().map(|l| l.res).collect();
-        let private_digest = if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
-            len as f64 / cfg.checksum_bw
-        } else {
-            0.0
-        };
         // sender digest: on the DTN CPU it precedes (and gates) the
         // send; as private time it overlaps and is charged at the end,
         // exactly like the pre-offload model
@@ -184,7 +214,29 @@ impl StreamSet {
         } else {
             env.start_flow(&ids, len, t_send, 1.0)
         };
-        let mut t = env.completion(flow);
+        ChunkFlight { stream: s, flow, len }
+    }
+
+    /// Second half of [`StreamSet::send_chunk`]: the chunk's flow has
+    /// completed — charge the receiver-side digest and the ack trip,
+    /// carry the congestion state across to the stream's next chunk,
+    /// and advance the stream clock. Returns the chunk completion time.
+    /// Panics if the flow has not finished yet.
+    pub fn finish_chunk(
+        &mut self,
+        env: &mut Engine,
+        path: &[Link],
+        cf: ChunkFlight,
+        cfg: &XferConfig,
+        sinks: DigestSinks,
+    ) -> f64 {
+        let ChunkFlight { stream: s, flow, len } = cf;
+        let private_digest = if cfg.checksum_bw.is_finite() && cfg.checksum_bw > 0.0 {
+            len as f64 / cfg.checksum_bw
+        } else {
+            0.0
+        };
+        let mut t = env.flow_finish(flow).expect("finish_chunk before the chunk flow completed");
         if cfg.cc.enabled {
             self.windows[s] = env.flow_window(flow).zip(env.flow_ssthresh(flow));
             self.losses[s] += env.flow_losses(flow);
@@ -321,6 +373,70 @@ mod tests {
         assert!(raw > 0.0);
         ss.discount(0, 1 << 20); // one delivery was voided (integrity retry)
         assert!((ss.goodput(0) - raw / 2.0).abs() < raw * 1e-9, "voided bytes must not count");
+    }
+
+    #[test]
+    fn split_chunk_halves_match_blocking_send_exactly() {
+        // begin_chunk + completion + finish_chunk IS send_chunk; a solo
+        // caller driving the halves by hand must land on the same bits.
+        let run = |split: bool| {
+            let (mut env, net, cfg) = setup();
+            let path = net.path(0, 1);
+            let mut ss = StreamSet::new(2, 0.0, cfg.stream_setup_s);
+            let mut last = 0.0;
+            for _ in 0..4 {
+                let s = ss.best_live().unwrap();
+                let sinks = DigestSinks::default();
+                last = if split {
+                    let cf = ss.begin_chunk(&mut env, &path, s, 1 << 20, &cfg, sinks);
+                    env.completion(cf.flow);
+                    ss.finish_chunk(&mut env, &path, cf, &cfg, sinks)
+                } else {
+                    ss.send_chunk(&mut env, &path, s, 1 << 20, &cfg, DigestSinks::default())
+                };
+            }
+            (last, ss.goodput(0), ss.cc_losses())
+        };
+        let (t_a, g_a, l_a) = run(false);
+        let (t_b, g_b, l_b) = run(true);
+        assert_eq!(t_a.to_bits(), t_b.to_bits(), "split halves must be bit-identical");
+        assert_eq!(g_a.to_bits(), g_b.to_bits());
+        assert_eq!(l_a, l_b);
+    }
+
+    #[test]
+    fn chunks_in_flight_together_share_the_link() {
+        // The event-driven batch property: two transfers each with one
+        // chunk in flight before the drain split the wire under
+        // processor sharing — each chunk takes ~2x its solo time.
+        // infinite checksum bandwidth isolates the wire-sharing effect
+        // (private digest time would otherwise dilute the ratio)
+        let free_digest = XferConfig { checksum_bw: f64::INFINITY, ..XferConfig::default() };
+        let solo = {
+            let (mut env, net, _) = setup();
+            let cfg = free_digest.clone();
+            let path = net.path(0, 1);
+            let mut ss = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+            ss.send_chunk(&mut env, &path, 0, 64 << 20, &cfg, DigestSinks::default())
+        };
+        let (mut env, net, _) = setup();
+        let cfg = free_digest;
+        let path = net.path(0, 1);
+        let mut a = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        let mut b = StreamSet::new(1, 0.0, cfg.stream_setup_s);
+        let ca = a.begin_chunk(&mut env, &path, 0, 64 << 20, &cfg, DigestSinks::default());
+        let cb = b.begin_chunk(&mut env, &path, 0, 64 << 20, &cfg, DigestSinks::default());
+        env.completion(ca.flow);
+        env.completion(cb.flow);
+        let ta = a.finish_chunk(&mut env, &path, ca, &cfg, DigestSinks::default());
+        let tb = b.finish_chunk(&mut env, &path, cb, &cfg, DigestSinks::default());
+        for t in [ta, tb] {
+            let ratio = t / solo;
+            assert!(
+                (1.6..2.2).contains(&ratio),
+                "mid-drain chunks must share, not serialize: ratio={ratio} solo={solo}"
+            );
+        }
     }
 
     #[test]

@@ -232,6 +232,71 @@ fn pause_resume_edge_cases_are_pinned_no_ops() {
 }
 
 #[test]
+fn batch_admission_replays_byte_identical_traces_after_reset() {
+    // ISSUE 5 satellite: the event-driven `run_batch` admission path —
+    // per-collaborator admission controls, chunked payload flows,
+    // nested sequential drains — must be fully deterministic: the same
+    // batch after `drop_caches_and_reset` replays a byte-identical
+    // engine event trace (controls included) and lands every result on
+    // the same bits.
+    use scispace::api::Op;
+    use scispace::workspace::{AccessMode, Testbed};
+
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    let b = tb.register("b", 1);
+    // a's granule lives in dc0 (remote for b), b's in dc1 (remote for a)
+    tb.session(a).write("/det/g1.dat").len(16 << 20).submit().unwrap();
+    tb.session(b).write("/det/g0.dat").len(16 << 20).submit().unwrap();
+    let ops = || {
+        vec![
+            (a, Op::Read {
+                path: "/det/g0.dat".into(),
+                offset: 0,
+                len: Some(16 << 20),
+                mode: AccessMode::Scispace,
+            }),
+            (b, Op::Read {
+                path: "/det/g1.dat".into(),
+                offset: 0,
+                len: Some(16 << 20),
+                mode: AccessMode::Scispace,
+            }),
+            (a, Op::Ls { prefix: "/det".into() }),
+            (b, Op::Read {
+                path: "/det/g1.dat".into(),
+                offset: 0,
+                len: Some(16 << 20),
+                mode: AccessMode::Scispace,
+            }),
+        ]
+    };
+
+    tb.drop_caches_and_reset();
+    tb.env.record_trace(true);
+    let r1 = tb.run_batch(ops());
+    assert!(r1.iter().all(|r| r.is_ok()), "{r1:?}");
+    let t1 = tb.env.trace().to_vec();
+    assert!(!t1.is_empty(), "the batch must generate engine events");
+    assert!(
+        t1.iter().any(|line| line.contains("ctl tag=")),
+        "admission controls must appear in the trace: {t1:?}"
+    );
+
+    tb.drop_caches_and_reset();
+    let r2 = tb.run_batch(ops());
+    let t2 = tb.env.trace().to_vec();
+    assert_eq!(t1, t2, "same batch after reset must replay a byte-identical event trace");
+    for (x, y) in r1.iter().zip(&r2) {
+        assert_eq!(
+            x.finished_at().to_bits(),
+            y.finished_at().to_bits(),
+            "replayed results must land on the same bits"
+        );
+    }
+}
+
+#[test]
 fn prop_windowed_flows_on_uncongested_links_match_plain_within_1e9() {
     // The tentpole's no-loss guarantee: on uncongested (unmanaged)
     // links — every link that existed before this PR — windowed flows
