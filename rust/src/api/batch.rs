@@ -77,6 +77,7 @@ use std::collections::VecDeque;
 
 use crate::api::{exec_op, Op, OpResult, ScispaceError};
 use crate::engine::Occurrence;
+use crate::obs::SpanId;
 use crate::sds::Sds;
 use crate::vfs::ObjectId;
 use crate::workspace::{AccessMode, Testbed};
@@ -119,6 +120,10 @@ struct BulkPlan {
     /// exposure window — not the front-end staging gap, where another
     /// collaborator's losses would be misattributed to this transfer.
     loss_base: Vec<(u64, u64)>,
+    /// Flight-recorder span covering the whole op (`None` when the
+    /// recorder is off). Closed when the back end completes or the plan
+    /// fails; the flight parents its chunk slices under it.
+    span: Option<SpanId>,
 }
 
 enum Staged {
@@ -200,8 +205,10 @@ fn admit(
 ) {
     debug_assert!(active[c].is_none(), "program order: one op in flight per collaborator");
     let Some((idx, op)) = queues[c].pop_front() else { return };
+    let t_admit = tb.collabs[c].now;
+    let op_kind = op.kind_name();
     match try_stage(tb, c, idx, op) {
-        Ok(Staged::Plan(plan)) => {
+        Ok(Staged::Plan(mut plan)) => {
             // do NOT start the first chunk here: its sender digest is a
             // FIFO serve at the payload-ready time, which can be far in
             // the future of this admission (the front end just staged
@@ -212,6 +219,19 @@ fn admit(
             // control at the ready time keeps FIFO commit order aligned
             // with virtual time.
             let t = plan.flight.req.submitted_at;
+            if tb.env.recording() {
+                // the op span opens at admission; `admission` is the
+                // zero-width decision point and `staging` covers the
+                // front-end charge up to the payload-ready time. Chunk
+                // slices parent under the op span via the flight.
+                let span = tb.env.begin_span(t_admit, format!("op:{op_kind}"), None, Some(c));
+                let adm = tb.env.begin_span(t_admit, "admission".into(), Some(span), Some(c));
+                tb.env.end_span(adm, t_admit);
+                let stg = tb.env.begin_span(t_admit, "staging".into(), Some(span), Some(c));
+                tb.env.end_span(stg, t);
+                plan.flight.set_span(span);
+                plan.span = Some(span);
+            }
             active[c] = Some(*plan);
             tb.env.schedule_control(t, c as u64);
         }
@@ -357,6 +377,7 @@ fn stage_plan(
         faults: FaultInjector::none(),
         in_flight: None,
         loss_base: Vec::new(),
+        span: None,
     }
 }
 
@@ -456,7 +477,7 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
 /// loss deltas), charge the back end through the shared helpers, and
 /// materialize the result.
 fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
-    let BulkPlan { idx, c, kind, flight, loss_base, .. } = plan;
+    let BulkPlan { idx, c, kind, flight, loss_base, span, .. } = plan;
     let (src_dc, dst_dc) = (flight.req.src_dc, flight.req.dst_dc);
     tb.net.end_transfer(src_dc, dst_dc);
     let mut report = flight.into_report();
@@ -483,6 +504,10 @@ fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
             }
         }
     };
+    if let Some(sp) = span {
+        let t_end = tb.collabs[c].now;
+        tb.env.end_span(sp, t_end);
+    }
     (idx, r)
 }
 
@@ -491,5 +516,9 @@ fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
 /// close the transfer and surface the typed failure.
 fn fail_plan(tb: &mut Testbed, plan: BulkPlan, e: ScispaceError) -> (usize, OpResult) {
     tb.net.end_transfer(plan.flight.req.src_dc, plan.flight.req.dst_dc);
+    if let Some(sp) = plan.span {
+        let t_end = tb.collabs[plan.c].now;
+        tb.env.end_span(sp, t_end);
+    }
     (plan.idx, OpResult::Failed(e))
 }

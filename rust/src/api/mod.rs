@@ -113,6 +113,22 @@ pub enum Op {
     },
 }
 
+impl Op {
+    /// Short kind label (`write`, `read`, ...) — the flight recorder
+    /// names an op's span `op:<kind>`.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Op::Write { .. } => "write",
+            Op::Read { .. } => "read",
+            Op::Ls { .. } => "ls",
+            Op::Locate { .. } => "locate",
+            Op::Replicate { .. } => "replicate",
+            Op::Query { .. } => "query",
+            Op::Tag { .. } => "tag",
+        }
+    }
+}
+
 /// The response half of the typed model: one variant per [`Op`] kind,
 /// plus [`OpResult::Failed`] so a batch can report per-op errors
 /// without aborting.
@@ -570,15 +586,21 @@ impl<'s, 't, 'f> ReplicateBuilder<'s, 't, 'f> {
     }
 
     /// Execute now; returns [`OpResult::Replicated`].
+    ///
+    /// The fault-free case lowers through [`exec_op`] like every other
+    /// builder (so the flight recorder wraps it in an `op:replicate`
+    /// span); a fault injector is not expressible as a bare [`Op`], so
+    /// that case calls the bulk engine directly.
     pub fn submit(self) -> Result<OpResult, ScispaceError> {
         let dst_dc = Self::require_dst(self.dst_dc)?;
-        let mut none = FaultInjector::none();
-        let faults = match self.faults {
-            Some(f) => f,
-            None => &mut none,
-        };
-        let rep = self.sess.tb.bulk_replicate(self.sess.c, &self.path, dst_dc, faults)?;
-        Ok(OpResult::Replicated(rep))
+        let ReplicateBuilder { sess, path, faults, .. } = self;
+        match faults {
+            None => exec_op(sess.tb, sess.c, None, Op::Replicate { path, dst_dc }),
+            Some(faults) => {
+                let rep = sess.tb.bulk_replicate(sess.c, &path, dst_dc, faults)?;
+                Ok(OpResult::Replicated(rep))
+            }
+        }
     }
 }
 
@@ -680,6 +702,12 @@ impl WriteIndexedBuilder<'_, '_, '_, '_> {
 /// The single lowering of a typed [`Op`] onto the testbed internals —
 /// shared by the [`Session`] builders and (for its sequential arm) the
 /// batch executor.
+///
+/// When the flight recorder is on, the whole op is wrapped in an
+/// `op:<kind>` span and made the *current* span, so deeper layers (the
+/// [`crate::xfer`] flight, for one) parent their own slices under it.
+/// With the recorder off this adds no work beyond one branch: spans are
+/// never allocated and virtual time is untouched either way.
 pub(crate) fn exec_op(
     tb: &mut Testbed,
     c: usize,
@@ -689,6 +717,27 @@ pub(crate) fn exec_op(
     if c >= tb.collabs.len() {
         return Err(ScispaceError::Unsupported { msg: format!("collaborator {c} not registered") });
     }
+    if !tb.env.recording() {
+        return exec_op_inner(tb, c, sds, op);
+    }
+    let t0 = tb.now(c);
+    let name = format!("op:{}", op.kind_name());
+    let span = tb.env.begin_span(t0, name, None, Some(c));
+    let prev = tb.env.set_current_span(Some(span));
+    let out = exec_op_inner(tb, c, sds, op);
+    tb.env.set_current_span(prev);
+    let t1 = tb.now(c);
+    tb.env.end_span(span, t1);
+    out
+}
+
+/// The op lowering itself (no tracing concerns) — see [`exec_op`].
+fn exec_op_inner(
+    tb: &mut Testbed,
+    c: usize,
+    sds: Option<&mut Sds>,
+    op: Op,
+) -> Result<OpResult, ScispaceError> {
     match op {
         Op::Write { path, offset, len, data, mode } => {
             tb.write(c, &path, offset, len, data.as_deref(), mode)?;

@@ -1042,6 +1042,102 @@ pub fn xfer_json(total: u64, plain: &[XferStreamRow], congested: &[XferCcRow]) -
     Json::Obj(top)
 }
 
+/// One `fig_engine_hotpath` row: raw event-engine throughput on a
+/// saturating multi-flow drain.
+#[derive(Debug, Clone)]
+pub struct EngineHotpathRow {
+    /// Concurrent transfers in the drain.
+    pub transfers: usize,
+    /// Heap events the engine processed (its own counter).
+    pub events_processed: u64,
+    /// Virtual seconds the drain covered.
+    pub sim_seconds: f64,
+    /// Wall-clock seconds the drain took.
+    pub wall_clock_s: f64,
+    /// Events processed per wall-clock second.
+    pub events_per_sec: f64,
+    /// Wall-clock seconds spent per simulated second.
+    pub wall_clock_per_sim_second: f64,
+}
+
+/// The engine's self-reported hot-path throughput (the ROADMAP's
+/// observability prerequisite to the hot-path work): drain `transfers`
+/// concurrent congestion-managed transfers on the geo WAN — a
+/// loss/retransmit/window-tick-heavy event mix — and report events/sec
+/// and wall-clock-per-sim-second from [`Engine::events_processed`].
+pub fn fig_engine_hotpath(transfers: usize, bytes: u64) -> EngineHotpathRow {
+    let mut env = Engine::new();
+    let mut net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+    let cfg = XferConfig {
+        n_streams: 8,
+        cc: crate::xfer::CongestionConfig::on(),
+        ..XferConfig::default()
+    };
+    let reqs: Vec<TransferRequest> = (0..transfers)
+        .map(|i| TransferRequest {
+            id: i as u64,
+            owner: format!("hp{i}"),
+            src_dc: 0,
+            dst_dc: 1,
+            bytes,
+            priority: Priority::Bulk,
+            submitted_at: 0.0,
+        })
+        .collect();
+    let (reports, wall_clock_s) =
+        crate::util::timer::time_it(|| run_flows(&mut env, &mut net, &cfg, &reqs, false));
+    assert_eq!(reports.len(), reqs.len(), "every hot-path transfer must complete");
+    let sim_seconds = reports.iter().map(|r| r.finished_at).fold(0.0, f64::max);
+    let events_processed = env.events_processed();
+    let events_per_sec =
+        if wall_clock_s > 0.0 { events_processed as f64 / wall_clock_s } else { 0.0 };
+    let wall_clock_per_sim_second =
+        if sim_seconds > 0.0 { wall_clock_s / sim_seconds } else { 0.0 };
+    EngineHotpathRow {
+        transfers,
+        events_processed,
+        sim_seconds,
+        wall_clock_s,
+        events_per_sec,
+        wall_clock_per_sim_second,
+    }
+}
+
+/// Print the `fig_engine_hotpath` row.
+pub fn print_engine(row: &EngineHotpathRow) {
+    println!("\n== Fig engine-hotpath: event throughput on a congested drain ==");
+    println!(
+        "{} transfers: {} events over {} simulated ({} wall)",
+        row.transfers,
+        row.events_processed,
+        fmt_secs(row.sim_seconds),
+        fmt_secs(row.wall_clock_s)
+    );
+    println!(
+        "{:.0} events/sec, {:.6} wall-clock seconds per simulated second",
+        row.events_per_sec, row.wall_clock_per_sim_second
+    );
+}
+
+/// Machine-readable `BENCH_engine.json` payload: the engine's
+/// self-reported events/sec and wall-clock-per-sim-second, for CI perf
+/// tracking.
+pub fn engine_json(row: &EngineHotpathRow) -> Json {
+    use std::collections::BTreeMap;
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str("engine".to_string()));
+    m.insert("transfers".to_string(), Json::Num(row.transfers as f64));
+    m.insert("events_processed".to_string(), Json::Num(row.events_processed as f64));
+    m.insert("sim_seconds".to_string(), Json::Num(row.sim_seconds));
+    m.insert("wall_clock_s".to_string(), Json::Num(row.wall_clock_s));
+    m.insert("events_per_sec".to_string(), Json::Num(row.events_per_sec));
+    m.insert(
+        "wall_clock_per_sim_second".to_string(),
+        Json::Num(row.wall_clock_per_sim_second),
+    );
+    Json::Obj(m)
+}
+
 /// Machine-readable `BENCH_preempt.json` payload.
 pub fn preempt_json(rows: &[PreemptRow]) -> Json {
     use std::collections::BTreeMap;
@@ -1338,6 +1434,22 @@ mod tests {
         assert!(
             parsed.get("asymmetric").is_some(),
             "the asymmetric scenario must be in the payload: {parsed:?}"
+        );
+    }
+
+    #[test]
+    fn fig_engine_hotpath_reports_positive_throughput() {
+        let row = fig_engine_hotpath(4, 16 << 20);
+        assert!(row.events_processed > 0, "{row:?}");
+        assert!(row.sim_seconds > 0.0, "{row:?}");
+        assert!(row.events_per_sec > 0.0, "{row:?}");
+        assert!(row.wall_clock_per_sim_second > 0.0, "{row:?}");
+        let j = engine_json(&row);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("engine"));
+        assert!(
+            parsed.get("events_per_sec").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "{parsed:?}"
         );
     }
 

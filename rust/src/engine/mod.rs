@@ -80,8 +80,15 @@
 //! The event queue is ordered by `(time, sequence)` — ties broken by
 //! insertion sequence number — and every per-link flow set iterates in
 //! ascending flow id. Two runs of the same seeded workload therefore
-//! produce byte-identical event traces ([`Engine::record_trace`]), the
-//! property the reproducibility story depends on.
+//! produce identical typed event streams ([`Engine::record_trace`] /
+//! [`Engine::events`]), the property the reproducibility story depends
+//! on. The stream feeds the flight recorder ([`crate::obs`]): typed
+//! [`TraceEvent`]s fan out to pluggable subscribers, and the legacy
+//! string trace ([`Engine::trace`]) is now a `Display` *view* over the
+//! typed events, so string-level assertions can never drift from the
+//! typed form. Recording is zero-cost when off: no event construction
+//! happens, and every virtual timing is bit-identical either way
+//! (pinned by `tests/obs_recorder.rs`).
 //!
 //! ## Causality and the per-link clamp
 //!
@@ -95,6 +102,8 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+use crate::obs::{Recorder, SpanId, Subscriber, TraceEvent};
 
 /// Handle to a FIFO server registered in an [`Engine`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -361,7 +370,19 @@ pub struct Engine {
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
     now: f64,
-    trace: Option<Vec<String>>,
+    /// The flight recorder; `None` = recording off (the zero-cost
+    /// default: no event is even constructed).
+    rec: Option<Recorder>,
+    /// Monotonic span-id allocator (deterministic; reset with the
+    /// engine). Allocation is unconditional so span ids never depend
+    /// on whether a recorder is attached mid-run.
+    next_span: u64,
+    /// The op span currently attributed (set by `api::exec_op`, read
+    /// by the xfer layer to parent its chunk slices).
+    cur_span: Option<SpanId>,
+    /// Heap events popped since construction/reset — the engine's
+    /// self-reported throughput numerator for `BENCH_engine.json`.
+    events_processed: u64,
 }
 
 impl Engine {
@@ -406,6 +427,9 @@ impl Engine {
         r.busy_until = end;
         r.total_bytes += bytes;
         r.total_ops += 1;
+        if self.rec.is_some() {
+            self.emit(TraceEvent::Serve { t: start, server: id.0, bytes, ops: 1, until: end });
+        }
         end
     }
 
@@ -416,6 +440,10 @@ impl Engine {
         let end = start + r.per_op_s * n_ops as f64;
         r.busy_until = end;
         r.total_ops += n_ops;
+        if self.rec.is_some() {
+            let ev = TraceEvent::Serve { t: start, server: id.0, bytes: 0, ops: n_ops, until: end };
+            self.emit(ev);
+        }
         end
     }
 
@@ -427,6 +455,9 @@ impl Engine {
         let end = start + seconds;
         r.busy_until = end;
         r.total_ops += 1;
+        if self.rec.is_some() {
+            self.emit(TraceEvent::Serve { t: start, server: id.0, bytes: 0, ops: 1, until: end });
+        }
         end
     }
 
@@ -533,6 +564,9 @@ impl Engine {
         assert!(!path.is_empty(), "a flow needs at least one hop");
         assert!(weight > 0.0, "flow weight must be positive");
         let id = self.flows.len();
+        if self.rec.is_some() {
+            self.emit(TraceEvent::FlowStart { t: at, flow: id, bytes, windowed: cc.is_some() });
+        }
         self.flows.push(Flow {
             path: path.to_vec(),
             bytes,
@@ -631,18 +665,17 @@ impl Engine {
                 self.flows[i].state = FlowState::Paused;
                 self.flows[i].held_arrival = None;
                 self.reschedule_link(l, t);
-                if self.trace.is_some() {
-                    let msg = format!("{:.9} pause f{i} rem={:.0}", t, self.flows[i].remaining);
-                    self.trace_push(msg);
+                if self.rec.is_some() {
+                    let rem = self.flows[i].remaining;
+                    self.emit(TraceEvent::Pause { t, flow: i, remaining: Some(rem) });
                 }
             }
             FlowState::Scheduled => {
                 self.flows[i].gen += 1; // orphan the pending arrival
                 self.flows[i].held_arrival = Some(self.flows[i].next_arrival);
                 self.flows[i].state = FlowState::Paused;
-                if self.trace.is_some() {
-                    let msg = format!("{:.9} pause f{i} (held arrival)", self.now);
-                    self.trace_push(msg);
+                if self.rec.is_some() {
+                    self.emit(TraceEvent::Pause { t: self.now, flow: i, remaining: None });
                 }
             }
             FlowState::Paused | FlowState::Done => {}
@@ -669,9 +702,8 @@ impl Engine {
             Some(ta) => ta.max(at),
             None => at,
         };
-        if self.trace.is_some() {
-            let msg = format!("{when:.9} resume f{i}");
-            self.trace_push(msg);
+        if self.rec.is_some() {
+            self.emit(TraceEvent::Resume { t: when, flow: i });
         }
         self.schedule_arrive(i, when);
     }
@@ -695,6 +727,7 @@ impl Engine {
     /// a control event fires) or the queue drains.
     pub fn run_next(&mut self) -> Occurrence {
         while let Some(Reverse(ev)) = self.heap.pop() {
+            self.events_processed += 1;
             if ev.t > self.now {
                 self.now = ev.t;
             }
@@ -759,19 +792,130 @@ impl Engine {
         self.heap.clear();
         self.seq = 0;
         self.now = 0.0;
-        if let Some(t) = &mut self.trace {
-            t.clear();
+        self.next_span = 0;
+        self.cur_span = None;
+        self.events_processed = 0;
+        if let Some(rec) = &mut self.rec {
+            rec.clear();
         }
     }
 
-    /// Toggle event-trace recording (used by the determinism tests).
+    // --------------------------------------------------------- flight recorder
+
+    /// Toggle flight recording. Turning it on installs an empty
+    /// [`Recorder`] (idempotent: an installed recorder and its
+    /// subscribers survive); turning it off drops recorder and
+    /// subscribers, returning the engine to the zero-cost path.
     pub fn record_trace(&mut self, on: bool) {
-        self.trace = if on { Some(Vec::new()) } else { None };
+        if on {
+            if self.rec.is_none() {
+                self.rec = Some(Recorder::new());
+            }
+        } else {
+            self.rec = None;
+        }
     }
 
-    /// The recorded event trace (empty when recording is off).
-    pub fn trace(&self) -> &[String] {
-        self.trace.as_deref().unwrap_or(&[])
+    /// Attach a [`Subscriber`] to the flight recorder, installing the
+    /// recorder first if recording was off. The subscriber sees every
+    /// event from now on, in emission order.
+    pub fn attach_subscriber(&mut self, s: Box<dyn Subscriber>) {
+        self.record_trace(true);
+        self.rec.as_mut().expect("just installed").attach(s);
+    }
+
+    /// Is a recorder installed? Instrumented call sites check this
+    /// before constructing an event (the zero-cost-when-off contract).
+    pub fn recording(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Record one event: fan it out to the subscribers, then buffer it.
+    /// No-op (and allocation-free) when recording is off — but callers
+    /// should still guard with [`Engine::recording`] so the event
+    /// itself is never built.
+    pub fn emit(&mut self, ev: TraceEvent) {
+        if let Some(rec) = &mut self.rec {
+            rec.push(ev);
+        }
+    }
+
+    /// The recorded typed event stream (empty when recording is off).
+    pub fn events(&self) -> &[TraceEvent] {
+        self.rec.as_ref().map(Recorder::events).unwrap_or(&[])
+    }
+
+    /// The recorded trace rendered as strings — a `Display` view over
+    /// [`Engine::events`], preserving the legacy line formats, so
+    /// string assertions can never drift from the typed stream. Empty
+    /// when recording is off.
+    pub fn trace(&self) -> Vec<String> {
+        self.events().iter().map(TraceEvent::to_string).collect()
+    }
+
+    /// Allocate a fresh span id. Deterministic (a plain counter, reset
+    /// with the engine) and unconditional, so ids never depend on
+    /// whether a recorder is attached.
+    pub fn new_span(&mut self) -> SpanId {
+        self.next_span += 1;
+        SpanId(self.next_span)
+    }
+
+    /// Allocate a span and record its opening at time `t`.
+    pub fn begin_span(
+        &mut self,
+        t: f64,
+        name: String,
+        parent: Option<SpanId>,
+        collab: Option<usize>,
+    ) -> SpanId {
+        let span = self.new_span();
+        if self.rec.is_some() {
+            self.emit(TraceEvent::SpanBegin { t, span, parent, collab, name });
+        }
+        span
+    }
+
+    /// Record a span's close at time `t`.
+    pub fn end_span(&mut self, span: SpanId, t: f64) {
+        if self.rec.is_some() {
+            self.emit(TraceEvent::SpanEnd { t, span });
+        }
+    }
+
+    /// Set the op span subsequent work is attributed to (the xfer layer
+    /// parents its chunk slices under it); returns the previous value
+    /// so callers can restore it.
+    pub fn set_current_span(&mut self, s: Option<SpanId>) -> Option<SpanId> {
+        std::mem::replace(&mut self.cur_span, s)
+    }
+
+    /// The op span currently attributed, if any.
+    pub fn current_span(&self) -> Option<SpanId> {
+        self.cur_span
+    }
+
+    /// Heap events popped since construction (or the last
+    /// [`Engine::reset`]) — the engine's self-reported throughput
+    /// numerator (`BENCH_engine.json`).
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// The time a flow was started (its requested start, before any
+    /// link-floor clamp). Used to anchor chunk-flow slices.
+    pub fn flow_start_time(&self, f: FlowId) -> f64 {
+        self.flows[f.0].started_at
+    }
+
+    /// Number of registered links (index space of link events).
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Number of registered servers (index space of serve events).
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
     }
 
     // -------------------------------------------------------------- internals
@@ -990,18 +1134,11 @@ impl Engine {
         }
     }
 
-    fn trace_push(&mut self, msg: String) {
-        if let Some(tr) = &mut self.trace {
-            tr.push(msg);
-        }
-    }
-
     fn process(&mut self, ev: Event) -> Option<Occurrence> {
         match ev.kind {
             EventKind::Control { tag } => {
-                if self.trace.is_some() {
-                    let msg = format!("{:>6} {:.9} ctl tag={tag}", ev.seq, ev.t);
-                    self.trace_push(msg);
+                if self.rec.is_some() {
+                    self.emit(TraceEvent::Control { seq: ev.seq, t: ev.t, tag });
                 }
                 Some(Occurrence::Control { tag, at: ev.t })
             }
@@ -1039,9 +1176,14 @@ impl Engine {
                     self.flows[f].remaining += retx;
                     self.links[link].total_losses += 1;
                     self.links[link].total_retransmit_bytes += retx as u64;
-                    if self.trace.is_some() {
-                        let msg = format!("{:>6} {t:.9} loss f{f} l{link} win={win:.0}", ev.seq);
-                        self.trace_push(msg);
+                    if self.rec.is_some() {
+                        self.emit(TraceEvent::Loss {
+                            seq: ev.seq,
+                            t,
+                            flow: f,
+                            link,
+                            window: win,
+                        });
                     }
                 }
                 self.links[link].loss_gen += 1;
@@ -1057,6 +1199,15 @@ impl Engine {
                 let t = ev.t.max(self.links[link].last_update);
                 self.advance_link(link, t);
                 self.reschedule_link(link, t);
+                if self.rec.is_some() {
+                    let active = self.links[link].active.clone();
+                    for f in active {
+                        if let Some(cc) = &self.flows[f].cc {
+                            let window = cc.window;
+                            self.emit(TraceEvent::Cwnd { t, flow: f, window });
+                        }
+                    }
+                }
                 None
             }
             EventKind::Arrive { flow, gen } => {
@@ -1074,12 +1225,9 @@ impl Engine {
                 }
                 self.flows[flow].state = FlowState::InService;
                 self.reschedule_link(l, t);
-                if self.trace.is_some() {
-                    let msg = format!(
-                        "{:>6} {t:.9} join f{flow} hop{hop} l{l} rem={:.0}",
-                        ev.seq, self.flows[flow].remaining
-                    );
-                    self.trace_push(msg);
+                if self.rec.is_some() {
+                    let remaining = self.flows[flow].remaining;
+                    self.emit(TraceEvent::Join { seq: ev.seq, t, flow, hop, link: l, remaining });
                 }
                 None
             }
@@ -1099,9 +1247,8 @@ impl Engine {
                 self.links[l].total_flows += 1;
                 self.reschedule_link(l, t);
                 let done_at = t + self.links[l].latency_s;
-                if self.trace.is_some() {
-                    let msg = format!("{:>6} {t:.9} done f{flow} hop{hop} l{l}", ev.seq);
-                    self.trace_push(msg);
+                if self.rec.is_some() {
+                    self.emit(TraceEvent::Hop { seq: ev.seq, t, flow, hop, link: l });
                 }
                 if hop + 1 < self.flows[flow].path.len() {
                     self.flows[flow].hop = hop + 1;
@@ -1111,6 +1258,9 @@ impl Engine {
                 } else {
                     self.flows[flow].state = FlowState::Done;
                     self.flows[flow].finished_at = done_at;
+                    if self.rec.is_some() {
+                        self.emit(TraceEvent::FlowFinish { t: done_at, flow });
+                    }
                     Some(Occurrence::FlowDone { flow: FlowId(flow), at: done_at })
                 }
             }

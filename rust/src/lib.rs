@@ -57,9 +57,23 @@
 //! above-threshold remote reads/writes through it, and
 //! [`metadata::replication`] uses it to re-replicate payloads after a
 //! DTN outage (`scispace xfer` demos it from the CLI).
+//!
+//! ## The observability plane ([`obs`])
+//!
+//! A simulation flight recorder threads through every layer above:
+//! typed [`obs::TraceEvent`]s replace the old string trace (fanned out
+//! to pluggable subscribers), every `Session` op carries a span id
+//! through batch admission, staging and each chunk flow, and a metrics
+//! registry (counters, gauges, link-utilization series, latency
+//! histograms with p50/p99) is sampled from the links, servers and op
+//! stats. Two exporters — Chrome trace-event JSON and JSONL metric
+//! rows — are wired into `scispace trace <scenario>` and
+//! `Testbed::traced_report`. Recording is zero-cost when off: virtual
+//! timings stay bit-identical with the recorder on or detached.
 
 pub mod api;
 pub mod util;
+pub mod obs;
 pub mod engine;
 pub mod simclock;
 pub mod simnet;

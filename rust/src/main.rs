@@ -5,7 +5,7 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|all>`
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|engine|all>`
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
 //!   comparison on the discrete-event core; `xfer` sweeps stream
@@ -15,9 +15,17 @@
 //!   the asymmetric scenario — a small interactive read concurrent
 //!   with an unrelated bulk replicate, pinning the no-cross-stall
 //!   property of event-driven admission).
-//!   `bench preempt`, `bench xfer` and `bench collab` also emit
-//!   machine-readable `BENCH_preempt.json` / `BENCH_xfer.json` /
-//!   `BENCH_collab.json` for CI perf tracking.
+//!   `bench preempt`, `bench xfer`, `bench collab` and `bench engine`
+//!   also emit machine-readable `BENCH_preempt.json` /
+//!   `BENCH_xfer.json` / `BENCH_collab.json` / `BENCH_engine.json` for
+//!   CI perf tracking (`engine` self-reports the event core's
+//!   events/sec and wall-clock-per-sim-second).
+//! * `trace <replicate|collab> [--data 64M]` — run a 2-DC scenario with
+//!   the flight recorder on and export `TRACE_<scenario>.trace.json`
+//!   (Chrome trace-event JSON, loadable in `chrome://tracing` or
+//!   Perfetto) plus `TRACE_<scenario>.metrics.jsonl` (one metric row
+//!   per line). Both outputs are validated against the schemas in
+//!   `schemas/` before they are written.
 //! * `xfer [--size 512M] [--streams 1,2,4,8] [--chunk 4M] [--corrupt N]
 //!   [--drop-stream S] [--mix]` — drive the WAN bulk-transfer engine:
 //!   stream-count sweep, optional fault injection (corrupt chunks /
@@ -54,12 +62,13 @@ fn run(args: &Args) -> Result<()> {
         Some("demo") => cmd_demo(),
         Some("query") => cmd_query(args),
         Some("bench") => cmd_bench(args),
+        Some("trace") => cmd_trace(args),
         Some("xfer") => cmd_xfer(args),
         Some("shdump") => cmd_shdump(args),
         Some("shdiff") => cmd_shdiff(args),
         _ => {
             eprintln!(
-                "usage: scispace <dtn|demo|query|bench|xfer|shdump|shdiff> [options]\n\
+                "usage: scispace <dtn|demo|query|bench|trace|xfer|shdump|shdiff> [options]\n\
                  see README.md for details"
             );
             Ok(())
@@ -183,10 +192,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::print_asymmetric(&asym);
             emit_json("BENCH_collab.json", &bench::collab_json(&rows, &asym))?;
         }
+        "engine" => {
+            let row = bench::fig_engine_hotpath(16, 256 << 20);
+            bench::print_engine(&row);
+            emit_json("BENCH_engine.json", &bench::engine_json(&row))?;
+        }
         "all" => {
             for w in [
                 "fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2",
-                "preempt", "xfer", "collab",
+                "preempt", "xfer", "collab", "engine",
             ] {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];
@@ -203,6 +217,89 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn emit_json(path: &str, payload: &scispace::util::json::Json) -> Result<()> {
     std::fs::write(path, format!("{payload}\n"))?;
     println!("wrote {path}");
+    Ok(())
+}
+
+/// `scispace trace <scenario>`: run a 2-DC workload with the flight
+/// recorder attached and export the Chrome trace + JSONL metrics.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use scispace::api::Op;
+    use scispace::obs::export::{validate_chrome, validate_metrics_row};
+    use scispace::util::json::Json;
+    use scispace::workspace::{AccessMode, Testbed};
+
+    let scenario = args.positional.get(1).cloned().unwrap_or_else(|| "replicate".into());
+    let bytes = parse_bytes(&args.opt("data", "64M")).unwrap_or(64 << 20);
+    let mut tb = Testbed::paper_default();
+    let alice = tb.register("alice", 0);
+    let bob = tb.register("bob", 1);
+    let ops: Vec<(usize, Op)> = match scenario.as_str() {
+        "replicate" => {
+            // a single bulk replicate DC0 -> DC1: its op span carries
+            // admission, staging and every chunk-flow slice
+            tb.session(alice).write("/trace/big.dat").len(bytes).submit()?;
+            tb.quiesce();
+            vec![(alice, Op::Replicate { path: "/trace/big.dat".into(), dst_dc: 1 })]
+        }
+        "collab" => {
+            // a replicate concurrent with a cross-DC read in one batch
+            tb.session(alice).write("/trace/shared.dat").len(bytes).submit()?;
+            tb.quiesce();
+            vec![
+                (alice, Op::Replicate { path: "/trace/shared.dat".into(), dst_dc: 1 }),
+                (
+                    bob,
+                    Op::Read {
+                        path: "/trace/shared.dat".into(),
+                        offset: 0,
+                        len: Some(bytes),
+                        mode: AccessMode::Scispace,
+                    },
+                ),
+            ]
+        }
+        other => bail!("unknown trace scenario {other} (want replicate|collab)"),
+    };
+    tb.env.record_trace(true);
+    let results = tb.run_batch(ops);
+    for r in &results {
+        if !r.is_ok() {
+            bail!("trace scenario op failed: {r:?}");
+        }
+    }
+    let report = tb.traced_report();
+
+    let chrome = report.chrome_trace();
+    let chrome_schema = Json::parse(include_str!("../../schemas/chrome_trace.schema.json"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    validate_chrome(&chrome, &chrome_schema).map_err(|e| anyhow::anyhow!(e))?;
+    let trace_path = format!("TRACE_{scenario}.trace.json");
+    std::fs::write(&trace_path, format!("{chrome}\n"))?;
+
+    let row_schema = Json::parse(include_str!("../../schemas/metrics_row.schema.json"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let jsonl = report.metrics_jsonl();
+    for line in jsonl.lines() {
+        let row = Json::parse(line).map_err(|e| anyhow::anyhow!(e))?;
+        validate_metrics_row(&row, &row_schema).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let metrics_path = format!("TRACE_{scenario}.metrics.jsonl");
+    std::fs::write(&metrics_path, &jsonl)?;
+
+    let n_spans = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, scispace::obs::TraceEvent::SpanBegin { .. }))
+        .count();
+    println!(
+        "recorded {} events ({} spans) over {} links / {} servers",
+        report.events.len(),
+        n_spans,
+        report.link_names.len(),
+        report.server_names.len()
+    );
+    println!("wrote {trace_path} (load it in chrome://tracing or Perfetto)");
+    println!("wrote {metrics_path} ({} rows)", jsonl.lines().count());
     Ok(())
 }
 

@@ -1,0 +1,325 @@
+//! Exporters for the flight recorder: Chrome trace-event JSON (load in
+//! `chrome://tracing` or Perfetto) and schema validators for both
+//! export formats, mirroring the checked-in schemas in `schemas/`.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+use super::TraceEvent;
+
+/// Synthetic process ids grouping the trace tracks in the viewer.
+const PID_OPS: usize = 1;
+const PID_LINKS: usize = 2;
+const PID_FLOWS: usize = 3;
+
+const US_PER_S: f64 = 1e6;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn meta_event(name: &str, pid: usize, label: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("M".into())),
+        ("ts", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        (
+            "args",
+            Json::Obj(BTreeMap::from([("name".to_string(), Json::Str(label.to_string()))])),
+        ),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn slice(name: &str, t0: f64, t1: f64, pid: usize, tid: usize, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("X".into())),
+        ("ts", Json::Num(t0 * US_PER_S)),
+        ("dur", Json::Num(((t1 - t0) * US_PER_S).max(0.0))),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::Obj(args.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+    ])
+}
+
+/// Render the typed event stream as a Chrome trace-event document:
+/// spans become complete (`ph:"X"`) slices on the "ops" process
+/// (thread = collaborator), flow lifecycles become slices on the
+/// "flows" process, and per-link active-flow counts become counter
+/// (`ph:"C"`) tracks on the "links" process.
+pub fn chrome_trace(events: &[TraceEvent], link_names: &[String]) -> Json {
+    let t_max = events.iter().map(TraceEvent::time).fold(0.0, f64::max);
+    let mut out = vec![
+        meta_event("process_name", PID_OPS, "ops"),
+        meta_event("process_name", PID_LINKS, "links"),
+        meta_event("process_name", PID_FLOWS, "flows"),
+    ];
+
+    // Spans: pair begin/end by id; an unclosed span runs to t_max.
+    struct Open {
+        t0: f64,
+        name: String,
+        parent: Option<u64>,
+        collab: Option<usize>,
+    }
+    let mut open: HashMap<u64, Open> = HashMap::new();
+    let mut flow_start: HashMap<usize, f64> = HashMap::new();
+    let mut link_active: HashMap<usize, i64> = HashMap::new();
+    let mut on_link: HashMap<usize, usize> = HashMap::new();
+    let mut span_slices: Vec<Json> = Vec::new();
+    let link_label = |l: usize| match link_names.get(l) {
+        Some(n) => format!("link {n}"),
+        None => format!("link l{l}"),
+    };
+    let mut close = |span_slices: &mut Vec<Json>, id: u64, o: Open, t1: f64| {
+        let mut args = vec![("span", Json::Num(id as f64))];
+        if let Some(p) = o.parent {
+            args.push(("parent", Json::Num(p as f64)));
+        }
+        span_slices.push(slice(&o.name, o.t0, t1, PID_OPS, o.collab.unwrap_or(0), args));
+    };
+    for ev in events {
+        match ev {
+            TraceEvent::SpanBegin { t, span, parent, collab, name } => {
+                open.insert(
+                    span.0,
+                    Open {
+                        t0: *t,
+                        name: name.clone(),
+                        parent: parent.map(|p| p.0),
+                        collab: *collab,
+                    },
+                );
+            }
+            TraceEvent::SpanEnd { t, span } => {
+                if let Some(o) = open.remove(&span.0) {
+                    close(&mut span_slices, span.0, o, *t);
+                }
+            }
+            TraceEvent::FlowStart { t, flow, .. } => {
+                flow_start.insert(*flow, *t);
+            }
+            TraceEvent::FlowFinish { t, flow } => {
+                if let Some(t0) = flow_start.remove(flow) {
+                    out.push(slice(&format!("f{flow}"), t0, *t, PID_FLOWS, *flow, vec![]));
+                }
+            }
+            TraceEvent::Join { t, flow, link, .. } => {
+                on_link.insert(*flow, *link);
+                let a = link_active.entry(*link).or_insert(0);
+                *a += 1;
+                out.push(counter(&link_label(*link), *t, *link, *a));
+            }
+            TraceEvent::Hop { t, flow, link, .. } => {
+                on_link.remove(flow);
+                let a = link_active.entry(*link).or_insert(0);
+                *a -= 1;
+                out.push(counter(&link_label(*link), *t, *link, *a));
+            }
+            TraceEvent::Pause { t, flow, remaining: Some(_) } => {
+                if let Some(l) = on_link.remove(flow) {
+                    let a = link_active.entry(l).or_insert(0);
+                    *a -= 1;
+                    out.push(counter(&link_label(l), *t, l, *a));
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut leftovers: Vec<(u64, Open)> = open.drain().collect();
+    leftovers.sort_by_key(|(id, _)| *id);
+    for (id, o) in leftovers {
+        let t1 = t_max.max(o.t0);
+        close(&mut span_slices, id, o, t1);
+    }
+    out.extend(span_slices);
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+fn counter(name: &str, t: f64, tid: usize, active: i64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("C".into())),
+        ("ts", Json::Num(t * US_PER_S)),
+        ("pid", Json::Num(PID_LINKS as f64)),
+        ("tid", Json::Num(tid as f64)),
+        (
+            "args",
+            Json::Obj(BTreeMap::from([("active".to_string(), Json::Num(active as f64))])),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Schema validation (mirrors schemas/*.schema.json)
+// ---------------------------------------------------------------------------
+
+fn type_ok(v: &Json, ty: &str) -> bool {
+    matches!(
+        (v, ty),
+        (Json::Str(_), "string")
+            | (Json::Num(_), "number")
+            | (Json::Bool(_), "boolean")
+            | (Json::Obj(_), "object")
+            | (Json::Arr(_), "array")
+    )
+}
+
+fn check_required(v: &Json, spec: &Json, ctx: &str) -> Result<(), String> {
+    let fields = spec.as_obj().ok_or_else(|| format!("{ctx}: schema 'required' not an object"))?;
+    for (field, ty) in fields {
+        let ty =
+            ty.as_str().ok_or_else(|| format!("{ctx}: schema type for {field} not a string"))?;
+        let got = v.get(field).ok_or_else(|| format!("{ctx}: missing field '{field}'"))?;
+        if !type_ok(got, ty) {
+            return Err(format!("{ctx}: field '{field}' is not a {ty}"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a Chrome trace document against
+/// `schemas/chrome_trace.schema.json`: top-level required fields, then
+/// per-event required fields plus the per-phase (`ph`) extras.
+pub fn validate_chrome(doc: &Json, schema: &Json) -> Result<(), String> {
+    let top = schema.get("required").ok_or("schema missing 'required'")?;
+    for key in top.as_arr().ok_or("'required' not an array")? {
+        let key = key.as_str().ok_or("'required' entry not a string")?;
+        if doc.get(key).is_none() {
+            return Err(format!("document missing '{key}'"));
+        }
+    }
+    let events_spec = schema.get("events").ok_or("schema missing 'events'")?;
+    let base = events_spec.get("required").ok_or("events schema missing 'required'")?;
+    let phases = events_spec
+        .get("ph")
+        .and_then(Json::as_obj)
+        .ok_or("events schema missing 'ph' object")?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("'traceEvents' is not an array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let ctx = format!("traceEvents[{i}]");
+        check_required(ev, base, &ctx)?;
+        let ph = ev.get("ph").and_then(Json::as_str).unwrap_or("");
+        let phase = phases.get(ph).ok_or_else(|| format!("{ctx}: unknown ph '{ph}'"))?;
+        if let Some(extra) = phase.get("required") {
+            check_required(ev, extra, &ctx)?;
+        }
+    }
+    Ok(())
+}
+
+/// Validate one JSONL metrics row against
+/// `schemas/metrics_row.schema.json`: base required fields plus the
+/// per-`kind` extras.
+pub fn validate_metrics_row(row: &Json, schema: &Json) -> Result<(), String> {
+    let base = schema.get("required").ok_or("schema missing 'required'")?;
+    check_required(row, base, "row")?;
+    let kinds = schema.get("kinds").and_then(Json::as_obj).ok_or("schema missing 'kinds'")?;
+    let kind = row.get("kind").and_then(Json::as_str).unwrap_or("");
+    let spec = kinds.get(kind).ok_or_else(|| format!("row: unknown kind '{kind}'"))?;
+    if let Some(extra) = spec.get("required") {
+        check_required(row, extra, &format!("row[{kind}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanId;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::SpanBegin {
+                t: 0.0,
+                span: SpanId(1),
+                parent: None,
+                collab: Some(2),
+                name: "op:replicate".into(),
+            },
+            TraceEvent::SpanBegin {
+                t: 0.0,
+                span: SpanId(2),
+                parent: Some(SpanId(1)),
+                collab: Some(2),
+                name: "staging".into(),
+            },
+            TraceEvent::SpanEnd { t: 0.5, span: SpanId(2) },
+            TraceEvent::FlowStart { t: 0.5, flow: 0, bytes: 1024, windowed: false },
+            TraceEvent::Join { seq: 1, t: 0.5, flow: 0, hop: 0, link: 0, remaining: 1024.0 },
+            TraceEvent::Hop { seq: 2, t: 1.0, flow: 0, hop: 0, link: 0 },
+            TraceEvent::FlowFinish { t: 1.1, flow: 0 },
+            TraceEvent::SpanEnd { t: 1.1, span: SpanId(1) },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_emits_slices_and_counters() {
+        let doc = chrome_trace(&sample_events(), &["net.wan".to_string()]);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let named = |n: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(n))
+                .unwrap_or_else(|| panic!("no event named {n}"))
+        };
+        let op = named("op:replicate");
+        assert_eq!(op.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(op.get("dur").and_then(Json::as_f64), Some(1.1 * 1e6));
+        let staging = named("staging");
+        let parent = staging.get("args").and_then(|a| a.get("parent")).and_then(Json::as_f64);
+        assert_eq!(parent, Some(1.0));
+        let c = named("link net.wan");
+        assert_eq!(c.get("ph").and_then(Json::as_str), Some("C"));
+        assert!(named("f0").get("dur").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_and_validates() {
+        let doc = chrome_trace(&sample_events(), &[]);
+        let txt = doc.to_string();
+        let back = Json::parse(&txt).expect("chrome trace parses");
+        let schema = Json::parse(include_str!("../../../schemas/chrome_trace.schema.json"))
+            .expect("schema parses");
+        validate_chrome(&back, &schema).expect("trace validates against checked-in schema");
+    }
+
+    #[test]
+    fn metrics_rows_validate_against_checked_in_schema() {
+        let schema = Json::parse(include_str!("../../../schemas/metrics_row.schema.json"))
+            .expect("schema parses");
+        let mut m = crate::obs::Metrics::new();
+        m.inc("c", 1);
+        m.gauge("g", 0.5);
+        m.observe("h", 1.0);
+        m.series_push("s", 0.0, 1.0);
+        m.series_push("s", 1.0, 0.0);
+        for row in m.rows() {
+            validate_metrics_row(&row, &schema).expect("row validates");
+        }
+    }
+
+    #[test]
+    fn validators_reject_malformed_documents() {
+        let schema =
+            Json::parse(include_str!("../../../schemas/chrome_trace.schema.json")).unwrap();
+        let bad = Json::parse(r#"{"traceEvents":[{"name":"x","ph":"X","ts":0,"pid":1,"tid":0}]}"#)
+            .unwrap();
+        assert!(validate_chrome(&bad, &schema).is_err(), "missing displayTimeUnit and dur");
+        let row_schema =
+            Json::parse(include_str!("../../../schemas/metrics_row.schema.json")).unwrap();
+        let bad_row = Json::parse(r#"{"kind":"counter","name":"x"}"#).unwrap();
+        assert!(validate_metrics_row(&bad_row, &row_schema).is_err(), "counter needs value");
+    }
+}

@@ -1,0 +1,336 @@
+//! Metrics registry: counters, gauges, latency histograms (p50/p99 via
+//! the repo-wide nearest-rank percentile), and time-weighted series for
+//! link utilization. Sampled from `PsLink`/`Server`/`OpStats` by
+//! `Testbed::sample_metrics`, enriched from the typed event stream by
+//! [`fold_events`], and rendered as JSONL rows by [`Metrics::to_jsonl`].
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+use crate::util::timer::percentile_sorted;
+
+use super::TraceEvent;
+
+/// A latency (or any scalar) histogram: raw samples with nearest-rank
+/// percentile accessors, matching `util::timer::Samples` semantics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Nearest-rank percentile, `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        percentile_sorted(&s, p / 100.0)
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Arithmetic mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+/// A step series of `(t, value)` points: the value holds from its
+/// timestamp until the next point. Used for link active-flow counts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Series {
+    points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Append a point; timestamps must be non-decreasing (event order).
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    /// The recorded points.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    /// Largest value seen.
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    /// Time-weighted mean over `[t_first, t_last]`: each value is
+    /// weighted by how long it held. 0.0 with fewer than two points.
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return 0.0;
+        }
+        let (t0, _) = self.points[0];
+        let (tn, _) = self.points[self.points.len() - 1];
+        let total = tn - t0;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for w in self.points.windows(2) {
+            acc += w[0].1 * (w[1].0 - w[0].0);
+        }
+        acc / total
+    }
+}
+
+/// The registry: named counters, gauges, histograms and series with
+/// stable (sorted) iteration order so exports are deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+    series: BTreeMap<String, Series>,
+}
+
+impl Metrics {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to a counter (creating it at zero).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current counter value (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Current gauge value (`None` if absent).
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Histogram accessor (`None` if absent).
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// Append a point to a step series.
+    pub fn series_push(&mut self, name: &str, t: f64, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+
+    /// Series accessor (`None` if absent).
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// One JSON object per metric, in deterministic name order:
+    /// `{"kind":"counter","name":...,"value":...}` /
+    /// `{"kind":"gauge",...}` /
+    /// `{"kind":"histogram","count":...,"mean":...,"p50":...,"p99":...}` /
+    /// `{"kind":"series","points":...,"max":...,"time_weighted_mean":...}`.
+    pub fn rows(&self) -> Vec<Json> {
+        let obj = |pairs: Vec<(&str, Json)>| {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        };
+        let mut out = Vec::new();
+        for (name, v) in &self.counters {
+            out.push(obj(vec![
+                ("kind", Json::Str("counter".into())),
+                ("name", Json::Str(name.clone())),
+                ("value", Json::Num(*v as f64)),
+            ]));
+        }
+        for (name, v) in &self.gauges {
+            out.push(obj(vec![
+                ("kind", Json::Str("gauge".into())),
+                ("name", Json::Str(name.clone())),
+                ("value", Json::Num(*v)),
+            ]));
+        }
+        for (name, h) in &self.hists {
+            out.push(obj(vec![
+                ("kind", Json::Str("histogram".into())),
+                ("name", Json::Str(name.clone())),
+                ("count", Json::Num(h.count() as f64)),
+                ("mean", Json::Num(h.mean())),
+                ("p50", Json::Num(h.p50())),
+                ("p99", Json::Num(h.p99())),
+            ]));
+        }
+        for (name, s) in &self.series {
+            out.push(obj(vec![
+                ("kind", Json::Str("series".into())),
+                ("name", Json::Str(name.clone())),
+                ("points", Json::Num(s.points().len() as f64)),
+                ("max", Json::Num(s.max())),
+                ("time_weighted_mean", Json::Num(s.time_weighted_mean())),
+            ]));
+        }
+        out
+    }
+
+    /// JSONL rendering: one compact JSON row per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for row in self.rows() {
+            out.push_str(&row.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Derive event-stream metrics into the registry:
+///
+/// * `span.<name>.latency_s` histograms from begin/end pairs (op
+///   latencies with p50/p99);
+/// * `link.<i>.active_flows` time-weighted series from join/done/pause
+///   transitions (`link_names` labels them when provided);
+/// * `events.recorded` counter.
+pub fn fold_events(m: &mut Metrics, events: &[TraceEvent], link_names: &[String]) {
+    let mut open_spans: HashMap<u64, (f64, String)> = HashMap::new();
+    let mut on_link: HashMap<usize, usize> = HashMap::new();
+    let mut active: HashMap<usize, i64> = HashMap::new();
+    let link_label = |l: usize| {
+        link_names
+            .get(l)
+            .map(|n| format!("link.{n}.active_flows"))
+            .unwrap_or_else(|| format!("link.{l}.active_flows"))
+    };
+    let mut bump = |m: &mut Metrics, active: &mut HashMap<usize, i64>, l: usize, d: i64, t: f64| {
+        let a = active.entry(l).or_insert(0);
+        *a += d;
+        m.series_push(&link_label(l), t, *a as f64);
+    };
+    m.inc("events.recorded", events.len() as u64);
+    for ev in events {
+        match ev {
+            TraceEvent::SpanBegin { t, span, name, .. } => {
+                open_spans.insert(span.0, (*t, name.clone()));
+            }
+            TraceEvent::SpanEnd { t, span } => {
+                if let Some((t0, name)) = open_spans.remove(&span.0) {
+                    m.observe(&format!("span.{name}.latency_s"), t - t0);
+                }
+            }
+            TraceEvent::Join { t, flow, link, .. } => {
+                on_link.insert(*flow, *link);
+                bump(m, &mut active, *link, 1, *t);
+            }
+            TraceEvent::Hop { t, flow, link, .. } => {
+                on_link.remove(flow);
+                bump(m, &mut active, *link, -1, *t);
+            }
+            TraceEvent::Pause { t, flow, remaining: Some(_) } => {
+                // An in-service pause leaves its current hop; the resume
+                // re-joins via a fresh `Join`.
+                if let Some(l) = on_link.remove(flow) {
+                    bump(m, &mut active, l, -1, *t);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanId;
+
+    #[test]
+    fn histogram_percentiles_match_samples_definition() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.p50(), 50.0);
+        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_time_weighted_mean_weights_by_duration() {
+        let mut s = Series::default();
+        s.push(0.0, 1.0); // holds 1.0 for 1s
+        s.push(1.0, 3.0); // holds 3.0 for 3s
+        s.push(4.0, 0.0);
+        assert_eq!(s.max(), 3.0);
+        // (1*1 + 3*3) / 4 = 2.5
+        assert!((s.time_weighted_mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_events_builds_span_histograms_and_link_series() {
+        let mut m = Metrics::new();
+        let events = vec![
+            TraceEvent::SpanBegin {
+                t: 1.0,
+                span: SpanId(1),
+                parent: None,
+                collab: Some(0),
+                name: "op:write".into(),
+            },
+            TraceEvent::Join { seq: 1, t: 1.0, flow: 0, hop: 0, link: 2, remaining: 10.0 },
+            TraceEvent::Hop { seq: 2, t: 2.5, flow: 0, hop: 0, link: 2 },
+            TraceEvent::SpanEnd { t: 3.0, span: SpanId(1) },
+        ];
+        fold_events(&mut m, &events, &[]);
+        let h = m.histogram("span.op:write.latency_s").expect("span histogram");
+        assert_eq!(h.count(), 1);
+        assert!((h.p50() - 2.0).abs() < 1e-12);
+        let s = m.series("link.2.active_flows").expect("link series");
+        assert_eq!(s.points(), &[(1.0, 1.0), (2.5, 0.0)]);
+        assert_eq!(m.counter("events.recorded"), 4);
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_json_parser() {
+        let mut m = Metrics::new();
+        m.inc("sim_invariant_violations", 2);
+        m.gauge("wan.active", 3.0);
+        m.observe("lat", 0.5);
+        m.series_push("u", 0.0, 1.0);
+        for row in m.rows() {
+            let txt = row.to_string();
+            let back = Json::parse(&txt).expect("row parses");
+            assert_eq!(back, row);
+            assert!(back.get("kind").and_then(Json::as_str).is_some());
+            assert!(back.get("name").and_then(Json::as_str).is_some());
+        }
+        assert_eq!(m.to_jsonl().lines().count(), 4);
+    }
+}

@@ -1,0 +1,412 @@
+//! Simulation flight recorder: typed trace events, op spans, a metrics
+//! registry and exporters — the observability plane the engine, simnet,
+//! xfer, workspace and api layers all report into.
+//!
+//! ## Event taxonomy
+//!
+//! Every notable state transition in the simulation is a [`TraceEvent`]:
+//!
+//! * **Flow lifecycle** — [`TraceEvent::FlowStart`] (a flow was
+//!   spawned), [`TraceEvent::Join`] (it entered service on a hop),
+//!   [`TraceEvent::Hop`] (a hop finished serializing),
+//!   [`TraceEvent::FlowFinish`] (the last hop's latency was paid),
+//!   [`TraceEvent::Pause`] / [`TraceEvent::Resume`] (the preemption
+//!   primitives).
+//! * **Congestion** — [`TraceEvent::Loss`] (a managed link synthesized
+//!   a loss: the event carries the post-decrease window) and
+//!   [`TraceEvent::Cwnd`] (a growth-tick re-examination observed the
+//!   flow's current window).
+//! * **Servers** — [`TraceEvent::Serve`]: a FIFO server committed work
+//!   (bytes and/or ops) from `t` to `until`.
+//! * **Control** — [`TraceEvent::Control`]: a scheduled control event
+//!   fired (the batch executor's admission/launch signals).
+//! * **Spans** — [`TraceEvent::SpanBegin`] / [`TraceEvent::SpanEnd`]:
+//!   the op-lifecycle layer (see below).
+//!
+//! Events carry raw indices (`flow`, `link`, `server` as `usize`), not
+//! engine handles — this module has no dependency on
+//! [`crate::engine`], so any layer can construct and consume events.
+//!
+//! ## Span model
+//!
+//! A [`SpanId`] names one interval of virtual time attributed to a
+//! cause. The api layer opens one span per `Session` op (named
+//! `op:<kind>`, tagged with the collaborator index); the batch executor
+//! opens the same op span at *admission* and parents three kinds of
+//! child slices under it: `admission` (the control firing), `staging`
+//! (front-end charging until the payload-ready time), and one
+//! `chunk<i>` slice per payload chunk flow (emitted by
+//! [`crate::xfer::Flight`], so the single-op blocking path produces the
+//! same slices). Span ids are allocated deterministically by the engine
+//! (reset with it), so a replayed workload reproduces identical ids.
+//!
+//! ## Subscriber contract
+//!
+//! A [`Subscriber`] receives every event, in emission order,
+//! synchronously on the simulation thread, *before* the event is
+//! appended to the in-memory buffer. Subscribers must not assume wall
+//! clock ≈ virtual time and must be cheap: they run inside the engine's
+//! event loop. The recorder is **zero-cost when detached** — with no
+//! recorder installed the instrumented layers skip event construction
+//! entirely, and recording on/off is bit-identical in every virtual
+//! timing and counter (pinned by `tests/obs_recorder.rs`).
+//!
+//! ## Exporters
+//!
+//! [`export::chrome_trace`] renders spans as Chrome trace-event slices
+//! and links as counter tracks (loadable in `chrome://tracing` /
+//! Perfetto); [`Metrics::to_jsonl`] renders the registry as JSONL
+//! rows. Both outputs validate against the checked-in schemas in
+//! `schemas/` ([`export::validate_chrome`],
+//! [`export::validate_metrics_row`]).
+
+use std::fmt;
+
+pub mod export;
+pub mod metrics;
+
+pub use metrics::Metrics;
+
+/// Identifier of one attribution span (an op lifecycle, a staging
+/// phase, a chunk flow). Allocated by `Engine::new_span`;
+/// deterministic across replays of the same workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpanId(pub u64);
+
+/// One typed simulation event (see the module docs for the taxonomy).
+///
+/// The [`fmt::Display`] impl renders the exact line format the engine's
+/// legacy string trace used, so string-level assertions are a *view*
+/// over the typed stream and can never drift from it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A flow was spawned (`Engine::start_flow` /
+    /// `start_windowed_flow`) with `bytes` to move starting at `t`.
+    FlowStart {
+        /// Requested start time (virtual seconds).
+        t: f64,
+        /// Flow index.
+        flow: usize,
+        /// Payload bytes.
+        bytes: u64,
+        /// Carries an AIMD congestion window?
+        windowed: bool,
+    },
+    /// A flow entered service on a hop of its path.
+    Join {
+        /// Event sequence number (heap tie-break order).
+        seq: u64,
+        /// Service start time.
+        t: f64,
+        /// Flow index.
+        flow: usize,
+        /// Hop position within the flow's path.
+        hop: usize,
+        /// Link index serving the hop.
+        link: usize,
+        /// Residual bytes at join.
+        remaining: f64,
+    },
+    /// A flow finished serializing a hop.
+    Hop {
+        /// Event sequence number.
+        seq: u64,
+        /// Hop completion time (before the hop latency).
+        t: f64,
+        /// Flow index.
+        flow: usize,
+        /// Hop position within the flow's path.
+        hop: usize,
+        /// Link index that served the hop.
+        link: usize,
+    },
+    /// A flow served its last hop and paid the final latency.
+    FlowFinish {
+        /// Completion time (final latency included).
+        t: f64,
+        /// Flow index.
+        flow: usize,
+    },
+    /// A flow was paused (preemption).
+    Pause {
+        /// Pause time.
+        t: f64,
+        /// Flow index.
+        flow: usize,
+        /// Residual bytes at the pause for an in-service flow; `None`
+        /// when the pause held a not-yet-fired arrival.
+        remaining: Option<f64>,
+    },
+    /// A paused flow was resumed.
+    Resume {
+        /// Rejoin time (clamped so the engine never rewinds).
+        t: f64,
+        /// Flow index.
+        flow: usize,
+    },
+    /// A scheduled control event fired.
+    Control {
+        /// Event sequence number.
+        seq: u64,
+        /// Fire time.
+        t: f64,
+        /// Caller-chosen tag.
+        tag: u64,
+    },
+    /// A congestion-managed link synthesized a loss for one windowed
+    /// flow (multiplicative decrease + go-back retransmission).
+    Loss {
+        /// Event sequence number.
+        seq: u64,
+        /// Loss time.
+        t: f64,
+        /// Affected flow index.
+        flow: usize,
+        /// Link index that synthesized the loss.
+        link: usize,
+        /// The flow's window *after* the multiplicative decrease.
+        window: f64,
+    },
+    /// A window-growth tick observed a windowed flow's current window.
+    Cwnd {
+        /// Observation time.
+        t: f64,
+        /// Flow index.
+        flow: usize,
+        /// Current congestion window, bytes.
+        window: f64,
+    },
+    /// A FIFO server committed work.
+    Serve {
+        /// Service start time (after queueing).
+        t: f64,
+        /// Server index.
+        server: usize,
+        /// Bytes streamed.
+        bytes: u64,
+        /// Operations served.
+        ops: u64,
+        /// Committed horizon after this request.
+        until: f64,
+    },
+    /// An attribution span opened.
+    SpanBegin {
+        /// Span start time.
+        t: f64,
+        /// The span.
+        span: SpanId,
+        /// Enclosing span, if any.
+        parent: Option<SpanId>,
+        /// Collaborator the span is attributed to, if any.
+        collab: Option<usize>,
+        /// Human-readable label (`op:replicate`, `staging`, `chunk3`).
+        name: String,
+    },
+    /// An attribution span closed.
+    SpanEnd {
+        /// Span end time.
+        t: f64,
+        /// The span.
+        span: SpanId,
+    },
+}
+
+impl TraceEvent {
+    /// The event's virtual time.
+    pub fn time(&self) -> f64 {
+        match *self {
+            TraceEvent::FlowStart { t, .. }
+            | TraceEvent::Join { t, .. }
+            | TraceEvent::Hop { t, .. }
+            | TraceEvent::FlowFinish { t, .. }
+            | TraceEvent::Pause { t, .. }
+            | TraceEvent::Resume { t, .. }
+            | TraceEvent::Control { t, .. }
+            | TraceEvent::Loss { t, .. }
+            | TraceEvent::Cwnd { t, .. }
+            | TraceEvent::Serve { t, .. }
+            | TraceEvent::SpanBegin { t, .. }
+            | TraceEvent::SpanEnd { t, .. } => t,
+        }
+    }
+}
+
+impl fmt::Display for TraceEvent {
+    /// The legacy trace line formats, preserved exactly for the event
+    /// kinds the string trace used to record; new kinds get their own
+    /// stable forms.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceEvent::Join { seq, t, flow, hop, link, remaining } => {
+                write!(f, "{seq:>6} {t:.9} join f{flow} hop{hop} l{link} rem={remaining:.0}")
+            }
+            TraceEvent::Hop { seq, t, flow, hop, link } => {
+                write!(f, "{seq:>6} {t:.9} done f{flow} hop{hop} l{link}")
+            }
+            TraceEvent::Control { seq, t, tag } => {
+                write!(f, "{seq:>6} {t:.9} ctl tag={tag}")
+            }
+            TraceEvent::Loss { seq, t, flow, link, window } => {
+                write!(f, "{seq:>6} {t:.9} loss f{flow} l{link} win={window:.0}")
+            }
+            TraceEvent::Pause { t, flow, remaining: Some(rem) } => {
+                write!(f, "{t:.9} pause f{flow} rem={rem:.0}")
+            }
+            TraceEvent::Pause { t, flow, remaining: None } => {
+                write!(f, "{t:.9} pause f{flow} (held arrival)")
+            }
+            TraceEvent::Resume { t, flow } => write!(f, "{t:.9} resume f{flow}"),
+            TraceEvent::FlowStart { t, flow, bytes, windowed } => {
+                write!(f, "{t:.9} start f{flow} bytes={bytes} cc={}", u8::from(*windowed))
+            }
+            TraceEvent::FlowFinish { t, flow } => write!(f, "{t:.9} finish f{flow}"),
+            TraceEvent::Cwnd { t, flow, window } => {
+                write!(f, "{t:.9} cwnd f{flow} win={window:.0}")
+            }
+            TraceEvent::Serve { t, server, bytes, ops, until } => {
+                write!(f, "{t:.9} serve s{server} bytes={bytes} ops={ops} until={until:.9}")
+            }
+            TraceEvent::SpanBegin { t, span, parent, collab, name } => {
+                write!(f, "{t:.9} span+ {} {name}", span.0)?;
+                if let Some(p) = parent {
+                    write!(f, " parent={}", p.0)?;
+                }
+                if let Some(c) = collab {
+                    write!(f, " c{c}")?;
+                }
+                Ok(())
+            }
+            TraceEvent::SpanEnd { t, span } => write!(f, "{t:.9} span- {}", span.0),
+        }
+    }
+}
+
+/// A pluggable event sink (see the module docs for the contract).
+pub trait Subscriber {
+    /// Called for every event, in emission order, before it is
+    /// buffered.
+    fn on_event(&mut self, ev: &TraceEvent);
+}
+
+/// The installed flight recorder: an in-memory event buffer plus the
+/// attached [`Subscriber`]s. Owned by the engine (one recorder per
+/// simulation); absent entirely when recording is off.
+#[derive(Default)]
+pub struct Recorder {
+    events: Vec<TraceEvent>,
+    subs: Vec<Box<dyn Subscriber>>,
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Recorder")
+            .field("events", &self.events.len())
+            .field("subscribers", &self.subs.len())
+            .finish()
+    }
+}
+
+impl Recorder {
+    /// An empty recorder with no subscribers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fan the event out to every subscriber, then buffer it.
+    pub fn push(&mut self, ev: TraceEvent) {
+        for s in &mut self.subs {
+            s.on_event(&ev);
+        }
+        self.events.push(ev);
+    }
+
+    /// The buffered events, in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Drop the buffered events (subscribers stay attached).
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Attach a subscriber; it sees events from now on.
+    pub fn attach(&mut self, s: Box<dyn Subscriber>) {
+        self.subs.push(s);
+    }
+}
+
+/// Everything one simulation run recorded, packaged for export:
+/// the typed event stream, the sampled metrics registry, and the
+/// name tables that turn raw link/server indices into labels.
+/// Produced by `Testbed::traced_report`.
+#[derive(Debug, Clone)]
+pub struct TracedReport {
+    /// The recorded event stream.
+    pub events: Vec<TraceEvent>,
+    /// Counters/gauges/histograms/series sampled at report time.
+    pub metrics: Metrics,
+    /// Link index -> human-readable name.
+    pub link_names: Vec<String>,
+    /// Server index -> human-readable name.
+    pub server_names: Vec<String>,
+}
+
+impl TracedReport {
+    /// Chrome trace-event JSON (`chrome://tracing`-loadable): spans as
+    /// slices, flows as slices, links as counter tracks.
+    pub fn chrome_trace(&self) -> crate::util::json::Json {
+        export::chrome_trace(&self.events, &self.link_names)
+    }
+
+    /// The metrics registry as JSONL rows (one JSON object per line).
+    pub fn metrics_jsonl(&self) -> String {
+        self.metrics.to_jsonl()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_line_formats_are_preserved_exactly() {
+        let join =
+            TraceEvent::Join { seq: 3, t: 0.5, flow: 7, hop: 1, link: 2, remaining: 1024.0 };
+        assert_eq!(join.to_string(), format!("{:>6} {:.9} join f7 hop1 l2 rem=1024", 3, 0.5));
+        let done = TraceEvent::Hop { seq: 12, t: 1.25, flow: 0, hop: 0, link: 4 };
+        assert_eq!(done.to_string(), format!("{:>6} {:.9} done f0 hop0 l4", 12, 1.25));
+        let ctl = TraceEvent::Control { seq: 100000, t: 2.0, tag: 42 };
+        assert_eq!(ctl.to_string(), format!("{:>6} {:.9} ctl tag=42", 100000, 2.0));
+        let loss = TraceEvent::Loss { seq: 9, t: 0.25, flow: 1, link: 0, window: 524288.4 };
+        assert_eq!(loss.to_string(), format!("{:>6} {:.9} loss f1 l0 win=524288", 9, 0.25));
+        let pi = TraceEvent::Pause { t: 0.125, flow: 3, remaining: Some(99.6) };
+        assert_eq!(pi.to_string(), format!("{:.9} pause f3 rem=100", 0.125));
+        let ph = TraceEvent::Pause { t: 0.125, flow: 3, remaining: None };
+        assert_eq!(ph.to_string(), format!("{:.9} pause f3 (held arrival)", 0.125));
+        let r = TraceEvent::Resume { t: 0.75, flow: 3 };
+        assert_eq!(r.to_string(), format!("{:.9} resume f3", 0.75));
+    }
+
+    struct Counting(std::rc::Rc<std::cell::Cell<usize>>);
+    impl Subscriber for Counting {
+        fn on_event(&mut self, _ev: &TraceEvent) {
+            self.0.set(self.0.get() + 1);
+        }
+    }
+
+    #[test]
+    fn recorder_fans_out_to_subscribers_before_buffering() {
+        let n = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut rec = Recorder::new();
+        rec.attach(Box::new(Counting(n.clone())));
+        rec.push(TraceEvent::FlowFinish { t: 1.0, flow: 0 });
+        rec.push(TraceEvent::Resume { t: 2.0, flow: 0 });
+        assert_eq!(n.get(), 2);
+        assert_eq!(rec.events().len(), 2);
+        rec.clear();
+        assert!(rec.events().is_empty());
+        rec.push(TraceEvent::Resume { t: 3.0, flow: 0 });
+        assert_eq!(n.get(), 3, "subscribers survive a clear");
+    }
+}

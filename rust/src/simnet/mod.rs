@@ -98,6 +98,12 @@ pub struct Network {
     active: Vec<u32>,
     /// Peak concurrent bulk transfers per link.
     peak: Vec<u32>,
+    /// Unbalanced `end_transfer` calls observed (an end without its
+    /// begin). Debug builds also assert; release builds used to mask
+    /// the bug behind the saturating release — this counter surfaces
+    /// it, sampled into the metrics registry as
+    /// `sim_invariant_violations` by `Testbed::sample_metrics`.
+    invariant_violations: u64,
 }
 
 impl Network {
@@ -120,7 +126,13 @@ impl Network {
             })
             .collect();
         let slots = 1 + lans.len();
-        Network { wan, lans, active: vec![0; slots], peak: vec![0; slots] }
+        Network {
+            wan,
+            lans,
+            active: vec![0; slots],
+            peak: vec![0; slots],
+            invariant_violations: 0,
+        }
     }
 
     /// Send `bytes` over `link` starting at `now`, blocking to
@@ -195,9 +207,15 @@ impl Network {
     /// Deregister a completed bulk transfer. Release semantics stay
     /// saturating in release builds, but an unbalanced `end_transfer`
     /// (double-end, or an end without its begin) is a caller bug that
-    /// used to be silently masked — surface it under debug assertions.
+    /// used to be silently masked — debug builds assert, and *every*
+    /// build counts it in [`Network::invariant_violations`] so
+    /// release-mode runs surface it through the metrics registry
+    /// instead of silently passing.
     pub fn end_transfer(&mut self, src_dc: usize, dst_dc: usize) {
         for s in self.hop_slots(src_dc, dst_dc) {
+            if self.active[s] == 0 {
+                self.invariant_violations += 1;
+            }
             debug_assert!(
                 self.active[s] > 0,
                 "end_transfer without a matching begin_transfer on slot {s} \
@@ -205,6 +223,12 @@ impl Network {
             );
             self.active[s] = self.active[s].saturating_sub(1);
         }
+    }
+
+    /// Unbalanced `end_transfer` calls observed so far (0 in a healthy
+    /// run; see [`Network::end_transfer`]).
+    pub fn invariant_violations(&self) -> u64 {
+        self.invariant_violations
     }
 
     /// Bulk transfers currently riding the WAN.
@@ -428,6 +452,29 @@ mod tests {
         net.begin_transfer(0, 1);
         net.end_transfer(0, 1);
         net.end_transfer(0, 1); // double-end: a caller bug, now loud
+    }
+
+    #[test]
+    fn balanced_transfers_never_count_violations() {
+        let (_env, mut net) = setup();
+        net.begin_transfer(0, 1);
+        net.begin_transfer(1, 1);
+        net.end_transfer(1, 1);
+        net.end_transfer(0, 1);
+        assert_eq!(net.invariant_violations(), 0);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn unbalanced_end_transfer_counts_in_release() {
+        // Release builds don't assert — the saturating release used to
+        // mask the bug entirely. The violation counter surfaces it.
+        let (_env, mut net) = setup();
+        net.begin_transfer(0, 1);
+        net.end_transfer(0, 1);
+        net.end_transfer(0, 1); // double-end: one violation per hop slot
+        assert_eq!(net.invariant_violations(), 3, "cross-DC path has 3 slots");
+        assert_eq!(net.wan_active(), 0, "saturating release still holds");
     }
 
     #[test]

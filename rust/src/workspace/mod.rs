@@ -23,10 +23,12 @@
 pub mod localfs;
 
 use crate::api::ScispaceError;
+use crate::engine::{LinkId, ServerId};
 use crate::fusemodel::{FuseConfig, FuseMount, READ_OPS, WRITE_OPS};
 use crate::metadata::{FileMeta, MetaPlane, MetaReq, MetaResp};
 use crate::msg::Wire;
 use crate::namespace::NamespaceRegistry;
+use crate::obs::{Metrics, TracedReport};
 use crate::simclock::{ResourceId, SimEnv};
 use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
 use crate::simnet::{NetConfig, Network};
@@ -917,6 +919,58 @@ impl Testbed {
         for c in &mut self.collabs {
             c.now = c.now.max(h);
         }
+    }
+
+    /// Sample the current resource state into a fresh [`Metrics`]
+    /// registry: per-link payload/loss counters and active-flow gauges,
+    /// per-server throughput counters and committed horizons, op-level
+    /// counters, the simnet invariant-violation counter (see
+    /// [`crate::simnet::Network::invariant_violations`]) and the
+    /// engine's processed-event count. Pure observation — nothing in
+    /// the testbed is touched.
+    pub fn sample_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for i in 0..self.env.n_links() {
+            let l = self.env.link(LinkId(i));
+            let n = &l.name;
+            m.inc(&format!("link.{n}.bytes"), l.total_bytes);
+            m.inc(&format!("link.{n}.flows"), l.total_flows);
+            m.inc(&format!("link.{n}.losses"), l.total_losses);
+            m.inc(&format!("link.{n}.retransmit_bytes"), l.total_retransmit_bytes);
+            m.gauge(&format!("link.{n}.active_flows_now"), l.active_flows() as f64);
+        }
+        for i in 0..self.env.n_servers() {
+            let s = self.env.server(ServerId(i));
+            let n = &s.name;
+            m.inc(&format!("server.{n}.bytes"), s.total_bytes);
+            m.inc(&format!("server.{n}.ops"), s.total_ops);
+            m.gauge(&format!("server.{n}.busy_until"), s.busy_until);
+        }
+        m.inc("op.locate_fallbacks", self.stats.locate_fallbacks);
+        m.inc("op.locate_fallback_consults", self.stats.locate_fallback_consults);
+        m.inc("sim_invariant_violations", self.net.invariant_violations());
+        m.inc("engine.events_processed", self.env.events_processed());
+        m.gauge("engine.horizon", self.env.horizon());
+        m
+    }
+
+    /// Package everything the flight recorder captured — the typed
+    /// event stream, sampled metrics enriched with span-latency
+    /// histograms and link-utilization series derived from the events,
+    /// and the link/server name tables — ready for
+    /// [`TracedReport::chrome_trace`] / [`TracedReport::metrics_jsonl`].
+    /// Meaningful after a run with `tb.env.record_trace(true)`; with
+    /// the recorder off the event stream is empty but the sampled
+    /// metrics are still valid.
+    pub fn traced_report(&self) -> TracedReport {
+        let events = self.env.events().to_vec();
+        let link_names: Vec<String> =
+            (0..self.env.n_links()).map(|i| self.env.link(LinkId(i)).name.clone()).collect();
+        let server_names: Vec<String> =
+            (0..self.env.n_servers()).map(|i| self.env.server(ServerId(i)).name.clone()).collect();
+        let mut metrics = self.sample_metrics();
+        crate::obs::metrics::fold_events(&mut metrics, &events, &link_names);
+        TracedReport { events, metrics, link_names, server_names }
     }
 
     /// Drop every cache in the testbed and reset resource horizons +

@@ -34,6 +34,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::engine::{CcConfig, Engine};
+use crate::obs::SpanId;
 use crate::simnet::{Link, Network};
 
 pub use integrity::{checksum, chunk_spans, Chunk, DigestSinks, FaultInjector};
@@ -274,6 +275,10 @@ impl TransferReport {
 pub struct FlightChunk {
     chunk: Chunk,
     cf: ChunkFlight,
+    /// Flight-recorder slice for this chunk (only when a recorder is
+    /// attached and the flight carries an op span); closed by
+    /// [`Flight::finish_chunk`].
+    span: Option<SpanId>,
 }
 
 impl FlightChunk {
@@ -299,6 +304,9 @@ pub struct Flight {
     attempts: Vec<u32>,
     delivered_bytes: u64,
     report: TransferReport,
+    /// Op span chunk slices are parented under (flight-recorder
+    /// attribution only; never affects timing).
+    span: Option<SpanId>,
 }
 
 impl Flight {
@@ -347,7 +355,14 @@ impl Flight {
                 path_losses: Vec::new(),
             },
             streams,
+            span: None,
         }
+    }
+
+    /// Parent this flight's chunk slices under the given op span in the
+    /// flight recorder (attribution only; no timing effect).
+    pub fn set_span(&mut self, span: SpanId) {
+        self.span = Some(span);
     }
 
     /// All chunks delivered and verified?
@@ -419,7 +434,14 @@ impl Flight {
             );
         }
         let cf = self.streams.begin_chunk(env, &self.path, s, chunk.len, cfg, self.sinks);
-        Ok(Some(FlightChunk { chunk, cf }))
+        let span = match self.span {
+            Some(parent) if env.recording() => {
+                let t0 = env.flow_start_time(cf.flow);
+                Some(env.begin_span(t0, format!("chunk{}", chunk.index), Some(parent), None))
+            }
+            _ => None,
+        };
+        Ok(Some(FlightChunk { chunk, cf, span }))
     }
 
     /// Second half of [`Flight::step`]: the chunk's flow has completed
@@ -433,10 +455,13 @@ impl Flight {
         faults: &mut FaultInjector,
         fc: FlightChunk,
     ) {
-        let FlightChunk { chunk, cf } = fc;
+        let FlightChunk { chunk, cf, span } = fc;
         let s = cf.stream;
         let idx = chunk.index as usize;
         let t = self.streams.finish_chunk(env, &self.path, cf, cfg, self.sinks);
+        if let Some(sp) = span {
+            env.end_span(sp, t);
+        }
         if faults.drops_stream(s, self.streams.sent(s)) {
             // the carrying stream died; the chunk is not acked and must
             // be re-sent on a surviving stream
@@ -512,6 +537,9 @@ impl XferEngine {
         sinks: DigestSinks,
     ) -> Result<TransferReport> {
         let mut flight = Flight::with_sinks(&self.cfg, net, req, now, sinks);
+        if let Some(span) = env.current_span() {
+            flight.set_span(span);
+        }
         // per-path congestion baseline: report the loss *delta* this
         // transfer experienced on each hop of its path
         let before = path_loss_baseline(env, net, req.src_dc, req.dst_dc);

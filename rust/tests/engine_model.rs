@@ -7,16 +7,25 @@
 //!   paths port onto the engine without perturbing any calibrated
 //!   experiment.
 //! * **Determinism** — two runs of the same seeded multi-flow workload
-//!   (joins, leaves, pauses, resumes, controls) produce byte-identical
-//!   event traces: the queue is ordered by `(time, sequence)` and every
-//!   per-link flow set iterates in a fixed order.
+//!   (joins, leaves, pauses, resumes, controls) produce identical typed
+//!   [`TraceEvent`] streams: the queue is ordered by `(time, sequence)`
+//!   and every per-link flow set iterates in a fixed order. The legacy
+//!   string trace is pinned as a pure [`std::fmt::Display`] view over
+//!   the typed stream, so string assertions can never drift from it.
 //! * **Processor sharing** — k equal concurrent flows each finish in
 //!   ~k× the solo time instead of serializing back-to-back.
 
 use scispace::engine::{CcConfig, Engine};
+use scispace::obs::TraceEvent;
 use scispace::simclock::SimEnv;
 use scispace::util::prop;
 use scispace::util::rng::Rng;
+
+/// Pin the string trace as a Display view over the typed events.
+fn assert_trace_is_display_view(e: &Engine) {
+    let rendered: Vec<String> = e.events().iter().map(|ev| ev.to_string()).collect();
+    assert_eq!(e.trace(), rendered, "string trace must render the typed stream");
+}
 
 #[test]
 fn prop_uncontended_flow_matches_busy_horizon_model() {
@@ -79,8 +88,9 @@ fn prop_equal_concurrent_flows_scale_like_processor_sharing() {
 }
 
 /// One seeded multi-flow workload: starts, multi-hop paths, weights,
-/// pauses, resumes and control events, drained to idle.
-fn seeded_trace(seed: u64) -> Vec<String> {
+/// pauses, resumes and control events, drained to idle. Returns the
+/// typed event stream.
+fn seeded_trace(seed: u64) -> Vec<TraceEvent> {
     let mut rng = Rng::new(seed);
     let mut e = Engine::new();
     e.record_trace(true);
@@ -117,7 +127,8 @@ fn seeded_trace(seed: u64) -> Vec<String> {
         e.resume(f, 2.0);
     }
     e.run_until_idle();
-    e.trace().to_vec()
+    assert_trace_is_display_view(&e);
+    e.events().to_vec()
 }
 
 #[test]
@@ -138,7 +149,7 @@ fn different_seeds_produce_different_traces() {
 
 /// Replay one fixed multi-flow workload on an engine whose links are
 /// already registered (links survive [`Engine::reset`]).
-fn replay_workload(e: &mut Engine, links: &[scispace::engine::LinkId]) -> Vec<String> {
+fn replay_workload(e: &mut Engine, links: &[scispace::engine::LinkId]) -> Vec<TraceEvent> {
     let mut rng = Rng::new(11);
     let mut flows = Vec::new();
     for k in 0..24 {
@@ -157,7 +168,8 @@ fn replay_workload(e: &mut Engine, links: &[scispace::engine::LinkId]) -> Vec<St
         e.resume(f, 1.0);
     }
     e.run_until_idle();
-    e.trace().to_vec()
+    assert_trace_is_display_view(e);
+    e.events().to_vec()
 }
 
 #[test]
@@ -181,6 +193,7 @@ fn reset_then_rerun_reproduces_a_fresh_engine_trace() {
     let first = replay_workload(&mut reused, &links);
     assert_eq!(first, expect, "sanity: same workload, same trace");
     reused.reset();
+    assert!(reused.events().is_empty(), "reset must clear the recorded events");
     assert!(reused.trace().is_empty(), "reset must clear the recorded trace");
     let second = replay_workload(&mut reused, &links);
     assert_eq!(second, expect, "a reset engine must replay byte-identically to a fresh one");
@@ -276,16 +289,23 @@ fn batch_admission_replays_byte_identical_traces_after_reset() {
     tb.env.record_trace(true);
     let r1 = tb.run_batch(ops());
     assert!(r1.iter().all(|r| r.is_ok()), "{r1:?}");
-    let t1 = tb.env.trace().to_vec();
-    assert!(!t1.is_empty(), "the batch must generate engine events");
+    let e1 = tb.env.events().to_vec();
+    assert!(!e1.is_empty(), "the batch must generate engine events");
+    assert!(
+        e1.iter().any(|ev| matches!(ev, TraceEvent::Control { .. })),
+        "admission controls must appear in the typed stream: {e1:?}"
+    );
+    let t1 = tb.env.trace();
     assert!(
         t1.iter().any(|line| line.contains("ctl tag=")),
-        "admission controls must appear in the trace: {t1:?}"
+        "admission controls must appear in the rendered trace: {t1:?}"
     );
 
     tb.drop_caches_and_reset();
     let r2 = tb.run_batch(ops());
-    let t2 = tb.env.trace().to_vec();
+    let e2 = tb.env.events().to_vec();
+    assert_eq!(e1, e2, "same batch after reset must replay an identical typed event stream");
+    let t2 = tb.env.trace();
     assert_eq!(t1, t2, "same batch after reset must replay a byte-identical event trace");
     for (x, y) in r1.iter().zip(&r2) {
         assert_eq!(

@@ -1,0 +1,288 @@
+//! Flight-recorder contract: recording is observationally free.
+//!
+//! The recorder must never perturb the simulation — with a recorder
+//! attached, every collaborator clock, op result, and resource counter
+//! must come out bit-identical to a recorder-off run, across the same
+//! operation scenarios the batch/single-op equivalence suite pins. On
+//! top of that, the Chrome-trace export must tell the whole story of a
+//! bulk op: the `op:replicate` span carries its admission, staging, and
+//! every chunk-flow slice as children.
+
+use scispace::api::batch::run_batch_with_sds;
+use scispace::api::{Op, OpResult};
+use scispace::db::Value;
+use scispace::obs::export::{validate_chrome, validate_metrics_row};
+use scispace::obs::TraceEvent;
+use scispace::sds::{Query, Sds, SdsConfig};
+use scispace::util::json::Json;
+use scispace::workspace::{AccessMode, Testbed};
+
+// ---------------------------------------------------------- fixtures
+
+/// A paper-default bed with two collaborators (c0@dc0, c1@dc1) and a
+/// discovery service, as used by the equivalence suite.
+fn bed() -> (Testbed, Sds) {
+    let mut tb = Testbed::paper_default();
+    tb.register("c0", 0);
+    tb.register("c1", 1);
+    let n = tb.dtns.len();
+    (tb, Sds::new(n, SdsConfig::default()))
+}
+
+/// The operation scenarios of the batch/single-op equivalence suite
+/// (`session_api.rs`): every `Op` variant, both engine paths (chunked
+/// bulk and sequential), and both typed-failure shapes.
+fn scenarios() -> Vec<(usize, Op, &'static str)> {
+    let scispace = AccessMode::Scispace;
+    vec![
+        (
+            0,
+            Op::Write {
+                path: "/eq/x.dat".into(),
+                offset: 0,
+                len: 5,
+                data: Some(b"hello".to_vec()),
+                mode: scispace,
+            },
+            "small create write",
+        ),
+        (
+            0,
+            Op::Write {
+                path: "/eq/big.dat".into(),
+                offset: 0,
+                len: 16 << 20,
+                data: None,
+                mode: scispace,
+            },
+            "bulk synthetic write (chunked engine path)",
+        ),
+        (
+            0,
+            Op::Write {
+                path: "/eq-lw/l.dat".into(),
+                offset: 0,
+                len: 1024,
+                data: None,
+                mode: AccessMode::ScispaceLw,
+            },
+            "native LW write",
+        ),
+        (
+            1,
+            Op::Read { path: "/eq/x.dat".into(), offset: 0, len: Some(5), mode: scispace },
+            "small remote read (rpc path)",
+        ),
+        (
+            1,
+            Op::Read { path: "/eq/big.dat".into(), offset: 0, len: Some(16 << 20), mode: scispace },
+            "bulk remote read (chunked engine path)",
+        ),
+        (
+            1,
+            Op::Read { path: "/eq/x.dat".into(), offset: 0, len: None, mode: scispace },
+            "whole-file read (resolved length)",
+        ),
+        (
+            1,
+            Op::Read { path: "/eq/missing.dat".into(), offset: 0, len: Some(4), mode: scispace },
+            "missing read (typed failure, charged fallback)",
+        ),
+        (1, Op::Ls { prefix: "/eq".into() }, "ls fan-out"),
+        (0, Op::Locate { path: "/eq/x.dat".into() }, "locate"),
+        (
+            0,
+            Op::Replicate { path: "/eq/big.dat".into(), dst_dc: 1 },
+            "bulk replicate (chunked engine path)",
+        ),
+        (
+            0,
+            Op::Replicate { path: "/eq/big.dat".into(), dst_dc: 0 },
+            "replicate failure (already replicated)",
+        ),
+        (
+            0,
+            Op::Tag { path: "/eq/x.dat".into(), attr: "kind".into(), value: Value::Int(7) },
+            "tag",
+        ),
+        (1, Op::Query { query: Query::parse("kind = 7").unwrap() }, "query"),
+    ]
+}
+
+/// Digest/metadata work charged on the DTN CPUs, summed across DTNs.
+fn dtn_cpu_totals(tb: &Testbed) -> (u64, u64) {
+    (0..tb.dtns.len()).fold((0, 0), |(b, o), i| {
+        let r = tb.env.resource(tb.dtns[i].meta_cpu);
+        (b + r.total_bytes, o + r.total_ops)
+    })
+}
+
+/// Bit-identical observable state: collaborator clocks, op stats, DTN
+/// CPU accounting, and the shared WAN byte counter.
+fn assert_beds_identical(a: &Testbed, b: &Testbed, step: &str) {
+    for c in 0..a.collabs.len() {
+        assert_eq!(
+            a.now(c).to_bits(),
+            b.now(c).to_bits(),
+            "{step}: collaborator {c} clock drifted under recording: {} vs {}",
+            a.now(c),
+            b.now(c)
+        );
+    }
+    assert_eq!(a.stats.locate_fallbacks, b.stats.locate_fallbacks, "{step}: fallbacks");
+    assert_eq!(
+        a.stats.locate_fallback_consults, b.stats.locate_fallback_consults,
+        "{step}: fallback consults"
+    );
+    assert_eq!(dtn_cpu_totals(a), dtn_cpu_totals(b), "{step}: DTN CPU accounting");
+    assert_eq!(
+        a.env.link(a.net.wan.res).total_bytes,
+        b.env.link(b.net.wan.res).total_bytes,
+        "{step}: WAN bytes"
+    );
+}
+
+// --------------------------------------------- zero-overhead recording
+
+#[test]
+fn recorder_on_is_bit_identical_to_recorder_off_for_every_scenario() {
+    // Three lockstep beds: recorder off, recorder on, and a second
+    // recorder-on bed that pins trace determinism (identical runs must
+    // replay identical typed streams).
+    let (mut off, mut sds_off) = bed();
+    let (mut on, mut sds_on) = bed();
+    let (mut on2, mut sds_on2) = bed();
+    on.env.record_trace(true);
+    on2.env.record_trace(true);
+    for (c, op, step) in scenarios() {
+        let r_off = run_batch_with_sds(&mut off, &mut sds_off, vec![(c, op.clone())]);
+        let r_on = run_batch_with_sds(&mut on, &mut sds_on, vec![(c, op.clone())]);
+        let r_on2 = run_batch_with_sds(&mut on2, &mut sds_on2, vec![(c, op)]);
+        assert_eq!(
+            r_off[0].finished_at().to_bits(),
+            r_on[0].finished_at().to_bits(),
+            "{step}: recorder changed the op completion time"
+        );
+        assert_eq!(
+            r_on[0].finished_at().to_bits(),
+            r_on2[0].finished_at().to_bits(),
+            "{step}: recorded runs diverged from each other"
+        );
+        assert_eq!(r_off[0].is_ok(), r_on[0].is_ok(), "{step}: result variant flipped");
+        assert_beds_identical(&off, &on, step);
+        assert_beds_identical(&on, &on2, step);
+    }
+    assert!(off.env.events().is_empty(), "recorder off must buffer nothing");
+    assert!(!on.env.events().is_empty(), "recorder on must have captured the run");
+    assert_eq!(
+        on.env.events(),
+        on2.env.events(),
+        "identical recorded runs must replay identical typed event streams"
+    );
+    // The string trace stays a pure Display view of the typed stream.
+    let rendered: Vec<String> = on.env.events().iter().map(TraceEvent::to_string).collect();
+    assert_eq!(on.env.trace(), rendered);
+}
+
+#[test]
+fn blocking_session_path_is_bit_identical_with_recorder_on() {
+    // The single-op Session path (blocking transfer, spans picked up
+    // via the engine's current-span) must also be timing-transparent.
+    let mut off = Testbed::paper_default();
+    let mut on = Testbed::paper_default();
+    let a = off.register("a", 0);
+    assert_eq!(a, on.register("a", 0));
+    on.env.record_trace(true);
+    let len = 24u64 << 20;
+    let w_off = off.session(a).write("/obs/big.dat").len(len).submit().unwrap();
+    let w_on = on.session(a).write("/obs/big.dat").len(len).submit().unwrap();
+    assert_eq!(w_off.finished_at().to_bits(), w_on.finished_at().to_bits(), "write time");
+    let r_off = off.session(a).replicate("/obs/big.dat").to(1).submit().unwrap();
+    let r_on = on.session(a).replicate("/obs/big.dat").to(1).submit().unwrap();
+    assert_eq!(r_off.finished_at().to_bits(), r_on.finished_at().to_bits(), "replicate time");
+    assert_beds_identical(&off, &on, "blocking session ops");
+    // The recorded run carries the op spans and their chunk children.
+    let has_op_span = on
+        .env
+        .events()
+        .iter()
+        .any(|e| matches!(e, TraceEvent::SpanBegin { name, .. } if name == "op:replicate"));
+    assert!(has_op_span, "blocking replicate must open an op span");
+    let has_chunk = on
+        .env
+        .events()
+        .iter()
+        .any(|e| matches!(e, TraceEvent::SpanBegin { name, .. } if name.starts_with("chunk")));
+    assert!(has_chunk, "blocking replicate must record chunk-flow spans");
+}
+
+// --------------------------------------------- chrome-trace acceptance
+
+#[test]
+fn replicate_span_contains_admission_staging_and_every_chunk_slice() {
+    let mut tb = Testbed::paper_default();
+    let a = tb.register("a", 0);
+    let len = 16u64 << 20;
+    tb.session(a).write("/obs/big.dat").len(len).submit().unwrap();
+    tb.quiesce();
+    tb.env.record_trace(true);
+    let results =
+        tb.run_batch(vec![(a, Op::Replicate { path: "/obs/big.dat".into(), dst_dc: 1 })]);
+    assert!(results[0].is_ok(), "{:?}", results[0].err());
+    let rep = match &results[0] {
+        OpResult::Replicated(rep) => rep.clone(),
+        other => panic!("expected Replicated, got {other:?}"),
+    };
+    assert_eq!(rep.chunks as u64, len.div_ceil(tb.cfg.xfer.chunk_bytes), "chunk count");
+
+    let report = tb.traced_report();
+    let doc = report.chrome_trace();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let slices: Vec<&Json> =
+        events.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("X")).collect();
+    let name_of = |e: &Json| e.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+
+    // The op span itself, with a span id the children point back to.
+    let op = slices
+        .iter()
+        .find(|e| name_of(e) == "op:replicate")
+        .expect("op:replicate slice in the export");
+    let op_id = op
+        .get("args")
+        .and_then(|args| args.get("span"))
+        .and_then(Json::as_f64)
+        .expect("op slice carries its span id");
+    assert!(op.get("dur").and_then(Json::as_f64).unwrap() > 0.0, "op span has extent");
+
+    // Its direct children: admission, staging, and one slice per chunk.
+    let mut children: Vec<String> = Vec::new();
+    for e in &slices {
+        let parent = e.get("args").and_then(|args| args.get("parent")).and_then(Json::as_f64);
+        if parent == Some(op_id) {
+            children.push(name_of(e));
+        }
+    }
+    assert!(children.iter().any(|n| n == "admission"), "admission child: {children:?}");
+    assert!(children.iter().any(|n| n == "staging"), "staging child: {children:?}");
+    let chunk_slices = children.iter().filter(|n| n.starts_with("chunk")).count();
+    assert_eq!(
+        chunk_slices as u32, rep.chunks,
+        "every chunk flow must appear as a slice under the op span: {children:?}"
+    );
+
+    // Both exports validate against the checked-in schemas.
+    let schema = Json::parse(include_str!("../../schemas/chrome_trace.schema.json")).unwrap();
+    validate_chrome(&doc, &schema).expect("chrome trace validates");
+    let row_schema = Json::parse(include_str!("../../schemas/metrics_row.schema.json")).unwrap();
+    let jsonl = report.metrics_jsonl();
+    assert!(!jsonl.is_empty(), "metrics export must not be empty");
+    for line in jsonl.lines() {
+        let row = Json::parse(line).expect("metrics row parses");
+        validate_metrics_row(&row, &row_schema).expect("metrics row validates");
+    }
+    // The metrics registry saw the replicate span's latency.
+    assert!(
+        report.metrics.histogram("span.op:replicate.latency_s").is_some(),
+        "op latency histogram folded from the event stream"
+    );
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Validate flight-recorder exports against the checked-in schemas.
+
+Mirrors the Rust validators in ``rust/src/obs/export.rs`` so CI can
+check the artifacts `scispace trace` writes without rebuilding the
+binary:
+
+    python3 scripts/validate_trace.py TRACE_replicate.trace.json \
+        TRACE_replicate.metrics.jsonl
+
+Exit code is non-zero on the first violation. Schemas are resolved
+relative to this script (``../schemas``).
+"""
+
+import json
+import pathlib
+import sys
+
+SCHEMAS = pathlib.Path(__file__).resolve().parent.parent / "schemas"
+
+TYPES = {
+    "string": str,
+    "number": (int, float),
+    "boolean": bool,
+    "object": dict,
+    "array": list,
+}
+
+
+def check_required(value, spec, ctx):
+    for field, ty in spec.items():
+        if field not in value:
+            raise SystemExit(f"{ctx}: missing field '{field}'")
+        got = value[field]
+        # bool is an int subclass in Python; keep "number" strict.
+        if ty == "number" and isinstance(got, bool):
+            raise SystemExit(f"{ctx}: field '{field}' is not a number")
+        if not isinstance(got, TYPES[ty]):
+            raise SystemExit(f"{ctx}: field '{field}' is not a {ty}")
+
+
+def validate_chrome(doc, schema):
+    for key in schema["required"]:
+        if key not in doc:
+            raise SystemExit(f"document missing '{key}'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise SystemExit("'traceEvents' is not an array")
+    base = schema["events"]["required"]
+    phases = schema["events"]["ph"]
+    for i, ev in enumerate(events):
+        ctx = f"traceEvents[{i}]"
+        check_required(ev, base, ctx)
+        ph = ev.get("ph")
+        if ph not in phases:
+            raise SystemExit(f"{ctx}: unknown ph '{ph}'")
+        check_required(ev, phases[ph].get("required", {}), ctx)
+    return len(events)
+
+
+def validate_metrics(path, schema):
+    kinds = schema["kinds"]
+    n = 0
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        if not line.strip():
+            continue
+        row = json.loads(line)
+        ctx = f"{path.name}:{lineno}"
+        check_required(row, schema["required"], ctx)
+        kind = row.get("kind")
+        if kind not in kinds:
+            raise SystemExit(f"{ctx}: unknown kind '{kind}'")
+        check_required(row, kinds[kind].get("required", {}), ctx)
+        n += 1
+    return n
+
+
+def main(argv):
+    if len(argv) != 3:
+        raise SystemExit(f"usage: {argv[0]} <trace.json> <metrics.jsonl>")
+    chrome_schema = json.loads((SCHEMAS / "chrome_trace.schema.json").read_text())
+    row_schema = json.loads((SCHEMAS / "metrics_row.schema.json").read_text())
+    trace_path = pathlib.Path(argv[1])
+    metrics_path = pathlib.Path(argv[2])
+    n_events = validate_chrome(json.loads(trace_path.read_text()), chrome_schema)
+    n_rows = validate_metrics(metrics_path, row_schema)
+    if n_events == 0:
+        raise SystemExit(f"{trace_path.name}: no trace events")
+    if n_rows == 0:
+        raise SystemExit(f"{metrics_path.name}: no metrics rows")
+    print(f"ok: {trace_path.name} ({n_events} events), {metrics_path.name} ({n_rows} rows)")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
