@@ -17,7 +17,7 @@ use scispace::bench::{
     fig_xfer_mix, fig_xfer_streams, fig_xfer_streams_cc, print_xfer_mix, print_xfer_streams,
     print_xfer_streams_cc,
 };
-use scispace::simclock::SimEnv;
+use scispace::engine::Engine;
 use scispace::simnet::{NetConfig, Network};
 use scispace::util::cli::Args;
 use scispace::util::units::{fmt_bytes, fmt_secs, parse_bytes};
@@ -44,7 +44,7 @@ fn main() {
     print_xfer_mix(&fig_xfer_mix(total / 4));
 
     // fault-injected run: corrupt one chunk, drop one stream
-    let mut env = SimEnv::new();
+    let mut env = Engine::new();
     let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
     let engine = XferEngine::new(XferConfig::default());
     let mut faults = FaultInjector::with_seed(7);

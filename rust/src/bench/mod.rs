@@ -10,7 +10,7 @@
 
 use crate::api::{Op, OpResult};
 use crate::db::Value;
-use crate::engine::Engine;
+use crate::engine::{Engine, SchedMode};
 use crate::meu;
 use crate::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
 use crate::shdf;
@@ -1103,6 +1103,121 @@ pub fn fig_engine_hotpath(transfers: usize, bytes: u64) -> EngineHotpathRow {
     }
 }
 
+/// One flow-count sweep point: the same single-congested-link drain
+/// timed under the incremental scheduler and the retained
+/// full-recompute reference ([`SchedMode::FullRecompute`]), so the
+/// superlinear blow-up of the old scheme — and the speedup of the new
+/// one — is visible per scale.
+#[derive(Debug, Clone)]
+pub struct EngineSweepRow {
+    /// Concurrent flows sharing the link.
+    pub flows: usize,
+    /// Drain repetitions folded into the timing (small scales repeat
+    /// so the wall-clock rises above timer noise).
+    pub rounds: usize,
+    /// Live heap events across all rounds (identical in both modes —
+    /// asserted, along with bit-identical finish times).
+    pub events_processed: u64,
+    /// Orphaned (lazily deleted) heap entries, incremental mode.
+    pub events_orphaned: u64,
+    /// Wall-clock seconds, incremental mode.
+    pub wall_clock_s: f64,
+    /// Live events per wall-clock second, incremental mode.
+    pub events_per_sec: f64,
+    /// Wall-clock seconds, full-recompute reference.
+    pub ref_wall_clock_s: f64,
+    /// Live events per wall-clock second, full-recompute reference.
+    pub ref_events_per_sec: f64,
+    /// Orphaned heap entries, full-recompute reference.
+    pub ref_events_orphaned: u64,
+    /// `ref_wall_clock_s / wall_clock_s` — the before/after speedup.
+    pub speedup: f64,
+}
+
+/// One timed drain at a sweep point: `n` flows with skewed sizes,
+/// weights and staggered arrivals on one shared link, repeated
+/// `rounds` times on a fresh engine. Returns the first round's finish
+/// bits plus summed live/orphaned event counts and the wall clock.
+fn sweep_drain(n: usize, rounds: usize, mode: SchedMode) -> (Vec<u64>, u64, u64, f64) {
+    let mut finishes: Vec<u64> = Vec::new();
+    let mut events = 0u64;
+    let mut orphans = 0u64;
+    let ((), wall_clock_s) = crate::util::timer::time_it(|| {
+        for _ in 0..rounds {
+            let mut e = Engine::new();
+            e.set_sched_mode(mode);
+            let l = e.add_link("hot", 10e9, 1e-4);
+            // skewed sizes + staggered arrivals: every join and every
+            // completion reshuffles the fair shares, which is exactly
+            // the wave the old scheme re-water-filled per flow
+            let fs: Vec<_> = (0..n)
+                .map(|i| {
+                    let bytes = ((i as u64 % 29) + 1) << 18;
+                    let w = [1.0, 2.0, 4.0][i % 3];
+                    e.start_flow(&[l], bytes, i as f64 * 1e-5, w)
+                })
+                .collect();
+            e.run_until_idle();
+            events += e.events_processed();
+            orphans += e.events_orphaned();
+            if finishes.is_empty() {
+                finishes = fs
+                    .iter()
+                    .map(|&f| e.flow_finish(f).expect("sweep flow must drain").to_bits())
+                    .collect();
+            }
+        }
+    });
+    (finishes, events, orphans, wall_clock_s)
+}
+
+/// ISSUE 7 satellite: sweep concurrent-flow counts (4 / 64 / 1024) on
+/// one congested link, timing each scale under both scheduling modes.
+/// Asserts in passing that the two modes drain to bit-identical finish
+/// times with equal live-event counts — the bench doubles as a cheap
+/// end-to-end equivalence check.
+pub fn fig_engine_flow_sweep() -> Vec<EngineSweepRow> {
+    [4usize, 64, 1024]
+        .iter()
+        .map(|&n| {
+            let rounds = (4096 / n).max(1);
+            let (bits, ev, orph, wall) = sweep_drain(n, rounds, SchedMode::Incremental);
+            let (ref_bits, ref_ev, ref_orph, ref_wall) =
+                sweep_drain(n, rounds, SchedMode::FullRecompute);
+            assert_eq!(bits, ref_bits, "sweep({n}): modes must drain to identical finish bits");
+            assert_eq!(ev, ref_ev, "sweep({n}): live event counts must match across modes");
+            let eps = |e: u64, w: f64| if w > 0.0 { e as f64 / w } else { 0.0 };
+            EngineSweepRow {
+                flows: n,
+                rounds,
+                events_processed: ev,
+                events_orphaned: orph,
+                wall_clock_s: wall,
+                events_per_sec: eps(ev, wall),
+                ref_wall_clock_s: ref_wall,
+                ref_events_per_sec: eps(ref_ev, ref_wall),
+                ref_events_orphaned: ref_orph,
+                speedup: if wall > 0.0 { ref_wall / wall } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// Print the flow-count sweep rows.
+pub fn print_engine_sweep(rows: &[EngineSweepRow]) {
+    println!("\n== Fig engine-sweep: incremental vs full-recompute scheduling ==");
+    println!(
+        "{:>6} {:>7} {:>12} {:>14} {:>14} {:>9}",
+        "flows", "rounds", "live events", "inc events/s", "ref events/s", "speedup"
+    );
+    for r in rows {
+        println!(
+            "{:>6} {:>7} {:>12} {:>14.0} {:>14.0} {:>8.2}x",
+            r.flows, r.rounds, r.events_processed, r.events_per_sec, r.ref_events_per_sec, r.speedup
+        );
+    }
+}
+
 /// Print the `fig_engine_hotpath` row.
 pub fn print_engine(row: &EngineHotpathRow) {
     println!("\n== Fig engine-hotpath: event throughput on a congested drain ==");
@@ -1120,9 +1235,11 @@ pub fn print_engine(row: &EngineHotpathRow) {
 }
 
 /// Machine-readable `BENCH_engine.json` payload: the engine's
-/// self-reported events/sec and wall-clock-per-sim-second, for CI perf
-/// tracking.
-pub fn engine_json(row: &EngineHotpathRow) -> Json {
+/// self-reported events/sec and wall-clock-per-sim-second (legacy
+/// top-level keys, unchanged), plus one `sweep` row per flow-count
+/// scale with the incremental-vs-full-recompute speedup. CI gates the
+/// sweep rows (1024-flow floor, low-vs-high ratio, speedup >= 2x).
+pub fn engine_json(row: &EngineHotpathRow, sweep: &[EngineSweepRow]) -> Json {
     use std::collections::BTreeMap;
     let mut m = BTreeMap::new();
     m.insert("bench".to_string(), Json::Str("engine".to_string()));
@@ -1135,6 +1252,24 @@ pub fn engine_json(row: &EngineHotpathRow) -> Json {
         "wall_clock_per_sim_second".to_string(),
         Json::Num(row.wall_clock_per_sim_second),
     );
+    let rows: Vec<Json> = sweep
+        .iter()
+        .map(|r| {
+            let mut s = BTreeMap::new();
+            s.insert("flows".to_string(), Json::Num(r.flows as f64));
+            s.insert("rounds".to_string(), Json::Num(r.rounds as f64));
+            s.insert("events_processed".to_string(), Json::Num(r.events_processed as f64));
+            s.insert("events_orphaned".to_string(), Json::Num(r.events_orphaned as f64));
+            s.insert("wall_clock_s".to_string(), Json::Num(r.wall_clock_s));
+            s.insert("events_per_sec".to_string(), Json::Num(r.events_per_sec));
+            s.insert("ref_wall_clock_s".to_string(), Json::Num(r.ref_wall_clock_s));
+            s.insert("ref_events_per_sec".to_string(), Json::Num(r.ref_events_per_sec));
+            s.insert("ref_events_orphaned".to_string(), Json::Num(r.ref_events_orphaned as f64));
+            s.insert("speedup".to_string(), Json::Num(r.speedup));
+            Json::Obj(s)
+        })
+        .collect();
+    m.insert("sweep".to_string(), Json::Arr(rows));
     Json::Obj(m)
 }
 
@@ -1444,11 +1579,42 @@ mod tests {
         assert!(row.sim_seconds > 0.0, "{row:?}");
         assert!(row.events_per_sec > 0.0, "{row:?}");
         assert!(row.wall_clock_per_sim_second > 0.0, "{row:?}");
-        let j = engine_json(&row);
+        // a small sweep (the bench binary runs the full 4/64/1024 one)
+        let sweep: Vec<EngineSweepRow> = [4usize, 16]
+            .iter()
+            .map(|&n| {
+                let (bits, ev, orph, wall) = sweep_drain(n, 8, SchedMode::Incremental);
+                let (ref_bits, ref_ev, ref_orph, ref_wall) =
+                    sweep_drain(n, 8, SchedMode::FullRecompute);
+                assert_eq!(bits, ref_bits, "sweep({n}): finish bits must match across modes");
+                assert_eq!(ev, ref_ev, "sweep({n}): live event counts must match across modes");
+                EngineSweepRow {
+                    flows: n,
+                    rounds: 8,
+                    events_processed: ev,
+                    events_orphaned: orph,
+                    wall_clock_s: wall,
+                    events_per_sec: if wall > 0.0 { ev as f64 / wall } else { 0.0 },
+                    ref_wall_clock_s: ref_wall,
+                    ref_events_per_sec: if ref_wall > 0.0 { ref_ev as f64 / ref_wall } else { 0.0 },
+                    ref_events_orphaned: ref_orph,
+                    speedup: if wall > 0.0 { ref_wall / wall } else { 0.0 },
+                }
+            })
+            .collect();
+        assert!(sweep.iter().all(|r| r.events_processed > 0), "{sweep:?}");
+        let j = engine_json(&row, &sweep);
         let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
         assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("engine"));
         assert!(
             parsed.get("events_per_sec").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "{parsed:?}"
+        );
+        let rows = parsed.get("sweep").and_then(Json::as_arr).expect("sweep rows");
+        assert_eq!(rows.len(), 2, "{parsed:?}");
+        assert!(
+            rows.iter()
+                .all(|r| r.get("events_per_sec").and_then(Json::as_f64).unwrap_or(0.0) > 0.0),
             "{parsed:?}"
         );
     }

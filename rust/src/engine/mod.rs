@@ -7,8 +7,8 @@
 //! * [`PsLink`] — a *processor-sharing* link. Every flow currently in
 //!   service receives `bandwidth * weight / total_weight`; whenever a
 //!   flow joins, leaves, pauses or resumes, the engine advances every
-//!   co-resident flow's residual bytes to the event time and recomputes
-//!   each projected finish. This is what lets two concurrent WAN
+//!   co-resident flow's residual bytes to the event time and re-projects
+//!   the link's earliest finish. This is what lets two concurrent WAN
 //!   transfers *share* the wire (each finishing in ~2x the solo time)
 //!   instead of serializing back-to-back — the contention behaviour the
 //!   paper's interference figures depend on, and the one the old
@@ -89,6 +89,48 @@
 //! typed form. Recording is zero-cost when off: no event construction
 //! happens, and every virtual timing is bit-identical either way
 //! (pinned by `tests/obs_recorder.rs`).
+//!
+//! ## The hot path: incremental scheduling, lazy deletion, flow slab
+//!
+//! A share change on a link (join/leave/pause/resume/loss) invalidates
+//! every co-resident flow's projected finish. The engine does **not**
+//! re-queue one heap event per flow: `reschedule_link` keeps a cached
+//! per-flow rate vector on the link, bumps the link's projection
+//! generation (`done_gen`, orphaning the stale entry), and pushes a
+//! **single** `HopDone` event for the earliest projected completion —
+//! ties resolved to the lowest flow index, which is exactly the
+//! `(time, seq)` order the one-event-per-flow scheme would have popped
+//! in. A join/leave wave over n flows therefore costs O(n) recompute
+//! and O(1) heap traffic instead of O(n) heap churn per change (O(n²)
+//! per wave). The cached rates are reused verbatim by `advance_link` —
+//! membership and windows cannot change between a reschedule and the
+//! following advance, so the cached vector is bit-identical to a fresh
+//! recompute.
+//!
+//! Supporting structures, all invisible to callers:
+//!
+//! * **Slot-indexed membership** — each in-service flow records its
+//!   position in its link's ascending `active` vector (`link_slot`),
+//!   so leaving is a positional `remove` instead of a binary search,
+//!   and a per-link windowed-flow counter replaces the O(n) "does this
+//!   managed link host a windowed flow?" scan.
+//! * **Lazy deletion accounting** — superseded projections, cleared
+//!   loss timers and cancelled arrivals stay in the heap until popped,
+//!   then count into [`Engine::events_orphaned`];
+//!   [`Engine::events_processed`] counts only *live* events, so the
+//!   self-reported throughput numerator is not inflated by dead
+//!   entries.
+//! * **Flow slab** — [`Engine::retire_flow`] returns a finished flow's
+//!   slot to a free list for reuse by the next `start_flow`, so
+//!   long-running benches stop growing the flow table without bound.
+//!   A reused slot keeps its event generation, so stale heap entries
+//!   referencing the old tenant stay orphaned.
+//! * **Reference mode** — [`Engine::set_sched_mode`] can select
+//!   [`SchedMode::FullRecompute`], the pre-optimization
+//!   one-event-per-flow scheme, kept as the differential-testing
+//!   oracle and the before/after baseline in `BENCH_engine.json`.
+//!   Both modes produce bit-identical live event streams and timings;
+//!   only the dead heap traffic differs.
 //!
 //! ## Causality and the per-link clamp
 //!
@@ -192,8 +234,9 @@ impl CcState {
 
 /// A FIFO-served component with per-op latency and streaming bandwidth.
 ///
-/// Kept arithmetically identical to the pre-event-core `Resource` so the
-/// `simclock` compatibility shim is exact.
+/// Kept arithmetically identical to the pre-event-core `Resource`, so
+/// sequential callers ported from the retired `simclock` shim see
+/// exact times.
 #[derive(Debug, Clone)]
 pub struct Server {
     /// Human-readable name (for traces and debugging).
@@ -247,7 +290,19 @@ pub struct PsLink {
     /// Virtual time the in-service flows' residuals were last advanced to.
     last_update: f64,
     /// Flows currently in service, ascending by flow index (determinism).
+    /// Each member's position here is mirrored in `Flow::link_slot`.
     active: Vec<usize>,
+    /// Cached per-flow service rates, aligned with `active`. Refreshed
+    /// by every reschedule; reused verbatim by the next advance (same
+    /// inputs, so bit-identical to a fresh recompute — see the module
+    /// docs).
+    rates: Vec<f64>,
+    /// Projection generation: bumped by every reschedule, orphaning the
+    /// previously pushed `HopDone` projection(s) for this link.
+    done_gen: u64,
+    /// In-service flows carrying a congestion window — replaces the
+    /// O(n) membership scan behind the managed-link fast-path check.
+    windowed_active: usize,
 }
 
 impl PsLink {
@@ -278,6 +333,9 @@ enum FlowState {
     Paused,
     /// All hops served; `finished_at` is valid.
     Done,
+    /// Returned to the slab free list ([`Engine::retire_flow`]); the
+    /// slot awaits reuse by a later `start_flow`.
+    Retired,
 }
 
 #[derive(Debug, Clone)]
@@ -291,9 +349,14 @@ struct Flow {
     /// Bytes left to serialize on the current hop.
     remaining: f64,
     state: FlowState,
-    /// Event-invalidation generation: any membership change on the
-    /// flow's link bumps this, orphaning stale heap entries.
+    /// Arrival-invalidation generation: re-scheduling or pausing a
+    /// pending arrival bumps this, orphaning the stale heap entry.
+    /// Monotonic across slab reuse so events referencing a slot's old
+    /// tenant stay orphaned.
     gen: u64,
+    /// This flow's position in its link's `active` vector while
+    /// `InService` (`usize::MAX` otherwise) — O(1) leave, no search.
+    link_slot: usize,
     /// Time of the currently-scheduled arrival (valid while `Scheduled`).
     next_arrival: f64,
     /// Arrival time captured when a pause lands before the arrival fired.
@@ -305,7 +368,10 @@ struct Flow {
 #[derive(Debug, Clone, Copy)]
 enum EventKind {
     Arrive { flow: usize, gen: u64 },
-    HopDone { flow: usize, gen: u64 },
+    /// A projected hop completion on `link`. `gen` is the link's
+    /// projection generation at push time: any reschedule since then
+    /// orphans the entry (lazy deletion).
+    HopDone { link: usize, flow: usize, gen: u64 },
     Control { tag: u64 },
     /// Sustained overload on a managed link came due: apply AIMD
     /// multiplicative decrease to its still-overloaded windowed flows.
@@ -337,6 +403,33 @@ impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
     }
+}
+
+/// Which finish-time recompute strategy `reschedule_link` uses.
+///
+/// Both modes produce bit-identical live event streams, timings and
+/// stats; only the amount of dead (lazily-deleted) heap traffic
+/// differs. The reference mode exists as the differential-testing
+/// oracle (`tests/engine_model.rs`) and as the in-run "before"
+/// measurement for the `BENCH_engine.json` speedup gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Project a single earliest-completion event per link per
+    /// reschedule (the default; O(1) heap traffic per share change).
+    #[default]
+    Incremental,
+    /// The pre-optimization scheme: one event per active flow per
+    /// recompute — the earliest fires, the reschedule it triggers
+    /// orphans the rest.
+    FullRecompute,
+}
+
+/// Outcome of popping one heap entry: a live event that did real work,
+/// or a lazily-deleted orphan (superseded generation) that only needed
+/// discarding.
+enum Processed {
+    Orphan,
+    Live(Option<Occurrence>),
 }
 
 /// What [`Engine::run_next`] surfaced to the caller.
@@ -380,9 +473,22 @@ pub struct Engine {
     /// The op span currently attributed (set by `api::exec_op`, read
     /// by the xfer layer to parent its chunk slices).
     cur_span: Option<SpanId>,
-    /// Heap events popped since construction/reset — the engine's
-    /// self-reported throughput numerator for `BENCH_engine.json`.
+    /// Live heap events processed since construction/reset — the
+    /// engine's self-reported throughput numerator for
+    /// `BENCH_engine.json`. Orphaned pops are excluded (they count
+    /// into `events_orphaned`).
     events_processed: u64,
+    /// Stale heap entries popped and discarded since construction/
+    /// reset (lazy deletion: superseded projections, cleared loss
+    /// timers, cancelled arrivals).
+    events_orphaned: u64,
+    /// Retired flow slots awaiting reuse (see [`Engine::retire_flow`]).
+    free_flows: Vec<usize>,
+    /// Running max over every flow completion ever (feeds `horizon`;
+    /// kept out-of-line so retiring/reusing flow slots cannot move it).
+    max_finished: f64,
+    /// Finish-time recompute strategy (config, survives `reset`).
+    sched_mode: SchedMode,
 }
 
 impl Engine {
@@ -491,6 +597,9 @@ impl Engine {
             tick_at: f64::INFINITY,
             last_update: 0.0,
             active: Vec::new(),
+            rates: Vec::new(),
+            done_gen: 0,
+            windowed_active: 0,
         });
         LinkId(self.links.len() - 1)
     }
@@ -499,8 +608,17 @@ impl Engine {
     /// windowed flows on a managed link are capped at `window / rtt`
     /// and suffer synthesized loss after `detect_s` of sustained
     /// overload. Plain flows are unaffected either way.
+    ///
+    /// Arm links at topology-build time: changing the knob while flows
+    /// are in service would silently invalidate the link's cached rate
+    /// allocation, so that is rejected.
     pub fn set_link_loss_detect(&mut self, id: LinkId, detect_s: f64) {
         assert!(detect_s > 0.0, "loss-detect interval must be positive");
+        assert!(
+            self.links[id.0].active.is_empty(),
+            "arm congestion management before flows are in service on link {}",
+            id.0
+        );
         self.links[id.0].loss_detect_s = detect_s;
     }
 
@@ -563,11 +681,8 @@ impl Engine {
     ) -> FlowId {
         assert!(!path.is_empty(), "a flow needs at least one hop");
         assert!(weight > 0.0, "flow weight must be positive");
-        let id = self.flows.len();
-        if self.rec.is_some() {
-            self.emit(TraceEvent::FlowStart { t: at, flow: id, bytes, windowed: cc.is_some() });
-        }
-        self.flows.push(Flow {
+        let windowed = cc.is_some();
+        let mut fl = Flow {
             path: path.to_vec(),
             bytes,
             weight,
@@ -578,11 +693,47 @@ impl Engine {
             gen: 0,
             next_arrival: at,
             held_arrival: None,
+            link_slot: usize::MAX,
             started_at: at,
             finished_at: f64::NAN,
-        });
+        };
+        let id = match self.free_flows.pop() {
+            Some(slot) => {
+                // keep the generation monotonic across slot reuse so
+                // stale events naming the old tenant stay orphaned
+                fl.gen = self.flows[slot].gen;
+                self.flows[slot] = fl;
+                slot
+            }
+            None => {
+                self.flows.push(fl);
+                self.flows.len() - 1
+            }
+        };
+        if self.rec.is_some() {
+            self.emit(TraceEvent::FlowStart { t: at, flow: id, bytes, windowed });
+        }
         self.schedule_arrive(id, at);
         FlowId(id)
+    }
+
+    /// Return a finished flow's slot to the free list so long-running
+    /// workloads stop growing the flow table without bound. The flow
+    /// must be `Done`; its handle must not be used afterwards — a later
+    /// `start_flow` may hand the index out again (stale heap events
+    /// stay orphaned because the slot keeps its event generation).
+    pub fn retire_flow(&mut self, f: FlowId) {
+        let fl = &mut self.flows[f.0];
+        assert_eq!(
+            fl.state,
+            FlowState::Done,
+            "retire_flow({}) on a flow that has not finished",
+            f.0
+        );
+        fl.state = FlowState::Retired;
+        fl.path = Vec::new();
+        fl.cc = None;
+        self.free_flows.push(f.0);
     }
 
     /// The flow's completion time, if it has finished.
@@ -658,10 +809,8 @@ impl Engine {
                 let l = self.flows[i].path[self.flows[i].hop].0;
                 let t = self.now.max(self.links[l].last_update);
                 self.advance_link(l, t);
-                if let Ok(pos) = self.links[l].active.binary_search(&i) {
-                    self.links[l].active.remove(pos);
-                }
-                self.flows[i].gen += 1; // orphan its HopDone
+                self.link_remove_active(l, i);
+                self.flows[i].gen += 1; // defense: no arrival may target it
                 self.flows[i].state = FlowState::Paused;
                 self.flows[i].held_arrival = None;
                 self.reschedule_link(l, t);
@@ -678,7 +827,7 @@ impl Engine {
                     self.emit(TraceEvent::Pause { t: self.now, flow: i, remaining: None });
                 }
             }
-            FlowState::Paused | FlowState::Done => {}
+            FlowState::Paused | FlowState::Done | FlowState::Retired => {}
         }
     }
 
@@ -725,14 +874,24 @@ impl Engine {
 
     /// Process events until something notable happens (a flow completes,
     /// a control event fires) or the queue drains.
+    ///
+    /// Orphaned heap entries (lazy deletion) are discarded without
+    /// advancing the clock or the live-event counter; `now` is the time
+    /// of the last *live* event, which keeps it independent of how much
+    /// dead traffic the scheduling mode happens to leave behind.
     pub fn run_next(&mut self) -> Occurrence {
         while let Some(Reverse(ev)) = self.heap.pop() {
-            self.events_processed += 1;
-            if ev.t > self.now {
-                self.now = ev.t;
-            }
-            if let Some(occ) = self.process(ev) {
-                return occ;
+            match self.process(ev) {
+                Processed::Orphan => self.events_orphaned += 1,
+                Processed::Live(occ) => {
+                    self.events_processed += 1;
+                    if ev.t > self.now {
+                        self.now = ev.t;
+                    }
+                    if let Some(occ) = occ {
+                        return occ;
+                    }
+                }
             }
         }
         Occurrence::Idle
@@ -760,12 +919,9 @@ impl Engine {
     pub fn horizon(&self) -> f64 {
         let s = self.servers.iter().map(|r| r.busy_until).fold(self.now, f64::max);
         let l = self.links.iter().map(|r| r.last_update).fold(s, f64::max);
-        let f = self
-            .flows
-            .iter()
-            .filter(|f| f.state == FlowState::Done)
-            .map(|f| f.finished_at)
-            .fold(l, f64::max);
+        // completed flows contribute through a running max, so neither
+        // retiring a flow's slot nor reusing it can move the horizon
+        let f = l.max(self.max_finished);
         self.heap.iter().map(|r| r.0.t).fold(f, f64::max)
     }
 
@@ -787,14 +943,20 @@ impl Engine {
             l.loss_gen = 0;
             l.tick_at = f64::INFINITY;
             l.active.clear();
+            l.rates.clear();
+            l.done_gen = 0;
+            l.windowed_active = 0;
         }
         self.flows.clear();
+        self.free_flows.clear();
+        self.max_finished = 0.0;
         self.heap.clear();
         self.seq = 0;
         self.now = 0.0;
         self.next_span = 0;
         self.cur_span = None;
         self.events_processed = 0;
+        self.events_orphaned = 0;
         if let Some(rec) = &mut self.rec {
             rec.clear();
         }
@@ -895,11 +1057,44 @@ impl Engine {
         self.cur_span
     }
 
-    /// Heap events popped since construction (or the last
+    /// Live heap events processed since construction (or the last
     /// [`Engine::reset`]) — the engine's self-reported throughput
-    /// numerator (`BENCH_engine.json`).
+    /// numerator (`BENCH_engine.json`). Orphaned pops are excluded;
+    /// see [`Engine::events_orphaned`].
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Stale heap entries popped and discarded since construction (or
+    /// the last [`Engine::reset`]): superseded finish projections,
+    /// cleared loss timers, cancelled arrivals. The lazy-deletion
+    /// overhead counter to [`Engine::events_processed`].
+    pub fn events_orphaned(&self) -> u64 {
+        self.events_orphaned
+    }
+
+    /// Select the finish-time recompute strategy (see [`SchedMode`]).
+    /// Intended for differential testing and benchmarking; switch only
+    /// while the event queue is idle so projections are not mixed.
+    pub fn set_sched_mode(&mut self, mode: SchedMode) {
+        assert!(self.heap.is_empty(), "switch scheduling modes on an idle engine");
+        self.sched_mode = mode;
+    }
+
+    /// The active finish-time recompute strategy.
+    pub fn sched_mode(&self) -> SchedMode {
+        self.sched_mode
+    }
+
+    /// Current size of the flow table, retired slots included (capacity
+    /// diagnostics for long-running workloads).
+    pub fn flow_slots(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Retired flow slots currently awaiting reuse.
+    pub fn free_flow_slots(&self) -> usize {
+        self.free_flows.len()
     }
 
     /// The time a flow was started (its requested start, before any
@@ -996,29 +1191,107 @@ impl Engine {
 
     /// Does `l` currently host a windowed flow it manages? The rate
     /// cap, growth, and loss logic only run then; everything else takes
-    /// the legacy zero-allocation processor-sharing path.
+    /// the legacy zero-allocation processor-sharing path. O(1): the
+    /// windowed membership count is maintained at join/leave.
     fn link_has_windowed(&self, l: usize) -> bool {
-        self.links[l].loss_detect_s.is_finite()
-            && self.links[l].active.iter().any(|&f| self.flows[f].cc.is_some())
+        self.links[l].loss_detect_s.is_finite() && self.links[l].windowed_active > 0
+    }
+
+    /// Insert `f` into link `l`'s active set, kept ascending by flow
+    /// index (the deterministic iteration order all share math depends
+    /// on). Records the flow's slot for O(1) removal and maintains the
+    /// windowed-membership count.
+    fn link_insert_active(&mut self, l: usize, f: usize) {
+        match self.links[l].active.binary_search(&f) {
+            Err(pos) => {
+                self.links[l].active.insert(pos, f);
+                self.flows[f].link_slot = pos;
+                for i in pos + 1..self.links[l].active.len() {
+                    let g = self.links[l].active[i];
+                    self.flows[g].link_slot = i;
+                }
+                if self.flows[f].cc.is_some() {
+                    self.links[l].windowed_active += 1;
+                }
+            }
+            Ok(_) => debug_assert!(false, "flow {f} already on link {l}"),
+        }
+    }
+
+    /// Remove `f` from link `l`'s active set via its recorded slot (no
+    /// search), shifting the slots of the flows behind it.
+    fn link_remove_active(&mut self, l: usize, f: usize) {
+        let pos = self.flows[f].link_slot;
+        debug_assert!(
+            pos < self.links[l].active.len() && self.links[l].active[pos] == f,
+            "flow {f} is not where its slot points on link {l}"
+        );
+        self.links[l].active.remove(pos);
+        self.flows[f].link_slot = usize::MAX;
+        for i in pos..self.links[l].active.len() {
+            let g = self.links[l].active[i];
+            self.flows[g].link_slot = i;
+        }
+        if self.flows[f].cc.is_some() {
+            self.links[l].windowed_active -= 1;
+        }
+    }
+
+    /// Refresh link `l`'s cached rate vector from its current
+    /// membership and windows. The unmanaged path reuses the cache's
+    /// allocation and the exact legacy share expression; the managed
+    /// path delegates to the water-filling recompute.
+    fn refresh_link_rates(&mut self, l: usize) {
+        if self.link_has_windowed(l) {
+            let rates = self.link_rates(l);
+            self.links[l].rates = rates;
+            return;
+        }
+        let mut rates = std::mem::take(&mut self.links[l].rates);
+        rates.clear();
+        let n = self.links[l].active.len();
+        let bw = self.links[l].bytes_per_s;
+        if !bw.is_finite() {
+            rates.resize(n, f64::INFINITY);
+        } else {
+            let mut total_w = 0.0;
+            for &f in &self.links[l].active {
+                total_w += self.flows[f].weight;
+            }
+            for &f in &self.links[l].active {
+                rates.push(bw * (self.flows[f].weight / total_w));
+            }
+        }
+        self.links[l].rates = rates;
     }
 
     /// Progress every in-service flow on link `l` to time `t >=
     /// last_update` at its current rate; on a managed link, windowed
     /// flows also open their windows (slow start below `ssthresh`,
     /// additive increase above it).
+    ///
+    /// Rates come from the link's cache: membership and windows cannot
+    /// have changed since the reschedule that filled it (every mutation
+    /// site reschedules), so the cached vector is bit-identical to a
+    /// fresh recompute — no allocation, no water-filling on this path.
     fn advance_link(&mut self, l: usize, t: f64) {
         let dt = t - self.links[l].last_update;
         if dt > 0.0 && !self.links[l].active.is_empty() {
             let bw = self.links[l].bytes_per_s;
-            let active = self.links[l].active.clone();
+            let n = self.links[l].active.len();
+            debug_assert_eq!(
+                self.links[l].rates.len(),
+                n,
+                "stale rate cache on link {l}: a membership change skipped its reschedule"
+            );
             if !bw.is_finite() {
-                for f in active {
+                for &f in &self.links[l].active {
                     self.flows[f].remaining = 0.0;
                 }
             } else if self.link_has_windowed(l) {
-                let rates = self.link_rates(l);
-                for (i, f) in active.into_iter().enumerate() {
-                    let rate = rates[i];
+                for i in 0..n {
+                    let f = self.links[l].active[i];
+                    let rate = self.links[l].rates[i];
                     let delivered = (dt * rate).min(self.flows[f].remaining);
                     if let Some(cc) = &mut self.flows[f].cc {
                         let grow = if cc.window < cc.ssthresh {
@@ -1032,11 +1305,9 @@ impl Engine {
                     self.flows[f].remaining = (self.flows[f].remaining - dt * rate).max(0.0);
                 }
             } else {
-                // the legacy inline share math: no allocation, and
-                // bit-identical to the pre-congestion engine
-                let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
-                for f in active {
-                    let share = bw * (self.flows[f].weight / total_w);
+                for i in 0..n {
+                    let f = self.links[l].active[i];
+                    let share = self.links[l].rates[i];
                     self.flows[f].remaining = (self.flows[f].remaining - dt * share).max(0.0);
                 }
             }
@@ -1046,71 +1317,93 @@ impl Engine {
         }
     }
 
-    /// Recompute and (re)schedule every in-service flow's projected hop
-    /// completion on link `l`, as of time `t` (= `last_update`); on a
-    /// managed link, also re-examine the congestion state (arm or clear
-    /// the loss timer, queue a growth tick for capped flows).
+    /// Re-project link `l`'s hop completion(s) as of time `t`
+    /// (= `last_update`); on a managed link, also re-examine the
+    /// congestion state (arm or clear the loss timer, queue a growth
+    /// tick for capped flows).
+    ///
+    /// Bumps the link's projection generation — lazily deleting
+    /// whatever it pushed last time — refreshes the cached rate
+    /// vector, then pushes a single event for the earliest projected
+    /// completion ([`SchedMode::Incremental`]) or one per flow
+    /// ([`SchedMode::FullRecompute`], the reference oracle). Ties on
+    /// the projected time resolve to the lowest flow index, which is
+    /// exactly the `(time, seq)` order the per-flow scheme pops in,
+    /// since each reschedule pushes in ascending flow order.
     fn reschedule_link(&mut self, l: usize, t: f64) {
-        let active = self.links[l].active.clone();
-        if active.is_empty() {
+        self.links[l].done_gen += 1;
+        if self.links[l].active.is_empty() {
+            self.links[l].rates.clear();
             // a drained link cannot be overloaded
             if self.links[l].congested_since.take().is_some() {
                 self.links[l].loss_gen += 1;
             }
             return;
         }
+        self.refresh_link_rates(l);
         let bw = self.links[l].bytes_per_s;
-        if self.link_has_windowed(l) {
-            let rates = self.link_rates(l);
-            for (i, &f) in active.iter().enumerate() {
-                self.flows[f].gen += 1;
-                let gen = self.flows[f].gen;
-                let dt = if bw.is_finite() {
-                    self.flows[f].remaining / rates[i]
-                } else {
-                    0.0
-                };
-                self.push_event(t + dt, EventKind::HopDone { flow: f, gen });
+        let n = self.links[l].active.len();
+        let gen = self.links[l].done_gen;
+        match self.sched_mode {
+            SchedMode::Incremental => {
+                let mut best_f = usize::MAX;
+                let mut best_t = f64::INFINITY;
+                for i in 0..n {
+                    let f = self.links[l].active[i];
+                    let dt = if bw.is_finite() {
+                        self.flows[f].remaining / self.links[l].rates[i]
+                    } else {
+                        0.0
+                    };
+                    // compare absolute times (not dts): float addition
+                    // can collapse distinct dts onto one completion
+                    // time, and those ties must break like the heap's
+                    let cand = t + dt;
+                    if best_f == usize::MAX || cand.total_cmp(&best_t).is_lt() {
+                        best_f = f;
+                        best_t = cand;
+                    }
+                }
+                self.push_event(best_t, EventKind::HopDone { link: l, flow: best_f, gen });
             }
-            self.update_congestion(l, t, &active, &rates);
-            return;
+            SchedMode::FullRecompute => {
+                for i in 0..n {
+                    let f = self.links[l].active[i];
+                    let dt = if bw.is_finite() {
+                        self.flows[f].remaining / self.links[l].rates[i]
+                    } else {
+                        0.0
+                    };
+                    self.push_event(t + dt, EventKind::HopDone { link: l, flow: f, gen });
+                }
+            }
         }
-        // the legacy inline share math: no allocation, bit-identical
-        let total_w: f64 = active.iter().map(|&f| self.flows[f].weight).sum();
-        for f in active {
-            self.flows[f].gen += 1;
-            let gen = self.flows[f].gen;
-            let dt = if bw.is_finite() {
-                let share = bw * (self.flows[f].weight / total_w);
-                self.flows[f].remaining / share
-            } else {
-                0.0
-            };
-            self.push_event(t + dt, EventKind::HopDone { flow: f, gen });
-        }
-        // a managed link hosting no windowed flow has no windowed
-        // demand: any overload episode is over
-        if self.links[l].loss_detect_s.is_finite()
+        if self.link_has_windowed(l) {
+            self.update_congestion(l, t);
+        } else if self.links[l].loss_detect_s.is_finite()
             && self.links[l].congested_since.take().is_some()
         {
+            // a managed link hosting no windowed flow has no windowed
+            // demand: any overload episode is over
             self.links[l].loss_gen += 1;
         }
     }
 
-    /// Congestion bookkeeping for managed link `l` after its rates were
-    /// recomputed: start or clear the sustained-overload episode (and
-    /// its pending loss event), and queue a growth tick while any
-    /// window-capped flow is still opening its window.
-    fn update_congestion(&mut self, l: usize, t: f64, active: &[usize], rates: &[f64]) {
+    /// Congestion bookkeeping for managed link `l` after its cached
+    /// rates were refreshed: start or clear the sustained-overload
+    /// episode (and its pending loss event), and queue a growth tick
+    /// while any window-capped flow is still opening its window.
+    fn update_congestion(&mut self, l: usize, t: f64) {
         let mut overloaded = false;
         let mut want_tick = false;
         let mut tick_rtt = f64::INFINITY;
-        for (i, &f) in active.iter().enumerate() {
+        for i in 0..self.links[l].active.len() {
+            let f = self.links[l].active[i];
             let Some(cc) = &self.flows[f].cc else { continue };
             if self.flows[f].remaining <= 0.0 {
                 continue;
             }
-            if cc.cap() > rates[i] * (1.0 + 1e-9) {
+            if cc.cap() > self.links[l].rates[i] * (1.0 + 1e-9) {
                 // pushing more than the link allocates: oversubscribed
                 overloaded = true;
             } else if cc.window < cc.cfg.max_window as f64 {
@@ -1134,25 +1427,28 @@ impl Engine {
         }
     }
 
-    fn process(&mut self, ev: Event) -> Option<Occurrence> {
+    fn process(&mut self, ev: Event) -> Processed {
         match ev.kind {
             EventKind::Control { tag } => {
                 if self.rec.is_some() {
                     self.emit(TraceEvent::Control { seq: ev.seq, t: ev.t, tag });
                 }
-                Some(Occurrence::Control { tag, at: ev.t })
+                Processed::Live(Some(Occurrence::Control { tag, at: ev.t }))
             }
             EventKind::Loss { link, gen } => {
                 if self.links[link].loss_gen != gen {
-                    return None; // the overload episode cleared in time
+                    return Processed::Orphan; // the overload episode cleared in time
                 }
                 let t = ev.t.max(self.links[link].last_update);
                 self.advance_link(link, t);
                 // hit every windowed flow still pushing more than its
-                // allocation: multiplicative decrease + go-back bytes
-                let active = self.links[link].active.clone();
+                // allocation: multiplicative decrease + go-back bytes.
+                // The windows just grew during the advance, so the caps
+                // are judged against freshly recomputed rates, not the
+                // pre-advance cache.
                 let rates = self.link_rates(link);
-                for (i, &f) in active.iter().enumerate() {
+                for i in 0..self.links[link].active.len() {
+                    let f = self.links[link].active[i];
                     let Some(cc) = &self.flows[f].cc else { continue };
                     if self.flows[f].remaining <= 0.0 || cc.cap() <= rates[i] * (1.0 + 1e-9) {
                         continue;
@@ -1177,29 +1473,24 @@ impl Engine {
                     self.links[link].total_losses += 1;
                     self.links[link].total_retransmit_bytes += retx as u64;
                     if self.rec.is_some() {
-                        self.emit(TraceEvent::Loss {
-                            seq: ev.seq,
-                            t,
-                            flow: f,
-                            link,
-                            window: win,
-                        });
+                        self.emit(TraceEvent::Loss { seq: ev.seq, t, flow: f, link, window: win });
                     }
                 }
                 self.links[link].loss_gen += 1;
                 self.links[link].congested_since = None;
                 self.reschedule_link(link, t);
-                None
+                Processed::Live(None)
             }
             EventKind::CcTick { link } => {
                 self.links[link].tick_at = f64::INFINITY;
                 if self.links[link].active.is_empty() {
-                    return None;
+                    return Processed::Live(None);
                 }
                 let t = ev.t.max(self.links[link].last_update);
                 self.advance_link(link, t);
                 self.reschedule_link(link, t);
                 if self.rec.is_some() {
+                    // recorder path only: the emit needs `&mut self`
                     let active = self.links[link].active.clone();
                     for f in active {
                         if let Some(cc) = &self.flows[f].cc {
@@ -1208,60 +1499,62 @@ impl Engine {
                         }
                     }
                 }
-                None
+                Processed::Live(None)
             }
             EventKind::Arrive { flow, gen } => {
                 if self.flows[flow].gen != gen {
-                    return None; // orphaned by a pause/reschedule
+                    return Processed::Orphan; // cancelled by a pause/re-schedule
                 }
                 let hop = self.flows[flow].hop;
                 let l = self.flows[flow].path[hop].0;
                 // never rewind a link: late joiners clamp to its floor
                 let t = ev.t.max(self.links[l].last_update);
                 self.advance_link(l, t);
-                match self.links[l].active.binary_search(&flow) {
-                    Err(pos) => self.links[l].active.insert(pos, flow),
-                    Ok(_) => debug_assert!(false, "flow {flow} already on link {l}"),
-                }
+                self.link_insert_active(l, flow);
                 self.flows[flow].state = FlowState::InService;
                 self.reschedule_link(l, t);
                 if self.rec.is_some() {
                     let remaining = self.flows[flow].remaining;
                     self.emit(TraceEvent::Join { seq: ev.seq, t, flow, hop, link: l, remaining });
                 }
-                None
+                Processed::Live(None)
             }
-            EventKind::HopDone { flow, gen } => {
-                if self.flows[flow].gen != gen {
-                    return None; // membership changed since projection
+            EventKind::HopDone { link, flow, gen } => {
+                if self.links[link].done_gen != gen {
+                    return Processed::Orphan; // superseded projection
                 }
+                // the generation matched, so no reschedule — hence no
+                // membership change — happened since this projection
+                // was pushed: the flow is still serving this hop
                 let hop = self.flows[flow].hop;
-                let l = self.flows[flow].path[hop].0;
-                let t = ev.t.max(self.links[l].last_update);
-                self.advance_link(l, t);
-                if let Ok(pos) = self.links[l].active.binary_search(&flow) {
-                    self.links[l].active.remove(pos);
-                }
+                debug_assert_eq!(self.flows[flow].state, FlowState::InService);
+                debug_assert_eq!(self.flows[flow].path[hop].0, link);
+                let t = ev.t.max(self.links[link].last_update);
+                self.advance_link(link, t);
+                self.link_remove_active(link, flow);
                 self.flows[flow].remaining = 0.0;
-                self.links[l].total_bytes += self.flows[flow].bytes;
-                self.links[l].total_flows += 1;
-                self.reschedule_link(l, t);
-                let done_at = t + self.links[l].latency_s;
+                self.links[link].total_bytes += self.flows[flow].bytes;
+                self.links[link].total_flows += 1;
+                self.reschedule_link(link, t);
+                let done_at = t + self.links[link].latency_s;
                 if self.rec.is_some() {
-                    self.emit(TraceEvent::Hop { seq: ev.seq, t, flow, hop, link: l });
+                    self.emit(TraceEvent::Hop { seq: ev.seq, t, flow, hop, link });
                 }
                 if hop + 1 < self.flows[flow].path.len() {
                     self.flows[flow].hop = hop + 1;
                     self.flows[flow].remaining = self.flows[flow].bytes as f64;
                     self.schedule_arrive(flow, done_at);
-                    None
+                    Processed::Live(None)
                 } else {
                     self.flows[flow].state = FlowState::Done;
                     self.flows[flow].finished_at = done_at;
+                    if done_at > self.max_finished {
+                        self.max_finished = done_at;
+                    }
                     if self.rec.is_some() {
                         self.emit(TraceEvent::FlowFinish { t: done_at, flow });
                     }
-                    Some(Occurrence::FlowDone { flow: FlowId(flow), at: done_at })
+                    Processed::Live(Some(Occurrence::FlowDone { flow: FlowId(flow), at: done_at }))
                 }
             }
         }
@@ -1656,5 +1949,118 @@ mod tests {
         assert_eq!(e.link(l).total_losses, 0);
         assert_eq!(e.link(l).total_retransmit_bytes, 0);
         assert!(e.link(l).loss_detect_s().is_finite(), "the loss knob is configuration");
+    }
+
+    // ------------------------------------ hot path: slab, lazy deletion
+
+    #[test]
+    fn orphaned_pops_are_excluded_from_events_processed() {
+        let mk = |mode: SchedMode| {
+            let mut e = Engine::new();
+            e.set_sched_mode(mode);
+            let l = e.add_link("wire", 100e6, 1e-3);
+            let f1 = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+            let f2 = e.start_flow(&[l], 50_000_000, 0.0, 1.0);
+            e.schedule_control(0.2, 0);
+            assert!(matches!(e.run_next(), Occurrence::Control { .. }));
+            e.pause(f2);
+            e.resume(f2, 0.4);
+            e.run_until_idle();
+            let t1 = e.flow_finish(f1).unwrap();
+            let t2 = e.flow_finish(f2).unwrap();
+            (t1.to_bits(), t2.to_bits(), e.events_processed(), e.events_orphaned())
+        };
+        let (a1, a2, live_inc, orph_inc) = mk(SchedMode::Incremental);
+        let (b1, b2, live_ref, orph_ref) = mk(SchedMode::FullRecompute);
+        assert_eq!(a1, b1, "f1's finish is mode-independent");
+        assert_eq!(a2, b2, "f2's finish is mode-independent");
+        assert_eq!(live_inc, live_ref, "live event counts are mode-independent");
+        assert!(orph_inc > 0, "the pause must orphan the stale projection");
+        assert!(orph_ref >= orph_inc, "the reference mode litters at least as much");
+    }
+
+    #[test]
+    fn retired_flow_slots_are_reused_without_growing_the_table() {
+        let (mut e, l) = one_link();
+        let f1 = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        let t1 = e.completion(f1);
+        e.retire_flow(f1);
+        assert_eq!(e.free_flow_slots(), 1);
+        let f2 = e.start_flow(&[l], 1 << 20, t1, 1.0);
+        assert_eq!(f2.0, f1.0, "the retired slot is handed out again");
+        assert_eq!(e.free_flow_slots(), 0);
+        let t2 = e.completion(f2);
+        assert!(t2 > t1);
+        assert_eq!(e.flow_slots(), 1, "the flow table did not grow");
+        assert!(e.horizon() >= t1, "retirement must not move the horizon back");
+    }
+
+    #[test]
+    #[should_panic(expected = "has not finished")]
+    fn retiring_an_unfinished_flow_panics() {
+        let (mut e, l) = one_link();
+        let f = e.start_flow(&[l], 1 << 20, 0.0, 1.0);
+        e.retire_flow(f);
+    }
+
+    #[test]
+    fn reference_mode_matches_incremental_on_a_lossy_link() {
+        let run = |mode: SchedMode| {
+            let mut e = Engine::new();
+            e.set_sched_mode(mode);
+            let l = e.add_link("wan", 100e6, 5e-3);
+            e.set_link_loss_detect(l, 20e-3);
+            let cc = CcConfig { init_window: 4 << 20, ..CcConfig::default() };
+            let flows: Vec<FlowId> = (0..4)
+                .map(|i| e.start_windowed_flow(&[l], ((8 + i) as u64) << 20, 0.0, 1.0, &cc))
+                .collect();
+            e.run_until_idle();
+            let finishes: Vec<u64> =
+                flows.iter().map(|f| e.flow_finish(*f).unwrap().to_bits()).collect();
+            let losses: Vec<u64> = flows.iter().map(|f| e.flow_losses(*f)).collect();
+            (finishes, losses, e.link(l).total_losses, e.events_processed())
+        };
+        assert_eq!(run(SchedMode::Incremental), run(SchedMode::FullRecompute));
+    }
+
+    // ------------------- ported from the retired simclock shim's tests
+
+    #[test]
+    fn latency_only_server_charges_per_op() {
+        let mut e = Engine::new();
+        let s = e.add_server("mds", 0.002, f64::INFINITY);
+        let t = e.serve(s, 0.0, 1 << 30);
+        assert!((t - 0.002).abs() < 1e-12, "infinite bandwidth charges latency only: {t}");
+    }
+
+    #[test]
+    fn interleaved_actors_on_one_server_each_see_double_the_solo_time() {
+        let mut e = Engine::new();
+        let s = e.add_server("disk", 0.001, 100e6);
+        let solo_end = {
+            let mut t = 0.0;
+            for _ in 0..100 {
+                t = e.serve(s, t, 1_000_000);
+            }
+            t
+        };
+        e.reset();
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for _ in 0..100 {
+            ta = e.serve(s, ta, 1_000_000);
+            tb = e.serve(s, tb, 1_000_000);
+        }
+        let ratio = ta.max(tb) / solo_end;
+        assert!((1.8..2.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn serve_for_queues_behind_the_busy_horizon() {
+        let mut e = Engine::new();
+        let s = e.add_server("cpu", 0.0, f64::INFINITY);
+        let a = e.serve_for(s, 0.0, 0.25);
+        let b = e.serve_for(s, 0.0, 0.25);
+        assert!((a - 0.25).abs() < 1e-12);
+        assert!((b - 0.5).abs() < 1e-12, "work queues behind earlier commitments: {b}");
     }
 }

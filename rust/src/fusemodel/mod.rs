@@ -8,7 +8,7 @@
 //! user/kernel context-switch overhead. This module charges exactly those
 //! terms; SCISPACE-LW bypasses it entirely (native access).
 
-use crate::simclock::{ResourceId, SimEnv};
+use crate::engine::{Engine, ServerId};
 
 /// The serial FUSE ops charged on a file create+write (paper §IV-C).
 pub const WRITE_OPS: [&str; 5] = ["getattr", "lookup", "create", "write", "flush"];
@@ -40,40 +40,40 @@ impl FuseConfig {
 #[derive(Debug)]
 pub struct FuseMount {
     /// Daemon CPU resource (serializes all ops through the daemon).
-    pub daemon: ResourceId,
+    pub daemon: ServerId,
     /// Copy-bandwidth resource.
-    pub copy: ResourceId,
+    pub copy: ServerId,
     cfg: FuseConfig,
 }
 
 impl FuseMount {
     /// Build one mount's resources.
-    pub fn build(env: &mut SimEnv, name: &str, cfg: &FuseConfig) -> FuseMount {
+    pub fn build(env: &mut Engine, name: &str, cfg: &FuseConfig) -> FuseMount {
         FuseMount {
-            daemon: env.add_resource(&format!("{name}.daemon"), cfg.per_op_cpu, f64::INFINITY),
-            copy: env.add_resource(&format!("{name}.copy"), 0.0, cfg.copy_bw),
+            daemon: env.add_server(&format!("{name}.daemon"), cfg.per_op_cpu, f64::INFINITY),
+            copy: env.add_server(&format!("{name}.copy"), 0.0, cfg.copy_bw),
             cfg: cfg.clone(),
         }
     }
 
     /// Charge `n_ops` serial FUSE operations (each: 2 context switches +
     /// daemon CPU).
-    pub fn ops(&self, env: &mut SimEnv, now: f64, n_ops: u64) -> f64 {
+    pub fn ops(&self, env: &mut Engine, now: f64, n_ops: u64) -> f64 {
         let t = now + 2.0 * self.cfg.context_switch * n_ops as f64;
-        env.acquire_ops(self.daemon, t, n_ops)
+        env.serve_ops(self.daemon, t, n_ops)
     }
 
     /// Charge the write path: the five serial ops plus the user-space data
     /// copy of `len` bytes.
-    pub fn write_path(&self, env: &mut SimEnv, now: f64, len: u64) -> f64 {
+    pub fn write_path(&self, env: &mut Engine, now: f64, len: u64) -> f64 {
         let t = self.ops(env, now, WRITE_OPS.len() as u64);
-        env.acquire(self.copy, t, len)
+        env.serve(self.copy, t, len)
     }
 
     /// Charge the read path: three serial ops plus the user-space copy.
-    pub fn read_path(&self, env: &mut SimEnv, now: f64, len: u64) -> f64 {
+    pub fn read_path(&self, env: &mut Engine, now: f64, len: u64) -> f64 {
         let t = self.ops(env, now, READ_OPS.len() as u64);
-        env.acquire(self.copy, t, len)
+        env.serve(self.copy, t, len)
     }
 }
 
@@ -81,8 +81,8 @@ impl FuseMount {
 mod tests {
     use super::*;
 
-    fn setup() -> (SimEnv, FuseMount) {
-        let mut env = SimEnv::new();
+    fn setup() -> (Engine, FuseMount) {
+        let mut env = Engine::new();
         let f = FuseMount::build(&mut env, "scifs", &FuseConfig::paper_default());
         (env, f)
     }

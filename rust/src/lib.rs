@@ -41,8 +41,8 @@
 //! WAN flows genuinely *share* links — joining flows slow the residents,
 //! leavers speed them up, and flows can be paused/resumed mid-transfer —
 //! which is what the paper's contention and interference figures
-//! measure. [`simclock`] remains as a thin compatibility shim over the
-//! engine for the cold paths.
+//! measure. The old `simclock` compatibility shim is gone: `meu`,
+//! `fusemodel` and `sds` now run natively on the engine.
 //!
 //! ## The data plane ([`xfer`])
 //!
@@ -75,7 +75,6 @@ pub mod api;
 pub mod util;
 pub mod obs;
 pub mod engine;
-pub mod simclock;
 pub mod simnet;
 pub mod xfer;
 pub mod vfs;

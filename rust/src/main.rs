@@ -195,7 +195,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "engine" => {
             let row = bench::fig_engine_hotpath(16, 256 << 20);
             bench::print_engine(&row);
-            emit_json("BENCH_engine.json", &bench::engine_json(&row))?;
+            let sweep = bench::fig_engine_flow_sweep();
+            bench::print_engine_sweep(&sweep);
+            emit_json("BENCH_engine.json", &bench::engine_json(&row, &sweep))?;
         }
         "all" => {
             for w in [
@@ -304,7 +306,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
 }
 
 fn cmd_xfer(args: &Args) -> Result<()> {
-    use scispace::simclock::SimEnv;
+    use scispace::engine::Engine;
     use scispace::simnet::{NetConfig, Network};
     use scispace::util::units::{fmt_bytes, fmt_secs};
     use scispace::xfer::{FaultInjector, Priority, TransferRequest, XferConfig, XferEngine};
@@ -338,7 +340,7 @@ fn cmd_xfer(args: &Args) -> Result<()> {
     let n_corrupt: usize = args.opt_parse("corrupt", 0);
     let drop_stream: i64 = args.opt_parse("drop-stream", -1);
     if n_corrupt > 0 || drop_stream >= 0 {
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let mut net = Network::build(&mut env, &NetConfig::paper_default(), 2);
         let best = *streams.iter().max().unwrap();
         let engine = XferEngine::new(XferConfig { n_streams: best, ..base.clone() });

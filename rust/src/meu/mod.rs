@@ -85,7 +85,7 @@ pub fn export(tb: &mut Testbed, c: usize, root: &str, filter: Option<&str>) -> R
         // network + service cost (entries priced per item on the service)
         let dst_dc = tb.dtns[shard].dc;
         let ta = tb.net.route(&mut tb.env, dc, dst_dc, t, bytes);
-        let ta = tb.env.acquire_ops(tb.dtns[shard].meta_cpu, ta, 1);
+        let ta = tb.env.serve_ops(tb.dtns[shard].meta_cpu, ta, 1);
         let ta = ta + tb.cfg.meta_entry_s * batch.len() as f64;
         match tb.meta.shards[shard].apply(&req) {
             MetaResp::Ok(_) => {}

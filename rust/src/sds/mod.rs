@@ -313,7 +313,7 @@ pub(crate) fn write_indexed(
             let dtn = tb.collabs[c].dtn;
             let cpu = tb.dtns[dtn].meta_cpu;
             let t = tb.collabs[c].now;
-            tb.collabs[c].now = tb.env.acquire_for(cpu, t, cost);
+            tb.collabs[c].now = tb.env.serve_for(cpu, t, cost);
         }
         ExtractionMode::InlineAsync => {
             // enqueue-only on the critical path
@@ -427,7 +427,7 @@ pub(crate) fn run_query(
         let mut e = Enc::new();
         e.str(&q.attr);
         let t = tb.net.route(&mut tb.env, src_dc, dst_dc, t0, e.len() as u64 + 64);
-        let t = tb.env.acquire_ops(tb.dtns[shard].meta_cpu, t, 1);
+        let t = tb.env.serve_ops(tb.dtns[shard].meta_cpu, t, 1);
         // SQL translate + scan + result packing (Table II: grows with hits)
         let t = t + sds.cfg.per_tuple_pack_s * hits.len() as f64;
         // response bytes back

@@ -8,8 +8,7 @@
 //! `stripe_size` chunks; an OSS write-back cache that absorbs bursts and
 //! stalls on flush; an OSS read page cache (LRU).
 
-use crate::engine::Engine;
-use crate::simclock::ResourceId;
+use crate::engine::{Engine, ServerId};
 use crate::simfs::cache::{LruCache, WriteBack};
 
 /// Lustre deployment parameters (one data center).
@@ -73,12 +72,12 @@ impl LustreConfig {
 #[derive(Debug)]
 pub struct OssNode {
     /// OST backing resources.
-    pub osts: Vec<ResourceId>,
+    pub osts: Vec<ServerId>,
     /// Serving rate from the page cache.
-    pub cache_res: ResourceId,
+    pub cache_res: ServerId,
     /// Striped read path: the OST array under client read-ahead, modeled
     /// as one resource at `read_array_factor` x aggregate OST bandwidth.
-    pub read_array: ResourceId,
+    pub read_array: ServerId,
     /// Read page cache.
     pub read_cache: LruCache,
     /// Write absorption.
@@ -95,7 +94,7 @@ pub struct Lustre {
     /// Configuration used to build this instance.
     pub cfg: LustreConfig,
     /// Metadata servers (paper: 2 MDS; modeled as one resource each).
-    pub mds: Vec<ResourceId>,
+    pub mds: Vec<ServerId>,
     /// Object storage servers.
     pub oss: Vec<OssNode>,
     rr_mds: usize,

@@ -3,8 +3,7 @@
 //! cost, a server-side read cache, and write-back absorption whose flush
 //! behaviour causes the 8–16-collaborator read dip in Fig. 8.
 
-use crate::engine::Engine;
-use crate::simclock::ResourceId;
+use crate::engine::{Engine, ServerId};
 use crate::simfs::cache::{LruCache, WriteBack};
 
 /// NFS mount parameters.
@@ -40,9 +39,9 @@ impl NfsConfig {
 #[derive(Debug)]
 pub struct NfsServer {
     /// RPC/CPU resource of this server.
-    pub rpc: ResourceId,
+    pub rpc: ServerId,
     /// Cache-bandwidth resource.
-    pub cache_res: ResourceId,
+    pub cache_res: ServerId,
     /// Server-side read cache.
     pub read_cache: LruCache,
     /// Server-side write-back state.

@@ -139,7 +139,11 @@ impl Network {
     /// completion; returns the arrival time (serialization + latency).
     pub fn send(env: &mut Engine, link: Link, now: f64, bytes: u64) -> f64 {
         let f = env.start_flow(&[link.res], bytes, now, 1.0);
-        env.completion(f)
+        let t = env.completion(f);
+        // blocking helper: the flow id never escapes, so its slot can
+        // go straight back to the engine's free list
+        env.retire_flow(f);
+        t
     }
 
     /// Path cost helper: collaborator in `src_dc` touching storage in
@@ -156,7 +160,9 @@ impl Network {
     ) -> f64 {
         let path = self.flow_path(src_dc, dst_dc);
         let f = env.start_flow(&path, bytes, now, 1.0);
-        env.completion(f)
+        let t = env.completion(f);
+        env.retire_flow(f);
+        t
     }
 
     /// The single source of hop truth: accounting slots a `src -> dst`

@@ -23,13 +23,12 @@
 pub mod localfs;
 
 use crate::api::ScispaceError;
-use crate::engine::{LinkId, ServerId};
+use crate::engine::{Engine, LinkId, ServerId};
 use crate::fusemodel::{FuseConfig, FuseMount, READ_OPS, WRITE_OPS};
 use crate::metadata::{FileMeta, MetaPlane, MetaReq, MetaResp};
 use crate::msg::Wire;
 use crate::namespace::NamespaceRegistry;
 use crate::obs::{Metrics, TracedReport};
-use crate::simclock::{ResourceId, SimEnv};
 use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
 use crate::simnet::{NetConfig, Network};
 use crate::vfs::ObjectStore;
@@ -127,7 +126,7 @@ pub struct Dtn {
     /// bulk transfers charge their chunk checksums here
     /// ([`DigestSinks`]), so integrity cost queues behind — and delays —
     /// concurrent metadata traffic instead of being free stream time.
-    pub meta_cpu: ResourceId,
+    pub meta_cpu: ServerId,
 }
 
 /// A collaborator session.
@@ -161,7 +160,7 @@ pub struct Testbed {
     /// Configuration.
     pub cfg: TestbedConfig,
     /// Virtual-time resource registry.
-    pub env: SimEnv,
+    pub env: Engine,
     /// Network fabric.
     pub net: Network,
     /// Data centers.
@@ -184,7 +183,7 @@ pub struct Testbed {
 impl Testbed {
     /// Build a testbed from configuration.
     pub fn build(cfg: TestbedConfig) -> Testbed {
-        let mut env = SimEnv::new();
+        let mut env = Engine::new();
         let net = Network::build(&mut env, &cfg.net, cfg.n_dcs);
         let dcs = (0..cfg.n_dcs)
             .map(|d| Dc {
@@ -205,7 +204,7 @@ impl Testbed {
                     // the CPU's per-op admission cost (it is a service
                     // request like any other); metadata ops are
                     // zero-byte, so their cost is untouched
-                    meta_cpu: env.add_resource(
+                    meta_cpu: env.add_server(
                         &format!("{name}.metasvc"),
                         cfg.meta_op_s,
                         cfg.xfer.checksum_bw,
@@ -1102,7 +1101,7 @@ mod tests {
         let mut tb = bed_with(1);
         tb.write(0, "/u/f.dat", 0, 4096, None, AccessMode::Baseline).unwrap();
         let touched = (0..tb.dtns.len())
-            .filter(|&i| tb.env.resource(tb.dtns[i].meta_cpu).total_ops > 0)
+            .filter(|&i| tb.env.server(tb.dtns[i].meta_cpu).total_ops > 0)
             .count();
         assert_eq!(touched, tb.dtns.len(), "baseline must stat every branch");
     }
@@ -1112,7 +1111,7 @@ mod tests {
         let mut tb = bed_with(1);
         tb.write(0, "/u/g.dat", 0, 4096, None, AccessMode::Scispace).unwrap();
         let touched = (0..tb.dtns.len())
-            .filter(|&i| tb.env.resource(tb.dtns[i].meta_cpu).total_ops > 0)
+            .filter(|&i| tb.env.server(tb.dtns[i].meta_cpu).total_ops > 0)
             .count();
         assert_eq!(touched, 1, "scispace must hash-route to exactly one DTN");
     }
@@ -1166,11 +1165,11 @@ mod tests {
         let mut tb = bed_with(1);
         let len = 16u64 << 20; // above the bulk threshold
         let before: u64 =
-            (0..tb.dtns.len()).map(|i| tb.env.resource(tb.dtns[i].meta_cpu).total_bytes).sum();
+            (0..tb.dtns.len()).map(|i| tb.env.server(tb.dtns[i].meta_cpu).total_bytes).sum();
         assert_eq!(before, 0);
         tb.write(0, "/collab/big.dat", 0, len, None, AccessMode::Scispace).unwrap();
         let digested: u64 =
-            (0..tb.dtns.len()).map(|i| tb.env.resource(tb.dtns[i].meta_cpu).total_bytes).sum();
+            (0..tb.dtns.len()).map(|i| tb.env.server(tb.dtns[i].meta_cpu).total_bytes).sum();
         assert_eq!(digested, len, "every chunk must be digested exactly once on a DTN CPU");
     }
 

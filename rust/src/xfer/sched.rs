@@ -318,7 +318,7 @@ pub fn run_flows(
             Occurrence::Idle => break,
         }
     }
-    done_order
+    let reports = done_order
         .into_iter()
         .map(|i| FlowReport {
             id: reqs[i].id,
@@ -332,7 +332,15 @@ pub fn run_flows(
             losses: flows_of[i].iter().map(|&f| env.flow_losses(f)).sum(),
             retransmit_bytes: flows_of[i].iter().map(|&f| env.flow_retransmitted_bytes(f)).sum(),
         })
-        .collect()
+        .collect();
+    // the reports above were the last readers of per-flow state: hand
+    // every slot back so long scheduling benches stay flat
+    for fs in &flows_of {
+        for &f in fs {
+            env.retire_flow(f);
+        }
+    }
+    reports
 }
 
 #[cfg(test)]

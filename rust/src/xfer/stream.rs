@@ -251,6 +251,9 @@ impl StreamSet {
             (Some(_), Some(srv)) => env.serve(srv, t, len),
             (Some(_), None) => t + private_digest,
         };
+        // the chunk's congestion state has been harvested above; free
+        // the flow slot so chunked transfers stop growing the table
+        env.retire_flow(flow);
         // ack rides back latency-only (it is a few bytes)
         t += path.iter().map(|l| l.latency_s).sum::<f64>() + cfg.ack_op_s;
         self.clocks[s] = t;

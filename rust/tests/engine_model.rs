@@ -14,10 +14,15 @@
 //!   the typed stream, so string assertions can never drift from it.
 //! * **Processor sharing** — k equal concurrent flows each finish in
 //!   ~k× the solo time instead of serializing back-to-back.
+//! * **Scheduler equivalence** — the incremental single-event-per-link
+//!   scheduler ([`SchedMode::Incremental`]) and the retained
+//!   full-recompute reference ([`SchedMode::FullRecompute`]) are
+//!   indistinguishable on randomized join/leave/pause/resume/windowed
+//!   workloads: identical typed event streams (modulo heap sequence
+//!   numbers), bit-identical finish times, equal loss accounting.
 
-use scispace::engine::{CcConfig, Engine};
+use scispace::engine::{CcConfig, Engine, SchedMode};
 use scispace::obs::TraceEvent;
-use scispace::simclock::SimEnv;
 use scispace::util::prop;
 use scispace::util::rng::Rng;
 
@@ -32,22 +37,22 @@ fn prop_uncontended_flow_matches_busy_horizon_model() {
     prop::check(96, |rng| {
         let hops = rng.range(1, 5);
         let mut engine = Engine::new();
-        let mut legacy = SimEnv::new();
+        let mut legacy = Engine::new();
         let mut path = Vec::new();
         let mut horizon_hops = Vec::new();
         for h in 0..hops {
             let bw = (rng.below(20_000) + 1) as f64 * 1e6; // 1 MB/s .. 20 GB/s
             let lat = rng.below(100_000) as f64 * 1e-6; // 0 .. 100 ms
             path.push(engine.add_link(&format!("l{h}"), bw, lat));
-            horizon_hops.push((legacy.add_resource(&format!("l{h}"), 0.0, bw), lat));
+            horizon_hops.push((legacy.add_server(&format!("l{h}"), 0.0, bw), lat));
         }
         let bytes = rng.below(1 << 30);
         let at = rng.below(10_000) as f64 * 1e-3;
         // legacy busy-horizon arithmetic: serialize on each hop's
-        // resource, then pay the hop latency (simnet's old route())
+        // server, then pay the hop latency (simnet's old route())
         let mut t_old = at;
         for &(id, lat) in &horizon_hops {
-            t_old = lat + legacy.acquire(id, t_old, bytes);
+            t_old = lat + legacy.serve(id, t_old, bytes);
         }
         let f = engine.start_flow(&path, bytes, at, 1.0);
         let t_new = engine.completion(f);
@@ -314,6 +319,128 @@ fn batch_admission_replays_byte_identical_traces_after_reset() {
             "replayed results must land on the same bits"
         );
     }
+}
+
+/// Zero the heap sequence numbers on the variants that carry them: the
+/// reference scheduler pushes one event per active flow per reschedule
+/// while the incremental one pushes a single winner, so the two modes
+/// consume the sequence counter at different rates even when the live
+/// event streams are otherwise identical.
+fn strip_seq(ev: &TraceEvent) -> TraceEvent {
+    let mut ev = ev.clone();
+    match &mut ev {
+        TraceEvent::Join { seq, .. }
+        | TraceEvent::Hop { seq, .. }
+        | TraceEvent::Control { seq, .. }
+        | TraceEvent::Loss { seq, .. } => *seq = 0,
+        _ => {}
+    }
+    ev
+}
+
+/// One seeded randomized workload — multi-hop paths, mixed weights,
+/// plain and windowed flows, a congestion-managed link, interleaved
+/// pauses/resumes/controls, drained to idle — executed under `mode`.
+/// Returns the seq-stripped typed trace, per-flow terminal stats
+/// `(finish bits, losses, retransmitted bytes)`, and the live/orphaned
+/// event counts.
+#[allow(clippy::type_complexity)]
+fn sched_mode_run(
+    seed: u64,
+    mode: SchedMode,
+) -> (Vec<TraceEvent>, Vec<(Option<u64>, u64, u64)>, u64, u64) {
+    let mut rng = Rng::new(seed);
+    let mut e = Engine::new();
+    e.set_sched_mode(mode);
+    e.record_trace(true);
+    let links = [
+        e.add_link("l0", 200e6, 1e-3),
+        e.add_link("l1", 400e6, 2e-3),
+        e.add_link("l2", 100e6, 0.5e-3),
+    ];
+    // one congestion-managed link so loss synthesis and AIMD windows
+    // are exercised by both schedulers (armed before any flow joins)
+    e.set_link_loss_detect(links[2], 5e-3);
+    let cc = CcConfig::default();
+    let mut flows = Vec::new();
+    for k in 0..40 {
+        let hops = rng.range(1, 4);
+        let path: Vec<_> = (0..hops).map(|_| *rng.pick(&links)).collect();
+        let bytes = rng.below(48 << 20) + 1;
+        let at = rng.below(800) as f64 * 1e-3;
+        let w = [1.0, 2.0, 8.0][rng.range(0, 3)];
+        flows.push(if k % 3 == 0 {
+            e.start_windowed_flow(&path, bytes, at, w, &cc)
+        } else {
+            e.start_flow(&path, bytes, at, w)
+        });
+        if k % 13 == 9 {
+            let _ = e.run_next();
+        }
+        if k % 7 == 3 {
+            e.pause(flows[rng.range(0, flows.len())]);
+        }
+        if k % 5 == 4 {
+            e.resume(flows[rng.range(0, flows.len())], at);
+        }
+        if k % 11 == 6 {
+            e.schedule_control(at, k as u64);
+        }
+    }
+    for &f in &flows {
+        e.resume(f, 2.0);
+    }
+    e.run_until_idle();
+    let trace = e.events().iter().map(strip_seq).collect();
+    let stats = flows
+        .iter()
+        .map(|&f| {
+            (e.flow_finish(f).map(f64::to_bits), e.flow_losses(f), e.flow_retransmitted_bytes(f))
+        })
+        .collect();
+    (trace, stats, e.events_processed(), e.events_orphaned())
+}
+
+#[test]
+fn prop_incremental_scheduler_matches_full_recompute_reference() {
+    // ISSUE 7 satellite: the incremental scheduler must be a pure
+    // performance change. Drive the same randomized workload through
+    // both modes and insist nothing observable moved.
+    prop::check(24, |rng| {
+        let seed = rng.below(1 << 62);
+        let (tr_inc, st_inc, live_inc, orph_inc) = sched_mode_run(seed, SchedMode::Incremental);
+        let (tr_ref, st_ref, live_ref, orph_ref) = sched_mode_run(seed, SchedMode::FullRecompute);
+        scispace::prop_assert!(
+            tr_inc.len() > 100,
+            "seed {seed}: workload must be non-trivial ({} events)",
+            tr_inc.len()
+        );
+        if tr_inc != tr_ref {
+            let i = tr_inc
+                .iter()
+                .zip(&tr_ref)
+                .position(|(a, b)| a != b)
+                .unwrap_or(tr_inc.len().min(tr_ref.len()));
+            return Err(format!(
+                "seed {seed}: traces diverge at event {i}: incremental={:?} reference={:?}",
+                tr_inc.get(i),
+                tr_ref.get(i)
+            ));
+        }
+        scispace::prop_assert!(
+            st_inc == st_ref,
+            "seed {seed}: per-flow finish bits / loss stats diverge"
+        );
+        scispace::prop_assert!(
+            live_inc == live_ref,
+            "seed {seed}: live event counts diverge (inc {live_inc} vs ref {live_ref})"
+        );
+        scispace::prop_assert!(
+            orph_inc <= orph_ref,
+            "seed {seed}: incremental mode must not orphan more events ({orph_inc} > {orph_ref})"
+        );
+        Ok(())
+    });
 }
 
 #[test]

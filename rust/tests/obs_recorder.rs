@@ -112,7 +112,7 @@ fn scenarios() -> Vec<(usize, Op, &'static str)> {
 /// Digest/metadata work charged on the DTN CPUs, summed across DTNs.
 fn dtn_cpu_totals(tb: &Testbed) -> (u64, u64) {
     (0..tb.dtns.len()).fold((0, 0), |(b, o), i| {
-        let r = tb.env.resource(tb.dtns[i].meta_cpu);
+        let r = tb.env.server(tb.dtns[i].meta_cpu);
         (b + r.total_bytes, o + r.total_ops)
     })
 }

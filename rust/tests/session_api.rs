@@ -265,7 +265,7 @@ fn batch_bulk_write_then_remote_read_round_trips_bytes() {
 /// accounting surface where chunk digests land.
 fn dtn_cpu_totals(tb: &Testbed) -> (u64, u64) {
     (0..tb.dtns.len()).fold((0, 0), |(b, o), i| {
-        let r = tb.env.resource(tb.dtns[i].meta_cpu);
+        let r = tb.env.server(tb.dtns[i].meta_cpu);
         (b + r.total_bytes, o + r.total_ops)
     })
 }
