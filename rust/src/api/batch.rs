@@ -81,10 +81,7 @@ use crate::obs::SpanId;
 use crate::sds::Sds;
 use crate::vfs::ObjectId;
 use crate::workspace::{AccessMode, Testbed};
-use crate::xfer::{
-    path_loss_baseline, path_loss_delta, DigestSinks, FaultInjector, Flight, FlightChunk,
-    Priority, TransferRequest,
-};
+use crate::xfer::{DigestSinks, FaultInjector, Flight, FlightChunk, Priority, TransferRequest};
 
 /// Run a batch with a discovery service attached, so [`Op::Query`] and
 /// [`Op::Tag`] are executable alongside workspace ops. Same semantics
@@ -114,12 +111,6 @@ struct BulkPlan {
     faults: FaultInjector,
     /// The chunk currently riding the engine, if any.
     in_flight: Option<FlightChunk>,
-    /// Per-hop congestion baseline, captured at the payload-launch
-    /// control (empty until then) so the [`crate::xfer::PathLoss`]
-    /// deltas in the replicate report cover exactly the payload's
-    /// exposure window — not the front-end staging gap, where another
-    /// collaborator's losses would be misattributed to this transfer.
-    loss_base: Vec<(u64, u64)>,
     /// Flight-recorder span covering the whole op (`None` when the
     /// recorder is off). Closed when the back end completes or the plan
     /// fails; the flight parents its chunk slices under it.
@@ -260,10 +251,12 @@ fn schedule_next(tb: &mut Testbed, c: usize, queues: &[VecDeque<(usize, Op)>]) {
 }
 
 /// The payload-launch control came due: open the transfer on its path
-/// (loss baseline + contention registration — deferred to now so the
-/// snapshot covers exactly the payload's exposure window, not the
-/// front-end staging gap) and start the staged plan's first chunk (or
-/// complete it outright when the payload is zero bytes).
+/// (contention registration — deferred to now so it covers exactly the
+/// payload's exposure window, not the front-end staging gap) and start
+/// the staged plan's first chunk (or complete it outright when the
+/// payload is zero bytes). Loss attribution needs no baseline here: the
+/// flight's [`crate::xfer::PathLoss`] deltas are flow-local, so another
+/// collaborator's losses can never land in this plan's report.
 fn launch(
     tb: &mut Testbed,
     c: usize,
@@ -273,7 +266,6 @@ fn launch(
 ) {
     let plan = active[c].as_mut().expect("launch control without a staged plan");
     let (src_dc, dst_dc) = (plan.flight.req.src_dc, plan.flight.req.dst_dc);
-    plan.loss_base = path_loss_baseline(&tb.env, &tb.net, src_dc, dst_dc);
     tb.net.begin_transfer(src_dc, dst_dc);
     let outcome = pump(tb, plan);
     resolve_pump(tb, c, outcome, queues, active, results);
@@ -368,7 +360,11 @@ fn stage_plan(
     req: TransferRequest,
     sinks: DigestSinks,
 ) -> BulkPlan {
-    let flight = Flight::with_sinks(&tb.cfg.xfer, &tb.net, &req, req.submitted_at, sinks);
+    // seed the starting width from the learned per-path table exactly
+    // like the single-op lowering does, so batch and single-op stay
+    // chunk-for-chunk identical under adaptive tuning too
+    let xcfg = tb.seeded_xfer_cfg(req.src_dc, req.dst_dc);
+    let flight = Flight::with_sinks(&xcfg, &tb.net, &req, req.submitted_at, sinks);
     BulkPlan {
         idx,
         c,
@@ -376,7 +372,6 @@ fn stage_plan(
         flight,
         faults: FaultInjector::none(),
         in_flight: None,
-        loss_base: Vec::new(),
         span: None,
     }
 }
@@ -474,28 +469,32 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
 }
 
 /// Every chunk verified: close the transfer (contention deregistration,
-/// loss deltas), charge the back end through the shared helpers, and
-/// materialize the result.
+/// flow-local loss attribution), charge the back end through the shared
+/// helpers, and materialize the result.
 fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
-    let BulkPlan { idx, c, kind, flight, loss_base, span, .. } = plan;
+    let BulkPlan { idx, c, kind, flight, span, .. } = plan;
     let (src_dc, dst_dc) = (flight.req.src_dc, flight.req.dst_dc);
     tb.net.end_transfer(src_dc, dst_dc);
-    let mut report = flight.into_report();
-    report.path_losses = path_loss_delta(&tb.env, &tb.net, src_dc, dst_dc, &loss_base);
+    let report = flight.into_report(&tb.env);
+    tb.record_tune(&report);
     let tf = report.finished_at;
     let r = match kind {
         PlanKind::Read { obj, offset, len } => {
             let t_end = tb.read_backend(c, len, tf);
             tb.collabs[c].now = t_end;
             match tb.dcs[src_dc].store.read_at(obj, offset, len as usize) {
-                Ok(bytes) => OpResult::Data { bytes, finished_at: t_end },
+                Ok(bytes) => OpResult::Data {
+                    bytes,
+                    finished_at: t_end,
+                    transfer: Some(Box::new(report)),
+                },
                 Err(e) => OpResult::Failed(e.into()),
             }
         }
         PlanKind::Write { path, obj, dtn, data_dc, offset, len } => {
             let t2 = tb.write_backend(dtn, data_dc, obj, offset, len, tf);
             tb.collabs[c].now = t2;
-            OpResult::Written { path, bytes: len, finished_at: t2 }
+            OpResult::Written { path, bytes: len, finished_at: t2, transfer: Some(Box::new(report)) }
         }
         PlanKind::Replicate { path, src_obj, size } => {
             match tb.replicate_backend(c, &path, src_dc, dst_dc, src_obj, size, tf) {

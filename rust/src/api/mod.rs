@@ -142,6 +142,12 @@ pub enum OpResult {
         bytes: u64,
         /// Collaborator-visible completion time.
         finished_at: f64,
+        /// The striped ingest transfer's report — the same adaptive-
+        /// tuning signal set ([`TransferReport::stream_goodput`],
+        /// [`TransferReport::path_losses`], [`TransferReport::tune`])
+        /// the replicate path carries. `None` when the payload rode the
+        /// plain route (below the bulk threshold or native-mode).
+        transfer: Option<Box<TransferReport>>,
     },
     /// A read completed.
     Data {
@@ -149,6 +155,10 @@ pub enum OpResult {
         bytes: Vec<u8>,
         /// Collaborator-visible completion time.
         finished_at: f64,
+        /// The striped WAN transfer's report (see
+        /// [`OpResult::Written`]); `None` for local or sub-threshold
+        /// reads, which never stripe.
+        transfer: Option<Box<TransferReport>>,
     },
     /// A listing completed.
     Listing {
@@ -686,7 +696,7 @@ impl WriteIndexedBuilder<'_, '_, '_, '_> {
         self,
         stats: Option<StatsFn<'_, '_>>,
     ) -> Result<OpResult, ScispaceError> {
-        let (finished_at, bytes) = crate::sds::write_indexed(
+        let (finished_at, bytes, transfer) = crate::sds::write_indexed(
             self.sess.tb,
             self.sds,
             self.sess.c,
@@ -695,7 +705,7 @@ impl WriteIndexedBuilder<'_, '_, '_, '_> {
             self.xmode,
             stats,
         )?;
-        Ok(OpResult::Written { path: self.path, bytes, finished_at })
+        Ok(OpResult::Written { path: self.path, bytes, finished_at, transfer: transfer.map(Box::new) })
     }
 }
 
@@ -740,8 +750,13 @@ fn exec_op_inner(
 ) -> Result<OpResult, ScispaceError> {
     match op {
         Op::Write { path, offset, len, data, mode } => {
-            tb.write(c, &path, offset, len, data.as_deref(), mode)?;
-            Ok(OpResult::Written { path, bytes: len, finished_at: tb.now(c) })
+            let transfer = tb.write(c, &path, offset, len, data.as_deref(), mode)?;
+            Ok(OpResult::Written {
+                path,
+                bytes: len,
+                finished_at: tb.now(c),
+                transfer: transfer.map(Box::new),
+            })
         }
         Op::Read { path, offset, len, mode } => {
             let len = match len {
@@ -782,8 +797,8 @@ fn exec_op_inner(
                     tb.dcs[dc].store.len(obj).unwrap_or(0).saturating_sub(offset)
                 }
             };
-            let bytes = tb.read(c, &path, offset, len, mode)?;
-            Ok(OpResult::Data { bytes, finished_at: tb.now(c) })
+            let (bytes, transfer) = tb.read_traced(c, &path, offset, len, mode)?;
+            Ok(OpResult::Data { bytes, finished_at: tb.now(c), transfer: transfer.map(Box::new) })
         }
         Op::Ls { prefix } => {
             let entries = tb.ls(c, &prefix);

@@ -21,8 +21,8 @@ use crate::util::units::{fmt_bytes, fmt_secs};
 use crate::workload::{self, IorConfig, ModisConfig};
 use crate::workspace::{AccessMode, Testbed, TestbedConfig};
 use crate::xfer::{
-    run_flows, run_queue, FaultInjector, Priority, TransferQueue, TransferRequest, XferConfig,
-    XferEngine,
+    run_flows, run_queue, CongestionConfig, DigestSinks, FaultInjector, PathStateTable, Priority,
+    TransferQueue, TransferReport, TransferRequest, TuneConfig, XferConfig, XferEngine,
 };
 
 /// Build the scaled bench testbed (see module docs).
@@ -1007,10 +1007,301 @@ pub fn print_preempt(rows: &[PreemptRow]) {
     }
 }
 
+/// One `fig_xfer_adaptive` row: a single WAN bulk transfer under a
+/// fixed stream count or under the goodput-guided stream autotuner.
+#[derive(Debug, Clone)]
+pub struct XferAdaptiveRow {
+    /// WAN scenario: `clean` (congestion-managed, lossless), `lossy`
+    /// (the geo WAN's 20 ms loss knob armed) or `degrading` (lossy WAN
+    /// plus interfering flows joining mid-transfer).
+    pub scenario: &'static str,
+    /// `fixed-N`, `adaptive-cold` (first run on an unknown path) or
+    /// `adaptive` (warm-started from the learned per-path width).
+    pub mode: String,
+    /// Stream count the transfer opened with.
+    pub streams_initial: usize,
+    /// Stream count it ended at (== initial for fixed widths).
+    pub streams_final: usize,
+    /// Virtual transfer time, seconds.
+    pub secs: f64,
+    /// Goodput, MB/s.
+    pub mbps: f64,
+    /// Congestion losses the transfer's streams absorbed.
+    pub losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub retransmit_bytes: u64,
+    /// Stream-count increases the controller applied.
+    pub widens: u32,
+    /// Stream-count reductions the controller applied.
+    pub sheds: u32,
+}
+
+fn adaptive_row(scenario: &'static str, mode: &str, rep: &TransferReport) -> XferAdaptiveRow {
+    let t = rep.tune;
+    XferAdaptiveRow {
+        scenario,
+        mode: mode.to_string(),
+        streams_initial: t.map_or(rep.streams, |o| o.initial_streams),
+        streams_final: t.map_or(rep.streams, |o| o.final_streams),
+        secs: rep.seconds(),
+        mbps: rep.mbps(),
+        losses: rep.cc_losses,
+        retransmit_bytes: rep.cc_retransmit_bytes,
+        widens: t.map_or(0, |o| o.widens),
+        sheds: t.map_or(0, |o| o.sheds),
+    }
+}
+
+/// Run one measured DC0 -> DC1 transfer on a fresh 4-DC network.
+/// `interfere` arms the degrading scenario: four windowed flows join
+/// the shared WAN partway through (DC2 -> DC3 — same WAN hop, disjoint
+/// LANs), so the path turns hostile mid-flight instead of being lossy
+/// from the first chunk.
+fn adaptive_scenario(
+    netcfg: &NetConfig,
+    cfg: &XferConfig,
+    total: u64,
+    interfere: bool,
+    paths: &mut PathStateTable,
+) -> TransferReport {
+    use crate::engine::CcConfig;
+    let mut env = Engine::new();
+    let mut net = Network::build(&mut env, netcfg, 4);
+    if interfere {
+        let t_mid = 0.3 * total as f64 / netcfg.wan_bw;
+        let path = net.flow_path(2, 3);
+        for _ in 0..4 {
+            env.start_windowed_flow(&path, total, t_mid, 1.0, &CcConfig::default());
+        }
+    }
+    let engine = XferEngine::new(cfg.clone());
+    let req = TransferRequest {
+        id: 0,
+        owner: "bench".into(),
+        src_dc: 0,
+        dst_dc: 1,
+        bytes: total,
+        priority: Priority::Bulk,
+        submitted_at: 0.0,
+    };
+    engine
+        .transfer_tuned(
+            &mut env,
+            &mut net,
+            &req,
+            &mut FaultInjector::none(),
+            0.0,
+            DigestSinks::default(),
+            paths,
+        )
+        .expect("transfer")
+}
+
+/// Adaptive-vs-fixed stream-count comparison (the autotuner's
+/// acceptance figure). For each WAN scenario, sweep fixed widths, then
+/// run the autotuner three times over a shared per-path width table:
+/// run 1 is reported as `adaptive-cold` (climbing from the default
+/// width on an unknown path), run 3 as `adaptive` (warm-started at the
+/// learned width — the steady state a long-lived collaboration sees).
+/// The acceptance shape: warmed adaptive within 10% of the best fixed
+/// width on the clean WAN, and strictly above the over-striped fixed
+/// width on the lossy WAN — without per-scenario hand tuning.
+pub fn fig_xfer_adaptive(total: u64, fixed_widths: &[usize]) -> Vec<XferAdaptiveRow> {
+    let scenarios: [(&'static str, NetConfig, bool); 3] = [
+        (
+            "clean",
+            NetConfig { wan_loss_detect_s: f64::INFINITY, ..NetConfig::geo_default() },
+            false,
+        ),
+        ("lossy", NetConfig::geo_default(), false),
+        ("degrading", NetConfig::geo_default(), true),
+    ];
+    let mut rows = Vec::new();
+    for (name, netcfg, interfere) in scenarios {
+        for &w in fixed_widths {
+            let cfg =
+                XferConfig { n_streams: w, cc: CongestionConfig::on(), ..XferConfig::default() };
+            let mut scratch = PathStateTable::new();
+            let rep = adaptive_scenario(&netcfg, &cfg, total, interfere, &mut scratch);
+            rows.push(adaptive_row(name, &format!("fixed-{w}"), &rep));
+        }
+        let acfg = XferConfig {
+            cc: CongestionConfig::on(),
+            tune: TuneConfig::adaptive(),
+            ..XferConfig::default()
+        };
+        let mut paths = PathStateTable::new();
+        let mut last = None;
+        for run in 0..3 {
+            let rep = adaptive_scenario(&netcfg, &acfg, total, interfere, &mut paths);
+            if run == 0 {
+                rows.push(adaptive_row(name, "adaptive-cold", &rep));
+            }
+            last = Some(rep);
+        }
+        rows.push(adaptive_row(name, "adaptive", &last.expect("three runs")));
+    }
+    rows
+}
+
+/// Print `fig_xfer_adaptive` rows, grouped by scenario.
+pub fn print_xfer_adaptive(total: u64, rows: &[XferAdaptiveRow]) {
+    println!(
+        "\n== Fig xfer-adaptive: {} per transfer, fixed widths vs autotuner ==",
+        fmt_bytes(total)
+    );
+    let mut scenario = "";
+    for r in rows {
+        if r.scenario != scenario {
+            scenario = r.scenario;
+            println!("-- {scenario} WAN --");
+            println!(
+                "{:>14} {:>9} {:>12} {:>12} {:>8} {:>12}",
+                "mode", "streams", "time", "goodput", "losses", "retx"
+            );
+        }
+        let streams = if r.streams_initial == r.streams_final {
+            format!("{}", r.streams_final)
+        } else {
+            format!("{}->{}", r.streams_initial, r.streams_final)
+        };
+        println!(
+            "{:>14} {:>9} {:>12} {:>9.1}MB/s {:>8} {:>12}",
+            r.mode,
+            streams,
+            fmt_secs(r.secs),
+            r.mbps,
+            r.losses,
+            fmt_bytes(r.retransmit_bytes)
+        );
+    }
+}
+
+/// One `fig_repair_sources` row: a full shard repair under a source
+/// policy while DC0's LAN is congested by background flows.
+#[derive(Debug, Clone)]
+pub struct RepairSourceRow {
+    /// `home-dc` or `link-aware`.
+    pub policy: &'static str,
+    /// Distinct source DCs the repair actually pulled from.
+    pub src_dcs: Vec<usize>,
+    /// Metadata rows healed.
+    pub healed: usize,
+    /// Payload bytes re-replicated.
+    pub bytes_moved: u64,
+    /// Repair duration (data plane), virtual seconds.
+    pub secs: f64,
+}
+
+/// Loss/load-aware replica sourcing under a congested home DC: shard 2
+/// (DC2) misses `entries` rows homed in DC0 while DC0's LAN carries
+/// four long-running background flows. `home-dc` pulls every payload
+/// from DC0 anyway and shares the congested LAN; `link-aware` ranks
+/// the live owner-chain DCs by [`crate::simnet::Network::path_load`]
+/// and steers the repair through the idle DC1 replica instead. The
+/// acceptance shape: link-aware sources exclude DC0 and the repair
+/// completes strictly faster.
+pub fn fig_repair_sources(entries: usize, entry_bytes: u64) -> Vec<RepairSourceRow> {
+    use crate::metadata::replication::{repair_with_xfer_tuned, ReplicatedPlane, SourcePolicy};
+    use crate::metadata::FileMeta;
+    [SourcePolicy::HomeDc, SourcePolicy::LinkAware]
+        .iter()
+        .map(|&policy| {
+            let mut env = Engine::new();
+            let mut net = Network::build(&mut env, &NetConfig::paper_default(), 3);
+            let dc_of_shard = [0usize, 1, 2]; // shard s hosted in DC s
+            let mut plane = ReplicatedPlane::new(3, 2);
+            plane.set_up(2, false);
+            for i in 0..entries {
+                plane.upsert(FileMeta {
+                    path: format!("/exp/f{i}"),
+                    dc: 0,
+                    size: entry_bytes,
+                    owner: "bench".into(),
+                    mtime: 0.0,
+                    sync: true,
+                    namespace: "global".into(),
+                });
+            }
+            plane.set_up(2, true);
+            // congest DC0's LAN: four long-running flows plus two
+            // registered bulk transfers, warmed into service by a tiny
+            // drained send on DC1's LAN so the ranking sees them live
+            for _ in 0..4 {
+                env.start_flow(&[net.lans[0].res], 4 << 30, 0.0, 1.0);
+            }
+            net.begin_transfer(0, 0);
+            net.begin_transfer(0, 0);
+            let now = net.route(&mut env, 1, 1, 0.0, 64 << 10);
+            let engine = XferEngine::new(XferConfig::default());
+            let mut paths = PathStateTable::new();
+            let rep = repair_with_xfer_tuned(
+                &mut plane,
+                2,
+                &mut env,
+                &mut net,
+                &engine,
+                &dc_of_shard,
+                &mut FaultInjector::none(),
+                now,
+                policy,
+                &mut paths,
+            )
+            .expect("repair");
+            let mut src_dcs: Vec<usize> = rep.transfers.iter().map(|t| t.src_dc).collect();
+            src_dcs.sort_unstable();
+            src_dcs.dedup();
+            RepairSourceRow {
+                policy: match policy {
+                    SourcePolicy::HomeDc => "home-dc",
+                    SourcePolicy::LinkAware => "link-aware",
+                },
+                src_dcs,
+                healed: rep.healed,
+                bytes_moved: rep.bytes_moved,
+                secs: rep.finished_at - now,
+            }
+        })
+        .collect()
+}
+
+/// Print `fig_repair_sources` rows.
+pub fn print_repair_sources(rows: &[RepairSourceRow]) {
+    println!("\n== Fig repair-sources: shard repair with DC0's LAN congested ==");
+    println!("{:>12} {:>8} {:>10} {:>12} {:>12}", "policy", "healed", "sources", "moved", "time");
+    for r in rows {
+        let srcs = r.src_dcs.iter().map(|d| format!("dc{d}")).collect::<Vec<_>>().join("+");
+        println!(
+            "{:>12} {:>8} {:>10} {:>12} {:>12}",
+            r.policy,
+            r.healed,
+            srcs,
+            fmt_bytes(r.bytes_moved),
+            fmt_secs(r.secs)
+        );
+    }
+    if let [home, aware] = rows {
+        if aware.secs < home.secs {
+            println!(
+                "link-aware repair {:.1}% faster than home-dc under source congestion",
+                (home.secs - aware.secs) / home.secs * 100.0
+            );
+        }
+    }
+}
+
 /// Machine-readable `BENCH_xfer.json` payload: the lossless and the
-/// congested stream sweeps side by side, so CI tracks the striping
-/// plateau *and* the over-striping collapse per PR.
-pub fn xfer_json(total: u64, plain: &[XferStreamRow], congested: &[XferCcRow]) -> Json {
+/// congested stream sweeps, the adaptive-vs-fixed comparison and the
+/// repair source-policy comparison side by side, so CI tracks the
+/// striping plateau, the over-striping collapse *and* the autotuner's
+/// acceptance bands per PR.
+pub fn xfer_json(
+    total: u64,
+    plain: &[XferStreamRow],
+    congested: &[XferCcRow],
+    adaptive: &[XferAdaptiveRow],
+    repair: &[RepairSourceRow],
+) -> Json {
     use std::collections::BTreeMap;
     let plain_rows: Vec<Json> = plain
         .iter()
@@ -1034,11 +1325,45 @@ pub fn xfer_json(total: u64, plain: &[XferStreamRow], congested: &[XferCcRow]) -
             Json::Obj(m)
         })
         .collect();
+    let adaptive_rows: Vec<Json> = adaptive
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("scenario".to_string(), Json::Str(r.scenario.to_string()));
+            m.insert("mode".to_string(), Json::Str(r.mode.clone()));
+            m.insert("streams_initial".to_string(), Json::Num(r.streams_initial as f64));
+            m.insert("streams_final".to_string(), Json::Num(r.streams_final as f64));
+            m.insert("secs".to_string(), Json::Num(r.secs));
+            m.insert("mbps".to_string(), Json::Num(r.mbps));
+            m.insert("losses".to_string(), Json::Num(r.losses as f64));
+            m.insert("retransmit_bytes".to_string(), Json::Num(r.retransmit_bytes as f64));
+            m.insert("widens".to_string(), Json::Num(r.widens as f64));
+            m.insert("sheds".to_string(), Json::Num(r.sheds as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let repair_rows: Vec<Json> = repair
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("policy".to_string(), Json::Str(r.policy.to_string()));
+            m.insert(
+                "src_dcs".to_string(),
+                Json::Arr(r.src_dcs.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            m.insert("healed".to_string(), Json::Num(r.healed as f64));
+            m.insert("bytes_moved".to_string(), Json::Num(r.bytes_moved as f64));
+            m.insert("secs".to_string(), Json::Num(r.secs));
+            Json::Obj(m)
+        })
+        .collect();
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("xfer".to_string()));
     top.insert("total_bytes".to_string(), Json::Num(total as f64));
     top.insert("plain".to_string(), Json::Arr(plain_rows));
     top.insert("congested".to_string(), Json::Arr(cc_rows));
+    top.insert("adaptive".to_string(), Json::Arr(adaptive_rows));
+    top.insert("repair_sources".to_string(), Json::Arr(repair_rows));
     Json::Obj(top)
 }
 
@@ -1485,11 +1810,19 @@ mod tests {
     fn bench_json_payloads_round_trip() {
         let plain = fig_xfer_streams(32 << 20, &[1, 4]);
         let cc = fig_xfer_streams_cc(32 << 20, &[1, 4]);
-        let j = xfer_json(32 << 20, &plain, &cc);
+        let adaptive = fig_xfer_adaptive(32 << 20, &[4]);
+        let repair = fig_repair_sources(3, 8 << 20);
+        let j = xfer_json(32 << 20, &plain, &cc, &adaptive, &repair);
         let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");
         assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("xfer"));
         assert_eq!(parsed.get("plain").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
         assert_eq!(parsed.get("congested").and_then(|p| p.as_arr()).map(|a| a.len()), Some(2));
+        // 3 scenarios x (1 fixed + adaptive-cold + adaptive)
+        assert_eq!(parsed.get("adaptive").and_then(|p| p.as_arr()).map(|a| a.len()), Some(9));
+        assert_eq!(
+            parsed.get("repair_sources").and_then(|p| p.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
         let rows = fig_preempt(4, 8 << 20, 2, 64 << 20);
         let j = preempt_json(&rows);
         let parsed = crate::util::json::Json::parse(&j.to_string()).expect("valid json");

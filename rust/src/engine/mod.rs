@@ -305,6 +305,19 @@ pub struct PsLink {
     windowed_active: usize,
 }
 
+/// A point-in-time, read-only sample of one link's live state (see
+/// [`Engine::link_state`]): what a placement policy needs to compare
+/// candidate paths without borrowing the engine's internals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LinkState {
+    /// Flows currently in service on the link.
+    pub active_flows: usize,
+    /// Congestion losses synthesized on the link so far.
+    pub total_losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub total_retransmit_bytes: u64,
+}
+
 impl PsLink {
     /// Number of flows currently in service.
     pub fn active_flows(&self) -> usize {
@@ -357,6 +370,12 @@ struct Flow {
     /// This flow's position in its link's `active` vector while
     /// `InService` (`usize::MAX` otherwise) — O(1) leave, no search.
     link_slot: usize,
+    /// Per-link loss attribution: `(link index, losses, retransmit
+    /// bytes)` for each link that synthesized loss for *this* flow.
+    /// Flow-local, so concurrent transfers sharing a link can each
+    /// report their own share without double counting (the link-total
+    /// counters keep aggregating everything). Empty for plain flows.
+    link_losses: Vec<(usize, u64, u64)>,
     /// Time of the currently-scheduled arrival (valid while `Scheduled`).
     next_arrival: f64,
     /// Arrival time captured when a pause lands before the arrival fired.
@@ -627,6 +646,18 @@ impl Engine {
         &self.links[id.0]
     }
 
+    /// One read-only sample of a link's live state — the signal set a
+    /// load-aware placement decision ranks candidate paths by, exposed
+    /// as a plain value so callers never hold a borrow into the engine.
+    pub fn link_state(&self, id: LinkId) -> LinkState {
+        let l = &self.links[id.0];
+        LinkState {
+            active_flows: l.active.len(),
+            total_losses: l.total_losses,
+            total_retransmit_bytes: l.total_retransmit_bytes,
+        }
+    }
+
     // ------------------------------------------------------------------ flows
 
     /// Start a flow of `bytes` over `path` at virtual time `at` with the
@@ -694,6 +725,7 @@ impl Engine {
             next_arrival: at,
             held_arrival: None,
             link_slot: usize::MAX,
+            link_losses: Vec::new(),
             started_at: at,
             finished_at: f64::NAN,
         };
@@ -733,6 +765,7 @@ impl Engine {
         fl.state = FlowState::Retired;
         fl.path = Vec::new();
         fl.cc = None;
+        fl.link_losses = Vec::new();
         self.free_flows.push(f.0);
     }
 
@@ -769,6 +802,16 @@ impl Engine {
     /// Bytes re-queued onto this flow by synthesized losses.
     pub fn flow_retransmitted_bytes(&self, f: FlowId) -> u64 {
         self.flows[f.0].cc.map_or(0, |cc| cc.retransmitted as u64)
+    }
+
+    /// Per-link loss attribution for this flow: `(link index, losses,
+    /// retransmit bytes)` for every link that synthesized loss for it,
+    /// in first-loss order. Flow-local — summing this over a transfer's
+    /// own flows attributes exactly its share of each link's congestion,
+    /// which the link-total counters cannot do once transfers overlap.
+    /// Empty for plain flows and on unmanaged links.
+    pub fn flow_link_losses(&self, f: FlowId) -> &[(usize, u64, u64)] {
+        &self.flows[f.0].link_losses
     }
 
     /// Drive the event queue until `f` completes; returns its finish time
@@ -1470,6 +1513,16 @@ impl Engine {
                     cc.retransmitted += retx;
                     let win = cc.window;
                     self.flows[f].remaining += retx;
+                    // flow-local per-link attribution, next to the link
+                    // totals (same floored bytes, so the two ledgers
+                    // always agree exactly)
+                    match self.flows[f].link_losses.iter_mut().find(|e| e.0 == link) {
+                        Some(e) => {
+                            e.1 += 1;
+                            e.2 += retx as u64;
+                        }
+                        None => self.flows[f].link_losses.push((link, 1, retx as u64)),
+                    }
                     self.links[link].total_losses += 1;
                     self.links[link].total_retransmit_bytes += retx as u64;
                     if self.rec.is_some() {

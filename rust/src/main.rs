@@ -9,7 +9,10 @@
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
 //!   comparison on the discrete-event core; `xfer` sweeps stream
-//!   counts on the lossless and the congestion-managed geo WAN;
+//!   counts on the lossless and the congestion-managed geo WAN, then
+//!   compares fixed widths against the goodput-guided stream autotuner
+//!   per WAN scenario and runs the congested-source repair comparison
+//!   (home-dc vs link-aware replica sourcing);
 //!   `collab` measures per-op p50/p99 latency at 1/4/16 concurrent
 //!   collaborators batched through the Session API's `run_batch`, plus
 //!   the asymmetric scenario — a small interactive read concurrent
@@ -179,7 +182,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::print_xfer_streams(total, &plain);
             let congested = bench::fig_xfer_streams_cc(total, &streams);
             bench::print_xfer_streams_cc(total, &congested);
-            emit_json("BENCH_xfer.json", &bench::xfer_json(total, &plain, &congested))?;
+            let adaptive = bench::fig_xfer_adaptive(total, &[2, 4, 8, 16, 32]);
+            bench::print_xfer_adaptive(total, &adaptive);
+            let repair = bench::fig_repair_sources(6, 8 << 20);
+            bench::print_repair_sources(&repair);
+            emit_json(
+                "BENCH_xfer.json",
+                &bench::xfer_json(total, &plain, &congested, &adaptive, &repair),
+            )?;
         }
         "collab" => {
             let bytes = parse_bytes(&args.opt("data", "16M")).unwrap_or(16 << 20);

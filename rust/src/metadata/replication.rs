@@ -16,10 +16,31 @@ use anyhow::Result;
 use crate::engine::Engine;
 use crate::simnet::Network;
 use crate::xfer::{
-    run_queue, FaultInjector, Priority, TransferQueue, TransferReport, TransferRequest, XferEngine,
+    run_queue_tuned, FaultInjector, PathStateTable, Priority, TransferQueue, TransferReport,
+    TransferRequest, XferEngine,
 };
 
 use super::{placement, FileMeta, MetaReq, MetaResp, MetaShard};
+
+/// How [`repair_with_xfer`] picks the source data center for each
+/// healed entry's payload motion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SourcePolicy {
+    /// Always pull from the entry's home data center (`FileMeta::dc`) —
+    /// the historical behaviour.
+    #[default]
+    HomeDc,
+    /// Pull from the least-loaded, least-lossy candidate: the entry's
+    /// home DC plus the DCs hosting the entry's *live* owner-chain
+    /// shards (each holds a healed replica of the row, so its DC can
+    /// serve the payload too). Candidates are ranked by the live
+    /// engine's link state along the candidate→destination path —
+    /// active flows first, then registered transfers, then accumulated
+    /// losses and retransmitted bytes ([`crate::simnet::PathLoad`]) —
+    /// so a repair steers around a congested or lossy source instead of
+    /// piling onto it.
+    LinkAware,
+}
 
 /// A metadata plane with chained replication and failover.
 #[derive(Debug)]
@@ -161,17 +182,52 @@ pub fn repair_with_xfer(
     faults: &mut FaultInjector,
     now: f64,
 ) -> Result<RepairReport> {
+    let mut paths = PathStateTable::new();
+    repair_with_xfer_tuned(
+        plane,
+        shard,
+        env,
+        net,
+        engine,
+        dc_of_shard,
+        faults,
+        now,
+        SourcePolicy::HomeDc,
+        &mut paths,
+    )
+}
+
+/// [`repair_with_xfer`] with the adaptive knobs exposed: `policy`
+/// chooses the source DC per healed entry (see [`SourcePolicy`]) and
+/// `paths` is the per-path learned-width table — repair transfers seed
+/// their starting stream count from it and record their tuner outcomes
+/// back, so successive repairs on the same path warm-start.
+#[allow(clippy::too_many_arguments)]
+pub fn repair_with_xfer_tuned(
+    plane: &mut ReplicatedPlane,
+    shard: usize,
+    env: &mut Engine,
+    net: &mut Network,
+    engine: &XferEngine,
+    dc_of_shard: &[usize],
+    faults: &mut FaultInjector,
+    now: f64,
+    policy: SourcePolicy,
+    paths: &mut PathStateTable,
+) -> Result<RepairReport> {
     assert!(plane.up[shard], "bring the shard up before repairing");
     assert_eq!(dc_of_shard.len(), plane.shards.len(), "need one hosting DC per shard");
     // Phase 1: metadata heal — same scan as [`ReplicatedPlane::heal`],
     // keeping the healed rows for the data plane.
     let healed = plane.heal_missing(shard);
-    // Phase 2: data plane — batch payload motion per source data center
-    // and drain it through the scheduler.
+    // Phase 2: data plane — pick a source DC per healed entry, batch
+    // payload motion per chosen source, and drain it through the
+    // scheduler.
     let dst_dc = dc_of_shard[shard];
     let mut by_src: BTreeMap<usize, u64> = BTreeMap::new();
     for m in &healed {
-        *by_src.entry(m.dc as usize).or_insert(0) += m.size;
+        let src = pick_source(plane, m, shard, dst_dc, env, net, dc_of_shard, policy);
+        *by_src.entry(src).or_insert(0) += m.size;
     }
     let mut queue = TransferQueue::new();
     for (k, (src_dc, bytes)) in by_src.iter().enumerate() {
@@ -188,10 +244,41 @@ pub fn repair_with_xfer(
             submitted_at: now,
         });
     }
-    let transfers = run_queue(engine, env, net, &mut queue, faults, now, 4)?;
+    let transfers = run_queue_tuned(engine, env, net, &mut queue, faults, now, 4, paths)?;
     let bytes_moved: u64 = transfers.iter().map(|t| t.bytes).sum();
     let finished_at = transfers.iter().fold(now, |acc, t| acc.max(t.finished_at));
     Ok(RepairReport { healed: healed.len(), bytes_moved, transfers, finished_at })
+}
+
+/// Source selection for one healed entry (see [`SourcePolicy`]). The
+/// candidate set is the entry's home DC plus the DCs hosting its live
+/// owner-chain shards other than the healing one; ranking consults the
+/// live engine link state via [`Network::path_load`], tie-broken by the
+/// lowest DC index so the choice is deterministic.
+fn pick_source(
+    plane: &ReplicatedPlane,
+    m: &FileMeta,
+    shard: usize,
+    dst_dc: usize,
+    env: &Engine,
+    net: &Network,
+    dc_of_shard: &[usize],
+    policy: SourcePolicy,
+) -> usize {
+    let home = m.dc as usize;
+    if policy == SourcePolicy::HomeDc {
+        return home;
+    }
+    let mut candidates = vec![home];
+    for s in plane.owners(&m.path) {
+        if s != shard && plane.up[s] && !candidates.contains(&dc_of_shard[s]) {
+            candidates.push(dc_of_shard[s]);
+        }
+    }
+    candidates
+        .into_iter()
+        .min_by_key(|&src| (net.path_load(env, src, dst_dc).rank_key(), src))
+        .unwrap_or(home)
 }
 
 #[cfg(test)]

@@ -223,6 +223,7 @@ pub fn fold_events(m: &mut Metrics, events: &[TraceEvent], link_names: &[String]
     let mut open_spans: HashMap<u64, (f64, String)> = HashMap::new();
     let mut on_link: HashMap<usize, usize> = HashMap::new();
     let mut active: HashMap<usize, i64> = HashMap::new();
+    let mut tuned_paths: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
     let link_label = |l: usize| {
         link_names
             .get(l)
@@ -259,6 +260,18 @@ pub fn fold_events(m: &mut Metrics, events: &[TraceEvent], link_names: &[String]
                 if let Some(l) = on_link.remove(flow) {
                     bump(m, &mut active, l, -1, *t);
                 }
+            }
+            TraceEvent::Tune { t, src_dc, dst_dc, from, to, .. } => {
+                // Width-over-time per path: seed the series with the
+                // pre-decision width so the step away from the starting
+                // point is visible.
+                let key = format!("tune.path.{src_dc}-{dst_dc}.streams");
+                if !tuned_paths.contains(&(*src_dc, *dst_dc)) {
+                    tuned_paths.insert((*src_dc, *dst_dc));
+                    m.series_push(&key, *t, *from as f64);
+                }
+                m.series_push(&key, *t, *to as f64);
+                m.inc("tune.decisions", 1);
             }
             _ => {}
         }

@@ -209,6 +209,26 @@ pub enum TraceEvent {
         /// The span.
         span: SpanId,
     },
+    /// The transfer stream autotuner changed a transfer's stream count
+    /// at a chunk-round boundary (`Hold` rounds are not recorded).
+    Tune {
+        /// Decision time (the chunk boundary that closed the round).
+        t: f64,
+        /// Transfer id the decision belongs to.
+        transfer: u64,
+        /// Source data center of the transfer's path.
+        src_dc: usize,
+        /// Destination data center of the transfer's path.
+        dst_dc: usize,
+        /// Stream count during the observed round.
+        from: usize,
+        /// Stream count after the decision.
+        to: usize,
+        /// The observed round's aggregate goodput, bytes/s.
+        rate: f64,
+        /// Congestion losses observed during the round.
+        losses: u64,
+    },
 }
 
 impl TraceEvent {
@@ -226,7 +246,8 @@ impl TraceEvent {
             | TraceEvent::Cwnd { t, .. }
             | TraceEvent::Serve { t, .. }
             | TraceEvent::SpanBegin { t, .. }
-            | TraceEvent::SpanEnd { t, .. } => t,
+            | TraceEvent::SpanEnd { t, .. }
+            | TraceEvent::Tune { t, .. } => t,
         }
     }
 }
@@ -277,6 +298,13 @@ impl fmt::Display for TraceEvent {
                 Ok(())
             }
             TraceEvent::SpanEnd { t, span } => write!(f, "{t:.9} span- {}", span.0),
+            TraceEvent::Tune { t, transfer, src_dc, dst_dc, from, to, rate, losses } => {
+                write!(
+                    f,
+                    "{t:.9} tune x{transfer} {src_dc}->{dst_dc} w{from}->w{to} \
+                     rate={rate:.0} losses={losses}"
+                )
+            }
         }
     }
 }

@@ -283,8 +283,10 @@ impl Sds {
 }
 
 /// Write an SHDF file through the workspace with the chosen extraction
-/// mode. Returns the collaborator-visible completion time and the
-/// serialized payload size (so callers don't re-serialize to learn it).
+/// mode. Returns the collaborator-visible completion time, the
+/// serialized payload size (so callers don't re-serialize to learn it),
+/// and the striped ingest transfer's report when the payload rode the
+/// bulk engine.
 /// Crate-internal: the public surface is
 /// [`crate::api::Session::write_indexed`].
 pub(crate) fn write_indexed(
@@ -295,13 +297,13 @@ pub(crate) fn write_indexed(
     file: &ShdfFile,
     mode: ExtractionMode,
     stats: Option<StatsFn<'_, '_>>,
-) -> Result<(f64, u64), crate::api::ScispaceError> {
+) -> Result<(f64, u64, Option<crate::xfer::TransferReport>), crate::api::ScispaceError> {
     let bytes = file.to_bytes();
     let access = match mode {
         ExtractionMode::LwOffline => AccessMode::ScispaceLw,
         _ => AccessMode::Scispace,
     };
-    tb.write(c, path, 0, bytes.len() as u64, Some(&bytes), access)?;
+    let transfer = tb.write(c, path, 0, bytes.len() as u64, Some(&bytes), access)?;
     match mode {
         ExtractionMode::InlineSync => {
             // extraction + indexing on the write's critical path, running
@@ -331,7 +333,7 @@ pub(crate) fn write_indexed(
             // nothing on the write path; `offline_index` runs on the DTN
         }
     }
-    Ok((tb.collabs[c].now, bytes.len() as u64))
+    Ok((tb.collabs[c].now, bytes.len() as u64, transfer))
 }
 
 /// Drain the Inline-Async queue (background indexing service on the DTNs).

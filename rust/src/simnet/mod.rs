@@ -19,6 +19,31 @@
 
 use crate::engine::{Engine, LinkId};
 
+/// Aggregated live state of one `src -> dst` path (see
+/// [`Network::path_load`]): how busy and how lossy the hops are right
+/// now. Ordering a candidate set by `(active_flows, losses,
+/// retransmit_bytes)` ranks sources least-loaded-then-least-lossy;
+/// [`PathLoad::rank_key`] is that lexicographic key.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PathLoad {
+    /// Engine flows in service summed over the path's hops.
+    pub active_flows: usize,
+    /// Congestion losses synthesized on the hops (lifetime totals).
+    pub losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub retransmit_bytes: u64,
+    /// Peak bulk-transfer registrations across the hops (this
+    /// network's own [`Network::begin_transfer`] accounting).
+    pub registered_transfers: u32,
+}
+
+impl PathLoad {
+    /// Lexicographic least-loaded-then-least-lossy comparison key.
+    pub fn rank_key(&self) -> (usize, u32, u64, u64) {
+        (self.active_flows, self.registered_transfers, self.losses, self.retransmit_bytes)
+    }
+}
+
 /// A directed network link (shared medium => one engine link both ways).
 #[derive(Debug, Clone, Copy)]
 pub struct Link {
@@ -200,6 +225,25 @@ impl Network {
     /// `window / rtt` cap is computed against.
     pub fn path_rtt(&self, src_dc: usize, dst_dc: usize) -> f64 {
         2.0 * self.path(src_dc, dst_dc).iter().map(|l| l.latency_s).sum::<f64>()
+    }
+
+    /// Live load/loss summary of the `src_dc -> dst_dc` path, aggregated
+    /// over its hops from the engine's link state
+    /// ([`Engine::link_state`]) plus this network's own transfer
+    /// registrations. This is the signal a loss/load-aware replica
+    /// sourcing policy ranks candidate source DCs by
+    /// (`metadata::replication::SourcePolicy::LinkAware`).
+    pub fn path_load(&self, env: &Engine, src_dc: usize, dst_dc: usize) -> PathLoad {
+        let mut load = PathLoad::default();
+        for s in self.hop_slots(src_dc, dst_dc) {
+            let link = if s == 0 { self.wan } else { self.lans[s - 1] };
+            let st = env.link_state(link.res);
+            load.active_flows += st.active_flows;
+            load.losses += st.total_losses;
+            load.retransmit_bytes += st.total_retransmit_bytes;
+            load.registered_transfers = load.registered_transfers.max(self.active[s]);
+        }
+        load
     }
 
     /// Register a bulk transfer on its path (contention accounting).

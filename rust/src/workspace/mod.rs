@@ -33,7 +33,8 @@ use crate::simfs::{Lustre, LustreConfig, NfsConfig, NfsServer};
 use crate::simnet::{NetConfig, Network};
 use crate::vfs::ObjectStore;
 use crate::xfer::{
-    DigestSinks, FaultInjector, Priority, TransferReport, TransferRequest, XferConfig, XferEngine,
+    DigestSinks, FaultInjector, PathStateTable, Priority, TransferReport, TransferRequest,
+    TuneMode, XferConfig, XferEngine,
 };
 use localfs::LocalFs;
 
@@ -176,6 +177,9 @@ pub struct Testbed {
     /// Operation-level counters (metadata-miss fallbacks etc.).
     pub stats: OpStats,
     pub(crate) fuse_mounts: Vec<FuseMount>,
+    /// Learned per-path stream widths (adaptive tuning warm-start).
+    /// Populated only when `cfg.xfer.tune.mode` is adaptive.
+    pub xfer_paths: PathStateTable,
     rr_dtn: usize,
     next_xfer: u64,
 }
@@ -224,6 +228,7 @@ impl Testbed {
             collabs: Vec::new(),
             stats: OpStats::default(),
             fuse_mounts: Vec::new(),
+            xfer_paths: PathStateTable::new(),
             rr_dtn: 0,
             next_xfer: 0,
         }
@@ -253,6 +258,27 @@ impl Testbed {
             now: 0.0,
         });
         self.collabs.len() - 1
+    }
+
+    /// The `xfer` configuration for a transfer on `src -> dst`: the
+    /// testbed template, warm-started at the path's learned stream
+    /// width when adaptive tuning is on (no-op otherwise).
+    pub(crate) fn seeded_xfer_cfg(&self, src: usize, dst: usize) -> XferConfig {
+        let mut xcfg = self.cfg.xfer.clone();
+        if xcfg.tune.mode == TuneMode::Adaptive {
+            if let Some(w) = self.xfer_paths.learned_width(src, dst) {
+                xcfg.n_streams = w;
+            }
+        }
+        xcfg
+    }
+
+    /// Fold a finished transfer's tuning outcome back into the
+    /// per-path width table (no-op for fixed-width transfers).
+    pub(crate) fn record_tune(&mut self, rep: &TransferReport) {
+        if let Some(outcome) = &rep.tune {
+            self.xfer_paths.record(rep.src_dc, rep.dst_dc, outcome);
+        }
     }
 
     /// A collaborator's current virtual time.
@@ -512,8 +538,11 @@ impl Testbed {
     }
 
     /// POSIX-like write (create-if-missing). `data = None` simulates a
-    /// synthetic (IOR) payload; `Some` stores real bytes. Crate-internal:
-    /// the public surface is [`crate::api::Session`].
+    /// synthetic (IOR) payload; `Some` stores real bytes. Returns the
+    /// striped ingest transfer's report when the payload rode the bulk
+    /// engine (the per-stream goodput / per-path loss signal set),
+    /// `None` on the plain route. Crate-internal: the public surface is
+    /// [`crate::api::Session`].
     pub(crate) fn write(
         &mut self,
         c: usize,
@@ -522,10 +551,11 @@ impl Testbed {
         len: u64,
         data: Option<&[u8]>,
         mode: AccessMode,
-    ) -> Result<(), ScispaceError> {
+    ) -> Result<Option<TransferReport>, ScispaceError> {
         let home_dc = self.collabs[c].dc;
         let dtn = self.collabs[c].dtn;
         let (mut t2, obj, data_dc) = self.write_frontend(c, path, offset, len, data, mode)?;
+        let mut transfer = None;
 
         // data path cost
         match mode {
@@ -553,17 +583,19 @@ impl Testbed {
                     // the ingest DTN verifies chunk digests on its
                     // service CPU; the collaborator side stays private
                     let sinks = DigestSinks { src: None, dst: Some(self.dtns[dtn].meta_cpu) };
-                    let engine = XferEngine::new(self.cfg.xfer.clone());
-                    engine
-                        .transfer_with_sinks(
-                            &mut self.env,
-                            &mut self.net,
-                            &req,
-                            &mut FaultInjector::none(),
-                            t2,
-                            sinks,
-                        )?
-                        .finished_at
+                    let engine = XferEngine::new(self.seeded_xfer_cfg(req.src_dc, req.dst_dc));
+                    let rep = engine.transfer_with_sinks(
+                        &mut self.env,
+                        &mut self.net,
+                        &req,
+                        &mut FaultInjector::none(),
+                        t2,
+                        sinks,
+                    )?;
+                    self.record_tune(&rep);
+                    let tf = rep.finished_at;
+                    transfer = Some(rep);
+                    tf
                 } else {
                     self.net.route(&mut self.env, home_dc, self.dtns[dtn].dc, t2, len)
                 };
@@ -571,7 +603,7 @@ impl Testbed {
             }
         }
         self.collabs[c].now = t2;
-        Ok(())
+        Ok(transfer)
     }
 
     /// Back half of a non-native write, shared by [`Testbed::write`]
@@ -641,6 +673,20 @@ impl Testbed {
         len: u64,
         mode: AccessMode,
     ) -> Result<Vec<u8>, ScispaceError> {
+        self.read_traced(c, path, offset, len, mode).map(|(bytes, _)| bytes)
+    }
+
+    /// [`Testbed::read`] plus the striped WAN transfer's report when
+    /// the payload rode the bulk engine (`None` for local or
+    /// sub-threshold reads, which never stripe).
+    pub(crate) fn read_traced(
+        &mut self,
+        c: usize,
+        path: &str,
+        offset: u64,
+        len: u64,
+        mode: AccessMode,
+    ) -> Result<(Vec<u8>, Option<TransferReport>), ScispaceError> {
         let home_dc = self.collabs[c].dc;
         // native (LW) access resolves in the local data-center namespace
         // directly — no workspace metadata on the path; workspace modes
@@ -672,6 +718,7 @@ impl Testbed {
         }
 
         let mut t = t0;
+        let mut transfer = None;
         match mode {
             AccessMode::ScispaceLw => {
                 t += self.cfg.lustre_client_op;
@@ -696,7 +743,7 @@ impl Testbed {
                     // the staging DTN digests outbound chunks on its
                     // service CPU; the collaborator side stays private
                     let sinks = DigestSinks { src: Some(self.dtns[dtn].meta_cpu), dst: None };
-                    let engine = XferEngine::new(self.cfg.xfer.clone());
+                    let engine = XferEngine::new(self.seeded_xfer_cfg(req.src_dc, req.dst_dc));
                     let rep = engine.transfer_with_sinks(
                         &mut self.env,
                         &mut self.net,
@@ -705,7 +752,9 @@ impl Testbed {
                         t,
                         sinks,
                     )?;
+                    self.record_tune(&rep);
                     t = rep.finished_at;
+                    transfer = Some(rep);
                 } else {
                     // reads are synchronous RPCs in rsize chunks to a DTN
                     // in the hosting DC
@@ -734,7 +783,8 @@ impl Testbed {
             }
         }
         self.collabs[c].now = t;
-        Ok(self.dcs[data_dc].store.read_at(obj, offset, len as usize)?)
+        let bytes = self.dcs[data_dc].store.read_at(obj, offset, len as usize)?;
+        Ok((bytes, transfer))
     }
 
     /// Front half of a workspace-mode *bulk remote* read: FUSE calls,
@@ -879,9 +929,10 @@ impl Testbed {
             self.dtns[self.dtn_in_dc(src_dc, c)].meta_cpu,
             self.dtns[self.dtn_in_dc(dst_dc, c)].meta_cpu,
         );
-        let engine = XferEngine::new(self.cfg.xfer.clone());
+        let engine = XferEngine::new(self.seeded_xfer_cfg(src_dc, dst_dc));
         let rep =
             engine.transfer_with_sinks(&mut self.env, &mut self.net, &req, faults, t, sinks)?;
+        self.record_tune(&rep);
         // materialize the replica (real payloads copied byte-for-byte,
         // synthetic holes stay synthetic) and absorb it in the
         // destination PFS — the shared back end

@@ -19,27 +19,62 @@
 //! * [`integrity`] — chunk checksums, deterministic fault injection
 //!   (corrupt chunk, dying stream) and retry of *only* the affected
 //!   chunks.
+//! * [`tune`]      — the stream-count autotuner (see below).
+//!
+//! ## Stream autotuning
+//!
+//! A fixed stream count is wrong almost everywhere: on a lossy WAN the
+//! goodput-vs-width curve rises, peaks, then collapses (the
+//! over-striping cliff `bench::fig_xfer_streams_cc` measures). With
+//! [`TuneConfig::adaptive`] in [`XferConfig::tune`], every [`Flight`]
+//! carries an [`Autotuner`] that observes one **chunk round** at a time
+//! (one chunk per open stream) and hill-climbs the width toward the
+//! goodput peak:
+//!
+//! * **widen** while each step's marginal aggregate-goodput yield
+//!   clears [`TuneConfig::widen_margin`];
+//! * **shed** a quarter of the width the moment the transfer's *own*
+//!   flow-local loss deltas ([`Engine::flow_link_losses`]) climb past
+//!   [`TuneConfig::loss_shed_frac`] of the round's delivered bytes;
+//! * **hold** at the best measured width otherwise, re-probing one step
+//!   after a calm spell.
+//!
+//! The chunk-boundary rule: adaptation only ever happens between
+//! chunks — a chunk in flight is never re-striped — so the blocking
+//! path ([`XferEngine::transfer_with_sinks`]), the batch executor and
+//! the queue dispatcher ([`run_queue`]) all adapt identically, and
+//! [`TuneMode::Fixed`] stays bit-identical to the pre-autotuner engine
+//! (pinned by `tests/xfer_tune.rs`). Learned widths persist per
+//! `(src_dc, dst_dc)` path in a [`PathStateTable`], seeding the next
+//! transfer on the path — including repair re-replication
+//! (`metadata::replication`) — at the settled width. Decisions are
+//! observable as [`TraceEvent::Tune`] events and a width-over-time
+//! metrics series.
 //!
 //! The engine is consumed by [`crate::workspace`] (remote reads/writes
 //! above a size threshold), [`crate::metadata::replication`] (data-plane
 //! repair after a DTN outage), the `scispace xfer` CLI and the
-//! `fig_xfer_streams` / `fig_preempt` benches.
+//! `fig_xfer_streams` / `fig_preempt` / `fig_xfer_adaptive` benches.
 
 pub mod integrity;
 pub mod sched;
 pub mod stream;
+pub mod tune;
 
 use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
 use crate::engine::{CcConfig, Engine};
-use crate::obs::SpanId;
+use crate::obs::{SpanId, TraceEvent};
 use crate::simnet::{Link, Network};
 
 pub use integrity::{checksum, chunk_spans, Chunk, DigestSinks, FaultInjector};
-pub use sched::{run_flows, run_queue, FlowReport, TransferQueue};
+pub use sched::{run_flows, run_queue, run_queue_tuned, FlowReport, TransferQueue};
 pub use stream::{ChunkFlight, StreamSet};
+pub use tune::{
+    Autotuner, PathState, PathStateTable, RoundObs, TuneAction, TuneConfig, TuneMode, TuneOutcome,
+};
 
 /// Transfer priority class; the weight steers both queue admission and
 /// per-chunk dispatch between concurrent transfers.
@@ -120,6 +155,11 @@ pub struct XferConfig {
     pub max_retries: u32,
     /// Per-stream congestion control (off by default).
     pub cc: CongestionConfig,
+    /// Stream-count autotuning (off — [`TuneMode::Fixed`] — by
+    /// default; `n_streams` is then used as-is). When adaptive,
+    /// `n_streams` is only the *starting* width (callers seeding from a
+    /// [`PathStateTable`] overwrite it with the learned width).
+    pub tune: TuneConfig,
 }
 
 impl Default for XferConfig {
@@ -132,6 +172,7 @@ impl Default for XferConfig {
             checksum_bw: 10e9,
             max_retries: 4,
             cc: CongestionConfig::default(),
+            tune: TuneConfig::default(),
         }
     }
 }
@@ -156,60 +197,19 @@ pub struct TransferRequest {
 }
 
 /// Congestion accounting observed on one link of a transfer's path
-/// while the transfer ran (the delta of the link's counters). This is
-/// the per-path loss signal an adaptive stream-count controller needs:
-/// a path whose loss deltas keep climbing should shed striping width.
+/// while the transfer ran — the *transfer's own* share, summed from its
+/// chunk flows' flow-local counters ([`Engine::flow_link_losses`]),
+/// never from link-total snapshots (those double-count a concurrent
+/// transfer's losses the moment two transfers overlap on a link). This
+/// is the per-path loss signal the stream-count autotuner steers by.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PathLoss {
     /// Link name (as registered in the engine, e.g. `net.wan`).
     pub link: String,
-    /// Congestion losses synthesized on the link during the transfer.
+    /// Congestion losses this transfer's flows absorbed on the link.
     pub losses: u64,
     /// Bytes those losses re-queued for retransmission.
     pub retransmit_bytes: u64,
-}
-
-/// Snapshot the `(losses, retransmit_bytes)` counters of each hop of
-/// the `src_dc -> dst_dc` path, in path order. Pair with
-/// [`path_loss_delta`] around a transfer to attribute its per-link
-/// congestion — the one place the delta arithmetic lives.
-pub fn path_loss_baseline(
-    env: &Engine,
-    net: &Network,
-    src_dc: usize,
-    dst_dc: usize,
-) -> Vec<(u64, u64)> {
-    net.path(src_dc, dst_dc)
-        .iter()
-        .map(|l| {
-            let lk = env.link(l.res);
-            (lk.total_losses, lk.total_retransmit_bytes)
-        })
-        .collect()
-}
-
-/// The per-hop [`PathLoss`] deltas of the `src_dc -> dst_dc` path since
-/// `baseline` (which must come from [`path_loss_baseline`] on the same
-/// path).
-pub fn path_loss_delta(
-    env: &Engine,
-    net: &Network,
-    src_dc: usize,
-    dst_dc: usize,
-    baseline: &[(u64, u64)],
-) -> Vec<PathLoss> {
-    net.path(src_dc, dst_dc)
-        .iter()
-        .zip(baseline)
-        .map(|(l, &(l0, r0))| {
-            let lk = env.link(l.res);
-            PathLoss {
-                link: lk.name.clone(),
-                losses: lk.total_losses - l0,
-                retransmit_bytes: lk.total_retransmit_bytes - r0,
-            }
-        })
-        .collect()
 }
 
 /// Outcome of one completed transfer.
@@ -221,11 +221,16 @@ pub struct TransferReport {
     pub owner: String,
     /// Priority class.
     pub priority: Priority,
+    /// Source data center.
+    pub src_dc: usize,
+    /// Destination data center.
+    pub dst_dc: usize,
     /// Payload bytes delivered (every chunk verified).
     pub bytes: u64,
     /// Chunks in the transfer.
     pub chunks: u32,
-    /// Streams opened.
+    /// Streams opened over the transfer's lifetime (autotuner widening
+    /// included; matches `stream_goodput.len()`).
     pub streams: usize,
     /// Chunk deliveries that had to be repeated.
     pub retried_chunks: u32,
@@ -250,10 +255,14 @@ pub struct TransferReport {
     /// deliveries excluded. Together with `path_losses` this is the
     /// signal set for an adaptive stream-count controller.
     pub stream_goodput: Vec<f64>,
-    /// Per-link congestion accounting deltas along the transfer's path
-    /// (filled by [`XferEngine::transfer_with_sinks`]; empty for
-    /// flights driven chunk-by-chunk by an external scheduler).
+    /// The transfer's own per-link congestion shares along its path, in
+    /// hop order (filled by [`Flight::into_report`] from the flow-local
+    /// accounting, so every execution path — blocking, batch, queue —
+    /// reports identically).
     pub path_losses: Vec<PathLoss>,
+    /// What the stream-count controller did (`None` under
+    /// [`TuneMode::Fixed`]).
+    pub tune: Option<TuneOutcome>,
 }
 
 impl TransferReport {
@@ -307,6 +316,18 @@ pub struct Flight {
     /// Op span chunk slices are parented under (flight-recorder
     /// attribution only; never affects timing).
     span: Option<SpanId>,
+    /// The stream-count controller (`None` under [`TuneMode::Fixed`] —
+    /// the fixed path then never touches the round accounting below).
+    tuner: Option<Autotuner>,
+    /// Chunks completed in the current observation round.
+    round_chunks: u32,
+    /// Virtual time the current round opened.
+    round_started: f64,
+    /// Payload bytes the current round delivered and verified.
+    round_bytes: u64,
+    /// `(cc_losses, cc_retransmit_bytes)` at the round open — the
+    /// deltas against these are the round's flow-local loss signal.
+    round_loss_base: (u64, u64),
 }
 
 impl Flight {
@@ -328,6 +349,14 @@ impl Flight {
     ) -> Flight {
         let chunks = chunk_spans(req.bytes, cfg.chunk_bytes);
         let width = cfg.n_streams.max(1).min(chunks.len().max(1));
+        // adaptive: n_streams is only the starting width, clamped into
+        // the controller's band (callers seeding a learned width have
+        // already overwritten n_streams)
+        let tuner = match cfg.tune.mode {
+            TuneMode::Fixed => None,
+            TuneMode::Adaptive => Some(Autotuner::new(cfg.tune.clone(), width)),
+        };
+        let width = tuner.as_ref().map_or(width, Autotuner::width);
         let streams = StreamSet::new(width, now, cfg.stream_setup_s);
         let attempts = vec![0u32; chunks.len()];
         Flight {
@@ -341,6 +370,8 @@ impl Flight {
                 id: req.id,
                 owner: req.owner.clone(),
                 priority: req.priority,
+                src_dc: req.src_dc,
+                dst_dc: req.dst_dc,
                 bytes: req.bytes,
                 chunks: 0,
                 streams: width,
@@ -353,9 +384,15 @@ impl Flight {
                 finished_at: now,
                 stream_goodput: Vec::new(),
                 path_losses: Vec::new(),
+                tune: None,
             },
             streams,
             span: None,
+            tuner,
+            round_chunks: 0,
+            round_started: now,
+            round_bytes: 0,
+            round_loss_base: (0, 0),
         }
     }
 
@@ -481,15 +518,89 @@ impl Flight {
             self.delivered_bytes += chunk.len;
             self.report.chunks += 1;
             self.report.finished_at = self.report.finished_at.max(t);
+            if self.tuner.is_some() {
+                self.round_bytes += chunk.len;
+            }
+        }
+        if self.tuner.is_some() {
+            self.round_chunks += 1;
+            self.maybe_tune(cfg, env, t);
         }
     }
 
-    /// Consume the flight into its report.
-    pub fn into_report(mut self) -> TransferReport {
+    /// Close the observation round if it is complete and apply the
+    /// controller's verdict — the chunk-boundary adaptation rule: this
+    /// runs only between chunks, so a chunk in flight is never
+    /// re-striped. No-op while the round is still filling or when no
+    /// chunks remain to act on.
+    fn maybe_tune(&mut self, cfg: &XferConfig, env: &mut Engine, now: f64) {
+        let Some(tuner) = self.tuner.as_mut() else { return };
+        if (self.round_chunks as usize) < tuner.width() || self.pending.is_empty() {
+            return;
+        }
+        let obs = RoundObs {
+            width: tuner.width(),
+            delivered_bytes: self.round_bytes,
+            elapsed_s: now - self.round_started,
+            losses: self.streams.cc_losses() - self.round_loss_base.0,
+            retransmit_bytes: self.streams.cc_retransmit_bytes() - self.round_loss_base.1,
+        };
+        let action = tuner.observe(&obs);
+        let (from, to) = match action {
+            TuneAction::Widen { to } => {
+                let live = self.streams.live_count();
+                if to > live {
+                    self.streams.grow(to - live, now, cfg.stream_setup_s);
+                }
+                (obs.width, to)
+            }
+            TuneAction::Shed { to } => {
+                self.streams.shed_to(to);
+                (obs.width, to)
+            }
+            TuneAction::Hold => (obs.width, obs.width),
+        };
+        if from != to && env.recording() {
+            self.emit_tune(env, now, from, to, &obs);
+        }
+        self.round_chunks = 0;
+        self.round_bytes = 0;
+        self.round_started = now;
+        self.round_loss_base = (self.streams.cc_losses(), self.streams.cc_retransmit_bytes());
+    }
+
+    /// Recorder-only tuner-decision event (never affects timing).
+    fn emit_tune(&self, env: &mut Engine, t: f64, from: usize, to: usize, obs: &RoundObs) {
+        env.emit(TraceEvent::Tune {
+            t,
+            transfer: self.req.id,
+            src_dc: self.req.src_dc,
+            dst_dc: self.req.dst_dc,
+            from,
+            to,
+            rate: obs.rate(),
+            losses: obs.losses,
+        });
+    }
+
+    /// Consume the flight into its report. `env` resolves the path's
+    /// link names for the flow-local per-link loss attribution.
+    pub fn into_report(mut self, env: &Engine) -> TransferReport {
         self.report.cc_losses = self.streams.cc_losses();
         self.report.cc_retransmit_bytes = self.streams.cc_retransmit_bytes();
+        self.report.streams = self.streams.width();
         self.report.stream_goodput =
             (0..self.streams.width()).map(|s| self.streams.goodput(s)).collect();
+        self.report.path_losses = self
+            .path
+            .iter()
+            .map(|l| {
+                let (losses, retransmit_bytes) =
+                    self.streams.link_losses().get(&l.res.0).copied().unwrap_or((0, 0));
+                PathLoss { link: env.link(l.res).name.clone(), losses, retransmit_bytes }
+            })
+            .collect();
+        self.report.tune = self.tuner.as_ref().map(Autotuner::outcome);
         self.report
     }
 }
@@ -540,9 +651,6 @@ impl XferEngine {
         if let Some(span) = env.current_span() {
             flight.set_span(span);
         }
-        // per-path congestion baseline: report the loss *delta* this
-        // transfer experienced on each hop of its path
-        let before = path_loss_baseline(env, net, req.src_dc, req.dst_dc);
         net.begin_transfer(req.src_dc, req.dst_dc);
         let mut outcome = Ok(());
         while !flight.is_done() {
@@ -553,8 +661,35 @@ impl XferEngine {
         }
         net.end_transfer(req.src_dc, req.dst_dc);
         outcome?;
-        let mut report = flight.into_report();
-        report.path_losses = path_loss_delta(env, net, req.src_dc, req.dst_dc, &before);
+        Ok(flight.into_report(env))
+    }
+
+    /// [`XferEngine::transfer_with_sinks`] with per-path width
+    /// persistence: when the controller is enabled, the starting stream
+    /// count is seeded from the table's learned width for
+    /// `(src_dc, dst_dc)` (if any), and the transfer's tuner outcome is
+    /// recorded back so the next transfer on the path warm-starts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer_tuned(
+        &self,
+        env: &mut Engine,
+        net: &mut Network,
+        req: &TransferRequest,
+        faults: &mut FaultInjector,
+        now: f64,
+        sinks: DigestSinks,
+        paths: &mut PathStateTable,
+    ) -> Result<TransferReport> {
+        let mut eng = self.clone();
+        if eng.cfg.tune.mode == TuneMode::Adaptive {
+            if let Some(w) = paths.learned_width(req.src_dc, req.dst_dc) {
+                eng.cfg.n_streams = w;
+            }
+        }
+        let report = eng.transfer_with_sinks(env, net, req, faults, now, sinks)?;
+        if let Some(outcome) = &report.tune {
+            paths.record(req.src_dc, req.dst_dc, outcome);
+        }
         Ok(report)
     }
 }

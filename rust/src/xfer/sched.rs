@@ -26,6 +26,7 @@ use anyhow::Result;
 use crate::engine::{Engine, LinkId, Occurrence};
 use crate::simnet::Network;
 
+use super::tune::{PathStateTable, TuneMode};
 use super::{
     FaultInjector, Flight, Priority, TransferReport, TransferRequest, XferConfig, XferEngine,
 };
@@ -149,7 +150,7 @@ pub fn run_queue(
                 }
                 return Err(e);
             }
-            let report = flight.into_report();
+            let report = flight.into_report(env);
             queue.note_served(
                 &report.owner,
                 report.bytes as f64 / report.priority.weight(),
@@ -157,6 +158,82 @@ pub fn run_queue(
             admit_at = admit_at.max(report.finished_at);
             out.push(report);
             admit(&mut flights, queue, net, admit_at);
+        }
+    }
+    Ok(out)
+}
+
+/// [`run_queue`] with per-path width persistence: each admission seeds
+/// its starting stream count from the [`PathStateTable`]'s learned
+/// width for the transfer's `(src_dc, dst_dc)` path (when the
+/// controller is enabled), and each completion records its tuner
+/// outcome back, so later admissions on the same path warm-start at the
+/// settled width instead of re-climbing from the configured default.
+#[allow(clippy::too_many_arguments)]
+pub fn run_queue_tuned(
+    engine: &XferEngine,
+    env: &mut Engine,
+    net: &mut Network,
+    queue: &mut TransferQueue,
+    faults: &mut FaultInjector,
+    now: f64,
+    max_concurrent: usize,
+    paths: &mut PathStateTable,
+) -> Result<Vec<TransferReport>> {
+    let max_concurrent = max_concurrent.max(1);
+    let adaptive = engine.cfg.tune.mode == TuneMode::Adaptive;
+    let mut flights: Vec<Flight> = Vec::new();
+    let mut out = Vec::new();
+    let mut admit_at = now;
+
+    let admit = |flights: &mut Vec<Flight>,
+                 queue: &mut TransferQueue,
+                 net: &mut Network,
+                 paths: &PathStateTable,
+                 at: f64| {
+        while flights.len() < max_concurrent {
+            let Some(req) = queue.pop_next() else { break };
+            net.begin_transfer(req.src_dc, req.dst_dc);
+            let start = at.max(req.submitted_at);
+            let mut cfg = engine.cfg.clone();
+            if adaptive {
+                if let Some(w) = paths.learned_width(req.src_dc, req.dst_dc) {
+                    cfg.n_streams = w;
+                }
+            }
+            flights.push(Flight::new(&cfg, net, &req, start));
+        }
+    };
+    admit(&mut flights, queue, net, paths, admit_at);
+
+    while !flights.is_empty() {
+        let mut pick = 0;
+        for i in 1..flights.len() {
+            if flights[i].weighted_service() < flights[pick].weighted_service() {
+                pick = i;
+            }
+        }
+        let step = flights[pick].step(&engine.cfg, env, faults);
+        if step.is_err() || flights[pick].is_done() {
+            let flight = flights.swap_remove(pick);
+            net.end_transfer(flight.req.src_dc, flight.req.dst_dc);
+            if let Err(e) = step {
+                for f in &flights {
+                    net.end_transfer(f.req.src_dc, f.req.dst_dc);
+                }
+                return Err(e);
+            }
+            let report = flight.into_report(env);
+            if let Some(outcome) = &report.tune {
+                paths.record(report.src_dc, report.dst_dc, outcome);
+            }
+            queue.note_served(
+                &report.owner,
+                report.bytes as f64 / report.priority.weight(),
+            );
+            admit_at = admit_at.max(report.finished_at);
+            out.push(report);
+            admit(&mut flights, queue, net, paths, admit_at);
         }
     }
     Ok(out)

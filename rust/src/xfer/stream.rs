@@ -15,6 +15,8 @@
 //! goodput ([`StreamSet::goodput`]) and loss counters expose what the
 //! window did to each stripe.
 
+use std::collections::BTreeMap;
+
 use crate::engine::{Engine, FlowId, LinkId};
 use crate::simnet::Link;
 
@@ -52,6 +54,13 @@ pub struct StreamSet {
     losses: Vec<u64>,
     /// Engine-level retransmit bytes per stream.
     retransmit: Vec<u64>,
+    /// Flow-local per-link loss attribution, accumulated across every
+    /// chunk flow the set has carried: link index ->
+    /// `(losses, retransmit_bytes)`. This is *this transfer's* share of
+    /// each link's congestion (harvested from
+    /// `Engine::flow_link_losses` before the chunk flow is retired),
+    /// so overlapping transfers never double-count each other.
+    link_losses: BTreeMap<usize, (u64, u64)>,
     /// When the streams were opened (for goodput).
     opened_at: f64,
     /// Latest chunk-completion time observed (the transfer makespan).
@@ -72,9 +81,48 @@ impl StreamSet {
             windows: vec![None; n],
             losses: vec![0; n],
             retransmit: vec![0; n],
+            link_losses: BTreeMap::new(),
             opened_at: start,
             last_done: start,
         }
+    }
+
+    /// Open `extra` additional streams at virtual time `at` (the
+    /// autotuner's widen step): each pays its own connection setup and
+    /// starts a fresh congestion window, exactly like a stream opened
+    /// at transfer start.
+    pub fn grow(&mut self, extra: usize, at: f64, setup_s: f64) {
+        for _ in 0..extra {
+            self.clocks.push(at + setup_s);
+            self.live.push(true);
+            self.sent.push(0);
+            self.carried.push(0);
+            self.wasted.push(0);
+            self.windows.push(None);
+            self.losses.push(0);
+            self.retransmit.push(0);
+        }
+    }
+
+    /// Close live streams — highest index first, so the longest-lived
+    /// stripes survive — until at most `target` remain (the autotuner's
+    /// shed step; floored at one). A closed stream's carried bytes and
+    /// goodput remain on the books: shedding is an orderly close, not a
+    /// fault, so it never touches the drop accounting. Returns how many
+    /// streams were closed.
+    pub fn shed_to(&mut self, target: usize) -> usize {
+        let target = target.max(1);
+        let mut closed = 0;
+        for s in (0..self.live.len()).rev() {
+            if self.live_count() <= target {
+                break;
+            }
+            if self.live[s] {
+                self.live[s] = false;
+                closed += 1;
+            }
+        }
+        closed
     }
 
     /// Number of streams opened (live or dead).
@@ -133,6 +181,13 @@ impl StreamSet {
     /// Total engine-level retransmit bytes across the streams.
     pub fn cc_retransmit_bytes(&self) -> u64 {
         self.retransmit.iter().sum()
+    }
+
+    /// This transfer's flow-local per-link loss shares: link index ->
+    /// `(losses, retransmit_bytes)`, accumulated across every chunk
+    /// flow the set has carried.
+    pub fn link_losses(&self) -> &BTreeMap<usize, (u64, u64)> {
+        &self.link_losses
     }
 
     /// The live stream with the earliest local clock (deterministic:
@@ -241,6 +296,14 @@ impl StreamSet {
             self.windows[s] = env.flow_window(flow).zip(env.flow_ssthresh(flow));
             self.losses[s] += env.flow_losses(flow);
             self.retransmit[s] += env.flow_retransmitted_bytes(flow);
+            // harvest the flow's per-link loss shares before the slot
+            // is recycled: this is the transfer's own congestion on
+            // each hop, immune to concurrent transfers' losses
+            for &(link, losses, retx) in env.flow_link_losses(flow) {
+                let e = self.link_losses.entry(link).or_insert((0, 0));
+                e.0 += losses;
+                e.1 += retx;
+            }
         }
         // receiver verifies the digest on arrival; a sender without a
         // sink pays its digest as private time here too (the no-sink

@@ -1,0 +1,538 @@
+//! Stream-count autotuning: a goodput-guided hill climber that replaces
+//! the hand-picked `n_streams` with a per-path controller.
+//!
+//! ## Control law
+//!
+//! The controller observes one *chunk round* at a time (a round is one
+//! chunk per currently-open stream) and sees the round's aggregate
+//! goodput plus the loss/retransmit deltas the transfer's own flows
+//! absorbed on the path (flow-local, never another transfer's losses):
+//!
+//! 1. **Shed on loss** — if the round synthesized losses and the
+//!    retransmitted bytes exceed [`TuneConfig::loss_shed_frac`] of the
+//!    delivered bytes, shed a quarter of the width (floored at
+//!    [`TuneConfig::min_streams`]). Loss wins over every other rule:
+//!    the over-striping collapse costs far more than a too-narrow
+//!    stripe set.
+//! 2. **Widen while the marginal yield holds** — in the probe phase,
+//!    keep widening geometrically (`width/2` more streams per step)
+//!    while each step improves aggregate goodput by at least
+//!    [`TuneConfig::widen_margin`]. The first step that fails to pay
+//!    falls back to the best width measured so far and holds.
+//! 3. **Re-probe after calm** — after [`TuneConfig::reprobe_rounds`]
+//!    consecutive clean rounds in the hold phase, try one more widening
+//!    step (the path may have drained).
+//!
+//! Adaptation happens only at chunk boundaries — a chunk in flight is
+//! never re-striped — so the blocking, batch-admitted and queue-driven
+//! transfer paths all adapt identically (`xfer::Flight` owns the round
+//! accounting). With [`TuneMode::Fixed`] the controller is never
+//! constructed and every code path is bit-identical to the
+//! pre-autotuner engine (pinned by `tests/xfer_tune.rs`).
+//!
+//! Learned widths persist across transfers in a [`PathStateTable`]
+//! keyed by `(src_dc, dst_dc)`: the next transfer on the path starts at
+//! the settled width instead of re-climbing from scratch, and the
+//! repair planner seeds its re-replication transfers from the same
+//! table.
+
+use std::collections::BTreeMap;
+
+/// Is the stream-count controller active for a transfer?
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TuneMode {
+    /// `XferConfig::n_streams` is used as-is (the pre-autotuner
+    /// behaviour, bit-identical).
+    #[default]
+    Fixed,
+    /// A per-transfer [`Autotuner`] adjusts the stream count at chunk
+    /// boundaries.
+    Adaptive,
+}
+
+/// Controller tuning knobs (defaults work unmodified on both the clean
+/// and the lossy WAN — no per-scenario hand tuning).
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Controller on/off.
+    pub mode: TuneMode,
+    /// Width floor the controller never sheds below.
+    pub min_streams: usize,
+    /// Width ceiling the controller never widens past.
+    pub max_streams: usize,
+    /// Relative aggregate-goodput gain a widening step must deliver to
+    /// keep probing (rule 2).
+    pub widen_margin: f64,
+    /// Retransmitted-bytes fraction of the round's delivered bytes that
+    /// classifies the round as lossy (rule 1).
+    pub loss_shed_frac: f64,
+    /// Clean hold-phase rounds before the controller re-probes wider
+    /// (rule 3).
+    pub reprobe_rounds: u32,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            mode: TuneMode::Fixed,
+            min_streams: 1,
+            max_streams: 32,
+            widen_margin: 0.02,
+            loss_shed_frac: 0.01,
+            reprobe_rounds: 3,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// The adaptive controller with default thresholds.
+    pub fn adaptive() -> Self {
+        TuneConfig { mode: TuneMode::Adaptive, ..TuneConfig::default() }
+    }
+}
+
+/// What one completed chunk round looked like — the controller's whole
+/// input. Loss counters are the *round deltas of this transfer's own
+/// flows* (see `Engine::flow_link_losses`), never link totals.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundObs {
+    /// Stream width the round ran at.
+    pub width: usize,
+    /// Payload bytes the round delivered and verified.
+    pub delivered_bytes: u64,
+    /// Virtual seconds the round took.
+    pub elapsed_s: f64,
+    /// Congestion losses this transfer's streams absorbed in the round.
+    pub losses: u64,
+    /// Bytes those losses re-queued for retransmission.
+    pub retransmit_bytes: u64,
+}
+
+impl RoundObs {
+    /// The round's aggregate goodput, bytes/s (0 when instantaneous).
+    pub fn rate(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.delivered_bytes as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The controller's verdict for the next round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneAction {
+    /// Keep the current width.
+    Hold,
+    /// Open streams up to `to` total.
+    Widen {
+        /// New total width.
+        to: usize,
+    },
+    /// Close streams down to `to` total.
+    Shed {
+        /// New total width.
+        to: usize,
+    },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Climbing: each clean round widens while the marginal yield holds.
+    Probe,
+    /// Settled: holding width, counting calm rounds toward a re-probe.
+    Hold,
+}
+
+/// The per-transfer hill climber (see the module docs for the control
+/// law). Deterministic: same observation sequence, same decisions.
+#[derive(Debug, Clone)]
+pub struct Autotuner {
+    cfg: TuneConfig,
+    width: usize,
+    initial: usize,
+    phase: Phase,
+    /// Goodput of the previous probe step (the widen comparison base).
+    prev_rate: f64,
+    /// Best clean-round goodput measured, and the width it ran at.
+    best_rate: f64,
+    best_width: usize,
+    calm_rounds: u32,
+    rounds: u32,
+    widens: u32,
+    sheds: u32,
+}
+
+impl Autotuner {
+    /// A controller starting at `start_width` (clamped into the
+    /// configured `[min_streams, max_streams]` band).
+    pub fn new(cfg: TuneConfig, start_width: usize) -> Self {
+        let lo = cfg.min_streams.max(1);
+        let hi = cfg.max_streams.max(lo);
+        let width = start_width.clamp(lo, hi);
+        Autotuner {
+            width,
+            initial: width,
+            phase: Phase::Probe,
+            prev_rate: 0.0,
+            best_rate: 0.0,
+            best_width: width,
+            calm_rounds: 0,
+            rounds: 0,
+            widens: 0,
+            sheds: 0,
+            cfg,
+        }
+    }
+
+    /// The width the next round should run at.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Feed one completed round; returns what to do before the next.
+    pub fn observe(&mut self, obs: &RoundObs) -> TuneAction {
+        self.rounds += 1;
+        let rate = obs.rate();
+        let lossy = obs.losses > 0
+            && obs.retransmit_bytes as f64
+                > self.cfg.loss_shed_frac * obs.delivered_bytes as f64;
+        if !lossy && rate > self.best_rate {
+            self.best_rate = rate;
+            self.best_width = self.width;
+        }
+        if lossy {
+            // rule 1: loss wins — shed a quarter, hold, restart calm
+            self.phase = Phase::Hold;
+            self.calm_rounds = 0;
+            self.prev_rate = rate;
+            let to = self
+                .width
+                .saturating_sub((self.width / 4).max(1))
+                .max(self.cfg.min_streams.max(1));
+            if to < self.width {
+                self.width = to;
+                self.sheds += 1;
+                return TuneAction::Shed { to };
+            }
+            return TuneAction::Hold;
+        }
+        match self.phase {
+            Phase::Probe => {
+                let ceiling = self.cfg.max_streams.max(1);
+                if self.width < ceiling
+                    && rate >= self.prev_rate * (1.0 + self.cfg.widen_margin)
+                {
+                    // rule 2: the last step paid — take the next one
+                    self.prev_rate = rate;
+                    let to = (self.width + (self.width / 2).max(1)).min(ceiling);
+                    self.width = to;
+                    self.widens += 1;
+                    TuneAction::Widen { to }
+                } else {
+                    // the climb stalled: settle on the best width seen
+                    self.phase = Phase::Hold;
+                    self.calm_rounds = 0;
+                    if self.best_width < self.width {
+                        let to = self.best_width.max(self.cfg.min_streams.max(1));
+                        self.width = to;
+                        self.sheds += 1;
+                        TuneAction::Shed { to }
+                    } else {
+                        TuneAction::Hold
+                    }
+                }
+            }
+            Phase::Hold => {
+                self.calm_rounds += 1;
+                if self.calm_rounds >= self.cfg.reprobe_rounds
+                    && self.width < self.cfg.max_streams.max(1)
+                {
+                    // rule 3: the path has been calm — try one step up
+                    self.phase = Phase::Probe;
+                    self.calm_rounds = 0;
+                    self.prev_rate = rate;
+                    let to = self.width + 1;
+                    self.width = to;
+                    self.widens += 1;
+                    TuneAction::Widen { to }
+                } else {
+                    TuneAction::Hold
+                }
+            }
+        }
+    }
+
+    /// The width worth persisting for the path: the best clean-round
+    /// width if one was measured, otherwise wherever the controller is.
+    pub fn settled_width(&self) -> usize {
+        if self.best_rate > 0.0 {
+            self.best_width
+        } else {
+            self.width
+        }
+    }
+
+    /// Consume the controller into its transfer-level outcome.
+    pub fn outcome(&self) -> TuneOutcome {
+        TuneOutcome {
+            initial_streams: self.initial,
+            final_streams: self.width,
+            settled_streams: self.settled_width(),
+            best_rate: self.best_rate,
+            rounds: self.rounds,
+            widens: self.widens,
+            sheds: self.sheds,
+        }
+    }
+}
+
+/// What the controller did over one transfer — surfaced in
+/// `TransferReport::tune` so both the blocking and the batch-admitted
+/// paths report identical tuning provenance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TuneOutcome {
+    /// Width the transfer opened with.
+    pub initial_streams: usize,
+    /// Width it was running when the last chunk verified.
+    pub final_streams: usize,
+    /// Width worth persisting ([`Autotuner::settled_width`]).
+    pub settled_streams: usize,
+    /// Best clean-round aggregate goodput measured, bytes/s.
+    pub best_rate: f64,
+    /// Chunk rounds observed.
+    pub rounds: u32,
+    /// Widen decisions taken.
+    pub widens: u32,
+    /// Shed decisions taken (loss sheds and stall fallbacks).
+    pub sheds: u32,
+}
+
+/// What a path has taught the controller so far.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathState {
+    /// Settled stream width of the most recent transfer.
+    pub width: usize,
+    /// Best clean-round goodput that transfer measured, bytes/s.
+    pub rate: f64,
+    /// Transfers that have reported on this path.
+    pub transfers: u64,
+    /// Cumulative widen decisions across those transfers.
+    pub widens: u32,
+    /// Cumulative shed decisions across those transfers.
+    pub sheds: u32,
+}
+
+/// Learned per-path stream widths, keyed `(src_dc, dst_dc)` — the
+/// persistence layer that lets transfer N+1 start where transfer N
+/// settled instead of re-climbing. Deterministic iteration (BTreeMap)
+/// so exports and seeding order never wobble.
+#[derive(Debug, Clone, Default)]
+pub struct PathStateTable {
+    paths: BTreeMap<(usize, usize), PathState>,
+}
+
+impl PathStateTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The learned state for a path, if any transfer has reported.
+    pub fn learned(&self, src_dc: usize, dst_dc: usize) -> Option<&PathState> {
+        self.paths.get(&(src_dc, dst_dc))
+    }
+
+    /// Just the learned width (the seeding accessor).
+    pub fn learned_width(&self, src_dc: usize, dst_dc: usize) -> Option<usize> {
+        self.learned(src_dc, dst_dc).map(|s| s.width)
+    }
+
+    /// Fold one finished transfer's tuning outcome into the path.
+    pub fn record(&mut self, src_dc: usize, dst_dc: usize, out: &TuneOutcome) {
+        let e = self.paths.entry((src_dc, dst_dc)).or_insert(PathState {
+            width: out.settled_streams,
+            rate: 0.0,
+            transfers: 0,
+            widens: 0,
+            sheds: 0,
+        });
+        e.width = out.settled_streams;
+        e.rate = out.best_rate;
+        e.transfers += 1;
+        e.widens += out.widens;
+        e.sheds += out.sheds;
+    }
+
+    /// Paths with learned state.
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// True when nothing has been learned yet.
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// Iterate the learned paths in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, usize), &PathState)> {
+        self.paths.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean(width: usize, rate: f64) -> RoundObs {
+        RoundObs {
+            width,
+            delivered_bytes: (rate * 1.0) as u64,
+            elapsed_s: 1.0,
+            losses: 0,
+            retransmit_bytes: 0,
+        }
+    }
+
+    fn lossy(width: usize, rate: f64, retx_frac: f64) -> RoundObs {
+        let delivered = (rate * 1.0) as u64;
+        RoundObs {
+            width,
+            delivered_bytes: delivered,
+            elapsed_s: 1.0,
+            losses: 3,
+            retransmit_bytes: (delivered as f64 * retx_frac) as u64,
+        }
+    }
+
+    #[test]
+    fn widens_while_marginal_yield_holds() {
+        let mut t = Autotuner::new(TuneConfig::adaptive(), 2);
+        // each round 40% faster than the last: every step pays
+        let mut rate = 100e6;
+        let mut widths = vec![t.width()];
+        for _ in 0..4 {
+            match t.observe(&clean(t.width(), rate)) {
+                TuneAction::Widen { to } => widths.push(to),
+                other => panic!("expected widen, got {other:?}"),
+            }
+            rate *= 1.4;
+        }
+        assert_eq!(widths, vec![2, 3, 4, 6, 9], "geometric climb");
+        assert_eq!(t.outcome().widens, 4);
+        assert_eq!(t.outcome().sheds, 0);
+    }
+
+    #[test]
+    fn stalled_probe_falls_back_to_best_width_and_holds() {
+        let mut t = Autotuner::new(TuneConfig::adaptive(), 4);
+        assert_eq!(t.observe(&clean(4, 400e6)), TuneAction::Widen { to: 6 });
+        // wider but *slower*: the step did not pay
+        assert_eq!(t.observe(&clean(6, 390e6)), TuneAction::Shed { to: 4 });
+        assert_eq!(t.width(), 4);
+        // and it now holds at the fallback width
+        assert_eq!(t.observe(&clean(4, 400e6)), TuneAction::Hold);
+        assert_eq!(t.settled_width(), 4);
+    }
+
+    #[test]
+    fn plateau_below_margin_stops_the_climb() {
+        let cfg = TuneConfig { widen_margin: 0.05, ..TuneConfig::adaptive() };
+        let mut t = Autotuner::new(cfg, 8);
+        assert_eq!(t.observe(&clean(8, 1000e6)), TuneAction::Widen { to: 12 });
+        // +2% < the 5% margin: stall, but 12 was the best width measured
+        assert_eq!(t.observe(&clean(12, 1020e6)), TuneAction::Hold);
+        assert_eq!(t.width(), 12);
+    }
+
+    #[test]
+    fn loss_sheds_a_quarter_and_overrides_the_probe() {
+        let mut t = Autotuner::new(TuneConfig::adaptive(), 16);
+        assert_eq!(t.observe(&lossy(16, 500e6, 0.2)), TuneAction::Shed { to: 12 });
+        assert_eq!(t.observe(&lossy(12, 520e6, 0.2)), TuneAction::Shed { to: 9 });
+        assert_eq!(t.outcome().sheds, 2);
+        // lossy rounds never update the persisted best
+        assert_eq!(t.outcome().best_rate, 0.0);
+    }
+
+    #[test]
+    fn tiny_retransmit_fraction_does_not_shed() {
+        let mut t = Autotuner::new(TuneConfig::adaptive(), 8);
+        // losses present but below loss_shed_frac of delivered: not lossy
+        let obs = RoundObs {
+            width: 8,
+            delivered_bytes: 1 << 30,
+            elapsed_s: 1.0,
+            losses: 1,
+            retransmit_bytes: 1 << 10,
+        };
+        assert!(matches!(t.observe(&obs), TuneAction::Widen { .. }));
+    }
+
+    #[test]
+    fn shed_floors_at_min_streams() {
+        let cfg = TuneConfig { min_streams: 4, ..TuneConfig::adaptive() };
+        let mut t = Autotuner::new(cfg, 5);
+        assert_eq!(t.observe(&lossy(5, 100e6, 0.5)), TuneAction::Shed { to: 4 });
+        assert_eq!(t.observe(&lossy(4, 100e6, 0.5)), TuneAction::Hold, "at the floor");
+        assert_eq!(t.width(), 4);
+    }
+
+    #[test]
+    fn calm_hold_reprobes_one_step() {
+        let cfg = TuneConfig { reprobe_rounds: 2, ..TuneConfig::adaptive() };
+        let mut t = Autotuner::new(cfg, 8);
+        t.observe(&lossy(8, 500e6, 0.3)); // -> Hold phase at 6
+        assert_eq!(t.width(), 6);
+        assert_eq!(t.observe(&clean(6, 500e6)), TuneAction::Hold);
+        assert_eq!(t.observe(&clean(6, 500e6)), TuneAction::Widen { to: 7 });
+    }
+
+    #[test]
+    fn frozen_band_never_moves() {
+        // min == max: the controller observes but can never act — the
+        // invariant the fixed-vs-adaptive equivalence test leans on.
+        let cfg =
+            TuneConfig { min_streams: 8, max_streams: 8, ..TuneConfig::adaptive() };
+        let mut t = Autotuner::new(cfg, 8);
+        for i in 0..20 {
+            let obs = if i % 3 == 0 {
+                lossy(8, 100e6, 0.9)
+            } else {
+                clean(8, (100 + i) as f64 * 1e6)
+            };
+            assert_eq!(t.observe(&obs), TuneAction::Hold, "round {i}");
+        }
+        assert_eq!(t.width(), 8);
+        assert_eq!(t.outcome().widens, 0);
+        assert_eq!(t.outcome().sheds, 0);
+    }
+
+    #[test]
+    fn start_width_clamps_into_the_band() {
+        let cfg = TuneConfig { min_streams: 2, max_streams: 16, ..TuneConfig::adaptive() };
+        assert_eq!(Autotuner::new(cfg.clone(), 0).width(), 2);
+        assert_eq!(Autotuner::new(cfg.clone(), 64).width(), 16);
+        assert_eq!(Autotuner::new(cfg, 8).width(), 8);
+    }
+
+    #[test]
+    fn path_table_seeds_next_transfer_with_settled_width() {
+        let mut table = PathStateTable::new();
+        assert!(table.is_empty());
+        assert_eq!(table.learned_width(0, 1), None);
+        let mut t = Autotuner::new(TuneConfig::adaptive(), 2);
+        t.observe(&clean(2, 200e6));
+        t.observe(&clean(3, 300e6));
+        t.observe(&clean(4, 301e6)); // stall: falls back to best (4 measured best)
+        table.record(0, 1, &t.outcome());
+        assert_eq!(table.learned_width(0, 1), Some(t.settled_width()));
+        assert_eq!(table.learned(0, 1).unwrap().transfers, 1);
+        // a second transfer folds in
+        table.record(0, 1, &t.outcome());
+        assert_eq!(table.learned(0, 1).unwrap().transfers, 2);
+        assert_eq!(table.len(), 1);
+        // other paths are independent
+        assert_eq!(table.learned_width(1, 0), None);
+    }
+}

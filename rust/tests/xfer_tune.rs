@@ -1,0 +1,304 @@
+//! Adaptive WAN transfer tuning contract:
+//!
+//! * **Fixed-mode equivalence** — the autotuner with a frozen width
+//!   band (`min_streams == max_streams`) is *bit-identical* to
+//!   [`TuneMode::Fixed`]: same completion times, same per-stream
+//!   goodput, same loss accounting. The controller must be pure
+//!   observation until it actually changes the width.
+//! * **Flow-local loss attribution** — when two transfers overlap on
+//!   one WAN link, each [`TransferReport::path_losses`] carries only
+//!   its own flows' losses, and the per-transfer shares sum exactly to
+//!   the link totals (no double counting from link-total snapshots).
+//! * **Adaptive acceptance** — on the lossy geo WAN the warmed
+//!   autotuner strictly beats the over-striped fixed width; on the
+//!   clean WAN it tracks the best fixed width.
+//! * **Loss/load-aware repair sourcing** — with the home DC's LAN
+//!   congested, `SourcePolicy::LinkAware` steers the repair through
+//!   the idle replica DC and completes strictly faster than
+//!   `SourcePolicy::HomeDc`.
+
+use scispace::engine::Engine;
+use scispace::simnet::{NetConfig, Network};
+use scispace::xfer::{
+    run_queue, CongestionConfig, DigestSinks, FaultInjector, PathStateTable, Priority, TransferQueue,
+    TransferReport, TransferRequest, TuneConfig, TuneMode, XferConfig, XferEngine,
+};
+
+// ---------------------------------------------------------- fixtures
+
+fn req(id: u64, bytes: u64) -> TransferRequest {
+    TransferRequest {
+        id,
+        owner: format!("t{id}"),
+        src_dc: 0,
+        dst_dc: 1,
+        bytes,
+        priority: Priority::Bulk,
+        submitted_at: 0.0,
+    }
+}
+
+/// One transfer on a fresh 2-DC network, warm-startable via `paths`.
+fn run_on(
+    netcfg: &NetConfig,
+    cfg: &XferConfig,
+    bytes: u64,
+    paths: &mut PathStateTable,
+) -> TransferReport {
+    let mut env = Engine::new();
+    let mut net = Network::build(&mut env, netcfg, 2);
+    let engine = XferEngine::new(cfg.clone());
+    engine
+        .transfer_tuned(
+            &mut env,
+            &mut net,
+            &req(0, bytes),
+            &mut FaultInjector::none(),
+            0.0,
+            DigestSinks::default(),
+            paths,
+        )
+        .expect("transfer")
+}
+
+fn cc_on() -> CongestionConfig {
+    CongestionConfig::on()
+}
+
+// ------------------------------------------- fixed-mode equivalence
+
+/// A frozen band (`min == max == n_streams`) must be bit-identical to
+/// `TuneMode::Fixed`: the controller observes every round but can
+/// never act, so no engine interaction may differ.
+#[test]
+fn frozen_band_adaptive_is_bit_identical_to_fixed() {
+    let bytes = 96 << 20;
+    let fixed_cfg = XferConfig { n_streams: 6, cc: cc_on(), ..XferConfig::default() };
+    let frozen_cfg = XferConfig {
+        n_streams: 6,
+        cc: cc_on(),
+        tune: TuneConfig {
+            mode: TuneMode::Adaptive,
+            min_streams: 6,
+            max_streams: 6,
+            ..TuneConfig::adaptive()
+        },
+        ..XferConfig::default()
+    };
+    // the lossy geo WAN exercises the loss-accounting path too
+    let fixed = run_on(&NetConfig::geo_default(), &fixed_cfg, bytes, &mut PathStateTable::new());
+    let frozen = run_on(&NetConfig::geo_default(), &frozen_cfg, bytes, &mut PathStateTable::new());
+
+    assert_eq!(fixed.started_at.to_bits(), frozen.started_at.to_bits());
+    assert_eq!(
+        fixed.finished_at.to_bits(),
+        frozen.finished_at.to_bits(),
+        "frozen-band tuner perturbed completion: {} vs {}",
+        fixed.finished_at,
+        frozen.finished_at
+    );
+    assert_eq!(fixed.chunks, frozen.chunks);
+    assert_eq!(fixed.streams, frozen.streams);
+    assert_eq!(fixed.retried_chunks, frozen.retried_chunks);
+    assert_eq!(fixed.cc_losses, frozen.cc_losses);
+    assert_eq!(fixed.cc_retransmit_bytes, frozen.cc_retransmit_bytes);
+    assert_eq!(fixed.stream_goodput.len(), frozen.stream_goodput.len());
+    for (a, b) in fixed.stream_goodput.iter().zip(&frozen.stream_goodput) {
+        assert_eq!(a.to_bits(), b.to_bits(), "per-stream goodput drifted");
+    }
+    assert_eq!(fixed.path_losses.len(), frozen.path_losses.len());
+    for (a, b) in fixed.path_losses.iter().zip(&frozen.path_losses) {
+        assert_eq!(a.link, b.link);
+        assert_eq!(a.losses, b.losses);
+        assert_eq!(a.retransmit_bytes, b.retransmit_bytes);
+    }
+    // the only allowed difference: the frozen run reports an (inert)
+    // controller outcome, the fixed run reports none
+    assert!(fixed.tune.is_none());
+    let out = frozen.tune.expect("adaptive mode must report an outcome");
+    assert_eq!(out.initial_streams, 6);
+    assert_eq!(out.final_streams, 6);
+    assert_eq!(out.widens, 0);
+    assert_eq!(out.sheds, 0);
+}
+
+// ---------------------------------------- flow-local loss attribution
+
+/// Two transfers overlapping on one WAN link: each report's per-hop
+/// losses are its own flows' only, and the shares sum to the link
+/// totals exactly.
+#[test]
+fn overlapping_transfers_attribute_losses_flow_locally() {
+    let mut env = Engine::new();
+    let mut net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+    let cfg = XferConfig { n_streams: 8, cc: cc_on(), ..XferConfig::default() };
+    let engine = XferEngine::new(cfg);
+    let mut queue = TransferQueue::new();
+    queue.submit(req(1, 64 << 20));
+    queue.submit(req(2, 64 << 20));
+    let reports =
+        run_queue(&engine, &mut env, &mut net, &mut queue, &mut FaultInjector::none(), 0.0, 2)
+            .expect("queue drains");
+    assert_eq!(reports.len(), 2);
+
+    let wan_losses = env.link(net.wan.res).total_losses;
+    let wan_retx = env.link(net.wan.res).total_retransmit_bytes;
+    assert!(wan_losses > 0, "16 windowed flows must overload the 1.25 GB/s WAN");
+
+    let mut sum_losses = 0;
+    let mut sum_retx = 0;
+    for r in &reports {
+        assert_eq!(r.path_losses.len(), 3, "cross-DC path has 3 hops");
+        let (lan0, wan, lan1) = (&r.path_losses[0], &r.path_losses[1], &r.path_losses[2]);
+        assert_eq!(wan.link, "net.wan");
+        assert_eq!(lan0.losses, 0, "the lossless LANs never drop");
+        assert_eq!(lan1.losses, 0);
+        assert!(wan.losses > 0, "both overlapped transfers must see their own losses: {r:?}");
+        // the report's aggregate equals its own per-hop shares — the
+        // transfer never absorbs a neighbour's losses
+        assert_eq!(wan.losses, r.cc_losses);
+        assert_eq!(wan.retransmit_bytes, r.cc_retransmit_bytes);
+        sum_losses += wan.losses;
+        sum_retx += wan.retransmit_bytes;
+    }
+    assert_eq!(sum_losses, wan_losses, "per-transfer shares must partition the link total");
+    assert_eq!(sum_retx, wan_retx);
+}
+
+// --------------------------------------------- adaptive acceptance
+
+/// Warmed adaptive run: three transfers over a shared path table, the
+/// third (warm-started at the learned width) is returned.
+fn warmed_adaptive(netcfg: &NetConfig, bytes: u64) -> (TransferReport, PathStateTable) {
+    let cfg =
+        XferConfig { cc: cc_on(), tune: TuneConfig::adaptive(), ..XferConfig::default() };
+    let mut paths = PathStateTable::new();
+    let mut last = None;
+    for _ in 0..3 {
+        last = Some(run_on(netcfg, &cfg, bytes, &mut paths));
+    }
+    (last.expect("three runs"), paths)
+}
+
+#[test]
+fn adaptive_beats_overstriped_fixed_on_lossy_wan() {
+    let bytes = 128 << 20;
+    let over = XferConfig { n_streams: 32, cc: cc_on(), ..XferConfig::default() };
+    let fixed32 = run_on(&NetConfig::geo_default(), &over, bytes, &mut PathStateTable::new());
+    let (adaptive, paths) = warmed_adaptive(&NetConfig::geo_default(), bytes);
+    assert!(
+        adaptive.mbps() > fixed32.mbps(),
+        "autotuner must beat over-striping on the lossy WAN: adaptive {:.1} MB/s vs fixed-32 {:.1} MB/s",
+        adaptive.mbps(),
+        fixed32.mbps()
+    );
+    let out = adaptive.tune.expect("adaptive outcome");
+    assert!(out.rounds > 0, "controller must have observed at least one round");
+    assert!(
+        paths.learned_width(0, 1).is_some(),
+        "the path table must remember a learned width for the tuned path"
+    );
+}
+
+#[test]
+fn adaptive_tracks_best_fixed_on_clean_wan() {
+    let clean = NetConfig { wan_loss_detect_s: f64::INFINITY, ..NetConfig::geo_default() };
+    let bytes = 128 << 20;
+    let best_fixed = [2usize, 8, 32]
+        .iter()
+        .map(|&w| {
+            let cfg = XferConfig { n_streams: w, cc: cc_on(), ..XferConfig::default() };
+            run_on(&clean, &cfg, bytes, &mut PathStateTable::new()).mbps()
+        })
+        .fold(0.0_f64, f64::max);
+    let (adaptive, _) = warmed_adaptive(&clean, bytes);
+    assert_eq!(adaptive.cc_losses, 0, "the clean WAN never synthesizes loss");
+    assert!(
+        adaptive.mbps() >= 0.85 * best_fixed,
+        "warmed autotuner too far off the best fixed width on the clean WAN: \
+         adaptive {:.1} MB/s vs best fixed {:.1} MB/s",
+        adaptive.mbps(),
+        best_fixed
+    );
+}
+
+// ------------------------------------- loss/load-aware repair sourcing
+
+/// Congested home DC: link-aware sourcing must pull the repair payload
+/// from the idle replica DC instead and finish strictly faster (the
+/// scenario behind the `repair_sources` rows in `BENCH_xfer.json`).
+#[test]
+fn congested_source_repair_steers_to_idle_replica() {
+    let rows = scispace::bench::fig_repair_sources(4, 8 << 20);
+    assert_eq!(rows.len(), 2);
+    let (home, aware) = (&rows[0], &rows[1]);
+    assert_eq!(home.policy, "home-dc");
+    assert_eq!(aware.policy, "link-aware");
+    assert!(home.healed > 0, "the outage must have cost the shard rows");
+    assert_eq!(home.healed, aware.healed, "both policies heal the same rows");
+    assert_eq!(home.bytes_moved, aware.bytes_moved);
+    assert_eq!(home.src_dcs, vec![0], "home-dc policy always pulls from the home DC");
+    assert_eq!(
+        aware.src_dcs,
+        vec![1],
+        "link-aware must steer off the congested DC0 onto the idle DC1 replica"
+    );
+    assert!(
+        aware.secs < home.secs,
+        "link-aware repair must finish faster under source congestion: {} vs {}",
+        aware.secs,
+        home.secs
+    );
+}
+
+// ------------------------------------------------- observability
+
+/// Width changes surface as `TraceEvent::Tune` events when a recorder
+/// is attached, and fold into a per-path width-over-time series.
+#[test]
+fn tune_decisions_are_traced_and_folded_into_metrics() {
+    use scispace::obs::metrics::fold_events;
+    use scispace::obs::{Metrics, TraceEvent};
+    let mut env = Engine::new();
+    env.record_trace(true);
+    let mut net = Network::build(&mut env, &NetConfig::geo_default(), 2);
+    let cfg =
+        XferConfig { cc: cc_on(), tune: TuneConfig::adaptive(), ..XferConfig::default() };
+    let engine = XferEngine::new(cfg);
+    let mut paths = PathStateTable::new();
+    let rep = engine
+        .transfer_tuned(
+            &mut env,
+            &mut net,
+            &req(0, 128 << 20),
+            &mut FaultInjector::none(),
+            0.0,
+            DigestSinks::default(),
+            &mut paths,
+        )
+        .expect("transfer");
+    let out = rep.tune.expect("adaptive outcome");
+    let tune_events: Vec<&TraceEvent> = env
+        .events()
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Tune { .. }))
+        .collect();
+    assert_eq!(
+        tune_events.len() as u32,
+        out.widens + out.sheds,
+        "every applied width change must emit exactly one Tune event"
+    );
+    for e in &tune_events {
+        if let TraceEvent::Tune { src_dc, dst_dc, from, to, .. } = e {
+            assert_eq!((*src_dc, *dst_dc), (0, 1));
+            assert_ne!(from, to, "Hold decisions must not be traced");
+        }
+    }
+    if !tune_events.is_empty() {
+        let mut m = Metrics::default();
+        fold_events(&mut m, env.events(), &[]);
+        let series = m.series("tune.path.0-1.streams").expect("width-over-time series");
+        // seeded with the starting width, one point per decision
+        assert_eq!(series.points().len(), tune_events.len() + 1);
+    }
+}
