@@ -397,8 +397,10 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
                 return Ok(Staged::Sequential(op));
             }
             let path = path.clone();
+            // federated beds source from the regional cache tier when it
+            // can serve (same redirector locate as the blocking read)
             let (data_dc, obj) = tb
-                .locate_for(c, &path)
+                .locate_read_source(c, &path, len)
                 .ok_or_else(|| ScispaceError::NoSuchFile { path: path.clone() })?;
             let viewer = tb.collabs[c].id.clone();
             if !tb.ns.visible_to(&path, &viewer) {

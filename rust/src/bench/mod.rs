@@ -1728,6 +1728,245 @@ pub fn print_end2end(rows: &[End2EndRow]) {
     }
 }
 
+/// One `fig_federation` row: a federation scenario at one site count,
+/// cache tier on or off.
+#[derive(Debug, Clone)]
+pub struct FederationRow {
+    /// Scenario name: `flash_crowd`, `straggler` or `outage`.
+    pub scenario: &'static str,
+    /// Sites in the federation.
+    pub sites: usize,
+    /// Cache tier on?
+    pub cache: bool,
+    /// Reads attempted.
+    pub reads: usize,
+    /// Reads that failed (outage scenario).
+    pub failed: usize,
+    /// Median time-to-first-byte across successful reads, seconds (the
+    /// typical reader in the crowd — the CI-gated number).
+    pub ttfb_p50_s: f64,
+    /// Mean time-to-first-byte, seconds.
+    pub ttfb_mean_s: f64,
+    /// Mean whole-read completion time, seconds.
+    pub read_mean_s: f64,
+    /// `1 - origin_egress / delivered` over the run.
+    pub offload_ratio: f64,
+    /// Bytes the origins egressed (direct serves + cache fills).
+    pub origin_bytes: u64,
+    /// Cache hits across all regions.
+    pub cache_hits: u64,
+    /// Cache misses across all regions.
+    pub cache_misses: u64,
+    /// LRU evictions across all regions.
+    pub cache_evicts: u64,
+}
+
+/// The hot dataset every reader in the crowd wants (well above the
+/// bulk-transfer threshold, well below the per-region cache capacity).
+const FED_HOT_BYTES: u64 = 32 << 20;
+/// Cache sites per region in the bench federations.
+const FED_REGION_SIZE: usize = 4;
+/// Per-region cache capacity when the tier is on.
+const FED_CACHE_CAP: u64 = 256 << 20;
+
+fn federation_bed(sites: usize, cache: bool) -> Testbed {
+    let cap = if cache { FED_CACHE_CAP } else { 0 };
+    crate::federation::FederationSpec::tiered(sites, 1, FED_REGION_SIZE, cap).build()
+}
+
+struct FedReadSample {
+    ttfb: f64,
+    total: f64,
+}
+
+/// One crowd read; `None` when the read failed (dead origin).
+/// TTFB for a bulk read is queueing + first-chunk delivery estimated
+/// from the transfer report; sub-threshold/local reads fall back to the
+/// whole-read time (no earlier byte is observable).
+fn federation_read(tb: &mut Testbed, r: usize, path: &str) -> Option<FedReadSample> {
+    let t0 = tb.now(r);
+    let (_, rep) = tb.read_traced(r, path, 0, FED_HOT_BYTES, AccessMode::Scispace).ok()?;
+    let total = tb.now(r) - t0;
+    let ttfb = match rep {
+        Some(rep) => {
+            let chunks = rep.chunks.max(1) as f64;
+            (rep.started_at - t0).max(0.0) + (rep.finished_at - rep.started_at) / chunks
+        }
+        None => total,
+    };
+    Some(FedReadSample { ttfb, total })
+}
+
+fn federation_row(
+    scenario: &'static str,
+    sites: usize,
+    cache: bool,
+    tb: &Testbed,
+    samples: &[FedReadSample],
+    failed: usize,
+) -> FederationRow {
+    let fed = tb.federation.as_ref().expect("federated bed");
+    let agg = fed.cache_totals();
+    let mut ttfbs: Vec<f64> = samples.iter().map(|s| s.ttfb).collect();
+    ttfbs.sort_by(|a, b| a.total_cmp(b));
+    let mean = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+    let totals: Vec<f64> = samples.iter().map(|s| s.total).collect();
+    FederationRow {
+        scenario,
+        sites,
+        cache,
+        reads: samples.len() + failed,
+        failed,
+        ttfb_p50_s: percentile(&ttfbs, 0.5),
+        ttfb_mean_s: mean(&ttfbs),
+        read_mean_s: mean(&totals),
+        offload_ratio: fed.offload_ratio(),
+        origin_bytes: fed.origin_egress_bytes,
+        cache_hits: agg.hits,
+        cache_misses: agg.misses,
+        cache_evicts: agg.evicts,
+    }
+}
+
+/// Stand up a federation with the hot dataset written at the origin and
+/// one reader registered per cache site (site order — so each region's
+/// cache host reads first and fills for its siblings).
+fn federation_crowd(sites: usize, cache: bool) -> (Testbed, Vec<usize>) {
+    let mut tb = federation_bed(sites, cache);
+    let writer = tb.register("origin-writer", 0);
+    tb.write(writer, "/fed/hot.dat", 0, FED_HOT_BYTES, None, AccessMode::Scispace)
+        .expect("seed write");
+    let readers: Vec<usize> = (1..sites).map(|d| tb.register(&format!("crowd{d}"), d)).collect();
+    (tb, readers)
+}
+
+fn federation_flash_crowd(sites: usize, cache: bool) -> FederationRow {
+    let (mut tb, readers) = federation_crowd(sites, cache);
+    let mut samples = Vec::new();
+    let mut failed = 0;
+    for r in readers {
+        match federation_read(&mut tb, r, "/fed/hot.dat") {
+            Some(s) => samples.push(s),
+            None => failed += 1,
+        }
+    }
+    federation_row("flash_crowd", sites, cache, &tb, &samples, failed)
+}
+
+/// Flash crowd with region 0's aggregation link throttled to a tenth of
+/// its class bandwidth before any reads start (re-provisioning requires
+/// an idle link).
+fn federation_straggler(sites: usize, cache: bool) -> FederationRow {
+    let (mut tb, readers) = federation_crowd(sites, cache);
+    if let Some(l) = tb.net.regionals.first() {
+        let res = l.res;
+        tb.env.set_link_bw(res, 2.5e8);
+    }
+    let mut samples = Vec::new();
+    let mut failed = 0;
+    for r in readers {
+        match federation_read(&mut tb, r, "/fed/hot.dat") {
+            Some(s) => samples.push(s),
+            None => failed += 1,
+        }
+    }
+    federation_row("straggler", sites, cache, &tb, &samples, failed)
+}
+
+/// Flash crowd with the origin taken down after the first half of the
+/// crowd has read: warmed regions keep serving from cache, cold regions
+/// fail (with the tier off, *every* remaining read fails).
+fn federation_outage(sites: usize, cache: bool) -> FederationRow {
+    let (mut tb, readers) = federation_crowd(sites, cache);
+    let warm = readers.len() / 2;
+    let mut samples = Vec::new();
+    let mut failed = 0;
+    for (i, r) in readers.into_iter().enumerate() {
+        if i == warm {
+            tb.set_site_down(0, true);
+        }
+        match federation_read(&mut tb, r, "/fed/hot.dat") {
+            Some(s) => samples.push(s),
+            None => failed += 1,
+        }
+    }
+    federation_row("outage", sites, cache, &tb, &samples, failed)
+}
+
+/// The federation figure: flash-crowd / straggler-link / origin-outage
+/// scenarios at each site count, cache tier on vs off. The cache-on
+/// flash-crowd rows are the CI-gated ones: origin offload ratio > 0.5
+/// at 48 sites, and median TTFB strictly below the cache-off row's.
+pub fn fig_federation(site_counts: &[usize]) -> Vec<FederationRow> {
+    let mut rows = Vec::new();
+    for &sites in site_counts {
+        for cache in [true, false] {
+            rows.push(federation_flash_crowd(sites, cache));
+            rows.push(federation_straggler(sites, cache));
+            rows.push(federation_outage(sites, cache));
+        }
+    }
+    rows
+}
+
+/// Print `fig_federation` rows.
+pub fn print_federation(rows: &[FederationRow]) {
+    println!("\n== Fig federation: flash crowd on {} across N sites ==", fmt_bytes(FED_HOT_BYTES));
+    println!(
+        "{:>12} {:>6} {:>6} {:>6} {:>7} {:>11} {:>11} {:>9} {:>6} {:>6} {:>6}",
+        "scenario", "sites", "cache", "reads", "failed", "ttfb p50", "read mean", "offload", "hit",
+        "miss", "evict"
+    );
+    for r in rows {
+        println!(
+            "{:>12} {:>6} {:>6} {:>6} {:>7} {:>11} {:>11} {:>8.1}% {:>6} {:>6} {:>6}",
+            r.scenario,
+            r.sites,
+            if r.cache { "on" } else { "off" },
+            r.reads,
+            r.failed,
+            fmt_secs(r.ttfb_p50_s),
+            fmt_secs(r.read_mean_s),
+            r.offload_ratio * 100.0,
+            r.cache_hits,
+            r.cache_misses,
+            r.cache_evicts
+        );
+    }
+}
+
+/// Machine-readable `BENCH_federation.json` payload: rows grouped by
+/// scenario.
+pub fn federation_json(rows: &[FederationRow]) -> Json {
+    use std::collections::BTreeMap;
+    let row_json = |r: &FederationRow| {
+        let mut m = BTreeMap::new();
+        m.insert("sites".to_string(), Json::Num(r.sites as f64));
+        m.insert("cache".to_string(), Json::Bool(r.cache));
+        m.insert("reads".to_string(), Json::Num(r.reads as f64));
+        m.insert("failed".to_string(), Json::Num(r.failed as f64));
+        m.insert("ttfb_p50_s".to_string(), Json::Num(r.ttfb_p50_s));
+        m.insert("ttfb_mean_s".to_string(), Json::Num(r.ttfb_mean_s));
+        m.insert("read_mean_s".to_string(), Json::Num(r.read_mean_s));
+        m.insert("offload_ratio".to_string(), Json::Num(r.offload_ratio));
+        m.insert("origin_bytes".to_string(), Json::Num(r.origin_bytes as f64));
+        m.insert("cache_hits".to_string(), Json::Num(r.cache_hits as f64));
+        m.insert("cache_misses".to_string(), Json::Num(r.cache_misses as f64));
+        m.insert("cache_evicts".to_string(), Json::Num(r.cache_evicts as f64));
+        Json::Obj(m)
+    };
+    let group = |name: &str| -> Json {
+        Json::Arr(rows.iter().filter(|r| r.scenario == name).map(row_json).collect())
+    };
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("federation".to_string()));
+    top.insert("hot_bytes".to_string(), Json::Num(FED_HOT_BYTES as f64));
+    top.insert("flash_crowd".to_string(), group("flash_crowd"));
+    top.insert("straggler".to_string(), group("straggler"));
+    top.insert("outage".to_string(), group("outage"));
+    Json::Obj(top)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1950,6 +2189,41 @@ mod tests {
                 .all(|r| r.get("events_per_sec").and_then(Json::as_f64).unwrap_or(0.0) > 0.0),
             "{parsed:?}"
         );
+    }
+
+    #[test]
+    fn fig_federation_small_scale_shape() {
+        let rows = fig_federation(&[4]);
+        assert_eq!(rows.len(), 6, "{rows:?}");
+        let find = |scenario: &str, cache: bool| {
+            rows.iter()
+                .find(|r| r.scenario == scenario && r.cache == cache)
+                .unwrap_or_else(|| panic!("no {scenario}/cache={cache} row"))
+        };
+        let fc_on = find("flash_crowd", true);
+        let fc_off = find("flash_crowd", false);
+        assert_eq!(fc_on.reads, 3);
+        assert_eq!(fc_on.failed, 0);
+        // 3 cache-site readers, one region: 1 fill + 2 hits
+        assert_eq!(fc_on.cache_misses, 1, "{fc_on:?}");
+        assert_eq!(fc_on.cache_hits, 2, "{fc_on:?}");
+        assert!(fc_on.offload_ratio > 0.5, "{fc_on:?}");
+        assert!(fc_off.offload_ratio.abs() < 1e-12, "{fc_off:?}");
+        assert!(fc_on.ttfb_p50_s < fc_off.ttfb_p50_s, "{fc_on:?} vs {fc_off:?}");
+        assert!(fc_on.origin_bytes < fc_off.origin_bytes, "{fc_on:?} vs {fc_off:?}");
+        // outage: the cache tier keeps warmed regions alive, the
+        // cache-off bed loses every post-outage read
+        let out_on = find("outage", true);
+        let out_off = find("outage", false);
+        assert!(out_on.failed < out_off.failed, "{out_on:?} vs {out_off:?}");
+        assert_eq!(out_off.failed, 2, "{out_off:?}");
+        let j = federation_json(&rows);
+        let parsed = Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("federation"));
+        for key in ["flash_crowd", "straggler", "outage"] {
+            let n = parsed.get(key).and_then(Json::as_arr).map(|a| a.len());
+            assert_eq!(n, Some(2), "{key}: {parsed:?}");
+        }
     }
 
     #[test]

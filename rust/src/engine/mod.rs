@@ -641,6 +641,21 @@ impl Engine {
         self.links[id.0].loss_detect_s = detect_s;
     }
 
+    /// Re-provision a link's bandwidth (degraded-link scenarios: a
+    /// straggler regional WAN, a throttled backbone). Like
+    /// [`Engine::set_link_loss_detect`], this must happen while the
+    /// link is idle — changing capacity under flows in service would
+    /// silently invalidate the link's cached rate allocation.
+    pub fn set_link_bw(&mut self, id: LinkId, bytes_per_s: f64) {
+        assert!(bytes_per_s > 0.0, "link bandwidth must be positive");
+        assert!(
+            self.links[id.0].active.is_empty(),
+            "re-provision bandwidth before flows are in service on link {}",
+            id.0
+        );
+        self.links[id.0].bytes_per_s = bytes_per_s;
+    }
+
     /// Immutable view of a link.
     pub fn link(&self, id: LinkId) -> &PsLink {
         &self.links[id.0]

@@ -1,0 +1,690 @@
+//! Federation tier: N-site topologies with hierarchical caching and
+//! redirector-style locate.
+//!
+//! The paper's testbed — and every scenario this repo grew on it — is a
+//! hand-wired 2–3 DC bed. Real scientific federations (the Open Science
+//! Data Federation being the operating example) stand up *dozens* of
+//! sites by fronting a few origin data centers with regional cache
+//! tiers and letting a redirector steer each read to the nearest copy.
+//! This module grows the testbed to that shape:
+//!
+//! * **Topology generator** — [`FederationSpec`] parameterizes a
+//!   federation (site count, origin count, region size, per-tier link
+//!   classes) and [`FederationSpec::build`] assembles a [`Testbed`] on
+//!   a [`Network::build_federation`] topology: per-site LANs, one
+//!   aggregation link per region, a shared backbone WAN. A
+//!   [`FederationSpec::flat`] federation has no regions and no cache
+//!   tier and is **bit-identical** to the classic hand-wired beds
+//!   (pinned by `tests/federation.rs`).
+//! * **Cache tier** — each region hosts one capacity-bounded
+//!   [`RegionCache`] (LRU, deterministic tie-breaks) whose objects live
+//!   in the host site's real [`crate::vfs::ObjectStore`]. Misses fill
+//!   read-through over the striped `xfer` machinery on the reader's
+//!   clock; hits/misses/evictions are counted per tier and emitted as
+//!   [`TraceEvent::CacheHit`]/[`TraceEvent::CacheMiss`]/
+//!   [`TraceEvent::CacheEvict`] for `obs::metrics::fold_events`.
+//! * **Redirector locate** — [`Testbed::locate_read_source`]: the
+//!   nearest cache hit wins; a miss escalates tier by tier toward the
+//!   origins (nearest-first by path RTT, ties to lowest site index),
+//!   one charged metadata consult per hop, counted in
+//!   `OpStats::locate_tiered_consults`. This replaces the flat
+//!   every-DC fallback probe on federated beds; flat beds keep
+//!   `Testbed::locate_for` unchanged.
+//!
+//! `bench::fig_federation` drives flash-crowd, straggler-link and
+//! origin-outage scenarios over 4/16/48-site federations and reports
+//! time-to-first-byte and the origin offload ratio into
+//! `BENCH_federation.json` (CI-gated).
+
+use std::collections::BTreeMap;
+
+use crate::engine::Engine;
+use crate::metadata::{MetaReq, MetaResp};
+use crate::obs::TraceEvent;
+use crate::simnet::{LinkClass, NetConfig, Network};
+use crate::vfs::ObjectId;
+use crate::workspace::{Testbed, TestbedConfig};
+use crate::xfer::{DigestSinks, FaultInjector, Priority, TransferRequest, XferEngine};
+
+/// The regional cache tier index reported in cache [`TraceEvent`]s
+/// (origins are tier 0; a deeper site tier would be 2).
+pub const REGIONAL_TIER: usize = 1;
+
+/// Parameterized federation topology: `n_origins` origin sites attached
+/// straight to the backbone, the remaining `n_sites - n_origins` cache
+/// sites grouped into regions of `region_size`, each region fronted by
+/// one shared regional cache hosted at its first site.
+#[derive(Debug, Clone)]
+pub struct FederationSpec {
+    /// Total sites (data centers) in the federation.
+    pub n_sites: usize,
+    /// Sites 0..n_origins are origins (backbone-attached, no cache).
+    pub n_origins: usize,
+    /// Cache sites per region (ignored when every site is an origin).
+    pub region_size: usize,
+    /// DTNs per site (flat beds keep the paper's 2; big federations
+    /// default to 1 to stay light).
+    pub dtns_per_dc: usize,
+    /// Backbone WAN link class (shared by all inter-region traffic).
+    pub backbone: LinkClass,
+    /// Per-region aggregation link class.
+    pub regional: LinkClass,
+    /// Per-site LAN link class.
+    pub site_lan: LinkClass,
+    /// Capacity of each regional cache, bytes (0 = cache tier off; the
+    /// read path is then exactly the flat `locate_for` path).
+    pub cache_capacity: u64,
+}
+
+impl FederationSpec {
+    /// A flat federation: every site an origin, no regions, cache tier
+    /// off, link classes lifted verbatim from
+    /// [`NetConfig::paper_default`]. Bit-identical to
+    /// `Testbed::build(TestbedConfig { n_dcs: n_sites, .. })`.
+    pub fn flat(n_sites: usize) -> Self {
+        let net = NetConfig::paper_default();
+        FederationSpec {
+            n_sites,
+            n_origins: n_sites,
+            region_size: 0,
+            dtns_per_dc: TestbedConfig::paper_default().dtns_per_dc,
+            backbone: LinkClass {
+                bw: net.wan_bw,
+                latency_s: net.wan_latency_s,
+                loss_detect_s: net.wan_loss_detect_s,
+            },
+            regional: LinkClass {
+                bw: net.lan_bw,
+                latency_s: net.lan_latency_s,
+                loss_detect_s: net.lan_loss_detect_s,
+            },
+            site_lan: LinkClass {
+                bw: net.lan_bw,
+                latency_s: net.lan_latency_s,
+                loss_detect_s: net.lan_loss_detect_s,
+            },
+            cache_capacity: 0,
+        }
+    }
+
+    /// A geo-distributed tiered federation: fabric-speed site LANs, a
+    /// metro-class regional tier and a genuinely-bottlenecked backbone
+    /// (the regime the paper's same-room emulation abstracts away).
+    pub fn tiered(
+        n_sites: usize,
+        n_origins: usize,
+        region_size: usize,
+        cache_capacity: u64,
+    ) -> Self {
+        FederationSpec {
+            n_sites,
+            n_origins,
+            region_size,
+            dtns_per_dc: 1,
+            backbone: LinkClass::lossless(1.25e9, 25e-3),
+            regional: LinkClass::lossless(2.5e9, 5e-3),
+            site_lan: LinkClass::lossless(12.5e9, 20e-6),
+            cache_capacity,
+        }
+    }
+
+    /// Region assignment per site: origins attach straight to the
+    /// backbone (`None`); cache sites group into regions of
+    /// `region_size` in site order.
+    pub fn region_assignment(&self) -> Vec<Option<usize>> {
+        (0..self.n_sites)
+            .map(|s| {
+                if s < self.n_origins {
+                    None
+                } else {
+                    Some((s - self.n_origins) / self.region_size.max(1))
+                }
+            })
+            .collect()
+    }
+
+    /// Number of regions the assignment produces.
+    pub fn n_regions(&self) -> usize {
+        self.region_assignment().iter().flatten().map(|r| r + 1).max().unwrap_or(0)
+    }
+
+    /// The site hosting region `r`'s shared cache (its first site).
+    pub fn cache_host(&self, r: usize) -> usize {
+        self.n_origins + r * self.region_size.max(1)
+    }
+
+    /// Assemble the federated testbed: the tiered network, then the
+    /// standard per-site substrate (Lustre, DTNs, metadata shards) in
+    /// the exact construction order of `Testbed::build`, then the
+    /// federation state. With no regions and paper link classes the
+    /// result is bit-identical to the classic flat bed.
+    pub fn build(&self) -> Testbed {
+        assert!(self.n_origins >= 1, "a federation needs at least one origin");
+        assert!(self.n_sites >= self.n_origins, "more origins than sites");
+        assert!(
+            self.n_sites == self.n_origins || self.region_size >= 1,
+            "cache sites need a region size"
+        );
+        let region_of = self.region_assignment();
+        let mut cfg = TestbedConfig::paper_default();
+        cfg.n_dcs = self.n_sites;
+        cfg.dtns_per_dc = self.dtns_per_dc;
+        let mut env = Engine::new();
+        let net = Network::build_federation(
+            &mut env,
+            &self.backbone,
+            &self.site_lan,
+            &self.regional,
+            region_of.clone(),
+        );
+        let mut tb = Testbed::build_with_net(cfg, env, net);
+        let caches = (0..self.n_regions())
+            .map(|r| RegionCache::new(self.cache_host(r), self.cache_capacity))
+            .collect();
+        tb.federation = Some(Federation {
+            region_of,
+            caches,
+            down: vec![false; self.n_sites],
+            origin_egress_bytes: 0,
+            delivered_bytes: 0,
+            spec: self.clone(),
+        });
+        tb
+    }
+}
+
+/// Per-cache hit/miss/evict/byte accounting (also aggregated per bed
+/// into the metrics registry by `Testbed::sample_metrics`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that escalated toward the origins.
+    pub misses: u64,
+    /// LRU evictions performed to admit fills.
+    pub evicts: u64,
+    /// Payload bytes served from cache hits.
+    pub hit_bytes: u64,
+    /// Bytes pulled from origins by read-through fills.
+    pub fill_bytes: u64,
+    /// Bytes freed by evictions.
+    pub evicted_bytes: u64,
+}
+
+impl CacheStats {
+    fn absorb(&mut self, o: &CacheStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evicts += o.evicts;
+        self.hit_bytes += o.hit_bytes;
+        self.fill_bytes += o.fill_bytes;
+        self.evicted_bytes += o.evicted_bytes;
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CacheEntry {
+    obj: ObjectId,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// One region's capacity-bounded LRU cache. Entries are real objects in
+/// the host site's store; recency is a deterministic access tick and
+/// eviction ties break on lexicographically smallest path, so a
+/// replayed workload evicts identically.
+#[derive(Debug, Clone)]
+pub struct RegionCache {
+    /// Site whose store holds the cached objects.
+    pub host_dc: usize,
+    /// Capacity bound, bytes.
+    pub capacity: u64,
+    /// Hit/miss/evict accounting.
+    pub stats: CacheStats,
+    used: u64,
+    tick: u64,
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl RegionCache {
+    fn new(host_dc: usize, capacity: u64) -> Self {
+        RegionCache {
+            host_dc,
+            capacity,
+            stats: CacheStats::default(),
+            used: 0,
+            tick: 0,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Number of cached objects.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// No cached objects?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently held.
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Is `path` cached right now? (Pure query — does not touch
+    /// recency.)
+    pub fn contains(&self, path: &str) -> bool {
+        self.entries.contains_key(path)
+    }
+
+    /// Lookup with recency bump; `None` on miss. The tick advances on
+    /// misses too, so recency depends only on the lookup sequence.
+    fn touch(&mut self, path: &str) -> Option<(ObjectId, u64)> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.entries.get_mut(path)?;
+        e.last_used = tick;
+        Some((e.obj, e.bytes))
+    }
+
+    /// Remove and return the least recently used entry (ties to the
+    /// lexicographically smallest path).
+    fn pop_lru(&mut self) -> Option<(String, CacheEntry)> {
+        let key = self
+            .entries
+            .iter()
+            .min_by(|a, b| a.1.last_used.cmp(&b.1.last_used).then(a.0.cmp(b.0)))
+            .map(|(k, _)| k.clone())?;
+        let e = self.entries.remove(&key)?;
+        self.used -= e.bytes;
+        Some((key, e))
+    }
+
+    fn insert(&mut self, path: &str, obj: ObjectId, bytes: u64) {
+        debug_assert!(!self.entries.contains_key(path), "insert over a live entry");
+        self.tick += 1;
+        self.used += bytes;
+        self.entries.insert(path.to_string(), CacheEntry { obj, bytes, last_used: self.tick });
+    }
+}
+
+/// Federation state carried by a [`Testbed`]: the region map, the
+/// per-region caches, per-site liveness, and the origin-offload
+/// accounting the benches gate on.
+#[derive(Debug, Clone)]
+pub struct Federation {
+    /// The spec the bed was built from.
+    pub spec: FederationSpec,
+    /// Per-region caches (index = region).
+    pub caches: Vec<RegionCache>,
+    /// Bytes origins egressed (direct serves + read-through fills).
+    pub origin_egress_bytes: u64,
+    /// Bytes delivered to readers through `locate_read_source`.
+    pub delivered_bytes: u64,
+    region_of: Vec<Option<usize>>,
+    down: Vec<bool>,
+}
+
+impl Federation {
+    /// Is the cache tier on? (Capacity > 0 and at least one region.)
+    pub fn cache_enabled(&self) -> bool {
+        self.spec.cache_capacity > 0 && !self.caches.is_empty()
+    }
+
+    /// Region a site belongs to (`None` for origins).
+    pub fn region_of_site(&self, dc: usize) -> Option<usize> {
+        self.region_of.get(dc).copied().flatten()
+    }
+
+    /// Is the site an origin (backbone-attached)?
+    pub fn is_origin(&self, dc: usize) -> bool {
+        self.region_of.get(dc).is_none_or(|r| r.is_none())
+    }
+
+    /// Is the site marked down?
+    pub fn is_down(&self, dc: usize) -> bool {
+        self.down.get(dc).copied().unwrap_or(false)
+    }
+
+    /// Mark a site down (outage injection) or back up.
+    pub fn set_down(&mut self, dc: usize, down: bool) {
+        self.down[dc] = down;
+    }
+
+    /// Fraction of delivered bytes the origins did *not* have to serve:
+    /// `1 - origin_egress / delivered` (0.0 before any reads).
+    pub fn offload_ratio(&self) -> f64 {
+        if self.delivered_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.origin_egress_bytes as f64 / self.delivered_bytes as f64
+    }
+
+    /// All regions' cache stats summed.
+    pub fn cache_totals(&self) -> CacheStats {
+        let mut agg = CacheStats::default();
+        for c in &self.caches {
+            agg.absorb(&c.stats);
+        }
+        agg
+    }
+}
+
+impl Testbed {
+    /// Source selection for a read of `len` bytes of `path` by
+    /// collaborator `c` — the federated read path's entry point, shared
+    /// by the blocking read and the batch lowering so the two cannot
+    /// drift.
+    ///
+    /// On flat beds (no federation, cache tier off, or an origin-homed
+    /// reader) this is exactly [`Testbed::locate_for`] — bit-identical
+    /// to the pre-federation read path. On a federated bed with the
+    /// cache tier on, the reader's regional redirector is consulted
+    /// first (one charged metadata RPC): a cache hit wins and the read
+    /// sources from the cache host; a miss escalates toward the origins
+    /// and fills the regional cache read-through before serving.
+    pub(crate) fn locate_read_source(
+        &mut self,
+        c: usize,
+        path: &str,
+        len: u64,
+    ) -> Option<(usize, ObjectId)> {
+        let home = self.collabs[c].dc;
+        let region = match &self.federation {
+            Some(f) if f.cache_enabled() => f.region_of_site(home),
+            _ => None,
+        };
+        let Some(r) = region else {
+            // a site marked down cannot serve (outage injection; always
+            // live on classic beds, so this filter is observationally
+            // free there)
+            let found = self
+                .locate_for(c, path)
+                .filter(|(dc, _)| !self.federation.as_ref().is_some_and(|f| f.is_down(*dc)));
+            if let (Some((dc, _)), Some(fed)) = (found, self.federation.as_mut()) {
+                fed.delivered_bytes += len;
+                if fed.is_origin(dc) {
+                    fed.origin_egress_bytes += len;
+                }
+            }
+            return found;
+        };
+        self.federated_read_source(c, path, len, r)
+    }
+
+    /// The redirector path: tier-1 cache consult, then tier-2
+    /// escalation + read-through fill on a miss.
+    fn federated_read_source(
+        &mut self,
+        c: usize,
+        path: &str,
+        len: u64,
+        r: usize,
+    ) -> Option<(usize, ObjectId)> {
+        // tier-1 consult: the regional redirector at the cache host,
+        // charged like every other metadata RPC
+        let host = self.federation.as_ref().expect("federated bed").caches[r].host_dc;
+        let host_dtn = self.dtn_in_dc(host, c);
+        let msg = self.cfg.meta_msg_bytes;
+        let t = self.meta_rpc_cost(c, host_dtn, self.collabs[c].now, msg, 1);
+        self.collabs[c].now = t;
+        self.stats.locate_tiered_consults += 1;
+
+        let hit = self.federation.as_mut().expect("federated bed").caches[r].touch(path);
+        if let Some((obj, _)) = hit {
+            let fed = self.federation.as_mut().expect("federated bed");
+            fed.caches[r].stats.hits += 1;
+            fed.caches[r].stats.hit_bytes += len;
+            fed.delivered_bytes += len;
+            if self.env.recording() {
+                self.env.emit(TraceEvent::CacheHit {
+                    t,
+                    site: host,
+                    tier: REGIONAL_TIER,
+                    bytes: len,
+                });
+            }
+            return Some((host, obj));
+        }
+        self.federation.as_mut().expect("federated bed").caches[r].stats.misses += 1;
+        if self.env.recording() {
+            self.env.emit(TraceEvent::CacheMiss { t, site: host, tier: REGIONAL_TIER, bytes: len });
+        }
+
+        // tier-2: escalate toward the origins
+        let (origin, obj) = self.federated_escalate(c, path)?;
+        let size = self.dcs[origin].store.len(obj).unwrap_or(0);
+        let capacity = self.federation.as_ref().expect("federated bed").caches[r].capacity;
+        if size == 0 || size > capacity {
+            // uncacheable (empty, or larger than the whole cache):
+            // serve straight from the origin
+            let fed = self.federation.as_mut().expect("federated bed");
+            fed.delivered_bytes += len;
+            fed.origin_egress_bytes += len;
+            return Some((origin, obj));
+        }
+
+        // read-through fill on the reader's clock: origin PFS streams
+        // the object out, the striped engine carries it to the cache
+        // host, the host PFS absorbs it
+        let t = self.dcs[origin].lustre.read(&mut self.env, self.collabs[c].now, obj.0, 0, size);
+        let req = TransferRequest {
+            id: self.next_xfer_id(),
+            owner: self.collabs[c].id.clone(),
+            src_dc: origin,
+            dst_dc: host,
+            bytes: size,
+            priority: Priority::Interactive,
+            submitted_at: t,
+        };
+        let sinks = DigestSinks::on(
+            self.dtns[self.dtn_in_dc(origin, c)].meta_cpu,
+            self.dtns[host_dtn].meta_cpu,
+        );
+        let engine = XferEngine::new(self.seeded_xfer_cfg(origin, host));
+        let mut faults = FaultInjector::none();
+        let rep = engine
+            .transfer_with_sinks(&mut self.env, &mut self.net, &req, &mut faults, t, sinks)
+            .ok()?;
+        self.record_tune(&rep);
+        let cached = if self.dcs[origin].store.is_hole(obj).unwrap_or(true) {
+            self.dcs[host].store.create_hole(size)
+        } else {
+            let raw = self.dcs[origin].store.read_all(obj).ok()?;
+            let id = self.dcs[host].store.create();
+            self.dcs[host].store.write_at(id, 0, &raw).ok()?;
+            id
+        };
+        let t_done = self.dcs[host].lustre.write(&mut self.env, rep.finished_at, cached.0, 0, size);
+        self.collabs[c].now = t_done;
+
+        // admit under the capacity bound: evict LRU until the fill fits
+        loop {
+            let fed = self.federation.as_mut().expect("federated bed");
+            if fed.caches[r].used_bytes() + size <= capacity {
+                break;
+            }
+            let (_, victim) =
+                fed.caches[r].pop_lru().expect("fill fits capacity, so something evictable");
+            fed.caches[r].stats.evicts += 1;
+            fed.caches[r].stats.evicted_bytes += victim.bytes;
+            self.dcs[host].store.remove(victim.obj);
+            if self.env.recording() {
+                self.env.emit(TraceEvent::CacheEvict {
+                    t: t_done,
+                    site: host,
+                    tier: REGIONAL_TIER,
+                    bytes: victim.bytes,
+                });
+            }
+        }
+        let fed = self.federation.as_mut().expect("federated bed");
+        fed.caches[r].insert(path, cached, size);
+        fed.caches[r].stats.fill_bytes += size;
+        fed.origin_egress_bytes += size;
+        fed.delivered_bytes += len;
+        Some((host, cached))
+    }
+
+    /// Tier-2 escalation toward the origins: the workspace metadata
+    /// redirects a registered file straight to its hosting site (like
+    /// [`Testbed::locate_for`]'s metadata path, skipped when that site
+    /// is down); otherwise live sites are probed nearest-first by path
+    /// RTT (ties to lowest index) — one charged consult per probe,
+    /// counted in `OpStats::locate_tiered_consults` — which climbs
+    /// region → origins → far regions in cost order.
+    fn federated_escalate(&mut self, c: usize, path: &str) -> Option<(usize, ObjectId)> {
+        if let MetaResp::Meta(Some(m)) = self.meta.route(&MetaReq::Get(path.into())) {
+            let dc = m.dc as usize;
+            let alive = !self.federation.as_ref().is_some_and(|f| f.is_down(dc));
+            if alive {
+                if let Some(o) = self.dcs[dc].fs.get(path).and_then(|e| e.obj) {
+                    return Some((dc, o));
+                }
+            }
+        }
+        let home = self.collabs[c].dc;
+        let mut order: Vec<(f64, usize)> =
+            (0..self.dcs.len()).map(|d| (self.net.path_rtt(home, d), d)).collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut t = self.collabs[c].now;
+        let mut found = None;
+        for (_, d) in order {
+            if self.federation.as_ref().is_some_and(|f| f.is_down(d)) {
+                continue;
+            }
+            let dtn = self.dtn_in_dc(d, c);
+            t = self.meta_rpc_cost(c, dtn, t, self.cfg.meta_msg_bytes, 1);
+            self.stats.locate_tiered_consults += 1;
+            if let Some(o) = self.dcs[d].fs.get(path).and_then(|e| e.obj) {
+                found = Some((d, o));
+                break;
+            }
+        }
+        self.collabs[c].now = t;
+        found
+    }
+
+    /// Mark a federated site down (outage injection) or back up. Reads
+    /// keep serving from warmed caches; misses that can only resolve at
+    /// a down origin fail with `NoSuchFile`.
+    pub fn set_site_down(&mut self, dc: usize, down: bool) {
+        self.federation
+            .as_mut()
+            .expect("set_site_down requires a federated bed")
+            .set_down(dc, down);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workspace::AccessMode;
+
+    #[test]
+    fn flat_spec_has_no_regions_and_cache_off() {
+        let spec = FederationSpec::flat(3);
+        assert_eq!(spec.n_regions(), 0);
+        assert!(spec.region_assignment().iter().all(Option::is_none));
+        let tb = spec.build();
+        let fed = tb.federation.as_ref().unwrap();
+        assert!(!fed.cache_enabled());
+        assert!(fed.is_origin(0) && fed.is_origin(2));
+        assert!(tb.net.regionals.is_empty());
+    }
+
+    #[test]
+    fn tiered_spec_groups_cache_sites_into_regions() {
+        // 2 origins + 7 cache sites in regions of 3 -> 3 regions
+        let spec = FederationSpec::tiered(9, 2, 3, 1 << 30);
+        assert_eq!(spec.n_regions(), 3);
+        assert_eq!(
+            spec.region_assignment(),
+            vec![None, None, Some(0), Some(0), Some(0), Some(1), Some(1), Some(1), Some(2)]
+        );
+        assert_eq!(spec.cache_host(0), 2);
+        assert_eq!(spec.cache_host(2), 8);
+        let tb = spec.build();
+        assert_eq!(tb.net.regionals.len(), 3);
+        let fed = tb.federation.as_ref().unwrap();
+        assert!(fed.cache_enabled());
+        assert_eq!(fed.caches.len(), 3);
+        assert_eq!(fed.caches[1].host_dc, 5);
+    }
+
+    #[test]
+    fn region_cache_lru_evicts_deterministically() {
+        let mut c = RegionCache::new(0, 100);
+        c.insert("/a", ObjectId(0), 40);
+        c.insert("/b", ObjectId(1), 40);
+        assert!(c.touch("/a").is_some(), "hit bumps recency");
+        assert!(c.touch("/missing").is_none());
+        // /b is now least recently used
+        let (path, e) = c.pop_lru().unwrap();
+        assert_eq!(path, "/b");
+        assert_eq!(e.bytes, 40);
+        assert_eq!(c.used_bytes(), 40);
+        // equal recency ties break on the smaller path
+        let mut c = RegionCache::new(0, 100);
+        c.insert("/x", ObjectId(0), 10);
+        let mut d = c.clone();
+        d.entries.get_mut("/x").unwrap().last_used = 0;
+        d.insert("/w", ObjectId(1), 10);
+        d.entries.get_mut("/w").unwrap().last_used = 0;
+        assert_eq!(d.pop_lru().unwrap().0, "/w");
+    }
+
+    #[test]
+    fn federated_read_fills_then_hits_the_regional_cache() {
+        // 1 origin + 4 cache sites in regions of 2
+        let mut tb = FederationSpec::tiered(5, 1, 2, 1 << 30).build();
+        let writer = tb.register("w", 0);
+        let reader_a = tb.register("ra", 2); // region 0 (host = site 1)
+        let reader_b = tb.register("rb", 2);
+        tb.write(writer, "/collab/hot.dat", 0, 1 << 20, None, AccessMode::Scispace).unwrap();
+        let before = tb.stats.locate_tiered_consults;
+        let bytes = tb.read(reader_a, "/collab/hot.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
+        assert_eq!(bytes.len(), 1 << 20);
+        let fed = tb.federation.as_ref().unwrap();
+        assert_eq!(fed.caches[0].stats.misses, 1);
+        assert_eq!(fed.caches[0].stats.hits, 0);
+        assert_eq!(fed.caches[0].stats.fill_bytes, 1 << 20);
+        assert!(fed.caches[0].contains("/collab/hot.dat"));
+        // metadata knows the file, so the miss cost one cache consult
+        // (no probing)
+        assert_eq!(tb.stats.locate_tiered_consults - before, 1);
+        assert_eq!(fed.origin_egress_bytes, 1 << 20);
+
+        let t_fill = tb.now(reader_a);
+        tb.read(reader_b, "/collab/hot.dat", 0, 1 << 20, AccessMode::Scispace).unwrap();
+        let fed = tb.federation.as_ref().unwrap();
+        assert_eq!(fed.caches[0].stats.hits, 1);
+        assert_eq!(fed.origin_egress_bytes, 1 << 20, "the hit never touched the origin");
+        assert_eq!(fed.delivered_bytes, 2 << 20);
+        assert!(fed.offload_ratio() > 0.49, "ratio {}", fed.offload_ratio());
+        assert!(
+            tb.now(reader_b) < t_fill,
+            "the cache hit ({}) must beat the fill read ({t_fill})",
+            tb.now(reader_b)
+        );
+    }
+
+    #[test]
+    fn origin_outage_serves_hits_and_fails_cold_misses() {
+        let mut tb = FederationSpec::tiered(5, 1, 2, 1 << 30).build();
+        let writer = tb.register("w", 0);
+        let warm = tb.register("warm", 1); // region 0
+        let cold = tb.register("cold", 3); // region 1
+        tb.write(writer, "/collab/ds.dat", 0, 4096, None, AccessMode::Scispace).unwrap();
+        tb.read(warm, "/collab/ds.dat", 0, 4096, AccessMode::Scispace).unwrap();
+        tb.set_site_down(0, true);
+        // warmed region still serves
+        assert!(tb.read(warm, "/collab/ds.dat", 0, 4096, AccessMode::Scispace).is_ok());
+        // cold region cannot fill from the dead origin
+        assert!(tb.read(cold, "/collab/ds.dat", 0, 4096, AccessMode::Scispace).is_err());
+        tb.set_site_down(0, false);
+        assert!(tb.read(cold, "/collab/ds.dat", 0, 4096, AccessMode::Scispace).is_ok());
+    }
+}

@@ -85,6 +85,7 @@ pub mod db;
 pub mod shdf;
 pub mod metadata;
 pub mod workspace;
+pub mod federation;
 pub mod meu;
 pub mod namespace;
 pub mod sds;

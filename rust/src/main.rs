@@ -5,7 +5,7 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|engine|all>`
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|engine|federation|all>`
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
 //!   comparison on the discrete-event core; `xfer` sweeps stream
@@ -209,10 +209,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::print_engine_sweep(&sweep);
             emit_json("BENCH_engine.json", &bench::engine_json(&row, &sweep))?;
         }
+        "federation" => {
+            let rows = bench::fig_federation(&[4, 16, 48]);
+            bench::print_federation(&rows);
+            emit_json("BENCH_federation.json", &bench::federation_json(&rows))?;
+        }
         "all" => {
             for w in [
                 "fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2",
-                "preempt", "xfer", "collab", "engine",
+                "preempt", "xfer", "collab", "engine", "federation",
             ] {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];

@@ -13,6 +13,7 @@ use super::TraceEvent;
 const PID_OPS: usize = 1;
 const PID_LINKS: usize = 2;
 const PID_FLOWS: usize = 3;
+const PID_CACHE: usize = 4;
 
 const US_PER_S: f64 = 1e6;
 
@@ -50,8 +51,10 @@ fn slice(name: &str, t0: f64, t1: f64, pid: usize, tid: usize, args: Vec<(&str, 
 /// Render the typed event stream as a Chrome trace-event document:
 /// spans become complete (`ph:"X"`) slices on the "ops" process
 /// (thread = collaborator), flow lifecycles become slices on the
-/// "flows" process, and per-link active-flow counts become counter
-/// (`ph:"C"`) tracks on the "links" process.
+/// "flows" process, per-link active-flow counts become counter
+/// (`ph:"C"`) tracks on the "links" process, and federation cache
+/// hits/misses/evictions become instant (`ph:"i"`) marks on the
+/// "cache" process (thread = cache site).
 pub fn chrome_trace(events: &[TraceEvent], link_names: &[String]) -> Json {
     let t_max = events.iter().map(TraceEvent::time).fold(0.0, f64::max);
     let mut out = vec![
@@ -59,6 +62,16 @@ pub fn chrome_trace(events: &[TraceEvent], link_names: &[String]) -> Json {
         meta_event("process_name", PID_LINKS, "links"),
         meta_event("process_name", PID_FLOWS, "flows"),
     ];
+    if events.iter().any(|e| {
+        matches!(
+            e,
+            TraceEvent::CacheHit { .. }
+                | TraceEvent::CacheMiss { .. }
+                | TraceEvent::CacheEvict { .. }
+        )
+    }) {
+        out.push(meta_event("process_name", PID_CACHE, "cache"));
+    }
 
     // Spans: pair begin/end by id; an unclosed span runs to t_max.
     struct Open {
@@ -128,6 +141,15 @@ pub fn chrome_trace(events: &[TraceEvent], link_names: &[String]) -> Json {
                     out.push(counter(&link_label(l), *t, l, *a));
                 }
             }
+            TraceEvent::CacheHit { t, site, tier, bytes } => {
+                out.push(instant("cache-hit", *t, *site, *tier, *bytes));
+            }
+            TraceEvent::CacheMiss { t, site, tier, bytes } => {
+                out.push(instant("cache-miss", *t, *site, *tier, *bytes));
+            }
+            TraceEvent::CacheEvict { t, site, tier, bytes } => {
+                out.push(instant("cache-evict", *t, *site, *tier, *bytes));
+            }
             _ => {}
         }
     }
@@ -141,6 +163,24 @@ pub fn chrome_trace(events: &[TraceEvent], link_names: &[String]) -> Json {
     obj(vec![
         ("displayTimeUnit", Json::Str("ms".into())),
         ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+fn instant(name: &str, t: f64, site: usize, tier: usize, bytes: u64) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("ts", Json::Num(t * US_PER_S)),
+        ("pid", Json::Num(PID_CACHE as f64)),
+        ("tid", Json::Num(site as f64)),
+        (
+            "args",
+            Json::Obj(BTreeMap::from([
+                ("tier".to_string(), Json::Num(tier as f64)),
+                ("bytes".to_string(), Json::Num(bytes as f64)),
+            ])),
+        ),
     ])
 }
 
@@ -293,6 +333,37 @@ mod tests {
         let schema = Json::parse(include_str!("../../../schemas/chrome_trace.schema.json"))
             .expect("schema parses");
         validate_chrome(&back, &schema).expect("trace validates against checked-in schema");
+    }
+
+    #[test]
+    fn cache_events_render_as_schema_valid_instants() {
+        let mut evs = sample_events();
+        evs.push(TraceEvent::CacheMiss { t: 0.2, site: 3, tier: 1, bytes: 4096 });
+        evs.push(TraceEvent::CacheHit { t: 0.9, site: 3, tier: 1, bytes: 4096 });
+        evs.push(TraceEvent::CacheEvict { t: 1.0, site: 3, tier: 1, bytes: 1024 });
+        let doc = chrome_trace(&evs, &[]);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let hit = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("cache-hit"))
+            .expect("cache-hit instant");
+        assert_eq!(hit.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(hit.get("s").and_then(Json::as_str), Some("t"));
+        assert_eq!(hit.get("tid").and_then(Json::as_f64), Some(3.0));
+        let bytes = hit.get("args").and_then(|a| a.get("bytes")).and_then(Json::as_f64);
+        assert_eq!(bytes, Some(4096.0));
+        // the "cache" process track appears only when cache events exist
+        let has_cache_track = |d: &Json| {
+            d.get("traceEvents").and_then(Json::as_arr).unwrap().iter().any(|e| {
+                e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str) == Some("cache")
+            })
+        };
+        assert!(has_cache_track(&doc));
+        assert!(!has_cache_track(&chrome_trace(&sample_events(), &[])));
+        let schema = Json::parse(include_str!("../../../schemas/chrome_trace.schema.json"))
+            .expect("schema parses");
+        let back = Json::parse(&doc.to_string()).expect("parses");
+        validate_chrome(&back, &schema).expect("cache instants validate");
     }
 
     #[test]

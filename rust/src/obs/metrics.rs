@@ -218,12 +218,17 @@ impl Metrics {
 ///   latencies with p50/p99);
 /// * `link.<i>.active_flows` time-weighted series from join/done/pause
 ///   transitions (`link_names` labels them when provided);
+/// * `cache.{hit,miss,evict,bytes}` counters and a per-tier
+///   `cache.tier<k>.hit_ratio` running series from the federation
+///   cache events;
 /// * `events.recorded` counter.
 pub fn fold_events(m: &mut Metrics, events: &[TraceEvent], link_names: &[String]) {
     let mut open_spans: HashMap<u64, (f64, String)> = HashMap::new();
     let mut on_link: HashMap<usize, usize> = HashMap::new();
     let mut active: HashMap<usize, i64> = HashMap::new();
     let mut tuned_paths: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    // per-tier running (hits, misses) for the hit-ratio series
+    let mut tier_lookups: HashMap<usize, (u64, u64)> = HashMap::new();
     let link_label = |l: usize| {
         link_names
             .get(l)
@@ -272,6 +277,24 @@ pub fn fold_events(m: &mut Metrics, events: &[TraceEvent], link_names: &[String]
                 }
                 m.series_push(&key, *t, *to as f64);
                 m.inc("tune.decisions", 1);
+            }
+            TraceEvent::CacheHit { t, tier, bytes, .. } => {
+                m.inc("cache.hit", 1);
+                m.inc("cache.bytes", *bytes);
+                let (h, miss) = tier_lookups.entry(*tier).or_insert((0, 0));
+                *h += 1;
+                let ratio = *h as f64 / (*h + *miss) as f64;
+                m.series_push(&format!("cache.tier{tier}.hit_ratio"), *t, ratio);
+            }
+            TraceEvent::CacheMiss { t, tier, .. } => {
+                m.inc("cache.miss", 1);
+                let (h, miss) = tier_lookups.entry(*tier).or_insert((0, 0));
+                *miss += 1;
+                let ratio = *h as f64 / (*h + *miss) as f64;
+                m.series_push(&format!("cache.tier{tier}.hit_ratio"), *t, ratio);
+            }
+            TraceEvent::CacheEvict { .. } => {
+                m.inc("cache.evict", 1);
             }
             _ => {}
         }
@@ -328,6 +351,24 @@ mod tests {
         let s = m.series("link.2.active_flows").expect("link series");
         assert_eq!(s.points(), &[(1.0, 1.0), (2.5, 0.0)]);
         assert_eq!(m.counter("events.recorded"), 4);
+    }
+
+    #[test]
+    fn fold_events_accumulates_cache_counters_and_hit_ratio() {
+        let mut m = Metrics::new();
+        let events = vec![
+            TraceEvent::CacheMiss { t: 1.0, site: 2, tier: 1, bytes: 100 },
+            TraceEvent::CacheEvict { t: 1.5, site: 2, tier: 1, bytes: 50 },
+            TraceEvent::CacheHit { t: 2.0, site: 2, tier: 1, bytes: 100 },
+            TraceEvent::CacheHit { t: 3.0, site: 2, tier: 1, bytes: 100 },
+        ];
+        fold_events(&mut m, &events, &[]);
+        assert_eq!(m.counter("cache.hit"), 2);
+        assert_eq!(m.counter("cache.miss"), 1);
+        assert_eq!(m.counter("cache.evict"), 1);
+        assert_eq!(m.counter("cache.bytes"), 200);
+        let s = m.series("cache.tier1.hit_ratio").expect("hit-ratio series");
+        assert_eq!(s.points(), &[(1.0, 0.0), (2.0, 0.5), (3.0, 2.0 / 3.0)]);
     }
 
     #[test]

@@ -209,6 +209,41 @@ pub enum TraceEvent {
         /// The span.
         span: SpanId,
     },
+    /// A federated read found its object in a cache-tier site's store.
+    CacheHit {
+        /// Consult time.
+        t: f64,
+        /// Cache-hosting site (DC index).
+        site: usize,
+        /// Cache tier (1 = regional; origins are tier 0).
+        tier: usize,
+        /// Payload bytes the hit will serve.
+        bytes: u64,
+    },
+    /// A federated read missed a cache-tier site and escalated toward
+    /// the origins.
+    CacheMiss {
+        /// Consult time.
+        t: f64,
+        /// Cache-hosting site (DC index).
+        site: usize,
+        /// Cache tier (1 = regional).
+        tier: usize,
+        /// Payload bytes the read wanted.
+        bytes: u64,
+    },
+    /// A capacity-bounded cache-tier store evicted its least recently
+    /// used object to make room for a read-through fill.
+    CacheEvict {
+        /// Eviction time.
+        t: f64,
+        /// Cache-hosting site (DC index).
+        site: usize,
+        /// Cache tier (1 = regional).
+        tier: usize,
+        /// Bytes the eviction freed.
+        bytes: u64,
+    },
     /// The transfer stream autotuner changed a transfer's stream count
     /// at a chunk-round boundary (`Hold` rounds are not recorded).
     Tune {
@@ -247,6 +282,9 @@ impl TraceEvent {
             | TraceEvent::Serve { t, .. }
             | TraceEvent::SpanBegin { t, .. }
             | TraceEvent::SpanEnd { t, .. }
+            | TraceEvent::CacheHit { t, .. }
+            | TraceEvent::CacheMiss { t, .. }
+            | TraceEvent::CacheEvict { t, .. }
             | TraceEvent::Tune { t, .. } => t,
         }
     }
@@ -298,6 +336,15 @@ impl fmt::Display for TraceEvent {
                 Ok(())
             }
             TraceEvent::SpanEnd { t, span } => write!(f, "{t:.9} span- {}", span.0),
+            TraceEvent::CacheHit { t, site, tier, bytes } => {
+                write!(f, "{t:.9} cache-hit s{site} tier{tier} bytes={bytes}")
+            }
+            TraceEvent::CacheMiss { t, site, tier, bytes } => {
+                write!(f, "{t:.9} cache-miss s{site} tier{tier} bytes={bytes}")
+            }
+            TraceEvent::CacheEvict { t, site, tier, bytes } => {
+                write!(f, "{t:.9} cache-evict s{site} tier{tier} bytes={bytes}")
+            }
             TraceEvent::Tune { t, transfer, src_dc, dst_dc, from, to, rate, losses } => {
                 write!(
                     f,

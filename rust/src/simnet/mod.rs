@@ -54,6 +54,36 @@ pub struct Link {
     pub latency_s: f64,
 }
 
+/// One tier's worth of link parameters in a federated topology: the
+/// site LANs, the regional aggregation links and the shared backbone
+/// WAN each get their own class. A [`NetConfig`] is exactly two of
+/// these (WAN + LAN); [`Network::build_federation`] takes three.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkClass {
+    /// Bandwidth, bytes/s.
+    pub bw: f64,
+    /// One-way propagation latency, seconds.
+    pub latency_s: f64,
+    /// Sustained-overload interval before the link synthesizes
+    /// congestion loss for windowed flows (`INFINITY` = lossless).
+    pub loss_detect_s: f64,
+}
+
+impl LinkClass {
+    /// A lossless link class.
+    pub fn lossless(bw: f64, latency_s: f64) -> Self {
+        LinkClass { bw, latency_s, loss_detect_s: f64::INFINITY }
+    }
+
+    fn build(&self, env: &mut Engine, name: &str) -> Link {
+        let res = env.add_link(name, self.bw, self.latency_s);
+        if self.loss_detect_s.is_finite() {
+            env.set_link_loss_detect(res, self.loss_detect_s);
+        }
+        Link { res, latency_s: self.latency_s }
+    }
+}
+
 /// Network configuration for a collaboration testbed.
 #[derive(Debug, Clone)]
 pub struct NetConfig {
@@ -110,16 +140,24 @@ impl NetConfig {
     }
 }
 
-/// The instantiated network: one WAN link + per-DC LAN links, plus
+/// The instantiated network: one WAN link + per-DC LAN links (plus,
+/// on federated beds, per-region aggregation links), plus
 /// multi-transfer contention accounting (how many bulk transfers are
 /// concurrently riding each link, and the peak seen).
 #[derive(Debug, Clone)]
 pub struct Network {
-    /// DC-to-DC link.
+    /// DC-to-DC backbone link.
     pub wan: Link,
     /// Per data center local fabric.
     pub lans: Vec<Link>,
-    /// Concurrent bulk transfers per link (slot 0 = WAN, 1+i = LAN i).
+    /// Per-region aggregation links (federated beds only; empty on the
+    /// classic flat beds, which keeps every path identical to before).
+    pub regionals: Vec<Link>,
+    /// Region assignment per DC (`None` = attached straight to the
+    /// backbone, the flat-bed behaviour for every DC).
+    region_of: Vec<Option<usize>>,
+    /// Concurrent bulk transfers per link
+    /// (slot 0 = WAN, 1+i = LAN i, 1+n_dcs+r = regional r).
     active: Vec<u32>,
     /// Peak concurrent bulk transfers per link.
     peak: Vec<u32>,
@@ -154,10 +192,52 @@ impl Network {
         Network {
             wan,
             lans,
+            regionals: Vec::new(),
+            region_of: vec![None; n_dcs],
             active: vec![0; slots],
             peak: vec![0; slots],
             invariant_violations: 0,
         }
+    }
+
+    /// Build a federated network: a shared backbone WAN, one LAN per
+    /// site, and one aggregation link per region. `region_of[dc]`
+    /// assigns each site to a region (or `None` for direct backbone
+    /// attachment — typically the origin sites). Link creation order
+    /// (`net.wan`, then `net.lan{i}`, then `net.regional{r}`) matches
+    /// [`Network::build`], so a federation with no regions and the
+    /// classes taken from a [`NetConfig`] is bit-identical to the
+    /// classic flat bed.
+    pub fn build_federation(
+        env: &mut Engine,
+        backbone: &LinkClass,
+        site_lan: &LinkClass,
+        regional: &LinkClass,
+        region_of: Vec<Option<usize>>,
+    ) -> Network {
+        let wan = backbone.build(env, "net.wan");
+        let lans: Vec<Link> = (0..region_of.len())
+            .map(|i| site_lan.build(env, &format!("net.lan{i}")))
+            .collect();
+        let n_regions = region_of.iter().flatten().map(|r| r + 1).max().unwrap_or(0);
+        let regionals: Vec<Link> =
+            (0..n_regions).map(|r| regional.build(env, &format!("net.regional{r}"))).collect();
+        let slots = 1 + lans.len() + regionals.len();
+        Network {
+            wan,
+            lans,
+            regionals,
+            region_of,
+            active: vec![0; slots],
+            peak: vec![0; slots],
+            invariant_violations: 0,
+        }
+    }
+
+    /// Region a DC is attached to (`None` on flat beds or for
+    /// backbone-attached origin sites).
+    pub fn region_of(&self, dc: usize) -> Option<usize> {
+        self.region_of.get(dc).copied().flatten()
     }
 
     /// Send `bytes` over `link` starting at `now`, blocking to
@@ -191,13 +271,44 @@ impl Network {
     }
 
     /// The single source of hop truth: accounting slots a `src -> dst`
-    /// payload traverses, in order (0 = WAN, 1+i = LAN i). `route`,
-    /// `path` and the contention counters all derive from this.
+    /// payload traverses, in order (0 = WAN, 1+i = LAN i,
+    /// 1+n_dcs+r = regional r). `route`, `path` and the contention
+    /// counters all derive from this. On flat beds (no regions) this
+    /// is exactly the historical `[lan, wan, lan]`; on federated beds
+    /// a payload climbs through its source region's aggregation link,
+    /// rides the backbone only when the endpoints sit in different
+    /// regions, and descends through the destination region's link.
     fn hop_slots(&self, src_dc: usize, dst_dc: usize) -> Vec<usize> {
         if src_dc == dst_dc {
-            vec![1 + src_dc]
+            return vec![1 + src_dc];
+        }
+        let regional_slot = |r: usize| 1 + self.lans.len() + r;
+        let (src_r, dst_r) = (self.region_of(src_dc), self.region_of(dst_dc));
+        let mut slots = vec![1 + src_dc];
+        match (src_r, dst_r) {
+            (Some(a), Some(b)) if a == b => slots.push(regional_slot(a)),
+            _ => {
+                if let Some(a) = src_r {
+                    slots.push(regional_slot(a));
+                }
+                slots.push(0);
+                if let Some(b) = dst_r {
+                    slots.push(regional_slot(b));
+                }
+            }
+        }
+        slots.push(1 + dst_dc);
+        slots
+    }
+
+    /// The link occupying accounting slot `s` (see [`Network::hop_slots`]).
+    fn slot_link(&self, s: usize) -> Link {
+        if s == 0 {
+            self.wan
+        } else if s <= self.lans.len() {
+            self.lans[s - 1]
         } else {
-            vec![1 + src_dc, 0, 1 + dst_dc]
+            self.regionals[s - 1 - self.lans.len()]
         }
     }
 
@@ -205,19 +316,13 @@ impl Network {
     /// (same hops as [`Network::route`]). Used by the `xfer` engine to
     /// drive each chunk over the path explicitly.
     pub fn path(&self, src_dc: usize, dst_dc: usize) -> Vec<Link> {
-        self.hop_slots(src_dc, dst_dc)
-            .into_iter()
-            .map(|s| if s == 0 { self.wan } else { self.lans[s - 1] })
-            .collect()
+        self.hop_slots(src_dc, dst_dc).into_iter().map(|s| self.slot_link(s)).collect()
     }
 
     /// The same hop sequence as engine link ids, ready for
     /// [`Engine::start_flow`].
     pub fn flow_path(&self, src_dc: usize, dst_dc: usize) -> Vec<LinkId> {
-        self.hop_slots(src_dc, dst_dc)
-            .into_iter()
-            .map(|s| if s == 0 { self.wan.res } else { self.lans[s - 1].res })
-            .collect()
+        self.hop_slots(src_dc, dst_dc).into_iter().map(|s| self.slot_link(s).res).collect()
     }
 
     /// Round-trip time of the `src_dc -> dst_dc` path: twice the sum of
@@ -236,8 +341,7 @@ impl Network {
     pub fn path_load(&self, env: &Engine, src_dc: usize, dst_dc: usize) -> PathLoad {
         let mut load = PathLoad::default();
         for s in self.hop_slots(src_dc, dst_dc) {
-            let link = if s == 0 { self.wan } else { self.lans[s - 1] };
-            let st = env.link_state(link.res);
+            let st = env.link_state(self.slot_link(s).res);
             load.active_flows += st.active_flows;
             load.losses += st.total_losses;
             load.retransmit_bytes += st.total_retransmit_bytes;
@@ -525,6 +629,83 @@ mod tests {
         net.end_transfer(0, 1); // double-end: one violation per hop slot
         assert_eq!(net.invariant_violations(), 3, "cross-DC path has 3 slots");
         assert_eq!(net.wan_active(), 0, "saturating release still holds");
+    }
+
+    #[test]
+    fn federation_with_no_regions_matches_classic_build() {
+        let cfg = NetConfig::paper_default();
+        let wan = LinkClass {
+            bw: cfg.wan_bw,
+            latency_s: cfg.wan_latency_s,
+            loss_detect_s: cfg.wan_loss_detect_s,
+        };
+        let lan = LinkClass {
+            bw: cfg.lan_bw,
+            latency_s: cfg.lan_latency_s,
+            loss_detect_s: cfg.lan_loss_detect_s,
+        };
+        let mut env_a = Engine::new();
+        let net_a = Network::build(&mut env_a, &cfg, 3);
+        let mut env_b = Engine::new();
+        let net_b = Network::build_federation(&mut env_b, &wan, &lan, &lan, vec![None; 3]);
+        assert!(net_b.regionals.is_empty());
+        for src in 0..3 {
+            for dst in 0..3 {
+                assert_eq!(net_a.flow_path(src, dst), net_b.flow_path(src, dst));
+                let ta = net_a.route(&mut env_a, src, dst, 0.0, 1 << 20);
+                let tb = net_b.route(&mut env_b, src, dst, 0.0, 1 << 20);
+                assert_eq!(ta.to_bits(), tb.to_bits(), "{src}->{dst}");
+                env_a.reset();
+                env_b.reset();
+            }
+        }
+    }
+
+    #[test]
+    fn federation_paths_climb_through_regions() {
+        let mut env = Engine::new();
+        let bb = LinkClass::lossless(1.25e9, 25e-3);
+        let reg = LinkClass::lossless(2.5e9, 5e-3);
+        let lan = LinkClass::lossless(12.5e9, 20e-6);
+        // site 0 = origin on the backbone, sites 1-2 in region 0, site 3 in region 1
+        let net = Network::build_federation(
+            &mut env,
+            &bb,
+            &lan,
+            &reg,
+            vec![None, Some(0), Some(0), Some(1)],
+        );
+        assert_eq!(net.regionals.len(), 2);
+        let ids = |src: usize, dst: usize| net.flow_path(src, dst);
+        // intra-region traffic stays off the backbone
+        assert_eq!(ids(1, 2), vec![net.lans[1].res, net.regionals[0].res, net.lans[2].res]);
+        // cross-region climbs src regional, backbone, dst regional
+        assert_eq!(
+            ids(1, 3),
+            vec![
+                net.lans[1].res,
+                net.regionals[0].res,
+                net.wan.res,
+                net.regionals[1].res,
+                net.lans[3].res
+            ]
+        );
+        // origin <-> cache site crosses exactly one regional
+        assert_eq!(
+            ids(0, 2),
+            vec![net.lans[0].res, net.wan.res, net.regionals[0].res, net.lans[2].res]
+        );
+        // same-site stays on the LAN
+        assert_eq!(ids(3, 3), vec![net.lans[3].res]);
+        // rtt follows the hop sequence
+        let rtt = net.path_rtt(1, 3);
+        assert!((rtt - 2.0 * (20e-6 + 5e-3 + 25e-3 + 5e-3 + 20e-6)).abs() < 1e-12, "rtt {rtt}");
+        // contention accounting covers regional slots too
+        let mut net = net;
+        net.begin_transfer(1, 3);
+        assert_eq!(net.wan_active(), 1);
+        net.end_transfer(1, 3);
+        assert_eq!(net.invariant_violations(), 0);
     }
 
     #[test]

@@ -154,6 +154,10 @@ pub struct OpStats {
     pub locate_fallbacks: u64,
     /// Per-DC metadata consults those fallbacks charged.
     pub locate_fallback_consults: u64,
+    /// Metadata consults charged by the federated redirector path
+    /// (tier-1 cache consults plus tier-2 escalation probes). Always 0
+    /// on non-federated beds.
+    pub locate_tiered_consults: u64,
 }
 
 /// The assembled collaboration testbed.
@@ -180,6 +184,10 @@ pub struct Testbed {
     /// Learned per-path stream widths (adaptive tuning warm-start).
     /// Populated only when `cfg.xfer.tune.mode` is adaptive.
     pub xfer_paths: PathStateTable,
+    /// Federation state (region map, cache tier, outage flags) when the
+    /// bed was built by `federation::FederationSpec::build`; `None` on
+    /// classic hand-wired beds.
+    pub federation: Option<crate::federation::Federation>,
     rr_dtn: usize,
     next_xfer: u64,
 }
@@ -189,6 +197,15 @@ impl Testbed {
     pub fn build(cfg: TestbedConfig) -> Testbed {
         let mut env = Engine::new();
         let net = Network::build(&mut env, &cfg.net, cfg.n_dcs);
+        Self::build_with_net(cfg, env, net)
+    }
+
+    /// Assemble the per-site substrate (Lustre, DTNs, metadata shards)
+    /// on an externally built network — the federation topology
+    /// generator injects its tiered fabric here. Construction order is
+    /// shared with [`Testbed::build`], so a flat federated bed is
+    /// bit-identical to the classic hand-wired one.
+    pub(crate) fn build_with_net(cfg: TestbedConfig, mut env: Engine, net: Network) -> Testbed {
         let dcs = (0..cfg.n_dcs)
             .map(|d| Dc {
                 lustre: Lustre::build(&mut env, d, &cfg.lustre),
@@ -229,6 +246,7 @@ impl Testbed {
             stats: OpStats::default(),
             fuse_mounts: Vec::new(),
             xfer_paths: PathStateTable::new(),
+            federation: None,
             rr_dtn: 0,
             next_xfer: 0,
         }
@@ -429,6 +447,13 @@ impl Testbed {
     /// file — on the collaborator's clock, counted in
     /// [`OpStats::locate_fallbacks`]. The old uncharged linear scan
     /// silently bypassed the metadata-export protocol.
+    ///
+    /// The consult order is explicitly deterministic: **nearest first by
+    /// round-trip path cost from the collaborator's home DC**
+    /// ([`Network::path_rtt`]), ties broken by lowest DC index. The
+    /// previous index-order scan was an accident of construction; the
+    /// nearest-first order is also what the federated redirector's
+    /// tier-by-tier escalation assumes.
     pub(crate) fn locate_for(
         &mut self,
         c: usize,
@@ -441,9 +466,13 @@ impl Testbed {
             }
         }
         self.stats.locate_fallbacks += 1;
+        let home = self.collabs[c].dc;
+        let mut order: Vec<(f64, usize)> =
+            (0..self.dcs.len()).map(|d| (self.net.path_rtt(home, d), d)).collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let mut t = self.collabs[c].now;
         let mut found = None;
-        for d in 0..self.dcs.len() {
+        for (_, d) in order {
             let dtn = self.dtn_in_dc(d, c);
             t = self.meta_rpc_cost(c, dtn, t, self.cfg.meta_msg_bytes, 1);
             self.stats.locate_fallback_consults += 1;
@@ -705,8 +734,11 @@ impl Testbed {
                     })
                 }
             },
+            // on federated beds this consults the regional cache tier
+            // first (redirector locate) and read-through-fills on a
+            // miss; on flat beds it is exactly `locate_for`
             _ => self
-                .locate_for(c, path)
+                .locate_read_source(c, path, len)
                 .ok_or_else(|| ScispaceError::NoSuchFile { path: path.into() })?,
         };
         let t0 = self.collabs[c].now;
@@ -998,6 +1030,18 @@ impl Testbed {
         }
         m.inc("op.locate_fallbacks", self.stats.locate_fallbacks);
         m.inc("op.locate_fallback_consults", self.stats.locate_fallback_consults);
+        m.inc("op.locate_tiered_consults", self.stats.locate_tiered_consults);
+        if let Some(fed) = &self.federation {
+            let agg = fed.cache_totals();
+            m.inc("fed.cache.hits", agg.hits);
+            m.inc("fed.cache.misses", agg.misses);
+            m.inc("fed.cache.evicts", agg.evicts);
+            m.inc("fed.cache.hit_bytes", agg.hit_bytes);
+            m.inc("fed.cache.fill_bytes", agg.fill_bytes);
+            m.inc("fed.origin_egress_bytes", fed.origin_egress_bytes);
+            m.inc("fed.delivered_bytes", fed.delivered_bytes);
+            m.gauge("fed.origin_offload_ratio", fed.offload_ratio());
+        }
         m.inc("sim_invariant_violations", self.net.invariant_violations());
         m.inc("engine.events_processed", self.env.events_processed());
         m.gauge("engine.horizon", self.env.horizon());

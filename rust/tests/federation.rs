@@ -1,0 +1,225 @@
+//! Federation tier acceptance: flat federated beds are bit-identical to
+//! the classic hand-wired ones, the locate-fallback consult order is
+//! pinned (nearest-first, ties to lowest DC index, exact counts), the
+//! redirector's tiered consult charging is exact, and the regional
+//! cache tier behaves (read-through fill, LRU eviction, origin offload,
+//! outage survival).
+
+use scispace::api::{Op, OpResult, ScispaceError};
+use scispace::federation::FederationSpec;
+use scispace::workspace::{AccessMode, Testbed, TestbedConfig};
+
+// ---------------------------------------------------------- bit-identity
+
+/// A workload touching every read-path flavour: bulk WAN read, rsize
+/// remote read, LW native write, charged locate fallback.
+fn drive(tb: &mut Testbed) -> Vec<u64> {
+    let a = tb.register("alice", 0);
+    let b = tb.register("bob", 1);
+    tb.session(a).write("/fed/big.dat").len(16 << 20).submit().unwrap();
+    tb.session(a).write("/fed/small.dat").len(64 << 10).submit().unwrap();
+    tb.session(b).read("/fed/big.dat").submit().unwrap();
+    tb.session(b).read("/fed/small.dat").submit().unwrap();
+    tb.session(a).write("/lw/native.dat").len(4096).mode(AccessMode::ScispaceLw).submit().unwrap();
+    tb.session(b).locate("/lw/native.dat").submit().unwrap();
+    vec![tb.now(a).to_bits(), tb.now(b).to_bits()]
+}
+
+fn assert_bit_identical(mut fed: Testbed, mut classic: Testbed) {
+    let cf = drive(&mut fed);
+    let cc = drive(&mut classic);
+    assert_eq!(cf, cc, "collaborator clocks must match bit-for-bit");
+    assert_eq!(format!("{:?}", fed.stats), format!("{:?}", classic.stats), "op stats must match");
+    let wf = fed.env.link(fed.net.wan.res).total_bytes;
+    let wc = classic.env.link(classic.net.wan.res).total_bytes;
+    assert_eq!(wf, wc, "WAN byte counts must match");
+}
+
+#[test]
+fn flat_federated_beds_are_bit_identical_to_hand_wired() {
+    // the paper's 2-DC bed and a 3-DC one, rebuilt through the topology
+    // generator with the cache tier off
+    assert_bit_identical(FederationSpec::flat(2).build(), Testbed::paper_default());
+    let mut cfg = TestbedConfig::paper_default();
+    cfg.n_dcs = 3;
+    assert_bit_identical(FederationSpec::flat(3).build(), Testbed::build(cfg));
+}
+
+// ----------------------------------------------- locate fallback pinning
+
+#[test]
+fn locate_fallback_consult_order_is_nearest_first_with_exact_counts() {
+    let mut cfg = TestbedConfig::paper_default();
+    cfg.n_dcs = 4;
+    let mut tb = Testbed::build(cfg);
+    let c0 = tb.register("c0", 0);
+    let c1 = tb.register("c1", 1);
+    let c3 = tb.register("c3", 3);
+    // LW files never touch the workspace metadata, so every locate
+    // takes the charged fallback and the probe order is observable
+
+    // file at the reader's own DC: the home DC is nearest -> 1 consult
+    tb.session(c1).write("/lw/own.dat").len(1024).mode(AccessMode::ScispaceLw).submit().unwrap();
+    tb.session(c1).locate("/lw/own.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_fallbacks, 1);
+    assert_eq!(tb.stats.locate_fallback_consults, 1, "hit on the first consulted site");
+
+    // file at DC 3, located from DC 1: remote DCs tie on path cost, so
+    // the order is index order after home -> 1,0,2,3 -> 4 consults
+    tb.session(c3).write("/lw/far.dat").len(1024).mode(AccessMode::ScispaceLw).submit().unwrap();
+    tb.session(c1).locate("/lw/far.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_fallbacks, 2);
+    assert_eq!(tb.stats.locate_fallback_consults, 1 + 4, "hit on the last consulted site");
+
+    // file at DC 0 from DC 1: probe order 1,0 -> 2 consults
+    tb.session(c0).write("/lw/near.dat").len(1024).mode(AccessMode::ScispaceLw).submit().unwrap();
+    tb.session(c1).locate("/lw/near.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_fallback_consults, 5 + 2);
+    assert_eq!(tb.stats.locate_tiered_consults, 0, "flat beds never take the tiered path");
+}
+
+// ------------------------------------------------- redirector charging
+
+#[test]
+fn tiered_redirector_charges_exact_consults() {
+    // 1 origin + 4 cache sites in regions of 2: regions {1,2} and {3,4}
+    let mut tb = FederationSpec::tiered(5, 1, 2, 1 << 30).build();
+    let origin = tb.register("origin", 0);
+    let reader = tb.register("reader", 2);
+
+    // metadata-known file: the miss costs exactly one redirector
+    // consult (metadata escalation needs no probing), the refetch
+    // exactly one more
+    tb.session(origin).write("/fed/known.dat").len(64 << 10).submit().unwrap();
+    tb.session(reader).read("/fed/known.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_tiered_consults, 1, "miss: one cache consult, then metadata");
+    tb.session(reader).read("/fed/known.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_tiered_consults, 2, "hit: one cache consult");
+    let fed = tb.federation.as_ref().unwrap();
+    assert_eq!(fed.caches[0].stats.misses, 1);
+    assert_eq!(fed.caches[0].stats.hits, 1);
+    assert_eq!(fed.caches[0].stats.fill_bytes, 64 << 10);
+    assert!(fed.caches[0].contains("/fed/known.dat"));
+    assert_eq!(tb.stats.locate_fallbacks, 0, "the tiered path replaces the flat fallback");
+
+    // an unexported LW file at the origin: cache consult + nearest-first
+    // escalation probes (home site 2, region sibling 1, origin 0)
+    let lw = tb.register("lw-writer", 0);
+    tb.session(lw).write("/lw/cold.dat").len(4096).mode(AccessMode::ScispaceLw).submit().unwrap();
+    let before = tb.stats.locate_tiered_consults;
+    tb.session(reader).read("/lw/cold.dat").submit().unwrap();
+    assert_eq!(
+        tb.stats.locate_tiered_consults - before,
+        1 + 3,
+        "escalation climbs home -> region -> origin"
+    );
+}
+
+#[test]
+fn cache_off_tiered_bed_uses_flat_locate() {
+    let mut tb = FederationSpec::tiered(5, 1, 2, 0).build();
+    let w = tb.register("w", 0);
+    let r = tb.register("r", 2);
+    tb.session(w).write("/fed/x.dat").len(64 << 10).submit().unwrap();
+    tb.session(r).read("/fed/x.dat").submit().unwrap();
+    assert_eq!(tb.stats.locate_tiered_consults, 0);
+    let fed = tb.federation.as_ref().unwrap();
+    assert!(!fed.cache_enabled());
+    assert_eq!(fed.cache_totals().misses, 0);
+    assert_eq!(fed.delivered_bytes, 64 << 10);
+    assert_eq!(fed.origin_egress_bytes, 64 << 10);
+    assert!(fed.offload_ratio().abs() < 1e-12, "direct serves never offload");
+}
+
+// ----------------------------------------------------------- cache tier
+
+#[test]
+fn lru_eviction_is_deterministic_and_counted() {
+    // capacity fits exactly one 64 KiB object
+    let mut tb = FederationSpec::tiered(3, 1, 2, 96 << 10).build();
+    let w = tb.register("w", 0);
+    let r = tb.register("r", 1);
+    tb.session(w).write("/fed/a.dat").len(64 << 10).submit().unwrap();
+    tb.session(w).write("/fed/b.dat").len(64 << 10).submit().unwrap();
+
+    tb.session(r).read("/fed/a.dat").submit().unwrap();
+    {
+        let cache = &tb.federation.as_ref().unwrap().caches[0];
+        assert!(cache.contains("/fed/a.dat"));
+        assert_eq!(cache.used_bytes(), 64 << 10);
+        assert_eq!(cache.len(), 1);
+    }
+    tb.session(r).read("/fed/b.dat").submit().unwrap();
+    {
+        let cache = &tb.federation.as_ref().unwrap().caches[0];
+        assert!(cache.contains("/fed/b.dat"), "fill must land");
+        assert!(!cache.contains("/fed/a.dat"), "LRU victim must go");
+        assert_eq!(cache.stats.evicts, 1);
+        assert_eq!(cache.used_bytes(), 64 << 10, "capacity bound holds");
+    }
+    tb.session(r).read("/fed/a.dat").submit().unwrap();
+    let fed = tb.federation.as_ref().unwrap();
+    assert_eq!(fed.caches[0].stats.misses, 3, "the evicted object misses again");
+    assert_eq!(fed.caches[0].stats.evicts, 2);
+    assert_eq!(fed.cache_totals().hits, 0);
+    assert_eq!(fed.origin_egress_bytes, 3 * (64 << 10), "every miss refilled from the origin");
+}
+
+#[test]
+fn batch_reads_source_from_the_warm_cache() {
+    // warm the region 0 cache, then run a big batch read from a sibling
+    // site: the staged transfer must source from the cache host, not
+    // the origin
+    let mut tb = FederationSpec::tiered(5, 1, 2, 1 << 30).build();
+    let w = tb.register("w", 0);
+    let warmer = tb.register("warmer", 1);
+    let sibling = tb.register("sibling", 2);
+    tb.session(w).write("/fed/big.dat").len(16 << 20).submit().unwrap();
+    tb.session(warmer).read("/fed/big.dat").submit().unwrap();
+    let egress_before = tb.federation.as_ref().unwrap().origin_egress_bytes;
+    let results = tb.run_batch(vec![(
+        sibling,
+        Op::Read {
+            path: "/fed/big.dat".into(),
+            offset: 0,
+            len: Some(16 << 20),
+            mode: AccessMode::Scispace,
+        },
+    )]);
+    let host = tb.federation.as_ref().unwrap().caches[0].host_dc;
+    match &results[0] {
+        OpResult::Data { bytes, transfer, .. } => {
+            assert_eq!(bytes.len(), 16 << 20);
+            let rep = transfer.as_ref().expect("bulk read carries a transfer report");
+            assert_eq!(rep.src_dc, host, "staged read must source from the cache host");
+        }
+        other => panic!("expected Data, got {other:?}"),
+    }
+    let fed = tb.federation.as_ref().unwrap();
+    assert_eq!(fed.cache_totals().hits, 1);
+    assert_eq!(fed.origin_egress_bytes, egress_before, "the hit never touched the origin");
+}
+
+// --------------------------------------------------------------- outage
+
+#[test]
+fn origin_outage_keeps_warmed_regions_alive() {
+    let mut tb = FederationSpec::tiered(5, 1, 2, 1 << 30).build();
+    let w = tb.register("w", 0);
+    let warm = tb.register("warm", 1);
+    let cold = tb.register("cold", 3);
+    tb.session(w).write("/fed/ds.dat").len(64 << 10).submit().unwrap();
+    tb.session(warm).read("/fed/ds.dat").submit().unwrap();
+
+    tb.set_site_down(0, true);
+    assert!(
+        tb.session(warm).read("/fed/ds.dat").submit().is_ok(),
+        "warmed region serves through the outage"
+    );
+    match tb.session(cold).read("/fed/ds.dat").submit() {
+        Err(ScispaceError::NoSuchFile { .. }) => {}
+        other => panic!("expected NoSuchFile from the dead origin, got {other:?}"),
+    }
+    tb.set_site_down(0, false);
+    assert!(tb.session(cold).read("/fed/ds.dat").submit().is_ok(), "recovery restores fills");
+}

@@ -55,6 +55,9 @@ def validate_chrome(doc, schema):
         if ph not in phases:
             raise SystemExit(f"{ctx}: unknown ph '{ph}'")
         check_required(ev, phases[ph].get("required", {}), ctx)
+        # federation cache instants must carry their tier and byte count
+        if ph == "i" and ev.get("name", "").startswith("cache-"):
+            check_required(ev["args"], {"tier": "number", "bytes": "number"}, f"{ctx}.args")
     return len(events)
 
 
