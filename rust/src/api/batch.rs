@@ -54,6 +54,24 @@
 //! cost), with admission order — which is virtual-time order across
 //! collaborators — standing in for execution order.
 //!
+//! ## Open-loop admission
+//!
+//! [`run_batch`] is a *closed loop*: each collaborator's next op is
+//! admitted the instant its previous op completes, so the offered load
+//! adapts to the system's speed (and can never expose queueing).
+//! [`run_batch_open`] is the *open-loop* counterpart for load testing:
+//! every op carries a scheduled virtual **arrival time** and is pushed
+//! into the bed by an engine control at that time regardless of
+//! in-flight work — the arrival process, not the service process, sets
+//! the offered rate. Program order per collaborator still holds: an op
+//! whose predecessor is still running waits, and that wait is reported
+//! as **queueing delay** (arrival → admission, [`BatchOutcome`]),
+//! strictly separated from service latency (admission → completion).
+//! The op lowering, charging and chunk machinery are shared with the
+//! closed loop verbatim; an open-loop batch whose arrival times equal
+//! the closed-loop completion times reproduces the closed-loop run
+//! bit-identically (pinned in `tests/scale.rs`).
+//!
 //! ## Nested sequential drains
 //!
 //! A sequential op executed at admission may internally block on its
@@ -92,7 +110,7 @@ pub fn run_batch_with_sds(tb: &mut Testbed, sds: &mut Sds, ops: Vec<(usize, Op)>
 
 /// What a bulk op still owes after its payload flight completes.
 enum PlanKind {
-    Read { obj: ObjectId, offset: u64, len: u64 },
+    Read { path: String, obj: ObjectId, offset: u64, len: u64 },
     Write { path: String, obj: ObjectId, dtn: usize, data_dc: usize, offset: u64, len: u64 },
     Replicate { path: String, src_obj: ObjectId, size: u64 },
 }
@@ -390,7 +408,14 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
             };
             let len = match len {
                 Some(l) => l,
-                None => tb.dcs[data_dc].store.len(obj).unwrap_or(0).saturating_sub(offset),
+                None => match tb.dcs[data_dc].store.len(obj) {
+                    Some(total) => total.saturating_sub(offset),
+                    // namespace entry with no backing object: hand the op
+                    // to the sequential lowering, which charges the miss
+                    // and returns the typed `NoSuchFile` — never a
+                    // "successful" zero-byte read
+                    None => return Ok(Staged::Sequential(op)),
+                },
             };
             let home_dc = tb.collabs[c].dc;
             if data_dc == home_dc || len < tb.cfg.xfer_threshold {
@@ -419,7 +444,7 @@ fn try_stage(tb: &mut Testbed, c: usize, idx: usize, op: Op) -> Result<Staged, S
             // the staging DTN digests outbound chunks on its service
             // CPU; the collaborator side stays private (single-op sinks)
             let sinks = DigestSinks { src: Some(tb.dtns[dtn].meta_cpu), dst: None };
-            let kind = PlanKind::Read { obj, offset, len };
+            let kind = PlanKind::Read { path, obj, offset, len };
             Ok(Staged::Plan(Box::new(stage_plan(tb, idx, c, kind, req, sinks))))
         }
         Op::Write { ref path, offset, len, ref data, mode }
@@ -481,7 +506,7 @@ fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
     tb.record_tune(&report);
     let tf = report.finished_at;
     let r = match kind {
-        PlanKind::Read { obj, offset, len } => {
+        PlanKind::Read { path, obj, offset, len } => {
             let t_end = tb.read_backend(c, len, tf);
             tb.collabs[c].now = t_end;
             match tb.dcs[src_dc].store.read_at(obj, offset, len as usize) {
@@ -490,7 +515,9 @@ fn finish_plan(tb: &mut Testbed, plan: BulkPlan) -> (usize, OpResult) {
                     finished_at: t_end,
                     transfer: Some(Box::new(report)),
                 },
-                Err(e) => OpResult::Failed(e.into()),
+                // object vanished mid-flight: same typed error the
+                // single-op read surfaces
+                Err(_) => OpResult::Failed(ScispaceError::NoSuchFile { path }),
             }
         }
         PlanKind::Write { path, obj, dtn, data_dc, offset, len } => {
@@ -522,4 +549,283 @@ fn fail_plan(tb: &mut Testbed, plan: BulkPlan, e: ScispaceError) -> (usize, OpRe
         tb.env.end_span(sp, t_end);
     }
     (plan.idx, OpResult::Failed(e))
+}
+
+// ---------------------------------------------------------------------
+// Open-loop admission (see the module doc's "Open-loop admission")
+// ---------------------------------------------------------------------
+
+/// One open-loop request: the submitting collaborator, the op's
+/// scheduled virtual arrival time, and the op itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedOp {
+    /// Submitting collaborator (index from [`Testbed::register`]).
+    pub collab: usize,
+    /// Scheduled virtual arrival time, seconds. Within one
+    /// collaborator, ops are served in submission order; an op that
+    /// arrives while its predecessor is still running queues, and the
+    /// wait is reported as queueing delay.
+    pub arrival: f64,
+    /// The typed operation.
+    pub op: Op,
+}
+
+/// One open-loop outcome: the op's result plus the arrival →
+/// admission → completion split, so queueing delay (offered load
+/// outrunning the system) is never folded into service latency.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// The op's result (per-op typed failures, like the closed loop).
+    pub result: OpResult,
+    /// The scheduled arrival time.
+    pub arrived_at: f64,
+    /// Admission time: `max(arrival, predecessor completion)`.
+    pub admitted_at: f64,
+}
+
+impl BatchOutcome {
+    /// Arrival → admission wait (0 when admitted on arrival).
+    pub fn queueing_s(&self) -> f64 {
+        self.admitted_at - self.arrived_at
+    }
+
+    /// Admission → completion service time (NaN for failed ops).
+    pub fn service_s(&self) -> f64 {
+        self.result.finished_at() - self.admitted_at
+    }
+
+    /// Arrival → completion latency, queueing included (NaN for
+    /// failed ops).
+    pub fn total_s(&self) -> f64 {
+        self.result.finished_at() - self.arrived_at
+    }
+}
+
+/// An op waiting in a collaborator's open-loop program queue.
+struct OpenItem {
+    idx: usize,
+    arrival: f64,
+    op: Op,
+}
+
+/// Mutable executor state for one open-loop drain, bundled so the
+/// helpers stay call-compatible as the closed-loop ones.
+struct OpenState {
+    queues: Vec<VecDeque<OpenItem>>,
+    active: Vec<Option<BulkPlan>>,
+    results: Vec<Option<OpResult>>,
+    admitted: Vec<f64>,
+}
+
+/// [`run_batch_open`] with a discovery service attached, so
+/// [`Op::Query`] / [`Op::Tag`] are executable in open-loop batches.
+pub fn run_batch_open_with_sds(
+    tb: &mut Testbed,
+    sds: &mut Sds,
+    ops: Vec<TimedOp>,
+) -> Vec<BatchOutcome> {
+    run_batch_open(tb, Some(sds), ops)
+}
+
+pub(crate) fn run_batch_open(
+    tb: &mut Testbed,
+    mut sds: Option<&mut Sds>,
+    ops: Vec<TimedOp>,
+) -> Vec<BatchOutcome> {
+    let n = ops.len();
+    let n_collabs = tb.collabs.len();
+    let mut arrived: Vec<f64> = vec![f64::NAN; n];
+    let mut st = OpenState {
+        queues: vec![VecDeque::new(); n_collabs],
+        active: (0..n_collabs).map(|_| None).collect(),
+        results: (0..n).map(|_| None).collect(),
+        admitted: vec![f64::NAN; n],
+    };
+    for (idx, TimedOp { collab: c, arrival, op }) in ops.into_iter().enumerate() {
+        arrived[idx] = arrival;
+        if c >= n_collabs {
+            st.results[idx] = Some(OpResult::Failed(ScispaceError::Unsupported {
+                msg: format!("collaborator {c} not registered"),
+            }));
+        } else {
+            st.queues[c].push_back(OpenItem { idx, arrival, op });
+        }
+    }
+
+    // every arrival is an exogenous control, scheduled up front: it
+    // fires at its scheduled virtual time whether or not the
+    // collaborator is mid-op — that is what makes the load open-loop.
+    // Arrivals that land mid-op are absorbed by the guards in
+    // `open_admit` and re-signalled by the completion path instead.
+    for (c, q) in st.queues.iter().enumerate() {
+        for item in q {
+            tb.env.schedule_control(item.arrival, c as u64);
+        }
+    }
+
+    loop {
+        match tb.env.run_next() {
+            Occurrence::Control { tag, at } => {
+                let tag = tag as usize;
+                if tag >= n_collabs {
+                    // payload-launch for a staged plan: open-loop launch
+                    // tags live past the collaborator range so an
+                    // arrival firing mid-payload can't be mistaken for
+                    // one (the closed loop reuses one tag per
+                    // collaborator because its admissions are never
+                    // exogenous)
+                    open_launch(tb, tag - n_collabs, &mut st);
+                } else {
+                    open_admit(tb, sds.as_deref_mut(), tag, at, &mut st);
+                }
+            }
+            Occurrence::FlowDone { .. } => {}
+            Occurrence::Idle => break,
+        }
+        open_sweep(tb, &mut st);
+    }
+
+    debug_assert!(
+        st.active.iter().all(Option::is_none) && st.queues.iter().all(VecDeque::is_empty),
+        "open-loop executor went idle with work outstanding"
+    );
+    st.results
+        .into_iter()
+        .zip(arrived)
+        .zip(st.admitted)
+        .map(|((r, arrived_at), admitted_at)| BatchOutcome {
+            result: r.expect("every op resolved"),
+            arrived_at,
+            admitted_at,
+        })
+        .collect()
+}
+
+/// An admission signal for collaborator `c` at virtual time `t` — an
+/// op's scheduled arrival, a completion re-signal, or a deferred
+/// retry. Admits the head op iff the collaborator is idle, the op has
+/// arrived, and the collaborator clock has reached `t`; otherwise the
+/// signal is absorbed (a later signal covers it) or deferred.
+fn open_admit(tb: &mut Testbed, sds: Option<&mut Sds>, c: usize, t: f64, st: &mut OpenState) {
+    if st.active[c].is_some() {
+        return; // mid-payload: the plan's completion re-signals
+    }
+    let Some(head) = st.queues[c].front() else { return };
+    if head.arrival > t {
+        return; // not yet arrived: its own arrival control fires later
+    }
+    if tb.collabs[c].now > t {
+        // a nested sequential drain pushed the collaborator clock past
+        // this signal's time: admit when virtual time catches up, so
+        // FIFO serves commit in virtual-time order — the same
+        // discipline as the payload-launch control
+        let now = tb.collabs[c].now;
+        tb.env.schedule_control(now, c as u64);
+        return;
+    }
+    // idle until the arrival: the clock advances to the admission
+    // instant, and the arrival → admission gap is the queueing delay
+    tb.collabs[c].now = t;
+    let OpenItem { idx, arrival: _, op } = st.queues[c].pop_front().expect("head checked above");
+    st.admitted[idx] = t;
+    let op_kind = op.kind_name();
+    match try_stage(tb, c, idx, op) {
+        Ok(Staged::Plan(mut plan)) => {
+            let ready = plan.flight.req.submitted_at;
+            if tb.env.recording() {
+                let span = tb.env.begin_span(t, format!("op:{op_kind}"), None, Some(c));
+                let adm = tb.env.begin_span(t, "admission".into(), Some(span), Some(c));
+                tb.env.end_span(adm, t);
+                let stg = tb.env.begin_span(t, "staging".into(), Some(span), Some(c));
+                tb.env.end_span(stg, ready);
+                plan.flight.set_span(span);
+                plan.span = Some(span);
+            }
+            st.active[c] = Some(*plan);
+            tb.env.schedule_control(ready, (st.queues.len() + c) as u64);
+        }
+        Ok(Staged::Sequential(op)) => {
+            let r = match exec_op(tb, c, sds, op) {
+                Ok(r) => r,
+                Err(e) => OpResult::Failed(e),
+            };
+            st.results[idx] = Some(r);
+            open_signal_next(tb, c, &st.queues);
+        }
+        Err(e) => {
+            st.results[idx] = Some(OpResult::Failed(e));
+            open_signal_next(tb, c, &st.queues);
+        }
+    }
+}
+
+/// After collaborator `c` completes an op, re-signal admission iff its
+/// next op already arrived (it queued behind the completed one). Ops
+/// still in the future need nothing — their arrival controls are
+/// already scheduled.
+fn open_signal_next(tb: &mut Testbed, c: usize, queues: &[VecDeque<OpenItem>]) {
+    if let Some(head) = queues[c].front() {
+        if head.arrival <= tb.collabs[c].now {
+            let t = tb.collabs[c].now;
+            tb.env.schedule_control(t, c as u64);
+        }
+    }
+}
+
+/// Open-loop payload launch: identical to [`launch`] modulo the
+/// completion plumbing.
+fn open_launch(tb: &mut Testbed, c: usize, st: &mut OpenState) {
+    let plan = st.active[c].as_mut().expect("launch control without a staged plan");
+    let (src_dc, dst_dc) = (plan.flight.req.src_dc, plan.flight.req.dst_dc);
+    tb.net.begin_transfer(src_dc, dst_dc);
+    let outcome = pump(tb, plan);
+    open_resolve_pump(tb, c, outcome, st);
+}
+
+/// Open-loop twin of [`resolve_pump`]: same plan resolution, but the
+/// follow-up admission goes through [`open_signal_next`].
+fn open_resolve_pump(
+    tb: &mut Testbed,
+    c: usize,
+    outcome: Result<bool, ScispaceError>,
+    st: &mut OpenState,
+) {
+    match outcome {
+        Ok(true) => {} // a chunk is in flight; nothing to resolve yet
+        Ok(false) => {
+            let plan = st.active[c].take().expect("resolved an active plan");
+            let (idx, r) = finish_plan(tb, plan);
+            st.results[idx] = Some(r);
+            open_signal_next(tb, c, &st.queues);
+        }
+        Err(e) => {
+            let plan = st.active[c].take().expect("resolved an active plan");
+            let (idx, r) = fail_plan(tb, plan, e);
+            st.results[idx] = Some(r);
+            open_signal_next(tb, c, &st.queues);
+        }
+    }
+}
+
+/// Open-loop twin of [`sweep`]: resolve completed chunk flows in
+/// completion-time order, collaborator index breaking ties.
+fn open_sweep(tb: &mut Testbed, st: &mut OpenState) {
+    let mut done: Vec<(f64, usize)> = Vec::new();
+    for (c, slot) in st.active.iter().enumerate() {
+        if let Some(plan) = slot {
+            if let Some(fc) = &plan.in_flight {
+                if let Some(t) = tb.env.flow_finish(fc.flow()) {
+                    done.push((t, c));
+                }
+            }
+        }
+    }
+    done.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for (_, c) in done {
+        let plan = st.active[c].as_mut().expect("collected above");
+        let fc = plan.in_flight.take().expect("collected above");
+        plan.flight.finish_chunk(&tb.cfg.xfer, &mut tb.env, &mut plan.faults, fc);
+        let outcome = pump(tb, plan);
+        open_resolve_pump(tb, c, outcome, st);
+    }
 }

@@ -39,6 +39,7 @@
 pub mod batch;
 mod error;
 
+pub use batch::{BatchOutcome, TimedOp};
 pub use error::ScispaceError;
 
 use crate::db::Value;
@@ -301,6 +302,19 @@ impl Testbed {
     /// service — use [`batch::run_batch_with_sds`] for mixed batches.
     pub fn run_batch(&mut self, ops: Vec<(usize, Op)>) -> Vec<OpResult> {
         batch::run_batch(self, None, ops)
+    }
+
+    /// Execute a batch in **open-loop** mode: each [`TimedOp`] carries a
+    /// scheduled virtual arrival time and is pushed into the bed at that
+    /// time regardless of in-flight work, so the arrival process — not
+    /// the system's service speed — sets the offered load. Per-op
+    /// outcomes report queueing delay (arrival → admission) separately
+    /// from service latency; see [`batch`]'s "Open-loop admission".
+    ///
+    /// Results are returned in submission order. SDS operations need a
+    /// discovery service — use [`batch::run_batch_open_with_sds`].
+    pub fn run_batch_open(&mut self, ops: Vec<TimedOp>) -> Vec<BatchOutcome> {
+        batch::run_batch_open(self, None, ops)
     }
 }
 
@@ -794,7 +808,17 @@ fn exec_op_inner(
                             return Err(ScispaceError::NoSuchFile { path });
                         }
                     };
-                    tb.dcs[dc].store.len(obj).unwrap_or(0).saturating_sub(offset)
+                    match tb.dcs[dc].store.len(obj) {
+                        Some(total) => total.saturating_sub(offset),
+                        None => {
+                            // namespace entry with no backing object: a
+                            // vanished file, not a zero-byte one — same
+                            // delegated charges + typed error as the
+                            // locate miss above
+                            tb.read(c, &path, offset, 0, mode)?;
+                            return Err(ScispaceError::NoSuchFile { path });
+                        }
+                    }
                 }
             };
             let (bytes, transfer) = tb.read_traced(c, &path, offset, len, mode)?;

@@ -12,6 +12,7 @@ use crate::api::{Op, OpResult};
 use crate::db::Value;
 use crate::engine::{Engine, SchedMode};
 use crate::meu;
+use crate::obs::metrics::Metrics;
 use crate::sds::{self, ExtractionMode, Query, Sds, SdsConfig};
 use crate::shdf;
 use crate::simnet::{NetConfig, Network};
@@ -1967,9 +1968,292 @@ pub fn federation_json(rows: &[FederationRow]) -> Json {
     Json::Obj(top)
 }
 
+/// `scispace bench scale` ramp parameters.
+#[derive(Debug, Clone)]
+pub struct ScaleBenchConfig {
+    /// Reading collaborators (split across the two DCs).
+    pub collabs: usize,
+    /// Pre-populated heavy-tailed files reads draw from.
+    pub files: usize,
+    /// First ramp step's offered rate, requests/s.
+    pub initial_rps: f64,
+    /// Ramp ceiling, requests/s.
+    pub max_rps: f64,
+    /// Offered-rate increment per step.
+    pub step_rps: f64,
+    /// Arrival-window length per step, virtual seconds.
+    pub step_secs: f64,
+    /// The SLO: a step whose p99 total latency exceeds this violates.
+    pub slo_p99_s: f64,
+    /// Master seed (bed population + arrival draws).
+    pub seed: u64,
+}
+
+impl Default for ScaleBenchConfig {
+    fn default() -> Self {
+        ScaleBenchConfig {
+            collabs: 1200,
+            files: 600,
+            initial_rps: 50.0,
+            max_rps: 600.0,
+            step_rps: 50.0,
+            step_secs: 15.0,
+            slo_p99_s: 2.0,
+            seed: 2601,
+        }
+    }
+}
+
+/// One ramp step: offered rate vs the measured latency split.
+#[derive(Debug, Clone)]
+pub struct ScaleStepRow {
+    /// Offered Poisson rate, requests/s.
+    pub rps: f64,
+    /// Ops scheduled in the step's arrival window.
+    pub offered: usize,
+    /// Ops that completed successfully.
+    pub completed: usize,
+    /// Ops that failed (should be 0 on this bed).
+    pub failed: usize,
+    /// Median arrival → completion latency (`None`: no completions).
+    pub p50_total_s: Option<f64>,
+    /// p99 arrival → completion latency — the SLO subject.
+    pub p99_total_s: Option<f64>,
+    /// Median queueing delay (arrival → admission).
+    pub p50_queue_s: Option<f64>,
+    /// p99 queueing delay.
+    pub p99_queue_s: Option<f64>,
+    /// p99 service latency (admission → completion).
+    pub p99_service_s: Option<f64>,
+    /// Completions per second of drain (first arrival to last finish).
+    pub achieved_rps: f64,
+    /// SLO verdict: `None` when the step measured nothing (empty bins
+    /// are explicit — they never vacuously pass).
+    pub slo_ok: Option<bool>,
+}
+
+/// The whole ramp: per-step curve plus the headline number.
+#[derive(Debug, Clone)]
+pub struct ScaleResult {
+    /// The parameters that produced this curve.
+    pub config: ScaleBenchConfig,
+    /// One row per ramp step, in ramp order.
+    pub steps: Vec<ScaleStepRow>,
+    /// Highest offered rate whose p99 stayed inside the SLO (0 when
+    /// even the first step violated).
+    pub max_sustainable_rps: f64,
+}
+
+/// Build the scale bed: the bench cache scaling on a geo-regime WAN
+/// (the shared bottleneck the ramp is meant to saturate), `collabs`
+/// readers split across both DCs, and the heavy-tailed corpus written
+/// so roughly half of all uniform reads cross the WAN.
+fn scale_bed(wl: &workload::ScaleConfig) -> Testbed {
+    let mut cfg = bench_config();
+    cfg.net.wan_bw = 200e6;
+    cfg.net.wan_latency_s = 5e-3;
+    let mut tb = Testbed::build(cfg);
+    for i in 0..wl.n_collabs {
+        tb.register(&format!("r{i}"), i % 2);
+    }
+    let pubs: Vec<usize> = (0..2).map(|d| tb.register(&format!("pub{d}"), d)).collect();
+    for (i, &sz) in workload::scale_file_sizes(wl).iter().enumerate() {
+        tb.session(pubs[i % 2])
+            .write(&workload::scale_path(i))
+            .len(sz)
+            .submit()
+            .expect("scale populate");
+    }
+    tb.quiesce();
+    tb
+}
+
+/// The saturation ramp (IC-scalability-suite protocol): offer an
+/// open-loop Poisson workload at `initial_rps`, measure the p50/p99
+/// latency split through `obs::metrics`, and raise the rate by
+/// `step_rps` per step until the p99 total latency breaks the SLO (or
+/// the ramp ceiling is reached). Each step runs on a fresh bed from
+/// the same seed, so the curve is a pure function of the config.
+pub fn fig_scale(cfg: &ScaleBenchConfig) -> ScaleResult {
+    let mut steps = Vec::new();
+    let mut max_sustainable = 0.0f64;
+    let mut rps = cfg.initial_rps;
+    while rps <= cfg.max_rps + 1e-9 {
+        let wl = workload::ScaleConfig {
+            n_collabs: cfg.collabs,
+            n_files: cfg.files,
+            duration_s: cfg.step_secs,
+            process: workload::ArrivalProcess::Poisson { rps },
+            seed: cfg.seed,
+            ..workload::ScaleConfig::default()
+        };
+        let mut tb = scale_bed(&wl);
+        let start = (0..tb.collabs.len()).map(|c| tb.now(c)).fold(0.0, f64::max);
+        let ops = workload::scale_ops(&wl, start);
+        let offered = ops.len();
+        let outcomes = tb.run_batch_open(ops);
+
+        // the latency split flows through the metrics registry; a step
+        // with no completions leaves empty histograms whose percentiles
+        // are `None` — skipped by the SLO check, never a free pass
+        let mut m = Metrics::new();
+        let mut failed = 0usize;
+        let mut last_fin = start;
+        for o in &outcomes {
+            if o.result.is_ok() {
+                m.observe("scale.total_s", o.total_s());
+                m.observe("scale.queue_s", o.queueing_s());
+                m.observe("scale.service_s", o.service_s());
+                last_fin = last_fin.max(o.result.finished_at());
+            } else {
+                failed += 1;
+            }
+        }
+        let completed = offered - failed;
+        let p = |name: &str, q: f64| m.histogram(name).and_then(|h| h.percentile(q));
+        let p99_total = p("scale.total_s", 99.0);
+        let row = ScaleStepRow {
+            rps,
+            offered,
+            completed,
+            failed,
+            p50_total_s: p("scale.total_s", 50.0),
+            p99_total_s: p99_total,
+            p50_queue_s: p("scale.queue_s", 50.0),
+            p99_queue_s: p("scale.queue_s", 99.0),
+            p99_service_s: p("scale.service_s", 99.0),
+            achieved_rps: if last_fin > start {
+                completed as f64 / (last_fin - start)
+            } else {
+                0.0
+            },
+            slo_ok: p99_total.map(|v| v <= cfg.slo_p99_s),
+        };
+        let violated = row.slo_ok == Some(false);
+        if row.slo_ok == Some(true) {
+            max_sustainable = rps;
+        }
+        steps.push(row);
+        if violated {
+            break;
+        }
+        rps += cfg.step_rps;
+    }
+    ScaleResult { config: cfg.clone(), steps, max_sustainable_rps: max_sustainable }
+}
+
+fn fmt_opt_secs(v: Option<f64>) -> String {
+    v.map(fmt_secs).unwrap_or_else(|| "-".to_string())
+}
+
+/// Print the ramp curve and the headline number.
+pub fn print_scale(res: &ScaleResult) {
+    let cfg = &res.config;
+    println!(
+        "\n== Bench scale: open-loop saturation ramp, {} collaborators, {} files, SLO p99 <= {} ==",
+        cfg.collabs,
+        cfg.files,
+        fmt_secs(cfg.slo_p99_s)
+    );
+    println!(
+        "{:>8} {:>8} {:>6} {:>11} {:>11} {:>11} {:>11} {:>9} {:>5}",
+        "rps", "offered", "fail", "total-p50", "total-p99", "queue-p99", "serv-p99", "ach-rps",
+        "slo"
+    );
+    for r in &res.steps {
+        println!(
+            "{:>8.0} {:>8} {:>6} {:>11} {:>11} {:>11} {:>11} {:>9.1} {:>5}",
+            r.rps,
+            r.offered,
+            r.failed,
+            fmt_opt_secs(r.p50_total_s),
+            fmt_opt_secs(r.p99_total_s),
+            fmt_opt_secs(r.p99_queue_s),
+            fmt_opt_secs(r.p99_service_s),
+            r.achieved_rps,
+            match r.slo_ok {
+                Some(true) => "ok",
+                Some(false) => "VIOL",
+                None => "-",
+            }
+        );
+    }
+    println!("max sustainable throughput: {:.0} rps", res.max_sustainable_rps);
+}
+
+/// Machine-readable `BENCH_scale.json` payload: the full rate/latency
+/// curve plus `max_sustainable_rps`, for the CI trend gate.
+pub fn scale_json(res: &ScaleResult) -> Json {
+    use std::collections::BTreeMap;
+    let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    let rows: Vec<Json> = res
+        .steps
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("rps".to_string(), Json::Num(r.rps));
+            m.insert("offered".to_string(), Json::Num(r.offered as f64));
+            m.insert("completed".to_string(), Json::Num(r.completed as f64));
+            m.insert("failed".to_string(), Json::Num(r.failed as f64));
+            m.insert("p50_total_s".to_string(), opt(r.p50_total_s));
+            m.insert("p99_total_s".to_string(), opt(r.p99_total_s));
+            m.insert("p50_queue_s".to_string(), opt(r.p50_queue_s));
+            m.insert("p99_queue_s".to_string(), opt(r.p99_queue_s));
+            m.insert("p99_service_s".to_string(), opt(r.p99_service_s));
+            m.insert("achieved_rps".to_string(), Json::Num(r.achieved_rps));
+            m.insert("slo_ok".to_string(), r.slo_ok.map(Json::Bool).unwrap_or(Json::Null));
+            Json::Obj(m)
+        })
+        .collect();
+    let cfg = &res.config;
+    let mut c = BTreeMap::new();
+    c.insert("collabs".to_string(), Json::Num(cfg.collabs as f64));
+    c.insert("files".to_string(), Json::Num(cfg.files as f64));
+    c.insert("initial_rps".to_string(), Json::Num(cfg.initial_rps));
+    c.insert("max_rps".to_string(), Json::Num(cfg.max_rps));
+    c.insert("step_rps".to_string(), Json::Num(cfg.step_rps));
+    c.insert("step_secs".to_string(), Json::Num(cfg.step_secs));
+    c.insert("slo_p99_s".to_string(), Json::Num(cfg.slo_p99_s));
+    c.insert("seed".to_string(), Json::Num(cfg.seed as f64));
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("scale".to_string()));
+    top.insert("config".to_string(), Json::Obj(c));
+    top.insert("steps".to_string(), Json::Arr(rows));
+    top.insert("max_sustainable_rps".to_string(), Json::Num(res.max_sustainable_rps));
+    Json::Obj(top)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fig_scale_tiny_ramp_is_deterministic_and_accounts_queueing() {
+        let cfg = ScaleBenchConfig {
+            collabs: 40,
+            files: 30,
+            initial_rps: 20.0,
+            max_rps: 40.0,
+            step_rps: 20.0,
+            step_secs: 3.0,
+            slo_p99_s: 5.0,
+            seed: 7,
+        };
+        let a = fig_scale(&cfg);
+        let b = fig_scale(&cfg);
+        assert_eq!(
+            scale_json(&a).to_string(),
+            scale_json(&b).to_string(),
+            "same seed must reproduce the curve byte-for-byte"
+        );
+        assert!(!a.steps.is_empty());
+        let s0 = &a.steps[0];
+        assert!(s0.offered > 0 && s0.failed == 0, "{s0:?}");
+        // total-latency samples dominate service samples pointwise
+        // (total = queueing + service), so every percentile does too
+        assert!(s0.p99_total_s.unwrap() + 1e-12 >= s0.p99_service_s.unwrap(), "{s0:?}");
+        assert!(s0.p99_queue_s.unwrap() >= 0.0, "{s0:?}");
+    }
 
     #[test]
     fn fig7_small_scale_shape() {

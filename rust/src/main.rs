@@ -5,7 +5,7 @@
 //!   discovery shards over the RPC protocol).
 //! * `demo`                  — two-DC simulated collaboration walkthrough.
 //! * `query --addrs a,b "Location = Pacific"` — query live DTNs.
-//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|engine|federation|all>`
+//! * `bench <fig7w|fig7r|fig8w|fig8r|fig9a|fig9b|fig9c|table2|preempt|xfer|collab|engine|federation|scale|all>`
 //!   — regenerate a paper table/figure on the simulated testbed
 //!   (`preempt` runs the Interactive-vs-Bulk scheduler-preemption
 //!   comparison on the discrete-event core; `xfer` sweeps stream
@@ -17,7 +17,12 @@
 //!   collaborators batched through the Session API's `run_batch`, plus
 //!   the asymmetric scenario — a small interactive read concurrent
 //!   with an unrelated bulk replicate, pinning the no-cross-stall
-//!   property of event-driven admission).
+//!   property of event-driven admission;
+//!   `scale` runs the open-loop saturation ramp: Poisson arrivals over
+//!   `--collabs` collaborators ramp `--initial-rps` → `--max-rps` in
+//!   `--step-rps` steps until the p99 total latency breaks `--slo-p99`,
+//!   emitting the rate/latency curve and the max sustainable
+//!   throughput into `BENCH_scale.json`).
 //!   `bench preempt`, `bench xfer`, `bench collab` and `bench engine`
 //!   also emit machine-readable `BENCH_preempt.json` /
 //!   `BENCH_xfer.json` / `BENCH_collab.json` / `BENCH_engine.json` for
@@ -214,10 +219,26 @@ fn cmd_bench(args: &Args) -> Result<()> {
             bench::print_federation(&rows);
             emit_json("BENCH_federation.json", &bench::federation_json(&rows))?;
         }
+        "scale" => {
+            let d = bench::ScaleBenchConfig::default();
+            let cfg = bench::ScaleBenchConfig {
+                collabs: args.opt_parse("collabs", d.collabs),
+                files: args.opt_parse("files", d.files),
+                initial_rps: args.opt_parse("initial-rps", d.initial_rps),
+                max_rps: args.opt_parse("max-rps", d.max_rps),
+                step_rps: args.opt_parse("step-rps", d.step_rps),
+                step_secs: args.opt_parse("step-secs", d.step_secs),
+                slo_p99_s: args.opt_parse("slo-p99", d.slo_p99_s),
+                seed: args.opt_parse("seed", d.seed),
+            };
+            let res = bench::fig_scale(&cfg);
+            bench::print_scale(&res);
+            emit_json("BENCH_scale.json", &bench::scale_json(&res))?;
+        }
         "all" => {
             for w in [
                 "fig7w", "fig7r", "fig8w", "fig8r", "fig9a", "fig9b", "fig9c", "table2",
-                "preempt", "xfer", "collab", "engine", "federation",
+                "preempt", "xfer", "collab", "engine", "federation", "scale",
             ] {
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), w.into()];

@@ -30,20 +30,25 @@ impl Histogram {
         self.samples.len()
     }
 
-    /// Nearest-rank percentile, `p` in `[0, 100]`.
-    pub fn percentile(&self, p: f64) -> f64 {
+    /// Nearest-rank percentile, `p` in `[0, 100]`. `None` when the
+    /// histogram is empty — an empty bin must never report a latency
+    /// (a 0.0 here would, e.g., vacuously pass a p99 SLO check).
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.total_cmp(b));
-        percentile_sorted(&s, p / 100.0)
+        Some(percentile_sorted(&s, p / 100.0))
     }
 
-    /// Median.
-    pub fn p50(&self) -> f64 {
+    /// Median (`None` when empty).
+    pub fn p50(&self) -> Option<f64> {
         self.percentile(50.0)
     }
 
-    /// 99th percentile.
-    pub fn p99(&self) -> f64 {
+    /// 99th percentile (`None` when empty).
+    pub fn p99(&self) -> Option<f64> {
         self.percentile(99.0)
     }
 
@@ -56,46 +61,108 @@ impl Histogram {
     }
 }
 
+/// Stored-point bound for [`Series`]: past this many retained points
+/// the series decimates (keeps every 2nd point, doubles its accept
+/// stride), so memory stays `O(SERIES_CAP)` however long the run.
+pub const SERIES_CAP: usize = 4096;
+
 /// A step series of `(t, value)` points: the value holds from its
 /// timestamp until the next point. Used for link active-flow counts.
-#[derive(Debug, Clone, Default, PartialEq)]
+///
+/// Aggregates ([`Series::max`], [`Series::time_weighted_mean`]) are
+/// maintained incrementally over *every* pushed point — in the same
+/// float-op order the old stored-point scan used, so they are
+/// bit-identical to it — while the stored points are only a bounded
+/// (stride-decimated) sketch for plotting. Runs shorter than
+/// [`SERIES_CAP`] points retain every point exactly as before.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Series {
     points: Vec<(f64, f64)>,
+    /// Accept every `stride`-th pushed point into `points` (1 until
+    /// the cap is first hit, then doubled on every decimation).
+    stride: u64,
+    /// Total points ever pushed (not just retained).
+    pushed: u64,
+    first: Option<(f64, f64)>,
+    last: Option<(f64, f64)>,
+    /// Running `Σ v_i · (t_{i+1} − t_i)` over all pushed points.
+    acc: f64,
+    vmax: f64,
+}
+
+impl Default for Series {
+    fn default() -> Self {
+        Series {
+            points: Vec::new(),
+            stride: 1,
+            pushed: 0,
+            first: None,
+            last: None,
+            acc: 0.0,
+            vmax: 0.0,
+        }
+    }
 }
 
 impl Series {
     /// Append a point; timestamps must be non-decreasing (event order).
     pub fn push(&mut self, t: f64, v: f64) {
-        self.points.push((t, v));
+        if let Some((pt, pv)) = self.last {
+            self.acc += pv * (t - pt);
+        } else {
+            self.first = Some((t, v));
+        }
+        self.last = Some((t, v));
+        self.vmax = self.vmax.max(v);
+        if self.pushed % self.stride == 0 {
+            if self.points.len() >= SERIES_CAP {
+                // Thin to every 2nd retained point and double the
+                // stride: retained indices stay exact multiples of the
+                // new stride, so acceptance keeps lining up.
+                let mut i = 0;
+                self.points.retain(|_| {
+                    i += 1;
+                    (i - 1) % 2 == 0
+                });
+                self.stride *= 2;
+            }
+            if self.pushed % self.stride == 0 {
+                self.points.push((t, v));
+            }
+        }
+        self.pushed += 1;
     }
 
-    /// The recorded points.
+    /// The retained points: every pushed point while under
+    /// [`SERIES_CAP`], a stride-decimated subset beyond it.
     pub fn points(&self) -> &[(f64, f64)] {
         &self.points
     }
 
-    /// Largest value seen.
+    /// Total points ever pushed (retained or decimated away).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Largest value seen (over all pushed points).
     pub fn max(&self) -> f64 {
-        self.points.iter().map(|&(_, v)| v).fold(0.0, f64::max)
+        self.vmax
     }
 
     /// Time-weighted mean over `[t_first, t_last]`: each value is
-    /// weighted by how long it held. 0.0 with fewer than two points.
+    /// weighted by how long it held, over *all* pushed points. 0.0
+    /// with fewer than two points.
     pub fn time_weighted_mean(&self) -> f64 {
-        if self.points.len() < 2 {
+        if self.pushed < 2 {
             return 0.0;
         }
-        let (t0, _) = self.points[0];
-        let (tn, _) = self.points[self.points.len() - 1];
+        let (t0, _) = self.first.expect("pushed >= 2");
+        let (tn, _) = self.last.expect("pushed >= 2");
         let total = tn - t0;
         if total <= 0.0 {
             return 0.0;
         }
-        let mut acc = 0.0;
-        for w in self.points.windows(2) {
-            acc += w[0].1 * (w[1].0 - w[0].0);
-        }
-        acc / total
+        self.acc / total
     }
 }
 
@@ -180,13 +247,19 @@ impl Metrics {
             ]));
         }
         for (name, h) in &self.hists {
+            // An empty histogram has no percentiles to report; the
+            // schema requires numeric p50/p99, so skip the row rather
+            // than invent a 0.0 latency.
+            let (Some(p50), Some(p99)) = (h.p50(), h.p99()) else {
+                continue;
+            };
             out.push(obj(vec![
                 ("kind", Json::Str("histogram".into())),
                 ("name", Json::Str(name.clone())),
                 ("count", Json::Num(h.count() as f64)),
                 ("mean", Json::Num(h.mean())),
-                ("p50", Json::Num(h.p50())),
-                ("p99", Json::Num(h.p99())),
+                ("p50", Json::Num(p50)),
+                ("p99", Json::Num(p99)),
             ]));
         }
         for (name, s) in &self.series {
@@ -312,10 +385,28 @@ mod tests {
         for i in 1..=100 {
             h.observe(i as f64);
         }
-        assert_eq!(h.p50(), 50.0);
-        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.p50(), Some(50.0));
+        assert_eq!(h.p99(), Some(99.0));
         assert_eq!(h.count(), 100);
         assert!((h.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_has_no_percentiles_and_no_row() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), None);
+        assert_eq!(h.p50(), None);
+        assert_eq!(h.p99(), None);
+
+        // An empty bin must not surface as a p99=0 row (it would
+        // vacuously pass any latency SLO downstream).
+        let mut m = Metrics::new();
+        m.observe("warm", 0.25);
+        let empty = Histogram::default();
+        m.hists.insert("cold".into(), empty);
+        let rows = m.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("warm"));
     }
 
     #[test]
@@ -327,6 +418,45 @@ mod tests {
         assert_eq!(s.max(), 3.0);
         // (1*1 + 3*3) / 4 = 2.5
         assert!((s.time_weighted_mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_short_runs_retain_every_point_and_long_runs_stay_bounded() {
+        // Short run: stored points and aggregates are exactly the
+        // pre-bound behaviour (every point retained, scan-order TWM).
+        let mut s = Series::default();
+        let pts: Vec<(f64, f64)> = (0..100).map(|i| (i as f64 * 0.5, (i % 7) as f64)).collect();
+        for &(t, v) in &pts {
+            s.push(t, v);
+        }
+        assert_eq!(s.points(), &pts[..]);
+        let mut acc = 0.0;
+        for w in pts.windows(2) {
+            acc += w[0].1 * (w[1].0 - w[0].0);
+        }
+        let reference = acc / (pts[pts.len() - 1].0 - pts[0].0);
+        assert_eq!(s.time_weighted_mean().to_bits(), reference.to_bits());
+        assert_eq!(s.max(), 6.0);
+
+        // Long run: memory is bounded while aggregates stay exact.
+        let mut l = Series::default();
+        let n = 10 * SERIES_CAP;
+        let mut acc = 0.0;
+        let mut prev: Option<(f64, f64)> = None;
+        for i in 0..n {
+            let (t, v) = (i as f64 * 0.25, (i % 11) as f64);
+            if let Some((pt, pv)) = prev {
+                acc += pv * (t - pt);
+            }
+            prev = Some((t, v));
+            l.push(t, v);
+        }
+        assert!(l.points().len() <= SERIES_CAP, "stored {} points", l.points().len());
+        assert_eq!(l.pushed(), n as u64);
+        assert_eq!(l.points()[0], (0.0, 0.0));
+        let reference = acc / ((n - 1) as f64 * 0.25);
+        assert_eq!(l.time_weighted_mean().to_bits(), reference.to_bits());
+        assert_eq!(l.max(), 10.0);
     }
 
     #[test]
@@ -347,7 +477,7 @@ mod tests {
         fold_events(&mut m, &events, &[]);
         let h = m.histogram("span.op:write.latency_s").expect("span histogram");
         assert_eq!(h.count(), 1);
-        assert!((h.p50() - 2.0).abs() < 1e-12);
+        assert!((h.p50().expect("non-empty") - 2.0).abs() < 1e-12);
         let s = m.series("link.2.active_flows").expect("link series");
         assert_eq!(s.points(), &[(1.0, 1.0), (2.5, 0.0)]);
         assert_eq!(m.counter("events.recorded"), 4);

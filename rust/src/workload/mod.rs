@@ -8,7 +8,14 @@
 //! parameterized sequential driver over synthetic (hole) objects, MODIS as
 //! a deterministic SHDF corpus whose attribute distributions drive the
 //! Table II hit-ratio experiments.
+//!
+//! Beyond the paper's workloads, the **scale workload** (`scale_*`)
+//! generates open-loop op streams for the saturation-ramp harness:
+//! seeded Poisson or linearly-ramped arrival processes over thousands of
+//! collaborators with bounded-Pareto (heavy-tailed) file sizes, lowered
+//! as [`TimedOp`]s for [`Testbed::run_batch_open`].
 
+use crate::api::{Op, TimedOp};
 use crate::db::Value;
 use crate::shdf::ShdfFile;
 use crate::util::rng::Rng;
@@ -186,6 +193,168 @@ pub fn load_corpus(
     total
 }
 
+/// Arrival-process shapes for the open-loop scale harness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at a constant rate (requests/s).
+    Poisson {
+        /// Mean arrival rate, requests per (virtual) second.
+        rps: f64,
+    },
+    /// Inhomogeneous Poisson whose rate ramps linearly from
+    /// `initial_rps` to `final_rps` across the window, via
+    /// rate-integral inversion (each unit-exponential gap advances the
+    /// cumulative rate `Λ(t) = r0·t + (r1−r0)·t²/(2D)` and is inverted
+    /// in closed form).
+    Ramp {
+        /// Rate at the start of the window.
+        initial_rps: f64,
+        /// Rate at the end of the window.
+        final_rps: f64,
+    },
+}
+
+/// A unit-rate exponential gap (inverse-CDF; `1 − u` keeps `ln` finite
+/// since `Rng::f64` is in `[0, 1)`).
+fn exp_gap(rng: &mut Rng) -> f64 {
+    -(1.0 - rng.f64()).ln()
+}
+
+/// Draw the arrival times of `process` over `[0, duration_s)`, strictly
+/// increasing, deterministic per RNG state.
+pub fn arrival_times(process: ArrivalProcess, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut out = Vec::new();
+    match process {
+        ArrivalProcess::Poisson { rps } => {
+            if rps <= 0.0 {
+                return out;
+            }
+            let mut t = 0.0;
+            loop {
+                t += exp_gap(rng) / rps;
+                if t >= duration_s {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+        ArrivalProcess::Ramp { initial_rps, final_rps } => {
+            let (r0, r1) = (initial_rps, final_rps);
+            let a = (r1 - r0) / (2.0 * duration_s);
+            let mut lam = 0.0;
+            loop {
+                lam += exp_gap(rng);
+                let t = if a.abs() < 1e-12 {
+                    if r0 <= 0.0 {
+                        return out;
+                    }
+                    lam / r0
+                } else {
+                    let disc = r0 * r0 + 4.0 * a * lam;
+                    if disc < 0.0 {
+                        // decreasing ramp ran out of cumulative rate
+                        break;
+                    }
+                    (-r0 + disc.sqrt()) / (2.0 * a)
+                };
+                if t >= duration_s {
+                    break;
+                }
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// A bounded-Pareto draw in `[lo, hi]` with tail index `alpha`: mostly
+/// small values with a fat tail toward `hi` — the classic heavy-tailed
+/// scientific file-size shape.
+pub fn pareto_bounded(rng: &mut Rng, lo: u64, hi: u64, alpha: f64) -> u64 {
+    assert!(lo > 0 && hi >= lo && alpha > 0.0);
+    let (l, h) = (lo as f64, hi as f64);
+    let ratio = (l / h).powf(alpha);
+    let u = rng.f64();
+    let x = l / (1.0 - u * (1.0 - ratio)).powf(1.0 / alpha);
+    (x as u64).clamp(lo, hi)
+}
+
+/// Scale-harness workload parameters. Every draw is seeded, so the bed
+/// population and the op stream are deterministic per `seed`.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Reading collaborators (split evenly across the bed's DCs).
+    pub n_collabs: usize,
+    /// Pre-populated files reads are drawn from (uniformly).
+    pub n_files: usize,
+    /// Smallest file, bytes.
+    pub min_file_bytes: u64,
+    /// Largest file, bytes (the Pareto tail's cap).
+    pub max_file_bytes: u64,
+    /// Pareto tail index (smaller = heavier tail).
+    pub alpha: f64,
+    /// Arrival window length, virtual seconds.
+    pub duration_s: f64,
+    /// Arrival process over the window.
+    pub process: ArrivalProcess,
+    /// Master seed for sizes, arrivals and assignment draws.
+    pub seed: u64,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            n_collabs: 1000,
+            n_files: 500,
+            min_file_bytes: 64 << 10,
+            max_file_bytes: 32 << 20,
+            alpha: 1.1,
+            duration_s: 10.0,
+            process: ArrivalProcess::Poisson { rps: 50.0 },
+            seed: 2601,
+        }
+    }
+}
+
+/// Workspace path of scale file `i`.
+pub fn scale_path(i: usize) -> String {
+    format!("/scale/f{i:06}.dat")
+}
+
+/// The corpus's heavy-tailed file sizes (deterministic per seed).
+pub fn scale_file_sizes(cfg: &ScaleConfig) -> Vec<u64> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.n_files)
+        .map(|_| pareto_bounded(&mut rng, cfg.min_file_bytes, cfg.max_file_bytes, cfg.alpha))
+        .collect()
+}
+
+/// The open-loop op stream: arrivals drawn from `cfg.process` over
+/// `[0, cfg.duration_s)` and shifted by `start` (normally the bed's
+/// quiesced clock), each one a whole-file workspace read of a uniform
+/// random file by a uniform random collaborator. Per-collaborator
+/// arrival order is submission order, as [`run_batch_open`] requires.
+///
+/// [`run_batch_open`]: crate::api::batch::run_batch_open_with_sds
+pub fn scale_ops(cfg: &ScaleConfig, start: f64) -> Vec<TimedOp> {
+    assert!(cfg.n_collabs > 0 && cfg.n_files > 0);
+    let mut rng = Rng::new(cfg.seed ^ 0xa55a_5aa5_55aa_aa55);
+    let times = arrival_times(cfg.process, cfg.duration_s, &mut rng);
+    times
+        .into_iter()
+        .map(|t| TimedOp {
+            collab: rng.below(cfg.n_collabs as u64) as usize,
+            arrival: start + t,
+            op: Op::Read {
+                path: scale_path(rng.below(cfg.n_files as u64) as usize),
+                offset: 0,
+                len: None,
+                mode: AccessMode::Scispace,
+            },
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +423,72 @@ mod tests {
             .filter(|(_, f)| f.get_attr("DayNight") == Some(&Value::Int(1)))
             .count();
         assert!((0.3..0.7).contains(&(days as f64 / corpus.len() as f64)));
+    }
+
+    #[test]
+    fn poisson_arrivals_hit_the_requested_rate() {
+        let mut rng = Rng::new(7);
+        let times = arrival_times(ArrivalProcess::Poisson { rps: 100.0 }, 50.0, &mut rng);
+        // mean 5000, sd ~71: 10% tolerance is ~7 sigma
+        assert!((4500..=5500).contains(&times.len()), "got {}", times.len());
+        assert!(times.windows(2).all(|w| w[0] < w[1]), "arrivals must increase");
+        assert!(times.iter().all(|&t| (0.0..50.0).contains(&t)));
+    }
+
+    #[test]
+    fn ramp_arrivals_accelerate_and_match_the_rate_integral() {
+        let mut rng = Rng::new(11);
+        let d = 40.0;
+        let times = arrival_times(
+            ArrivalProcess::Ramp { initial_rps: 20.0, final_rps: 180.0 },
+            d,
+            &mut rng,
+        );
+        // Λ(D) = (20+180)/2 · 40 = 4000
+        assert!((3700..=4300).contains(&times.len()), "got {}", times.len());
+        let early = times.iter().filter(|&&t| t < d / 2.0).count();
+        let late = times.len() - early;
+        assert!(late > early * 2, "rate must grow: early={early} late={late}");
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn pareto_sizes_are_bounded_and_heavy_tailed() {
+        let mut rng = Rng::new(3);
+        let (lo, hi) = (64u64 << 10, 32u64 << 20);
+        let mut sizes: Vec<u64> =
+            (0..4000).map(|_| pareto_bounded(&mut rng, lo, hi, 1.1)).collect();
+        assert!(sizes.iter().all(|&s| (lo..=hi).contains(&s)));
+        sizes.sort_unstable();
+        let median = sizes[sizes.len() / 2];
+        let mean = sizes.iter().sum::<u64>() / sizes.len() as u64;
+        assert!(mean > median * 2, "heavy tail: mean {mean} should dwarf median {median}");
+        assert!(sizes[sizes.len() - 1] > 8 << 20, "tail must reach multi-MiB sizes");
+    }
+
+    #[test]
+    fn scale_ops_are_deterministic_and_program_ordered() {
+        let cfg = ScaleConfig {
+            n_collabs: 50,
+            n_files: 20,
+            duration_s: 5.0,
+            process: ArrivalProcess::Poisson { rps: 200.0 },
+            ..ScaleConfig::default()
+        };
+        let a = scale_ops(&cfg, 1.5);
+        let b = scale_ops(&cfg, 1.5);
+        assert_eq!(a, b, "same seed must reproduce the stream bit-for-bit");
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|op| op.collab < 50 && op.arrival >= 1.5));
+        // per-collaborator arrivals are non-decreasing (program order)
+        let mut last = vec![f64::NEG_INFINITY; 50];
+        for op in &a {
+            assert!(op.arrival >= last[op.collab]);
+            last[op.collab] = op.arrival;
+        }
+        // a different seed moves the stream
+        let c = scale_ops(&ScaleConfig { seed: 9, ..cfg }, 1.5);
+        assert_ne!(a, c);
     }
 
     #[test]

@@ -815,7 +815,13 @@ impl Testbed {
             }
         }
         self.collabs[c].now = t;
-        let bytes = self.dcs[data_dc].store.read_at(obj, offset, len as usize)?;
+        // A namespace entry whose backing object vanished from the store
+        // is a missing file, not an internal error — keep the typed
+        // variant so callers can match on it.
+        let store = &self.dcs[data_dc].store;
+        let bytes = store
+            .read_at(obj, offset, len as usize)
+            .map_err(|_| ScispaceError::NoSuchFile { path: path.into() })?;
         Ok((bytes, transfer))
     }
 

@@ -1,0 +1,203 @@
+//! Open-loop admission contract (ISSUE 10): an open-loop batch whose
+//! arrival times equal the closed-loop completion times reproduces the
+//! closed loop bit-for-bit — clocks, stats, DTN CPU accounting, WAN
+//! bytes and per-op completion times — and queueing delay (arrival →
+//! admission) is accounted separately from service latency.
+
+use scispace::api::{Op, TimedOp};
+use scispace::workspace::{AccessMode, Testbed, TestbedConfig};
+
+/// Shared-WAN bottleneck bed, same shape as the closed-loop
+/// concurrency pin: reader `r{d}` (homed in DC d) pulls a remote
+/// granule `/collab/shared/g{d}.dat` published from the other DC.
+fn bed() -> (Testbed, usize, usize) {
+    let mut cfg = TestbedConfig::paper_default();
+    cfg.net.wan_bw = 100e6;
+    let mut tb = Testbed::build(cfg);
+    let r0 = tb.register("r0", 0);
+    let r1 = tb.register("r1", 1);
+    let w0 = tb.register("w0", 0);
+    let w1 = tb.register("w1", 1);
+    tb.session(w1).write("/collab/shared/g0.dat").len(16 << 20).submit().unwrap();
+    tb.session(w0).write("/collab/shared/g1.dat").len(12 << 20).submit().unwrap();
+    tb.quiesce();
+    (tb, r0, r1)
+}
+
+fn read_op(d: usize, offset: u64, len: u64) -> Op {
+    Op::Read {
+        path: format!("/collab/shared/g{d}.dat"),
+        offset,
+        len: Some(len),
+        mode: AccessMode::Scispace,
+    }
+}
+
+/// Sum of (bytes, ops) served on every DTN metadata/digest CPU.
+fn dtn_cpu_totals(tb: &Testbed) -> (u64, u64) {
+    (0..tb.dtns.len()).fold((0, 0), |(b, o), i| {
+        let r = tb.env.server(tb.dtns[i].meta_cpu);
+        (b + r.total_bytes, o + r.total_ops)
+    })
+}
+
+/// Bit-identical observable state: collaborator clocks, op stats, DTN
+/// CPU accounting, WAN byte counters.
+fn assert_beds_identical(a: &Testbed, b: &Testbed, step: &str) {
+    for c in 0..a.collabs.len() {
+        assert_eq!(
+            a.now(c).to_bits(),
+            b.now(c).to_bits(),
+            "{step}: collaborator {c} clock drifted: {} vs {}",
+            a.now(c),
+            b.now(c)
+        );
+    }
+    assert_eq!(a.stats.locate_fallbacks, b.stats.locate_fallbacks, "{step}: fallbacks");
+    assert_eq!(
+        a.stats.locate_fallback_consults, b.stats.locate_fallback_consults,
+        "{step}: fallback consults"
+    );
+    assert_eq!(dtn_cpu_totals(a), dtn_cpu_totals(b), "{step}: DTN CPU accounting");
+    assert_eq!(
+        a.env.link(a.net.wan.res).total_bytes,
+        b.env.link(b.net.wan.res).total_bytes,
+        "{step}: WAN bytes"
+    );
+}
+
+/// ISSUE 10 acceptance pin: feed the open-loop executor arrival times
+/// equal to the closed loop's completion times (first op per
+/// collaborator at the aligned post-quiesce clock) and it must
+/// reproduce the closed loop bit-identically — every admission then
+/// happens exactly when the closed loop would have issued the next op,
+/// with zero queueing delay.
+#[test]
+fn open_loop_at_closed_loop_completion_times_is_bit_identical() {
+    let (mut closed, r0, r1) = bed();
+    let start = closed.now(r0);
+    assert_eq!(start.to_bits(), closed.now(r1).to_bits(), "quiesce aligns the clocks");
+    let program = vec![
+        (r0, read_op(0, 0, 16 << 20)),
+        (r1, read_op(1, 0, 12 << 20)),
+        (r0, read_op(0, 8 << 20, 8 << 20)),
+        (
+            r1,
+            Op::Write {
+                path: "/collab/shared/n1.dat".into(),
+                offset: 0,
+                len: 8 << 20,
+                data: None,
+                mode: AccessMode::Scispace,
+            },
+        ),
+    ];
+    let closed_results = closed.run_batch(program.clone());
+    for (i, r) in closed_results.iter().enumerate() {
+        assert!(r.is_ok(), "closed-loop op {i} failed: {:?}", r.err());
+    }
+
+    // arrivals = closed-loop completion times: each collaborator's
+    // first op arrives at the aligned start, each later op at the
+    // instant its predecessor completed in the closed loop
+    let mut prev_done = vec![start; closed.collabs.len()];
+    let timed: Vec<TimedOp> = program
+        .iter()
+        .zip(&closed_results)
+        .map(|((c, op), r)| {
+            let arrival = prev_done[*c];
+            prev_done[*c] = r.finished_at();
+            TimedOp { collab: *c, arrival, op: op.clone() }
+        })
+        .collect();
+
+    let (mut open, _, _) = bed();
+    let outcomes = open.run_batch_open(timed);
+
+    assert_eq!(outcomes.len(), closed_results.len());
+    for (i, (out, closed_r)) in outcomes.iter().zip(&closed_results).enumerate() {
+        assert!(out.result.is_ok(), "open-loop op {i} failed: {:?}", out.result);
+        assert_eq!(
+            out.result.finished_at().to_bits(),
+            closed_r.finished_at().to_bits(),
+            "op {i}: completion time diverged: {} vs {}",
+            out.result.finished_at(),
+            closed_r.finished_at()
+        );
+        assert_eq!(
+            out.admitted_at.to_bits(),
+            out.arrived_at.to_bits(),
+            "op {i}: admission must happen exactly on arrival"
+        );
+        assert_eq!(out.queueing_s(), 0.0, "op {i}: no queueing when arrivals track completions");
+    }
+    assert_beds_identical(&closed, &open, "open-loop at completion times");
+}
+
+/// When an op arrives while its predecessor is still in flight it
+/// queues: the wait is reported as queueing delay, admission happens at
+/// the predecessor's completion instant, and service time excludes the
+/// wait entirely.
+#[test]
+fn open_loop_reports_queueing_delay_separately_from_service() {
+    let (mut tb, r0, _) = bed();
+    let start = tb.now(r0);
+    let timed = vec![
+        TimedOp { collab: r0, arrival: start, op: read_op(0, 0, 16 << 20) },
+        // arrives almost immediately — the 16 MiB predecessor is still
+        // on the WAN, so this one must wait in the program queue
+        TimedOp { collab: r0, arrival: start + 1e-3, op: read_op(0, 0, 4 << 20) },
+    ];
+    let outcomes = tb.run_batch_open(timed);
+    assert!(outcomes.iter().all(|o| o.result.is_ok()), "{outcomes:?}");
+
+    let first = &outcomes[0];
+    let second = &outcomes[1];
+    assert_eq!(first.queueing_s(), 0.0, "idle collaborator admits on arrival");
+    assert_eq!(
+        second.admitted_at.to_bits(),
+        first.result.finished_at().to_bits(),
+        "queued op is admitted exactly when its predecessor completes"
+    );
+    assert!(
+        second.queueing_s() > 0.0,
+        "arrival mid-op must be accounted as queueing: {}",
+        second.queueing_s()
+    );
+    assert!(second.service_s() > 0.0);
+    assert!(second.total_s() >= second.service_s(), "total latency includes the queueing wait");
+    // the op was not shortened or re-timed by queueing: its service
+    // time is a genuine 4 MiB transfer, not (completion - arrival)
+    assert!(second.service_s() < second.total_s());
+}
+
+/// Same seed-free handcrafted arrival schedule on two fresh beds —
+/// outcomes and observable bed state must be bit-identical.
+#[test]
+fn open_loop_is_deterministic_across_runs() {
+    let timed_for = |r0: usize, r1: usize, start: f64| {
+        vec![
+            TimedOp { collab: r0, arrival: start, op: read_op(0, 0, 16 << 20) },
+            TimedOp { collab: r1, arrival: start + 0.01, op: read_op(1, 0, 12 << 20) },
+            TimedOp { collab: r0, arrival: start + 0.02, op: read_op(0, 0, 2 << 20) },
+            TimedOp { collab: r1, arrival: start + 0.03, op: read_op(1, 0, 1 << 20) },
+        ]
+    };
+    let (mut a, ar0, ar1) = bed();
+    let start_a = a.now(ar0);
+    let out_a = a.run_batch_open(timed_for(ar0, ar1, start_a));
+    let (mut b, br0, br1) = bed();
+    let start_b = b.now(br0);
+    assert_eq!(start_a.to_bits(), start_b.to_bits(), "bed construction is deterministic");
+    let out_b = b.run_batch_open(timed_for(br0, br1, start_b));
+    for (i, (x, y)) in out_a.iter().zip(&out_b).enumerate() {
+        assert_eq!(
+            x.result.finished_at().to_bits(),
+            y.result.finished_at().to_bits(),
+            "op {i}: completion"
+        );
+        assert_eq!(x.admitted_at.to_bits(), y.admitted_at.to_bits(), "op {i}: admission");
+        assert_eq!(x.arrived_at.to_bits(), y.arrived_at.to_bits(), "op {i}: arrival");
+    }
+    assert_beds_identical(&a, &b, "open-loop determinism");
+}

@@ -454,6 +454,36 @@ fn batch_of_one_is_bit_identical_to_single_op_for_every_variant() {
         Op::Read { path: "/eq/x.dat".into(), offset: 0, len: None, mode: AccessMode::Scispace },
         "whole-file read (resolved length)",
     );
+    // A namespace entry whose backing object vanished from the store
+    // must surface as the typed `NoSuchFile` — never a silent
+    // zero-byte read — and both lowerings must charge identically.
+    check_one(
+        &mut beds,
+        c0,
+        Op::Write {
+            path: "/eq/vanish.dat".into(),
+            offset: 0,
+            len: 9,
+            data: Some(b"ephemeral".to_vec()),
+            mode: AccessMode::Scispace,
+        },
+        "create soon-to-vanish file",
+    );
+    for tb in [&mut beds.single, &mut beds.batch] {
+        let obj = tb.dcs[0].fs.get("/eq/vanish.dat").and_then(|e| e.obj).expect("backing object");
+        assert!(tb.dcs[0].store.remove(obj), "object present before removal");
+    }
+    check_one(
+        &mut beds,
+        c1,
+        Op::Read {
+            path: "/eq/vanish.dat".into(),
+            offset: 0,
+            len: None,
+            mode: AccessMode::Scispace,
+        },
+        "vanished-object whole-file read (typed NoSuchFile)",
+    );
     check_one(
         &mut beds,
         c1,
